@@ -1,0 +1,93 @@
+//! Memory planner: the paper's §4.2 analysis as a tool.  Given a preset's
+//! manifest, predict per-rank peak memory for every schedule ± 2BP from
+//! the byte classes (res1 / res2 / inter) — then, if the artifacts exist,
+//! verify the prediction against a real run's byte-exact accounting.
+//!
+//! This is what you'd use before launching a job to answer "will 1F1B-2
+//! with 2BP OOM on my devices?" (the paper hit exactly that at 16 GPUs,
+//! §4.3.2).
+//!
+//! ```bash
+//! cargo run --release --example memory_planner -- \
+//!     [--preset transformer-tiny] [--budget-gb 16] [--verify]
+//! ```
+
+use std::path::Path;
+
+use twobp::config::{P2Mode, RunConfig};
+use twobp::models::Manifest;
+use twobp::pipeline::train;
+use twobp::schedule::{generate, ScheduleKind};
+use twobp::sim::{simulate, CostModel};
+use twobp::util::args::Args;
+use twobp::util::stats::fmt_bytes;
+use twobp::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["verify"]);
+    let preset = args.get_or("preset", "transformer-tiny");
+    let budget =
+        (args.get_f64("budget-gb", 16.0) * (1u64 << 30) as f64) as u64;
+    let manifest = Manifest::load(Path::new("artifacts"), preset)?;
+    let n = manifest.n_stages;
+    let mem = manifest.mem_model();
+    let costs = manifest.cost_model_from_flops(0.0);
+
+    println!(
+        "{}: {} stages, {} params, budget {}/device\n",
+        preset, n, manifest.total_params(), fmt_bytes(budget)
+    );
+
+    let mut t = Table::new(&["schedule", "2BP", "predicted peak",
+                             "increase", "fits budget", "measured peak"])
+        .with_title("predicted per-rank peak memory (manifest byte classes \
+                     through the schedule simulator)");
+    for kind in [ScheduleKind::Naive, ScheduleKind::GPipe,
+                 ScheduleKind::OneF1B1, ScheduleKind::OneF1B2,
+                 ScheduleKind::OneF1B2EagerP2] {
+        let mut base_peak = 0u64;
+        for two_bp in [false, true] {
+            if kind == ScheduleKind::OneF1B2EagerP2 && !two_bp {
+                continue;
+            }
+            let plan = generate(kind, two_bp, n, 0, false);
+            let res = simulate(&plan, &costs, Some(&mem))
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let peak = res.max_peak();
+            if !two_bp {
+                base_peak = peak;
+            }
+            let measured = if args.has("verify") {
+                let cfg = RunConfig {
+                    preset: preset.into(),
+                    schedule: kind,
+                    two_bp,
+                    steps: 1,
+                    p2_mode: P2Mode::Loop,
+                    ..RunConfig::default()
+                };
+                fmt_bytes(train(&cfg)?.max_peak())
+            } else {
+                "-".into()
+            };
+            t.row(vec![
+                kind.name().into(),
+                if two_bp { "yes" } else { "no" }.into(),
+                fmt_bytes(peak),
+                if two_bp && base_peak > 0 {
+                    format!("{:.2}x", peak as f64 / base_peak as f64)
+                } else {
+                    "1.00x".into()
+                },
+                if peak <= budget { "yes" } else { "NO — would OOM" }.into(),
+                measured,
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!("\ncosts from manifest flops; memory from manifest byte \
+              classes (res1/res2/inter per microbatch).");
+    let _ = CostModel::unit(1);
+    Ok(())
+}

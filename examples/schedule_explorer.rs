@@ -1,0 +1,65 @@
+//! Schedule explorer: interactive reproduction of the paper's Figure 1
+//! and Table 1 — render any schedule's timeline under any cost ratios
+//! and see where 2BP reclaims bubble time.
+//!
+//! ```bash
+//! cargo run --release --example schedule_explorer -- \
+//!     [--ranks 4] [--microbatches 0] [--fwd 1.0] [--p1 1.2] [--p2 0.8] \
+//!     [--comm 0.05] [--cols 100]
+//! ```
+
+use twobp::schedule::{generate, validate::validate, ScheduleKind};
+use twobp::sim::{simulate, CostModel};
+use twobp::util::args::Args;
+use twobp::util::gantt;
+use twobp::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[]);
+    let n = args.get_usize("ranks", 4);
+    let m = args.get_usize("microbatches", 0);
+    let cols = args.get_usize("cols", 100);
+    let mut costs = CostModel::ratios(
+        n,
+        args.get_f64("fwd", 1.0),
+        args.get_f64("p1", 1.0),
+        args.get_f64("p2", 1.0),
+    );
+    costs.comm = args.get_f64("comm", 0.0);
+
+    let mut summary = Table::new(&[
+        "schedule", "M", "makespan", "makespan +2BP", "bubble", "bubble +2BP",
+        "gain",
+    ])
+    .with_title(&format!(
+        "schedules at N={n}, f={:.2} p1={:.2} p2={:.2} comm={:.2}",
+        costs.fwd[0], costs.p1[0], costs.p2[0], costs.comm
+    ));
+
+    for kind in ScheduleKind::all() {
+        let mut res = Vec::new();
+        for two_bp in [false, true] {
+            let plan = generate(kind, two_bp, n, m, false);
+            validate(&plan).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let r = simulate(&plan, &costs, None)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!("=== {} ===  makespan {:.2}, bubble {:.3}",
+                     plan.describe(), r.makespan, r.bubble_ratio);
+            print!("{}", gantt::render(&r.spans, cols));
+            println!();
+            res.push(r);
+        }
+        summary.row(vec![
+            kind.name().into(),
+            generate(kind, false, n, m, false).n_microbatches.to_string(),
+            format!("{:.2}", res[0].makespan),
+            format!("{:.2}", res[1].makespan),
+            format!("{:.3}", res[0].bubble_ratio),
+            format!("{:.3}", res[1].bubble_ratio),
+            format!("{:.3}x", res[0].makespan / res[1].makespan),
+        ]);
+    }
+    print!("{}", summary.render());
+    Ok(())
+}

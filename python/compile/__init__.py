@@ -1,0 +1,5 @@
+"""Build-time Python: L2 jax model + L1 Pallas kernels + AOT export.
+
+Never imported at runtime — `make artifacts` runs once, then the rust
+coordinator is self-contained.
+"""

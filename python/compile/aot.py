@@ -1,0 +1,365 @@
+"""AOT export: lower every per-stage function to HLO text + manifest.
+
+This is the entire runtime contract between Python and rust.  For each
+pipeline stage i of a preset we export six executables:
+
+    stage{i}_init         (seed)                             -> params…
+    stage{i}_fwd          (params…, x)                       -> (y, res1…, res2…)
+    stage{i}_bwd_p1       (params…, res1…, res2…, gy)        -> (gx, inter…)
+    stage{i}_bwd_p2       (res2…, inter…, acc…)              -> grads…   [+= acc]
+    stage{i}_bwd_p2_concat(⟨res2…, inter…⟩ × M)              -> grads…   [Fig 2 / Table 3]
+    stage{i}_opt          (params…, grads…, s0…, s1…, t)     -> (params…, s0…, s1…)
+
+plus one ``loss`` executable (logits, labels) -> (loss, glogits) for the
+last rank.  ``manifest.json`` records every flat argument/output spec,
+per-class byte totals (params / res1 / res2 / inter / grads) that drive
+the rust memory accountant (Fig 4/5) and the simulator's memory model
+(Fig 7 OOM), and XLA cost-analysis flops that calibrate the simulator.
+
+Interchange is HLO **text**: the image's xla_extension 0.5.1 rejects
+jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+The ``bwd_p2_concat`` merge rule: a res2/inter leaf is *batch-carried*
+iff its leading dim scales with the microbatch size (detected by
+eval_shape at b and 2b — no heuristics); batch-carried leaves are
+concatenated along axis 0, already-reduced leaves (e.g. the SSM's
+accumulated dA) are summed.  Both reproduce exactly the sum of per-mb
+p2 gradients.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import optim, presets
+from .archs import BUILDERS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype),
+            "bytes": int(abs_bytes(x))}
+
+
+def abs_bytes(s) -> int:
+    n = 1
+    for d in s.shape:
+        n *= d
+    return n * jnp.dtype(s.dtype).itemsize
+
+
+def export(fn, specs, path: str, want_cost: bool = True):
+    """Lower fn at the given ShapeDtypeStruct specs; write HLO text.
+
+    Returns (output_specs, flops_estimate_or_None).
+    """
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    out_specs = jax.eval_shape(fn, *specs)
+    flops = None
+    if want_cost:
+        try:
+            cost = lowered.compile().cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            flops = float(cost.get("flops", 0.0))
+        except Exception:
+            flops = None
+    return out_specs, flops
+
+
+# ---------------------------------------------------------------------------
+# stage function builders (flat signatures)
+
+
+def _leaves(tree) -> list:
+    return jax.tree_util.tree_flatten(tree)[0]
+
+
+def _treedef(tree):
+    return jax.tree_util.tree_flatten(tree)[1]
+
+
+class StageExport:
+    """Builds the six flat-signature functions for one pipeline stage."""
+
+    def __init__(self, stage, x_spec, opt_step, seed_base: int):
+        self.stage = stage
+        self.x_spec = x_spec
+        self.opt_step = opt_step
+        self.seed_base = seed_base
+
+        params_shape = jax.eval_shape(
+            lambda: stage.init(jax.random.PRNGKey(0)))
+        self.p_leaves = _leaves(params_shape)
+        self.p_tree = _treedef(params_shape)
+        self.np = len(self.p_leaves)
+        self.param_names = [
+            "/".join(str(getattr(k, "key", k)) for k in kp)
+            for kp, _ in jax.tree_util.tree_flatten_with_path(params_shape)[0]
+        ]
+
+        # shapes of fwd outputs at microbatch b (and 2b for batch detection)
+        fwd_out = jax.eval_shape(stage.fwd, params_shape, x_spec)
+        self.y_spec, r1_shape, r2_shape = fwd_out
+        self.r1_leaves, self.r1_tree = jax.tree_util.tree_flatten(r1_shape)
+        self.r2_leaves, self.r2_tree = jax.tree_util.tree_flatten(r2_shape)
+
+        gy_spec = self.y_spec
+        p1_out = jax.eval_shape(stage.bwd_p1, params_shape, r1_shape,
+                                r2_shape, gy_spec)
+        self.gx_spec, inter_shape = p1_out
+        self.it_leaves, self.it_tree = jax.tree_util.tree_flatten(inter_shape)
+
+        grads_shape = jax.eval_shape(stage.bwd_p2, r2_shape, inter_shape)
+        self.g_leaves = _leaves(grads_shape)
+        self.g_tree = _treedef(grads_shape)
+
+        # batch-carried detection at 2b
+        x2_spec = jax.ShapeDtypeStruct(
+            (x_spec.shape[0] * 2,) + tuple(x_spec.shape[1:]), x_spec.dtype)
+        fwd2 = jax.eval_shape(stage.fwd, params_shape, x2_spec)
+        _, r1_2, r2_2 = fwd2
+        gy2 = fwd2[0]
+        _, it_2 = jax.eval_shape(stage.bwd_p1, params_shape, r1_2, r2_2, gy2)
+        self.r2_batch = [
+            a.shape[:1] != b.shape[:1]
+            for a, b in zip(self.r2_leaves, _leaves(r2_2))]
+        self.it_batch = [
+            a.shape[:1] != b.shape[:1]
+            for a, b in zip(self.it_leaves, _leaves(it_2))]
+
+    # -- flat functions ------------------------------------------------------
+
+    def init_fn(self):
+        seed_base = self.seed_base
+        stage = self.stage
+
+        def f(seed):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed_base), seed)
+            return tuple(_leaves(stage.init(key)))
+
+        return f, (jax.ShapeDtypeStruct((), jnp.int32),)
+
+    def fwd_fn(self):
+        stage, p_tree, np_ = self.stage, self.p_tree, self.np
+
+        def f(*args):
+            ps = jax.tree_util.tree_unflatten(p_tree, args[:np_])
+            x = args[np_]
+            y, r1, r2 = stage.fwd(ps, x)
+            return (y, *_leaves(r1), *_leaves(r2))
+
+        return f, (*self.p_leaves, self.x_spec)
+
+    def bwd_p1_fn(self):
+        stage = self.stage
+        p_tree, r1_tree, r2_tree = self.p_tree, self.r1_tree, self.r2_tree
+        np_, n1, n2 = self.np, len(self.r1_leaves), len(self.r2_leaves)
+
+        def f(*args):
+            ps = jax.tree_util.tree_unflatten(p_tree, args[:np_])
+            r1 = jax.tree_util.tree_unflatten(
+                r1_tree, args[np_:np_ + n1])
+            r2 = jax.tree_util.tree_unflatten(
+                r2_tree, args[np_ + n1:np_ + n1 + n2])
+            gy = args[np_ + n1 + n2]
+            gx, inter = stage.bwd_p1(ps, r1, r2, gy)
+            return (gx, *_leaves(inter))
+
+        return f, (*self.p_leaves, *self.r1_leaves, *self.r2_leaves,
+                   self.y_spec)
+
+    def bwd_p2_fn(self):
+        stage = self.stage
+        r2_tree, it_tree = self.r2_tree, self.it_tree
+        n2, ni = len(self.r2_leaves), len(self.it_leaves)
+
+        def f(*args):
+            r2 = jax.tree_util.tree_unflatten(r2_tree, args[:n2])
+            it = jax.tree_util.tree_unflatten(it_tree, args[n2:n2 + ni])
+            acc = args[n2 + ni:]
+            grads = _leaves(stage.bwd_p2(r2, it))
+            return tuple(g + a for g, a in zip(grads, acc))
+
+        return f, (*self.r2_leaves, *self.it_leaves, *self.g_leaves)
+
+    def bwd_p2_concat_fn(self, m: int):
+        stage = self.stage
+        r2_tree, it_tree = self.r2_tree, self.it_tree
+        n2, ni = len(self.r2_leaves), len(self.it_leaves)
+        r2_batch, it_batch = self.r2_batch, self.it_batch
+        per = n2 + ni
+
+        def f(*args):
+            merged = []
+            for j in range(per):
+                leaves = [args[k * per + j] for k in range(m)]
+                batch = r2_batch[j] if j < n2 else it_batch[j - n2]
+                merged.append(jnp.concatenate(leaves, axis=0) if batch
+                              else sum(leaves))
+            r2 = jax.tree_util.tree_unflatten(r2_tree, merged[:n2])
+            it = jax.tree_util.tree_unflatten(it_tree, merged[n2:])
+            return tuple(_leaves(stage.bwd_p2(r2, it)))
+
+        specs = (*self.r2_leaves, *self.it_leaves) * m
+        return f, specs
+
+    def opt_fn(self):
+        opt_step, p_tree, g_tree = self.opt_step, self.p_tree, self.g_tree
+        np_ = self.np
+
+        def f(*args):
+            ps = jax.tree_util.tree_unflatten(p_tree, args[:np_])
+            gs = jax.tree_util.tree_unflatten(g_tree, args[np_:2 * np_])
+            s0 = jax.tree_util.tree_unflatten(p_tree, args[2 * np_:3 * np_])
+            s1 = jax.tree_util.tree_unflatten(p_tree, args[3 * np_:4 * np_])
+            t = args[4 * np_]
+            new_p, new_s0, new_s1 = opt_step(ps, gs, s0, s1, t)
+            return (*_leaves(new_p), *_leaves(new_s0), *_leaves(new_s1))
+
+        t_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        return f, (*self.p_leaves, *self.g_leaves, *self.p_leaves,
+                   *self.p_leaves, t_spec)
+
+
+# ---------------------------------------------------------------------------
+# driver
+
+
+def export_preset(name: str, out_root: str, want_cost: bool = True,
+                  concat_m: int | None = None, verbose: bool = True) -> dict:
+    cfg = presets.get(name)
+    pipe = BUILDERS[cfg["arch"]](cfg)
+    m = concat_m or cfg["n_microbatches"]
+    opt_step = optim.OPTIMIZERS[cfg["optimizer"]](lr=cfg["lr"])
+
+    out_dir = os.path.join(out_root, name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest: Dict[str, Any] = {
+        "preset": name, "arch": cfg["arch"], "stages": pipe.n_stages,
+        "microbatch": cfg["microbatch"],
+        "samples_per_microbatch": pipe.samples_per_microbatch,
+        "n_microbatches_concat": m,
+        "optimizer": cfg["optimizer"], "lr": cfg["lr"],
+        "cfg": {k: v for k, v in cfg.items() if k != "preset"},
+        "stage": [],
+    }
+
+    x_spec = pipe.input_spec
+    for i, stage in enumerate(pipe.stages):
+        se = StageExport(stage, x_spec, opt_step, seed_base=1000 + i)
+        arts = {}
+
+        def _exp(tag, fn_specs, fname):
+            fn, specs = fn_specs
+            path = os.path.join(out_dir, fname)
+            _, flops = export(fn, specs, path, want_cost)
+            arts[tag] = {"file": fname, "flops": flops}
+            if verbose:
+                kb = os.path.getsize(path) // 1024
+                print(f"  [{name}] stage{i} {tag}: {fname} ({kb} KiB, "
+                      f"flops={flops})", flush=True)
+
+        _exp("init", se.init_fn(), f"stage{i}_init.hlo.txt")
+        _exp("fwd", se.fwd_fn(), f"stage{i}_fwd.hlo.txt")
+        _exp("bwd_p1", se.bwd_p1_fn(), f"stage{i}_bwd_p1.hlo.txt")
+        _exp("bwd_p2", se.bwd_p2_fn(), f"stage{i}_bwd_p2.hlo.txt")
+        _exp("bwd_p2_concat", se.bwd_p2_concat_fn(m),
+             f"stage{i}_bwd_p2_concat.hlo.txt")
+        _exp("opt", se.opt_fn(), f"stage{i}_opt.hlo.txt")
+
+        entry = {
+            "index": i,
+            "params": [dict(name=n, **_spec(s))
+                       for n, s in zip(se.param_names, se.p_leaves)],
+            "input": _spec(x_spec),
+            "output": _spec(se.y_spec),
+            "gx": _spec(se.gx_spec),
+            "res1": [_spec(s) for s in se.r1_leaves],
+            "res2": [_spec(s) for s in se.r2_leaves],
+            "inter": [_spec(s) for s in se.it_leaves],
+            "res2_batch": se.r2_batch,
+            "inter_batch": se.it_batch,
+            "grads": [_spec(s) for s in se.g_leaves],
+            "bytes": {
+                "params": sum(abs_bytes(s) for s in se.p_leaves),
+                "res1": sum(abs_bytes(s) for s in se.r1_leaves),
+                "res2": sum(abs_bytes(s) for s in se.r2_leaves),
+                "inter": sum(abs_bytes(s) for s in se.it_leaves),
+                "grads": sum(abs_bytes(s) for s in se.g_leaves),
+                "activation": abs_bytes(se.y_spec),
+            },
+            "artifacts": arts,
+        }
+        manifest["stage"].append(entry)
+        x_spec = se.y_spec  # next stage's input
+
+    # loss head
+    loss_path = os.path.join(out_dir, "loss.hlo.txt")
+    logits_spec = x_spec
+    label_spec = pipe.label_spec
+    _, loss_flops = export(lambda lo, la: pipe.loss_grad(lo, la),
+                           (logits_spec, label_spec), loss_path, want_cost)
+    manifest["loss"] = {
+        "file": "loss.hlo.txt", "flops": loss_flops,
+        "logits": _spec(logits_spec), "labels": _spec(label_spec),
+    }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        total_params = sum(p["bytes"] for st in manifest["stage"]
+                           for p in st["params"]) // 4
+        print(f"[{name}] exported {pipe.n_stages} stages, "
+              f"{total_params:,} params -> {out_dir}", flush=True)
+    return manifest
+
+
+DEFAULT_PRESETS = [
+    "transformer-tiny", "bert-tiny", "mamba-tiny", "resnet-tiny",
+    "transformer-s", "bert-s", "mamba-s", "resnet-s",
+    "bert-scale-fixed", "transformer-m",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", action="append", default=None,
+                    help="preset name (repeatable); default: standard set")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip XLA cost analysis (faster export)")
+    args = ap.parse_args()
+    names = args.preset or DEFAULT_PRESETS
+    for n in names:
+        export_preset(n, args.out, want_cost=not args.no_cost)
+
+
+if __name__ == "__main__":
+    main()

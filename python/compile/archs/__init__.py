@@ -1,0 +1,21 @@
+"""L2 model architectures, stage-partitioned for pipeline parallelism.
+
+Each arch module exposes ``build(cfg) -> Pipeline`` where a Pipeline is a
+list of Stage objects (see .common).  The four architectures mirror the
+paper's benchmark set (§3.2 / Table 2):
+
+  transformer — LLaMa/PaLM-like decoder (RMSNorm, RoPE, SwiGLU, no bias)
+  bert        — BERT-Large-like bidirectional encoder (LayerNorm, GELU)
+  mamba       — Mamba-like selective-SSM stack
+  resnet      — ResNet-152-like bottleneck CNN (the non-uniform graph)
+"""
+
+from . import common  # noqa: F401
+from . import transformer, bert, mamba, resnet  # noqa: F401
+
+BUILDERS = {
+    "transformer": transformer.build,
+    "bert": bert.build,
+    "mamba": mamba.build,
+    "resnet": resnet.build,
+}

@@ -1,0 +1,121 @@
+"""BERT-Large-like bidirectional encoder (post-LN, GELU, biased linears).
+
+Post-norm residual blocks (original BERT):
+
+    x = LN(x + Attn(x))
+    x = LN(x + MLP(x))
+
+Attention is bidirectional (no causal mask, no RoPE — learned absolute
+position embeddings live on stage 0).  Used for the paper's BERT-Large
+throughput run (Fig 3/4) and both scaling studies (Figs 6, 7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from .common import Pipeline, Stage, lm_cross_entropy, split_blocks
+
+
+class PosEmbedding(L.Module):
+    """Learned absolute position embedding added to token embeddings."""
+
+    has_params = True
+    param_names = ("w",)
+
+    def __init__(self, t: int, d: int):
+        self.t, self.d = t, d
+
+    def init(self, key):
+        return {"w": jax.random.normal(key, (self.t, self.d), jnp.float32) * 0.02}
+
+    def fwd(self, params, x):
+        return x + params["w"][None, :, :], (), ()
+
+    def bwd_p1(self, params, res1, res2, gy):
+        return gy, (gy,)
+
+    def bwd_p2(self, res2, inter):
+        (gy,) = inter
+        return {"w": jnp.sum(gy, axis=0)}
+
+
+class BertBlock(L.Module):
+    """Post-norm encoder block with hand-written split backward."""
+
+    has_params = True
+
+    def __init__(self, d: int, heads: int, t: int, hidden: int):
+        self.attn = L.Attention(d, heads, t, causal=False, rope=False,
+                                bias=True)
+        self.n1 = L.LayerNorm(d)
+        self.mlp = L.MLP(d, hidden)
+        self.n2 = L.LayerNorm(d)
+        self._children = (("attn", self.attn), ("n1", self.n1),
+                          ("mlp", self.mlp), ("n2", self.n2))
+
+    def init(self, key):
+        ks = jax.random.split(key, 4)
+        return {n: m.init(k) for (n, m), k in zip(self._children, ks)}
+
+    def fwd(self, params, x):
+        a, r1_at, r2_at = self.attn.fwd(params["attn"], x)
+        h, r1_n1, r2_n1 = self.n1.fwd(params["n1"], x + a)
+        m, r1_ml, r2_ml = self.mlp.fwd(params["mlp"], h)
+        y, r1_n2, r2_n2 = self.n2.fwd(params["n2"], h + m)
+        return y, (r1_at, r1_n1, r1_ml, r1_n2), (r2_at, r2_n1, r2_ml, r2_n2)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        r1_at, r1_n1, r1_ml, r1_n2 = res1
+        r2_at, r2_n1, r2_ml, r2_n2 = res2
+        gs2, i_n2 = self.n2.bwd_p1(params["n2"], r1_n2, r2_n2, gy)
+        gm_in, i_ml = self.mlp.bwd_p1(params["mlp"], r1_ml, r2_ml, gs2)
+        gh = gs2 + gm_in
+        gs1, i_n1 = self.n1.bwd_p1(params["n1"], r1_n1, r2_n1, gh)
+        ga_in, i_at = self.attn.bwd_p1(params["attn"], r1_at, r2_at, gs1)
+        gx = gs1 + ga_in
+        return gx, (i_at, i_n1, i_ml, i_n2)
+
+    def bwd_p2(self, res2, inter):
+        r2_at, r2_n1, r2_ml, r2_n2 = res2
+        i_at, i_n1, i_ml, i_n2 = inter
+        return {
+            "attn": self.attn.bwd_p2(r2_at, i_at),
+            "n1": self.n1.bwd_p2(r2_n1, i_n1),
+            "mlp": self.mlp.bwd_p2(r2_ml, i_ml),
+            "n2": self.n2.bwd_p2(r2_n2, i_n2),
+        }
+
+
+def build(cfg: dict) -> Pipeline:
+    """cfg keys: dim, heads, blocks, seq, vocab, hidden(opt), microbatch, stages."""
+    d, heads, t = cfg["dim"], cfg["heads"], cfg["seq"]
+    vocab, n_blocks = cfg["vocab"], cfg["blocks"]
+    hidden = cfg.get("hidden", d * 4)
+    n_stages, b = cfg["stages"], cfg["microbatch"]
+
+    per_stage = split_blocks(n_blocks, n_stages)
+    stages = []
+    bi = 0
+    for s in range(n_stages):
+        mods = []
+        if s == 0:
+            mods.append(("embed", L.Embedding(vocab, d)))
+            mods.append(("pos", PosEmbedding(t, d)))
+        for _ in range(per_stage[s]):
+            mods.append((f"block{bi}", BertBlock(d, heads, t, hidden)))
+            bi += 1
+        if s == n_stages - 1:
+            mods.append(("head", L.Linear(d, vocab, bias=True)))
+        stages.append(Stage(mods))
+
+    return Pipeline(
+        name="bert",
+        stages=stages,
+        loss_grad=lm_cross_entropy,
+        input_spec=jax.ShapeDtypeStruct((b, t), jnp.int32),
+        label_spec=jax.ShapeDtypeStruct((b, t), jnp.int32),
+        samples_per_microbatch=b,
+    )

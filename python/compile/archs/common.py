@@ -1,0 +1,131 @@
+"""Stage / pipeline abstractions shared by all architectures.
+
+A ``Stage`` is an ordered list of named modules executed sequentially —
+the unit that lives on one accelerator.  Its three split-backward
+functions are what ``aot.py`` lowers to per-stage HLO artifacts:
+
+    fwd(params, x)                 -> (y, res1, res2)
+    bwd_p1(params, res1, res2, gy) -> (gx, inter)
+    bwd_p2(res2, inter)            -> grads
+
+Residuals/intermediates are pytrees (tuples keyed by module position);
+``aot.py`` flattens them into the flat HLO signature and records the
+layout in the manifest.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+
+class Stage:
+    """One pipeline stage: a named sequence of modules on one device."""
+
+    def __init__(self, modules: Sequence[Tuple[str, L.Module]]):
+        names = [n for n, _ in modules]
+        assert len(names) == len(set(names)), f"duplicate module names: {names}"
+        self.modules: List[Tuple[str, L.Module]] = list(modules)
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> Dict[str, dict]:
+        keys = jax.random.split(key, max(len(self.modules), 2))
+        out = {}
+        for (name, mod), k in zip(self.modules, keys):
+            if mod.has_params:
+                out[name] = mod.init(k)
+        return out
+
+    def param_count(self, params) -> int:
+        return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+    # -- split backward ------------------------------------------------------
+    def fwd(self, params, x):
+        res1, res2 = [], []
+        for name, mod in self.modules:
+            x, r1, r2 = mod.fwd(params.get(name, {}), x)
+            res1.append(r1)
+            res2.append(r2)
+        return x, tuple(res1), tuple(res2)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        inters: List = [None] * len(self.modules)
+        for i in range(len(self.modules) - 1, -1, -1):
+            name, mod = self.modules[i]
+            if mod.has_params:
+                gy, inter = mod.bwd_p1(params.get(name, {}), res1[i], res2[i], gy)
+            else:
+                gy, inter = mod.bwd_p1({}, res1[i], res2[i], gy)
+            inters[i] = inter
+        return gy, tuple(inters)
+
+    def bwd_p2(self, res2, inter):
+        grads = {}
+        for i, (name, mod) in enumerate(self.modules):
+            if mod.has_params:
+                grads[name] = mod.bwd_p2(res2[i], inter[i])
+        return grads
+
+    # -- fused oracle (single-device reference; == autograd baseline) -------
+    def apply(self, params, x):
+        for name, mod in self.modules:
+            x, _, _ = mod.fwd(params.get(name, {}), x)
+        return x
+
+
+class Pipeline:
+    """A stage-partitioned model plus its loss head."""
+
+    def __init__(self, name: str, stages: List[Stage],
+                 loss_grad: Callable, input_spec, label_spec,
+                 samples_per_microbatch: int):
+        self.name = name
+        self.stages = stages
+        self.loss_grad = loss_grad          # (logits, labels) -> (loss, glogits)
+        self.input_spec = input_spec        # ShapeDtypeStruct of stage-0 input
+        self.label_spec = label_spec
+        self.samples_per_microbatch = samples_per_microbatch
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+
+# ---------------------------------------------------------------------------
+# loss heads
+
+
+def lm_cross_entropy(logits, labels):
+    """Token-level CE for LM-style heads. logits [b,t,v], labels [b,t] int32.
+
+    Returns (mean loss, d loss / d logits) fused in one executable — this
+    seeds backward-p1 on the last pipeline rank.
+    """
+    v = logits.shape[-1]
+    flat = logits.reshape(-1, v)
+    lab = labels.reshape(-1)
+    m = jnp.max(flat, axis=-1, keepdims=True)
+    lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(flat - m), axis=-1))
+    picked = jnp.take_along_axis(flat, lab[:, None], axis=-1)[:, 0]
+    n = flat.shape[0]
+    loss = jnp.sum(lse - picked) / n
+    p = jnp.exp(flat - m) / jnp.sum(jnp.exp(flat - m), axis=-1, keepdims=True)
+    g = (p - jax.nn.one_hot(lab, v, dtype=logits.dtype)) / n
+    return loss, g.reshape(logits.shape)
+
+
+def class_cross_entropy(logits, labels):
+    """Image-classification CE. logits [b,c], labels [b] int32."""
+    return lm_cross_entropy(logits[:, None, :], labels[:, None])[0], \
+        lm_cross_entropy(logits[:, None, :], labels[:, None])[1][:, 0, :]
+
+
+def split_blocks(n_blocks: int, n_stages: int) -> List[int]:
+    """Even block split (paper: "distributed the number of blocks equally")."""
+    base = n_blocks // n_stages
+    rem = n_blocks % n_stages
+    return [base + (1 if i < rem else 0) for i in range(n_stages)]

@@ -1,0 +1,151 @@
+"""Mamba-like selective-SSM stack (the paper's Mamba-1.4b stand-in).
+
+Block structure (simplified S6, faithful to the memory profile the paper
+measures — the SSM scan must stash *all* hidden states [b,t,di,s] until
+backward-p2, which is why Mamba shows the paper's largest 2BP memory
+blow-up, 2.67× under 1F1B-2):
+
+    x ─ RMSNorm ─ in_proj ──┬─ u ── causal dwconv ── silu ── SSM ──┐
+                            └─ gate ──────────────── silu ─────── * ── out_proj ─ (+x)
+
+with input-dependent Δ (softplus, low-rank), B, C projections feeding
+the diagonal selective scan (layers.SSMScan).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..layers import _dsilu, _silu
+from .common import Pipeline, Stage, lm_cross_entropy, split_blocks
+
+
+class MambaBlock(L.Module):
+    """Pre-norm Mamba block with hand-written split backward."""
+
+    has_params = True
+
+    def __init__(self, d: int, expand: int = 2, state: int = 16,
+                 conv_k: int = 4, t: int = 0, use_kernels: bool = True):
+        self.d = d
+        self.di = d * expand
+        self.s = state
+        self.dt_rank = max(d // 16, 1)
+        self.norm = L.RMSNorm(d, use_kernel=use_kernels)
+        self.in_proj = L.Linear(d, 2 * self.di, bias=False)
+        self.conv = L.DepthwiseConv1d(self.di, conv_k)
+        self.x_proj = L.Linear(self.di, self.dt_rank + 2 * self.s, bias=False)
+        self.dt_proj = L.Linear(self.dt_rank, self.di, bias=True)
+        self.ssm = L.SSMScan(self.di, self.s)
+        self.out_proj = L.Linear(self.di, d, bias=False)
+        self._children = (
+            ("norm", self.norm), ("in_proj", self.in_proj),
+            ("conv", self.conv), ("x_proj", self.x_proj),
+            ("dt_proj", self.dt_proj), ("ssm", self.ssm),
+            ("out_proj", self.out_proj))
+
+    def init(self, key):
+        ks = jax.random.split(key, len(self._children))
+        return {n: m.init(k) for (n, m), k in zip(self._children, ks)}
+
+    def fwd(self, params, x):
+        r1, r2 = {}, {}
+        xn, r1["norm"], r2["norm"] = self.norm.fwd(params["norm"], x)
+        ug, r1["in_proj"], r2["in_proj"] = self.in_proj.fwd(params["in_proj"], xn)
+        u, gate = jnp.split(ug, 2, axis=-1)
+        uc, r1["conv"], r2["conv"] = self.conv.fwd(params["conv"], u)
+        us = _silu(uc)
+        dbc, r1["x_proj"], r2["x_proj"] = self.x_proj.fwd(params["x_proj"], us)
+        dt_lr = dbc[..., : self.dt_rank]
+        bmat = dbc[..., self.dt_rank: self.dt_rank + self.s]
+        cmat = dbc[..., self.dt_rank + self.s:]
+        dt_pre, r1["dt_proj"], r2["dt_proj"] = self.dt_proj.fwd(
+            params["dt_proj"], dt_lr)
+        delta = jax.nn.softplus(dt_pre)
+        y_ssm, r1["ssm"], r2["ssm"] = self.ssm.fwd(
+            params["ssm"], (us, delta, bmat, cmat))
+        gs = _silu(gate)
+        yg = y_ssm * gs
+        y, r1["out_proj"], r2["out_proj"] = self.out_proj.fwd(
+            params["out_proj"], yg)
+        # functional pre-activations (released after p1):
+        r1["_act"] = (uc, gate, dt_pre, y_ssm)
+        order = [n for n, _ in self._children] + ["_act"]
+        return x + y, tuple(r1[n] for n in order), \
+            tuple(r2.get(n, ()) for n in order)
+
+    def _unpack(self, res):
+        order = [n for n, _ in self._children] + ["_act"]
+        return dict(zip(order, res))
+
+    def bwd_p1(self, params, res1, res2, gy):
+        r1, r2 = self._unpack(res1), self._unpack(res2)
+        uc, gate, dt_pre, y_ssm = r1["_act"]
+        inter = {}
+        gyg, inter["out_proj"] = self.out_proj.bwd_p1(
+            params["out_proj"], r1["out_proj"], r2["out_proj"], gy)
+        gs = _silu(gate)
+        gy_ssm = gyg * gs
+        ggate = gyg * y_ssm * _dsilu(gate)
+        (gus_ssm, gdelta, gb, gc), inter["ssm"] = self.ssm.bwd_p1(
+            params["ssm"], r1["ssm"], r2["ssm"], gy_ssm)
+        gdt_pre = gdelta * jax.nn.sigmoid(dt_pre)  # softplus'
+        gdt_lr, inter["dt_proj"] = self.dt_proj.bwd_p1(
+            params["dt_proj"], r1["dt_proj"], r2["dt_proj"], gdt_pre)
+        gdbc = jnp.concatenate([gdt_lr, gb, gc], axis=-1)
+        gus_proj, inter["x_proj"] = self.x_proj.bwd_p1(
+            params["x_proj"], r1["x_proj"], r2["x_proj"], gdbc)
+        gus = gus_ssm + gus_proj
+        guc = gus * _dsilu(uc)
+        gu, inter["conv"] = self.conv.bwd_p1(
+            params["conv"], r1["conv"], r2["conv"], guc)
+        gug = jnp.concatenate([gu, ggate], axis=-1)
+        gxn, inter["in_proj"] = self.in_proj.bwd_p1(
+            params["in_proj"], r1["in_proj"], r2["in_proj"], gug)
+        gx_n, inter["norm"] = self.norm.bwd_p1(
+            params["norm"], r1["norm"], r2["norm"], gxn)
+        order = [n for n, _ in self._children]
+        return gy + gx_n, tuple(inter[n] for n in order)
+
+    def bwd_p2(self, res2, inter):
+        r2 = self._unpack(res2)
+        order = [n for n, _ in self._children]
+        it = dict(zip(order, inter))
+        return {n: m.bwd_p2(r2[n], it[n]) for n, m in self._children}
+
+
+def build(cfg: dict) -> Pipeline:
+    """cfg keys: dim, blocks, seq, vocab, expand(opt), state(opt),
+    microbatch, stages."""
+    d, n_blocks, t = cfg["dim"], cfg["blocks"], cfg["seq"]
+    vocab = cfg["vocab"]
+    expand = cfg.get("expand", 2)
+    state = cfg.get("state", 16)
+    n_stages, b = cfg["stages"], cfg["microbatch"]
+    use_kernels = cfg.get("use_kernels", True)
+
+    per_stage = split_blocks(n_blocks, n_stages)
+    stages = []
+    bi = 0
+    for s in range(n_stages):
+        mods = []
+        if s == 0:
+            mods.append(("embed", L.Embedding(vocab, d)))
+        for _ in range(per_stage[s]):
+            mods.append((f"block{bi}", MambaBlock(d, expand, state, t=t, use_kernels=use_kernels)))
+            bi += 1
+        if s == n_stages - 1:
+            mods.append(("norm_f", L.RMSNorm(d, use_kernel=use_kernels)))
+            mods.append(("head", L.Linear(d, vocab, bias=False)))
+        stages.append(Stage(mods))
+
+    return Pipeline(
+        name="mamba",
+        stages=stages,
+        loss_grad=lm_cross_entropy,
+        input_spec=jax.ShapeDtypeStruct((b, t), jnp.int32),
+        label_spec=jax.ShapeDtypeStruct((b, t), jnp.int32),
+        samples_per_microbatch=b,
+    )

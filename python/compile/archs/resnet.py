@@ -1,0 +1,243 @@
+"""ResNet-152-like bottleneck CNN — the paper's *non-uniform* compute graph.
+
+Activations change shape down the network (the paper: "a model who's
+activations do not share a constant shape throughout the model"), which
+is exactly why ResNet shows the smallest 2BP gain (1.10×, §4.1): a
+deferred backward-p2 slab may exceed the bubble it is slotted into.
+
+Structure: stem (7×7/2 conv + BN + ReLU + 3×3/2 maxpool), then bottleneck
+stacks with channel plan (64,128,256,512)×4 and stride-2 transitions,
+then GAP + FC head.  The paper splits ResNet152's 50 bottlenecks as
+[10, 14, 14, 12] across 4 GPUs with the stem on GPU 0 and the head on
+GPU 3 — ``build`` honors an explicit ``split`` list for this.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from .common import Pipeline, Stage, class_cross_entropy
+
+
+class Bottleneck(L.Module):
+    """1×1 -> 3×3 -> 1×1 bottleneck with BN + ReLU and projection skip."""
+
+    has_params = True
+
+    def __init__(self, c_in: int, c_mid: int, stride: int = 1):
+        c_out = c_mid * 4
+        self.conv1 = L.Conv2d(c_in, c_mid, 1)
+        self.bn1 = L.BatchNorm2d(c_mid)
+        self.conv2 = L.Conv2d(c_mid, c_mid, 3, stride=stride, padding=1)
+        self.bn2 = L.BatchNorm2d(c_mid)
+        self.conv3 = L.Conv2d(c_mid, c_out, 1)
+        self.bn3 = L.BatchNorm2d(c_out)
+        self.relu = L.ReLU()
+        self.down: Optional[L.Conv2d] = None
+        self.down_bn: Optional[L.BatchNorm2d] = None
+        if stride != 1 or c_in != c_out:
+            self.down = L.Conv2d(c_in, c_out, 1, stride=stride)
+            self.down_bn = L.BatchNorm2d(c_out)
+        names = ["conv1", "bn1", "conv2", "bn2", "conv3", "bn3"]
+        mods = [self.conv1, self.bn1, self.conv2, self.bn2,
+                self.conv3, self.bn3]
+        if self.down is not None:
+            names += ["down", "down_bn"]
+            mods += [self.down, self.down_bn]
+        self._children = tuple(zip(names, mods))
+
+    def init(self, key):
+        ks = jax.random.split(key, len(self._children))
+        return {n: m.init(k) for (n, m), k in zip(self._children, ks)}
+
+    def fwd(self, params, x):
+        r1, r2 = {}, {}
+        h, r1["conv1"], r2["conv1"] = self.conv1.fwd(params["conv1"], x)
+        h, r1["bn1"], r2["bn1"] = self.bn1.fwd(params["bn1"], h)
+        a1 = h
+        h = jnp.maximum(h, 0.0)
+        h, r1["conv2"], r2["conv2"] = self.conv2.fwd(params["conv2"], h)
+        h, r1["bn2"], r2["bn2"] = self.bn2.fwd(params["bn2"], h)
+        a2 = h
+        h = jnp.maximum(h, 0.0)
+        h, r1["conv3"], r2["conv3"] = self.conv3.fwd(params["conv3"], h)
+        h, r1["bn3"], r2["bn3"] = self.bn3.fwd(params["bn3"], h)
+        if self.down is not None:
+            sk, r1["down"], r2["down"] = self.down.fwd(params["down"], x)
+            sk, r1["down_bn"], r2["down_bn"] = self.down_bn.fwd(
+                params["down_bn"], sk)
+        else:
+            sk = x
+        pre = h + sk
+        y = jnp.maximum(pre, 0.0)
+        r1["_act"] = (a1, a2, pre)
+        order = [n for n, _ in self._children] + ["_act"]
+        return y, tuple(r1[n] for n in order), \
+            tuple(r2.get(n, ()) for n in order)
+
+    def _unpack(self, res):
+        order = [n for n, _ in self._children] + ["_act"]
+        return dict(zip(order, res))
+
+    def bwd_p1(self, params, res1, res2, gy):
+        r1, r2 = self._unpack(res1), self._unpack(res2)
+        a1, a2, pre = r1["_act"]
+        inter = {}
+        g = gy * (pre > 0)
+        gsk = g
+        gh, inter["bn3"] = self.bn3.bwd_p1(params["bn3"], r1["bn3"], r2["bn3"], g)
+        gh, inter["conv3"] = self.conv3.bwd_p1(
+            params["conv3"], r1["conv3"], r2["conv3"], gh)
+        gh = gh * (a2 > 0)
+        gh, inter["bn2"] = self.bn2.bwd_p1(params["bn2"], r1["bn2"], r2["bn2"], gh)
+        gh, inter["conv2"] = self.conv2.bwd_p1(
+            params["conv2"], r1["conv2"], r2["conv2"], gh)
+        gh = gh * (a1 > 0)
+        gh, inter["bn1"] = self.bn1.bwd_p1(params["bn1"], r1["bn1"], r2["bn1"], gh)
+        gx, inter["conv1"] = self.conv1.bwd_p1(
+            params["conv1"], r1["conv1"], r2["conv1"], gh)
+        if self.down is not None:
+            gd, inter["down_bn"] = self.down_bn.bwd_p1(
+                params["down_bn"], r1["down_bn"], r2["down_bn"], gsk)
+            gd, inter["down"] = self.down.bwd_p1(
+                params["down"], r1["down"], r2["down"], gd)
+            gx = gx + gd
+        else:
+            gx = gx + gsk
+        order = [n for n, _ in self._children]
+        return gx, tuple(inter[n] for n in order)
+
+    def bwd_p2(self, res2, inter):
+        r2 = self._unpack(res2)
+        order = [n for n, _ in self._children]
+        it = dict(zip(order, inter))
+        return {n: m.bwd_p2(r2[n], it[n]) for n, m in self._children}
+
+
+class Stem(L.Module):
+    """7×7/2 conv + BN + ReLU + 3×3/2 maxpool (ImageNet-style stem)."""
+
+    has_params = True
+
+    def __init__(self, c_out: int = 64):
+        self.conv = L.Conv2d(3, c_out, 7, stride=2, padding=3)
+        self.bn = L.BatchNorm2d(c_out)
+        self.pool = L.MaxPool2d(3, 2, padding=1)
+        self._children = (("conv", self.conv), ("bn", self.bn),
+                          ("pool", self.pool))
+
+    def init(self, key):
+        ks = jax.random.split(key, 3)
+        return {n: m.init(k) for (n, m), k in zip(self._children, ks)
+                if m.has_params}
+
+    def fwd(self, params, x):
+        h, r1c, r2c = self.conv.fwd(params["conv"], x)
+        h, r1b, r2b = self.bn.fwd(params["bn"], h)
+        a = h
+        h = jnp.maximum(h, 0.0)
+        y, r1p, r2p = self.pool.fwd({}, h)
+        return y, (r1c, r1b, r1p, (a,)), (r2c, r2b, r2p)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        r1c, r1b, r1p, (a,) = res1
+        r2c, r2b, r2p = res2
+        g, _ = self.pool.bwd_p1({}, r1p, r2p, gy)
+        g = g * (a > 0)
+        g, ib = self.bn.bwd_p1(params["bn"], r1b, r2b, g)
+        g, ic = self.conv.bwd_p1(params["conv"], r1c, r2c, g)
+        return g, (ic, ib)
+
+    def bwd_p2(self, res2, inter):
+        r2c, r2b, _ = res2
+        ic, ib = inter
+        return {"conv": self.conv.bwd_p2(r2c, ic),
+                "bn": self.bn.bwd_p2(r2b, ib)}
+
+
+class Head(L.Module):
+    """GlobalAvgPool + FC classification head."""
+
+    has_params = True
+
+    def __init__(self, c_in: int, classes: int):
+        self.gap = L.GlobalAvgPool()
+        self.fc = L.Linear(c_in, classes, bias=True)
+
+    def init(self, key):
+        return {"fc": self.fc.init(key)}
+
+    def fwd(self, params, x):
+        p, r1g, r2g = self.gap.fwd({}, x)
+        y, r1f, r2f = self.fc.fwd(params["fc"], p)
+        return y, (r1g, r1f), (r2g, r2f)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        r1g, r1f = res1
+        r2g, r2f = res2
+        g, i_f = self.fc.bwd_p1(params["fc"], r1f, r2f, gy)
+        g, _ = self.gap.bwd_p1({}, r1g, r2g, g)
+        return g, (i_f,)
+
+    def bwd_p2(self, res2, inter):
+        _, r2f = res2
+        (i_f,) = inter
+        return {"fc": self.fc.bwd_p2(r2f, i_f)}
+
+
+def bottleneck_plan(blocks_per_stack: List[int]):
+    """Expand a (n1,n2,n3,n4) stack plan into (c_in, c_mid, stride) specs."""
+    plan = []
+    c_in = 64
+    for si, n in enumerate(blocks_per_stack):
+        c_mid = 64 * (2 ** si)
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            plan.append((c_in, c_mid, stride))
+            c_in = c_mid * 4
+    return plan
+
+
+def build(cfg: dict) -> Pipeline:
+    """cfg keys: stacks (e.g. [3,8,36,3] for ResNet-152), image, classes,
+    microbatch, stages, split (optional explicit bottleneck split)."""
+    stacks = cfg.get("stacks", [3, 8, 36, 3])
+    img = cfg["image"]
+    classes = cfg["classes"]
+    n_stages, b = cfg["stages"], cfg["microbatch"]
+
+    plan = bottleneck_plan(stacks)
+    n_blocks = len(plan)
+    if "split" in cfg:
+        split = cfg["split"]
+        assert sum(split) == n_blocks, (split, n_blocks)
+    else:
+        base, rem = divmod(n_blocks, n_stages)
+        split = [base + (1 if i < rem else 0) for i in range(n_stages)]
+
+    stages = []
+    bi = 0
+    for s in range(n_stages):
+        mods = []
+        if s == 0:
+            mods.append(("stem", Stem(64)))
+        for _ in range(split[s]):
+            c_in, c_mid, stride = plan[bi]
+            mods.append((f"btl{bi}", Bottleneck(c_in, c_mid, stride)))
+            bi += 1
+        if s == n_stages - 1:
+            mods.append(("head", Head(plan[-1][1] * 4, classes)))
+        stages.append(Stage(mods))
+
+    return Pipeline(
+        name="resnet",
+        stages=stages,
+        loss_grad=class_cross_entropy,
+        input_spec=jax.ShapeDtypeStruct((b, 3, img, img), jnp.float32),
+        label_spec=jax.ShapeDtypeStruct((b,), jnp.int32),
+        samples_per_microbatch=b,
+    )

@@ -1,0 +1,115 @@
+"""LLaMa/PaLM-like decoder transformer (the paper's Transformer-7b).
+
+Per §3.2: rotary embedding, SwiGLU MLP, RMSNorm, no linear bias.
+Pre-norm residual blocks:
+
+    x = x + Attn(RMSNorm(x))
+    x = x + SwiGLU(RMSNorm(x))
+
+Stage 0 additionally holds the token embedding; the last stage holds the
+final RMSNorm and the (untied) LM head.  Blocks are split evenly across
+stages (paper: "all models ... distributed the number of blocks equally
+amongst the 4 GPUs (excluding the embedding blocks and prediction heads
+where appropriate)").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from .common import Pipeline, Stage, lm_cross_entropy, split_blocks
+
+
+class TransformerBlock(L.Module):
+    """Pre-norm decoder block with hand-written split backward."""
+
+    has_params = True
+
+    def __init__(self, d: int, heads: int, t: int, hidden: int,
+                 use_flash_fwd: bool = False, use_kernels: bool = True):
+        self.n1 = L.RMSNorm(d, use_kernel=use_kernels)
+        self.attn = L.Attention(d, heads, t, causal=True, rope=True,
+                                bias=False, use_flash_fwd=use_flash_fwd)
+        self.n2 = L.RMSNorm(d, use_kernel=use_kernels)
+        self.mlp = L.SwiGLU(d, hidden)
+        self._children = (("n1", self.n1), ("attn", self.attn),
+                          ("n2", self.n2), ("mlp", self.mlp))
+
+    def init(self, key):
+        ks = jax.random.split(key, 4)
+        return {n: m.init(k) for (n, m), k in zip(self._children, ks)}
+
+    def fwd(self, params, x):
+        a_in, r1_n1, r2_n1 = self.n1.fwd(params["n1"], x)
+        a, r1_at, r2_at = self.attn.fwd(params["attn"], a_in)
+        x1 = x + a
+        m_in, r1_n2, r2_n2 = self.n2.fwd(params["n2"], x1)
+        m, r1_ml, r2_ml = self.mlp.fwd(params["mlp"], m_in)
+        y = x1 + m
+        return y, (r1_n1, r1_at, r1_n2, r1_ml), (r2_n1, r2_at, r2_n2, r2_ml)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        r1_n1, r1_at, r1_n2, r1_ml = res1
+        r2_n1, r2_at, r2_n2, r2_ml = res2
+        # y = x1 + mlp(n2(x1))
+        gm = gy
+        gm_in, i_ml = self.mlp.bwd_p1(params["mlp"], r1_ml, r2_ml, gm)
+        gx1_n, i_n2 = self.n2.bwd_p1(params["n2"], r1_n2, r2_n2, gm_in)
+        gx1 = gy + gx1_n
+        # x1 = x + attn(n1(x))
+        ga_in, i_at = self.attn.bwd_p1(params["attn"], r1_at, r2_at, gx1)
+        gx_n, i_n1 = self.n1.bwd_p1(params["n1"], r1_n1, r2_n1, ga_in)
+        gx = gx1 + gx_n
+        return gx, (i_n1, i_at, i_n2, i_ml)
+
+    def bwd_p2(self, res2, inter):
+        r2_n1, r2_at, r2_n2, r2_ml = res2
+        i_n1, i_at, i_n2, i_ml = inter
+        return {
+            "n1": self.n1.bwd_p2(r2_n1, i_n1),
+            "attn": self.attn.bwd_p2(r2_at, i_at),
+            "n2": self.n2.bwd_p2(r2_n2, i_n2),
+            "mlp": self.mlp.bwd_p2(r2_ml, i_ml),
+        }
+
+
+def build(cfg: dict) -> Pipeline:
+    """cfg keys: dim, heads, blocks, seq, vocab, hidden (opt), microbatch,
+    stages, use_flash_fwd (opt)."""
+    d = cfg["dim"]
+    heads = cfg["heads"]
+    n_blocks = cfg["blocks"]
+    t = cfg["seq"]
+    vocab = cfg["vocab"]
+    hidden = cfg.get("hidden", d * 8 // 3)
+    n_stages = cfg["stages"]
+    b = cfg["microbatch"]
+    flash = cfg.get("use_flash_fwd", False)
+    use_kernels = cfg.get("use_kernels", True)
+
+    per_stage = split_blocks(n_blocks, n_stages)
+    stages = []
+    bi = 0
+    for s in range(n_stages):
+        mods = []
+        if s == 0:
+            mods.append(("embed", L.Embedding(vocab, d)))
+        for _ in range(per_stage[s]):
+            mods.append((f"block{bi}",
+                         TransformerBlock(d, heads, t, hidden, flash, use_kernels)))
+            bi += 1
+        if s == n_stages - 1:
+            mods.append(("norm_f", L.RMSNorm(d, use_kernel=use_kernels)))
+            mods.append(("head", L.Linear(d, vocab, bias=False)))
+        stages.append(Stage(mods))
+
+    return Pipeline(
+        name="transformer",
+        stages=stages,
+        loss_grad=lm_cross_entropy,
+        input_spec=jax.ShapeDtypeStruct((b, t), jnp.int32),
+        label_spec=jax.ShapeDtypeStruct((b, t), jnp.int32),
+        samples_per_microbatch=b,
+    )

@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the paper's compute hot-spots (+ pure-jnp oracles).
+
+All kernels lower with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); on real TPUs the same BlockSpecs compile natively.
+"""
+from . import ref  # noqa: F401
+from .matmul import matmul  # noqa: F401
+from .rmsnorm import rmsnorm_fwd, rmsnorm_bwd_p1, rmsnorm_bwd_p2  # noqa: F401
+from .softmax import softmax_fwd, softmax_bwd  # noqa: F401
+from .attention import attention_fwd  # noqa: F401

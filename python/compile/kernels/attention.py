@@ -1,0 +1,111 @@
+"""Flash-style scalar dot-product attention forward as a Pallas kernel.
+
+TPU rethink of the CUDA flash-attention pattern (DESIGN.md
+§Hardware-Adaptation): the KV sequence is walked as the innermost grid
+axis with an *online softmax* — running max `m`, normalizer `l` and
+un-normalized accumulator `acc` live in VMEM-resident blocks that are
+revisited across KV steps, so the full [t, t] score matrix never
+materializes in HBM.  The CUDA version staged K/V tiles through shared
+memory per threadblock; here BlockSpec's index maps express the same
+HBM->VMEM schedule declaratively.
+
+SDPA is purely functional — no parameters, hence **no backward-p2**
+(paper §4.1 calls this out as a driver of per-architecture 2BP gain
+variation).  backward-p1 is composed from the softmax/matmul primitives
+in the layer library.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                     *, scale: float, causal: bool, bq: int, bk: int, nk: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]            # [bq, hd]
+    k = k_ref[0]            # [bk, hd]
+    v = v_ref[0]            # [bk, hd]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        iq = pl.program_id(1)
+        rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, -1e30)
+
+    m_prev = m_ref[...]                                   # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                       # rescale old state
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(kk == nk - 1)
+    def _final():
+        o_ref[0] = (acc_new / l_new).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def attention_fwd(q, k, v, causal: bool = True,
+                  block_q: int = 128, block_k: int = 128):
+    """Flash-style attention forward.
+
+    q,k,v: [h, t, hd] (h = flattened batch*heads).  Returns [h, t, hd].
+    """
+    h, t, hd = q.shape
+    bq = _pick(t, block_q)
+    bk = _pick(t, block_k)
+    nk = t // bk
+    scale = 1.0 / (hd ** 0.5)
+    grid = (h, t // bq, nk)
+    qspec = pl.BlockSpec((1, bq, hd), lambda ih, iq, kk: (ih, iq, 0))
+    kvspec = pl.BlockSpec((1, bk, hd), lambda ih, iq, kk: (ih, kk, 0))
+    out, _, _, _ = pl.pallas_call(
+        functools.partial(_attn_fwd_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk),
+        grid=grid,
+        in_specs=[qspec, kvspec, kvspec],
+        out_specs=[
+            pl.BlockSpec((1, bq, hd), lambda ih, iq, kk: (ih, iq, 0)),
+            pl.BlockSpec((bq, hd), lambda ih, iq, kk: (iq, 0)),
+            pl.BlockSpec((bq, 1), lambda ih, iq, kk: (iq, 0)),
+            pl.BlockSpec((bq, 1), lambda ih, iq, kk: (iq, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, t, hd), q.dtype),
+            jax.ShapeDtypeStruct((t, hd), jnp.float32),  # acc scratch
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),   # running max
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),   # normalizer
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out
+
+
+def vmem_bytes(t: int, hd: int, bq=128, bk=128, itemsize=4):
+    """Static VMEM estimate per grid step (DESIGN.md §8)."""
+    bq, bk = _pick(t, bq), _pick(t, bk)
+    return (bq * hd + 2 * bk * hd + bq * bk + bq * hd + 2 * bq) * itemsize

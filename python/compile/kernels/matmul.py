@@ -1,0 +1,80 @@
+"""Blocked matmul as a Pallas kernel.
+
+TPU adaptation of the paper's CUDA hot path (see DESIGN.md
+§Hardware-Adaptation): the output is tiled into MXU-shaped (bm, bn)
+blocks, with the contraction dimension walked as the innermost grid axis
+so each (i, j) output tile stays resident in VMEM while partial products
+accumulate into it.  ``BlockSpec`` expresses the HBM->VMEM schedule that
+the CUDA version expressed with threadblocks + shared-memory staging.
+
+Always lowered with ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom-calls; on a real TPU the same BlockSpecs compile natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ y[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (keeps tiles MXU-friendly)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Blocked Pallas matmul: x [m,k] @ y [k,n] -> [m,n].
+
+    Block sizes are clamped to divisors of the problem dims so tiny test
+    shapes still work; at the paper's model dims (multiples of 128) the
+    tiles are exactly MXU-shaped 128x128.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(m: int, n: int, k: int, bm=128, bn=128, bk=128, itemsize=4):
+    """Static VMEM footprint estimate for one grid step (DESIGN.md §8)."""
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    return (bm * bk + bk * bn + bm * bn) * itemsize
+
+
+def mxu_utilization(m: int, n: int, k: int, bm=128, bn=128, bk=128):
+    """Fraction of MXU 128x128 MAC slots a tile actually fills."""
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    return min(bm, 128) * min(bn, 128) / (128.0 * 128.0)

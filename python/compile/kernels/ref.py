@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis sweeps in python/tests/test_kernels.py). They are also used
+directly by the layer library when a shape falls outside a kernel's tile
+constraints (e.g. tiny test configs).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Plain f32 matmul, [m,k]@[k,n] -> [m,n]."""
+    return jnp.matmul(x, y)
+
+
+def rmsnorm_fwd(x, g, eps=1e-5):
+    """RMSNorm forward.
+
+    x: [rows, d], g: [d].  Returns (y, rstd) where rstd: [rows, 1] is the
+    reciprocal RMS saved for the backward pass.
+    """
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(ms + eps)
+    return x * rstd * g, rstd
+
+
+def rmsnorm_bwd_p1(x, g, rstd, gy):
+    """Grad of RMSNorm w.r.t. its *input* (backward-p1).
+
+    gx = rstd * (gy*g - xhat * mean(gy*g*xhat))  with xhat = x*rstd.
+    """
+    xhat = x * rstd
+    gyg = gy * g
+    m = jnp.mean(gyg * xhat, axis=-1, keepdims=True)
+    return (gyg - xhat * m) * rstd
+
+
+def rmsnorm_bwd_p2(x, rstd, gy):
+    """Grad of RMSNorm w.r.t. its *weight* (backward-p2): dg = sum(gy*xhat)."""
+    return jnp.sum(gy * x * rstd, axis=0)
+
+
+def softmax_fwd(x):
+    """Row softmax over the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_bwd(y, gy):
+    """Softmax backward given the forward output y: gx = y*(gy - sum(gy*y))."""
+    s = jnp.sum(gy * y, axis=-1, keepdims=True)
+    return y * (gy - s)
+
+
+def attention_fwd(q, k, v, causal=True):
+    """Scalar dot-product attention forward.
+
+    q,k,v: [heads, t, hd] (flattened batch*heads leading axis).
+    Returns the attention output [heads, t, hd].
+    """
+    hd = q.shape[-1]
+    s = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(jnp.asarray(hd, q.dtype))
+    if causal:
+        t = q.shape[-2]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask, s, jnp.asarray(-1e30, s.dtype))
+    p = softmax_fwd(s)
+    return jnp.einsum("hts,hsd->htd", p, v)

@@ -1,0 +1,119 @@
+"""Fused RMSNorm as Pallas kernels: forward, backward-p1, backward-p2.
+
+The paper torch.jit.script-compiled RMSNorm's backward because it was a
+hot spot (§3.2).  Here the same role is played by fused Pallas kernels:
+each kernel processes a block of rows entirely in VMEM, fusing the
+square/mean/rsqrt/scale chain into one pass (VPU row reductions instead
+of CUDA warp shuffles — DESIGN.md §Hardware-Adaptation).
+
+backward-p2 (the *weight* grad, dg = sum_rows gy*xhat) is a cross-row
+reduction, so its grid walks row-blocks sequentially accumulating into
+the single [d] output block — the 2BP-deferred stage of this layer.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_rows(rows: int, target: int) -> int:
+    b = min(rows, target)
+    while rows % b != 0:
+        b -= 1
+    return b
+
+
+def _fwd_kernel(x_ref, g_ref, y_ref, rstd_ref, *, eps: float):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(ms + eps)
+    y_ref[...] = x * rstd * g_ref[...]
+    rstd_ref[...] = rstd
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm_fwd(x, g, eps: float = 1e-5, block_rows: int = 128):
+    """Fused RMSNorm forward. x: [rows, d], g: [d] -> (y, rstd [rows,1])."""
+    rows, d = x.shape
+    br = _pick_rows(rows, block_rows)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, d), x.dtype),
+            jax.ShapeDtypeStruct((rows, 1), x.dtype),
+        ],
+        interpret=True,
+    )(x, g)
+
+
+def _bwd_p1_kernel(x_ref, g_ref, rstd_ref, gy_ref, gx_ref):
+    x = x_ref[...]
+    rstd = rstd_ref[...]
+    xhat = x * rstd
+    gyg = gy_ref[...] * g_ref[...]
+    m = jnp.mean(gyg * xhat, axis=-1, keepdims=True)
+    gx_ref[...] = (gyg - xhat * m) * rstd
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def rmsnorm_bwd_p1(x, g, rstd, gy, block_rows: int = 128):
+    """Fused input-grad (backward-p1): the inter-stage critical path."""
+    rows, d = x.shape
+    br = _pick_rows(rows, block_rows)
+    return pl.pallas_call(
+        _bwd_p1_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x, g, rstd, gy)
+
+
+def _bwd_p2_kernel(x_ref, rstd_ref, gy_ref, dg_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        dg_ref[...] = jnp.zeros_like(dg_ref)
+
+    dg_ref[...] += jnp.sum(gy_ref[...] * x_ref[...] * rstd_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def rmsnorm_bwd_p2(x, rstd, gy, block_rows: int = 128):
+    """Fused weight-grad (backward-p2): the 2BP-deferrable stage.
+
+    Cross-row reduction: row-blocks are walked sequentially and
+    accumulated into the single resident [d] output tile.
+    """
+    rows, d = x.shape
+    br = _pick_rows(rows, block_rows)
+    return pl.pallas_call(
+        _bwd_p2_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(x, rstd, gy)

@@ -1,0 +1,69 @@
+"""Fused row-softmax as Pallas kernels (forward + backward).
+
+Softmax backward was the paper's second torch.jit.script target (§3.2).
+Each kernel instance owns a block of rows in VMEM and fuses the
+max/exp/sum/scale chain (fwd) or the y*(gy - sum(gy*y)) chain (bwd) in a
+single pass.  Note softmax is *purely functional* — it has no
+backward-p2 (the paper singles this class of op out in §4.1/§4.2: its
+saved state is released at backward-p1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_rows(rows: int, target: int) -> int:
+    b = min(rows, target)
+    while rows % b != 0:
+        b -= 1
+    return b
+
+
+def _fwd_kernel(x_ref, y_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    y_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax_fwd(x, block_rows: int = 128):
+    """Fused row softmax over the last axis of a 2-D [rows, d] input."""
+    rows, d = x.shape
+    br = _pick_rows(rows, block_rows)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _bwd_kernel(y_ref, gy_ref, gx_ref):
+    y = y_ref[...]
+    gy = gy_ref[...]
+    s = jnp.sum(gy * y, axis=-1, keepdims=True)
+    gx_ref[...] = y * (gy - s)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax_bwd(y, gy, block_rows: int = 128):
+    """Fused softmax backward (this is a backward-p1; softmax has no p2)."""
+    rows, d = y.shape
+    br = _pick_rows(rows, block_rows)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), y.dtype),
+        interpret=True,
+    )(y, gy)

@@ -1,0 +1,830 @@
+"""Manual-backward module system — the paper's torch.autograd replacement.
+
+The paper (§3.2): *"we do not use PyTorch's automatic differentiation
+engine ... Each module has a forward and a backward-p1 function; if that
+module contains parameters then it also has a backward-p2 function."*
+
+This file is the JAX equivalent.  Every module implements:
+
+  fwd(params, x)                  -> (y, res1, res2)
+  bwd_p1(params, res1, res2, gy)  -> (gx, inter)
+  bwd_p2(res2, inter)             -> grads          (only if has_params)
+
+with the residual split that drives the paper's §4.2 memory analysis:
+
+  * ``res1``  — state needed only by backward-p1; **released after p1**
+                (e.g. q/k/v/attention probabilities, ReLU masks).
+  * ``res2``  — state held *across* the p1→p2 gap (e.g. linear/conv input
+                activations).  Under 2BP these live until the deferred p2.
+  * ``inter`` — the "intermediate derivatives" produced by p1 for p2
+                (output cotangents such as gy for a linear layer).
+
+All residuals/intermediates are flat tuples of arrays so the AOT path
+can export stage functions with flat HLO signatures; byte sizes of each
+class are recorded in the artifact manifest and drive both the rust
+memory accountant (Fig 4/5) and the simulator's memory model (Fig 7 OOM).
+
+Correctness contract (tested in python/tests/test_layers.py): for every
+module, ``bwd_p1`` + ``bwd_p2`` must exactly reproduce ``jax.vjp`` of the
+fused forward — i.e. **p1 ⊎ p2 ≡ autograd**.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import ref as kref
+
+Params = Dict[str, jnp.ndarray]
+Arrays = Tuple[jnp.ndarray, ...]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+
+
+def _split_key(key, n):
+    return jax.random.split(key, n)
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def _glorot(key, shape, fan_in, fan_out):
+    lim = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+class Module:
+    """Base class: a layer with hand-written split backward.
+
+    Subclasses override ``init``, ``fwd``, ``bwd_p1`` and (when
+    ``has_params``) ``bwd_p2``.  ``param_names`` fixes a deterministic
+    ordering used when stage functions are flattened for AOT export.
+    """
+
+    has_params: bool = False
+    param_names: Tuple[str, ...] = ()
+
+    def init(self, key) -> Params:
+        return {}
+
+    def fwd(self, params: Params, x):
+        raise NotImplementedError
+
+    def bwd_p1(self, params: Params, res1: Arrays, res2: Arrays, gy):
+        raise NotImplementedError
+
+    def bwd_p2(self, res2: Arrays, inter: Arrays) -> Params:
+        raise NotImplementedError(f"{type(self).__name__} has no parameters")
+
+    # fused reference (oracle + single-device baseline): default composes
+    # the split halves; tests additionally compare against jax.vjp.
+    def apply(self, params: Params, x):
+        y, _, _ = self.fwd(params, x)
+        return y
+
+
+# ---------------------------------------------------------------------------
+# Linear
+
+
+class Linear(Module):
+    """y = x @ w (+ b).  x: [..., d_in].
+
+    res2 = (x,): input activation held until p2 (paper §4.2: "for Linear
+    and Convolution layers, both the input activations and output
+    derivatives need to be stored in memory for backward-p2").
+    inter = (gy,): the output derivative.
+    """
+
+    has_params = True
+
+    def __init__(self, d_in: int, d_out: int, bias: bool = True):
+        self.d_in, self.d_out, self.bias = d_in, d_out, bias
+        self.param_names = ("w", "b") if bias else ("w",)
+
+    def init(self, key) -> Params:
+        kw, _ = _split_key(key, 2)
+        p = {"w": _glorot(kw, (self.d_in, self.d_out), self.d_in, self.d_out)}
+        if self.bias:
+            p["b"] = jnp.zeros((self.d_out,), jnp.float32)
+        return p
+
+    def fwd(self, params, x):
+        y = x @ params["w"]
+        if self.bias:
+            y = y + params["b"]
+        return y, (), (x,)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        return gy @ params["w"].T, (gy,)
+
+    def bwd_p2(self, res2, inter):
+        (x,) = res2
+        (gy,) = inter
+        x2 = x.reshape(-1, self.d_in)
+        g2 = gy.reshape(-1, self.d_out)
+        grads = {"w": x2.T @ g2}
+        if self.bias:
+            grads["b"] = jnp.sum(g2, axis=0)
+        return grads
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+
+
+class Embedding(Module):
+    """Token embedding lookup.  Input is int32 ids; gx is not defined
+    (ids are not differentiable) — bwd_p1 returns a zero cotangent so the
+    pipeline plumbing stays uniform; the executor on rank 0 discards it.
+    """
+
+    has_params = True
+    param_names = ("w",)
+
+    def __init__(self, vocab: int, d: int):
+        self.vocab, self.d = vocab, d
+
+    def init(self, key) -> Params:
+        return {"w": jax.random.normal(key, (self.vocab, self.d), jnp.float32) * 0.02}
+
+    def fwd(self, params, ids):
+        return params["w"][ids], (), (ids,)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        return jnp.zeros_like(res2[0], dtype=jnp.float32), (gy,)
+
+    def bwd_p2(self, res2, inter):
+        (ids,) = res2
+        (gy,) = inter
+        dw = jnp.zeros((self.vocab, self.d), jnp.float32)
+        return {"w": dw.at[ids.reshape(-1)].add(gy.reshape(-1, self.d))}
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+class RMSNorm(Module):
+    """RMSNorm over the last axis; fwd/p1/p2 use the fused Pallas kernels
+    when the flattened row count is kernel-friendly, else the jnp oracle.
+    """
+
+    has_params = True
+    param_names = ("g",)
+
+    def __init__(self, d: int, eps: float = 1e-5, use_kernel: bool = True):
+        self.d, self.eps, self.use_kernel = d, eps, use_kernel
+
+    def init(self, key) -> Params:
+        return {"g": jnp.ones((self.d,), jnp.float32)}
+
+    def fwd(self, params, x):
+        x2 = x.reshape(-1, self.d)
+        if self.use_kernel:
+            from .kernels import rmsnorm_fwd
+            y2, rstd = rmsnorm_fwd(x2, params["g"], eps=self.eps)
+        else:
+            y2, rstd = kref.rmsnorm_fwd(x2, params["g"], eps=self.eps)
+        # res2 = (x, rstd): both needed by p2 (dg = sum gy*x*rstd); p1 also
+        # reads them, which is free — res2 is still alive at p1 time.
+        return y2.reshape(x.shape), (), (x, rstd)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        x, rstd = res2
+        x2 = x.reshape(-1, self.d)
+        gy2 = gy.reshape(-1, self.d)
+        if self.use_kernel:
+            from .kernels import rmsnorm_bwd_p1
+            gx2 = rmsnorm_bwd_p1(x2, params["g"], rstd, gy2)
+        else:
+            gx2 = kref.rmsnorm_bwd_p1(x2, params["g"], rstd, gy2)
+        return gx2.reshape(x.shape), (gy,)
+
+    def bwd_p2(self, res2, inter):
+        x, rstd = res2
+        (gy,) = inter
+        x2 = x.reshape(-1, self.d)
+        gy2 = gy.reshape(-1, self.d)
+        if self.use_kernel:
+            from .kernels import rmsnorm_bwd_p2
+            dg = rmsnorm_bwd_p2(x2, rstd, gy2)
+        else:
+            dg = kref.rmsnorm_bwd_p2(x2, rstd, gy2)
+        return {"g": dg}
+
+
+class LayerNorm(Module):
+    """LayerNorm over the last axis (BERT-style, with bias)."""
+
+    has_params = True
+    param_names = ("g", "b")
+
+    def __init__(self, d: int, eps: float = 1e-5):
+        self.d, self.eps = d, eps
+
+    def init(self, key) -> Params:
+        return {"g": jnp.ones((self.d,), jnp.float32),
+                "b": jnp.zeros((self.d,), jnp.float32)}
+
+    def fwd(self, params, x):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+        rstd = 1.0 / jnp.sqrt(var + self.eps)
+        xhat = (x - mu) * rstd
+        return xhat * params["g"] + params["b"], (), (xhat, rstd)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        xhat, rstd = res2
+        gh = gy * params["g"]
+        m1 = jnp.mean(gh, axis=-1, keepdims=True)
+        m2 = jnp.mean(gh * xhat, axis=-1, keepdims=True)
+        return (gh - m1 - xhat * m2) * rstd, (gy,)
+
+    def bwd_p2(self, res2, inter):
+        xhat, _ = res2
+        (gy,) = inter
+        d = self.d
+        return {
+            "g": jnp.sum((gy * xhat).reshape(-1, d), axis=0),
+            "b": jnp.sum(gy.reshape(-1, d), axis=0),
+        }
+
+
+# ---------------------------------------------------------------------------
+# elementwise activations (purely functional: res released at p1, no p2)
+
+
+class ReLU(Module):
+    def fwd(self, params, x):
+        return jnp.maximum(x, 0.0), (x,), ()
+
+    def bwd_p1(self, params, res1, res2, gy):
+        (x,) = res1
+        return gy * (x > 0).astype(gy.dtype), ()
+
+
+class GELU(Module):
+    """tanh-approximation GELU (BERT)."""
+
+    _c = math.sqrt(2.0 / math.pi)
+
+    def _inner(self, x):
+        return self._c * (x + 0.044715 * x ** 3)
+
+    def fwd(self, params, x):
+        t = jnp.tanh(self._inner(x))
+        return 0.5 * x * (1.0 + t), (x,), ()
+
+    def bwd_p1(self, params, res1, res2, gy):
+        (x,) = res1
+        t = jnp.tanh(self._inner(x))
+        dt = (1.0 - t * t) * self._c * (1.0 + 3 * 0.044715 * x * x)
+        return gy * (0.5 * (1.0 + t) + 0.5 * x * dt), ()
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _dsilu(x):
+    s = jax.nn.sigmoid(x)
+    return s * (1.0 + x * (1.0 - s))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (param-free, orthogonal per position)
+
+
+class Rotary:
+    """RoPE helper applied inside Attention (not a standalone Module).
+
+    rotate(x, inv=True) applies the transpose rotation — used to pull
+    cotangents back through the embedding in backward-p1.
+    """
+
+    def __init__(self, t: int, hd: int, base: float = 10000.0):
+        half = hd // 2
+        freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+        ang = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]
+        self.cos = jnp.cos(ang)  # [t, hd/2]
+        self.sin = jnp.sin(ang)
+
+    def rotate(self, x, inv: bool = False):
+        # x: [..., t, hd]; pairs (x1, x2) = (x[..., :half], x[..., half:])
+        half = x.shape[-1] // 2
+        x1, x2 = x[..., :half], x[..., half:]
+        sin = -self.sin if inv else self.sin
+        r1 = x1 * self.cos - x2 * sin
+        r2 = x2 * self.cos + x1 * sin
+        return jnp.concatenate([r1, r2], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (multi-head SDPA with optional RoPE / causal mask / bias)
+
+
+class Attention(Module):
+    """Multi-head attention block body (projections + SDPA).
+
+    The SDPA core is purely functional — it has no backward-p2 — while
+    the four projections do; this mixed profile is exactly the paper's
+    example of uneven p1/p2 cost (§4.1).
+
+    res1 = (q, k, v, p): released after p1 (the paper's "operations that
+    are purely functional ... release their activations during the
+    backward-p1 calls").
+    res2 = (x, o): projection inputs held for p2.
+    inter = (gy, gq, gk, gv): output derivatives for the projections.
+    """
+
+    has_params = True
+
+    def __init__(self, d: int, heads: int, t: int, causal: bool = True,
+                 rope: bool = True, bias: bool = False,
+                 use_flash_fwd: bool = False):
+        assert d % heads == 0
+        self.d, self.h, self.t = d, heads, t
+        self.hd = d // heads
+        self.causal, self.bias = causal, bias
+        self.rope = Rotary(t, self.hd) if rope else None
+        self.use_flash_fwd = use_flash_fwd
+        self.param_names = (
+            ("wq", "wk", "wv", "wo", "bq", "bk", "bv", "bo")
+            if bias else ("wq", "wk", "wv", "wo")
+        )
+
+    def init(self, key) -> Params:
+        ks = _split_key(key, 4)
+        p = {n: _glorot(ks[i], (self.d, self.d), self.d, self.d)
+             for i, n in enumerate(("wq", "wk", "wv", "wo"))}
+        if self.bias:
+            for n in ("bq", "bk", "bv", "bo"):
+                p[n] = jnp.zeros((self.d,), jnp.float32)
+        return p
+
+    def _heads(self, x):
+        b, t, _ = x.shape
+        return x.reshape(b, t, self.h, self.hd).transpose(0, 2, 1, 3)
+
+    def _unheads(self, x):
+        b, h, t, hd = x.shape
+        return x.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+
+    def _proj(self, params, x, n):
+        y = x @ params["w" + n]
+        if self.bias:
+            y = y + params["b" + n]
+        return y
+
+    def fwd(self, params, x):
+        b, t, d = x.shape
+        q = self._heads(self._proj(params, x, "q"))
+        k = self._heads(self._proj(params, x, "k"))
+        v = self._heads(self._proj(params, x, "v"))
+        if self.rope is not None:
+            q, k = self.rope.rotate(q), self.rope.rotate(k)
+        scale = 1.0 / math.sqrt(self.hd)
+        s = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+        if self.causal:
+            mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+            s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o_heads = jnp.einsum("bhts,bhsd->bhtd", p, v)
+        o = self._unheads(o_heads)
+        y = self._proj(params, o, "o")
+        return y, (q, k, v, p), (x, o)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        q, k, v, p = res1
+        x, o = res2
+        scale = 1.0 / math.sqrt(self.hd)
+        go = self._heads(gy @ params["wo"].T)                    # [b,h,t,hd]
+        gp = jnp.einsum("bhtd,bhsd->bhts", go, v)
+        gv = jnp.einsum("bhts,bhtd->bhsd", p, go)
+        gs = p * (gp - jnp.sum(gp * p, axis=-1, keepdims=True))  # softmax bwd
+        gq = jnp.einsum("bhts,bhsd->bhtd", gs, k) * scale
+        gk = jnp.einsum("bhts,bhtd->bhsd", gs, q) * scale
+        if self.rope is not None:
+            gq, gk = self.rope.rotate(gq, inv=True), self.rope.rotate(gk, inv=True)
+        gqf, gkf, gvf = map(self._unheads, (gq, gk, gv))
+        gx = (gqf @ params["wq"].T + gkf @ params["wk"].T
+              + gvf @ params["wv"].T)
+        return gx, (gy, gqf, gkf, gvf)
+
+    def bwd_p2(self, res2, inter):
+        x, o = res2
+        gy, gqf, gkf, gvf = inter
+        d = self.d
+        x2 = x.reshape(-1, d)
+        grads = {
+            "wq": x2.T @ gqf.reshape(-1, d),
+            "wk": x2.T @ gkf.reshape(-1, d),
+            "wv": x2.T @ gvf.reshape(-1, d),
+            "wo": o.reshape(-1, d).T @ gy.reshape(-1, d),
+        }
+        if self.bias:
+            grads["bq"] = jnp.sum(gqf.reshape(-1, d), axis=0)
+            grads["bk"] = jnp.sum(gkf.reshape(-1, d), axis=0)
+            grads["bv"] = jnp.sum(gvf.reshape(-1, d), axis=0)
+            grads["bo"] = jnp.sum(gy.reshape(-1, d), axis=0)
+        return grads
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+class SwiGLU(Module):
+    """LLaMa/PaLM MLP: y = (silu(x@w1) * (x@w3)) @ w2, no bias.
+
+    res1 = (a, b): pre-activations, released after p1.
+    res2 = (x, h): inputs of w1/w3 and of w2.
+    inter = (gy, ga, gb).
+    """
+
+    has_params = True
+    param_names = ("w1", "w2", "w3")
+
+    def __init__(self, d: int, hidden: int):
+        self.d, self.hidden = d, hidden
+
+    def init(self, key) -> Params:
+        k1, k2, k3 = _split_key(key, 3)
+        return {
+            "w1": _glorot(k1, (self.d, self.hidden), self.d, self.hidden),
+            "w2": _glorot(k2, (self.hidden, self.d), self.hidden, self.d),
+            "w3": _glorot(k3, (self.d, self.hidden), self.d, self.hidden),
+        }
+
+    def fwd(self, params, x):
+        a = x @ params["w1"]
+        b = x @ params["w3"]
+        h = _silu(a) * b
+        return h @ params["w2"], (a, b), (x, h)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        a, b = res1
+        gh = gy @ params["w2"].T
+        ga = gh * b * _dsilu(a)
+        gb = gh * _silu(a)
+        gx = ga @ params["w1"].T + gb @ params["w3"].T
+        return gx, (gy, ga, gb)
+
+    def bwd_p2(self, res2, inter):
+        x, h = res2
+        gy, ga, gb = inter
+        x2 = x.reshape(-1, self.d)
+        return {
+            "w1": x2.T @ ga.reshape(-1, self.hidden),
+            "w3": x2.T @ gb.reshape(-1, self.hidden),
+            "w2": h.reshape(-1, self.hidden).T @ gy.reshape(-1, self.d),
+        }
+
+
+class MLP(Module):
+    """BERT-style MLP: y = gelu(x@w1+b1)@w2+b2."""
+
+    has_params = True
+    param_names = ("w1", "b1", "w2", "b2")
+
+    def __init__(self, d: int, hidden: int):
+        self.d, self.hidden = d, hidden
+        self._gelu = GELU()
+
+    def init(self, key) -> Params:
+        k1, k2 = _split_key(key, 2)
+        return {
+            "w1": _glorot(k1, (self.d, self.hidden), self.d, self.hidden),
+            "b1": jnp.zeros((self.hidden,), jnp.float32),
+            "w2": _glorot(k2, (self.hidden, self.d), self.hidden, self.d),
+            "b2": jnp.zeros((self.d,), jnp.float32),
+        }
+
+    def fwd(self, params, x):
+        a = x @ params["w1"] + params["b1"]
+        h, _, _ = self._gelu.fwd({}, a)
+        return h @ params["w2"] + params["b2"], (a,), (x, h)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        (a,) = res1
+        gh = gy @ params["w2"].T
+        ga, _ = self._gelu.bwd_p1({}, (a,), (), gh)
+        gx = ga @ params["w1"].T
+        return gx, (gy, ga)
+
+    def bwd_p2(self, res2, inter):
+        x, h = res2
+        gy, ga = inter
+        x2 = x.reshape(-1, self.d)
+        return {
+            "w1": x2.T @ ga.reshape(-1, self.hidden),
+            "b1": jnp.sum(ga.reshape(-1, self.hidden), axis=0),
+            "w2": h.reshape(-1, self.hidden).T @ gy.reshape(-1, self.d),
+            "b2": jnp.sum(gy.reshape(-1, self.d), axis=0),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Convolution / BatchNorm / pooling (ResNet substrate)
+
+
+class Conv2d(Module):
+    """2-D convolution, NCHW / OIHW, arbitrary stride + symmetric padding.
+
+    backward-p1 (grad w.r.t. input) and backward-p2 (grad w.r.t. the
+    kernel) are obtained via ``jax.linear_transpose`` of the conv in the
+    respective argument — conv is bilinear, so the transpose *is* the
+    manual adjoint (no forward recomputation), expressed without
+    hand-unrolling the stride/padding index algebra.
+    """
+
+    has_params = True
+
+    def __init__(self, c_in, c_out, ksize, stride=1, padding=0, bias=False):
+        self.c_in, self.c_out, self.k = c_in, c_out, ksize
+        self.stride, self.padding, self.bias = stride, padding, bias
+        self.param_names = ("w", "b") if bias else ("w",)
+        self._dn = lax.conv_dimension_numbers(
+            (1, c_in, 8, 8), (c_out, c_in, ksize, ksize),
+            ("NCHW", "OIHW", "NCHW"))
+
+    def _conv(self, x, w):
+        pad = [(self.padding, self.padding)] * 2
+        return lax.conv_general_dilated(
+            x, w, (self.stride, self.stride), pad, dimension_numbers=self._dn)
+
+    def init(self, key) -> Params:
+        fan_in = self.c_in * self.k * self.k
+        p = {"w": _he(key, (self.c_out, self.c_in, self.k, self.k), fan_in)}
+        if self.bias:
+            p["b"] = jnp.zeros((self.c_out,), jnp.float32)
+        return p
+
+    def fwd(self, params, x):
+        y = self._conv(x, params["w"])
+        if self.bias:
+            y = y + params["b"][None, :, None, None]
+        return y, (), (x,)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        (x,) = res2
+        fx = jax.linear_transpose(lambda xx: self._conv(xx, params["w"]),
+                                  jnp.zeros_like(x))
+        (gx,) = fx(gy)
+        return gx, (gy,)
+
+    def bwd_p2(self, res2, inter):
+        (x,) = res2
+        (gy,) = inter
+        wz = jnp.zeros((self.c_out, self.c_in, self.k, self.k), jnp.float32)
+        fw = jax.linear_transpose(lambda ww: self._conv(x, ww), wz)
+        (gw,) = fw(gy)
+        grads = {"w": gw}
+        if self.bias:
+            grads["b"] = jnp.sum(gy, axis=(0, 2, 3))
+        return grads
+
+
+class BatchNorm2d(Module):
+    """Training-mode batch norm over NCHW (batch statistics).
+
+    The paper uses this as the canonical asymmetric case: "for 2D batch
+    normalization, the backward-p2 operation is significantly simpler
+    than the backward-p1 operation" (§4.1).  p2 is two reductions; p1
+    carries the full correlated-statistics chain.
+    """
+
+    has_params = True
+    param_names = ("g", "b")
+
+    def __init__(self, c: int, eps: float = 1e-5):
+        self.c, self.eps = c, eps
+
+    def init(self, key) -> Params:
+        return {"g": jnp.ones((self.c,), jnp.float32),
+                "b": jnp.zeros((self.c,), jnp.float32)}
+
+    def fwd(self, params, x):
+        axes = (0, 2, 3)
+        mu = jnp.mean(x, axis=axes, keepdims=True)
+        var = jnp.mean((x - mu) ** 2, axis=axes, keepdims=True)
+        rstd = 1.0 / jnp.sqrt(var + self.eps)
+        xhat = (x - mu) * rstd
+        y = xhat * params["g"][None, :, None, None] + params["b"][None, :, None, None]
+        return y, (), (xhat, rstd)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        xhat, rstd = res2
+        axes = (0, 2, 3)
+        n = xhat.shape[0] * xhat.shape[2] * xhat.shape[3]
+        gh = gy * params["g"][None, :, None, None]
+        m1 = jnp.sum(gh, axis=axes, keepdims=True) / n
+        m2 = jnp.sum(gh * xhat, axis=axes, keepdims=True) / n
+        return (gh - m1 - xhat * m2) * rstd, (gy,)
+
+    def bwd_p2(self, res2, inter):
+        xhat, _ = res2
+        (gy,) = inter
+        return {"g": jnp.sum(gy * xhat, axis=(0, 2, 3)),
+                "b": jnp.sum(gy, axis=(0, 2, 3))}
+
+
+class MaxPool2d(Module):
+    """k×k/stride max pool; res1 carries the argmax mask (released at p1)."""
+
+    def __init__(self, k: int, stride: int, padding: int = 0):
+        self.k, self.stride, self.padding = k, stride, padding
+
+    def _pool(self, x):
+        pad = [(0, 0), (0, 0),
+               (self.padding, self.padding), (self.padding, self.padding)]
+        return lax.reduce_window(
+            x, -jnp.inf, lax.max, (1, 1, self.k, self.k),
+            (1, 1, self.stride, self.stride), pad)
+
+    def fwd(self, params, x):
+        y = self._pool(x)
+        return y, (x, y), ()
+
+    def bwd_p1(self, params, res1, res2, gy):
+        x, y = res1
+        # Per-primitive adjoint of reduce_window-max (select-and-scatter).
+        # jax removed the public select_and_scatter_add wrapper; taking the
+        # primitive's own vjp is the same local adjoint (this is not
+        # whole-graph autodiff — the 2BP split above stays hand-scheduled).
+        _, vjp = jax.vjp(self._pool, x)
+        (gx,) = vjp(gy)
+        return gx, ()
+
+
+class GlobalAvgPool(Module):
+    """NCHW -> NC mean over spatial dims (ResNet head).
+
+    Numerically p1 needs nothing saved, but the flat AOT signature wants
+    the input *shape* available at p1 trace time, so res1 carries x (a
+    purely-functional residual, released at p1 like the paper's ReLU/SDPA
+    class).
+    """
+
+    def fwd(self, params, x):
+        return jnp.mean(x, axis=(2, 3)), (x,), ()
+
+    def bwd_p1(self, params, res1, res2, gy):
+        (x,) = res1
+        n, c, h, w = x.shape
+        gx = jnp.broadcast_to(gy[:, :, None, None] / (h * w), (n, c, h, w))
+        return gx, ()
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM block substrate
+
+
+class SSMScan(Module):
+    """Diagonal selective state-space scan (S6-style core).
+
+    Inputs are a tuple (u, delta, B, C) packed along the last axis by the
+    surrounding Mamba block; this module owns the recurrence
+
+        h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + (Δ_t u_t) ⊗ B_t
+        y_t = (h_t · C_t) + D ⊙ u_t
+
+    with params A_log [di, s] (A = -exp(A_log)) and D [di].
+
+    res2 holds *all* hidden states h — the paper's Mamba runs show the
+    largest 2BP memory blow-up (2.67×) precisely because this class of
+    layer must keep large state until the deferred p2.
+    backward-p1 is a hand-derived reverse-time adjoint scan.
+    """
+
+    has_params = True
+    param_names = ("a_log", "d")
+
+    def __init__(self, di: int, s: int):
+        self.di, self.s = di, s
+
+    def init(self, key) -> Params:
+        a = jnp.tile(jnp.arange(1, self.s + 1, dtype=jnp.float32)[None, :],
+                     (self.di, 1))
+        return {"a_log": jnp.log(a), "d": jnp.ones((self.di,), jnp.float32)}
+
+    def fwd(self, params, udbc):
+        u, delta, bmat, cmat = udbc
+        a = -jnp.exp(params["a_log"])                       # [di, s]
+        abar = jnp.exp(delta[..., None] * a)                # [b,t,di,s]
+        x_in = (delta * u)[..., None] * bmat[:, :, None, :]  # [b,t,di,s]
+
+        def step(h, inp):
+            ab, xi = inp
+            h = ab * h + xi
+            return h, h
+
+        b = u.shape[0]
+        h0 = jnp.zeros((b, self.di, self.s), jnp.float32)
+        # scan over time: move t to axis 0
+        _, hs = lax.scan(step, h0,
+                         (abar.transpose(1, 0, 2, 3), x_in.transpose(1, 0, 2, 3)))
+        hs = hs.transpose(1, 0, 2, 3)                       # [b,t,di,s]
+        y = jnp.einsum("btds,bts->btd", hs, cmat) + params["d"] * u
+        return y, (), (u, delta, bmat, cmat, hs)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        u, delta, bmat, cmat, hs = res2
+        a = -jnp.exp(params["a_log"])
+        abar = jnp.exp(delta[..., None] * a)                # [b,t,di,s]
+        gh_local = gy[..., None] * cmat[:, :, None, :]      # dy/dh
+
+        # reverse adjoint: Gh_t = gh_t + abar_{t+1} * Gh_{t+1}
+        def rstep(carry, inp):
+            gh_l, ab_next = inp
+            g = gh_l + ab_next * carry
+            return g, g
+
+        b, t = u.shape[0], u.shape[1]
+        ab_next = jnp.concatenate(
+            [abar[:, 1:], jnp.zeros_like(abar[:, :1])], axis=1)
+        _, ghs = lax.scan(
+            rstep, jnp.zeros((b, self.di, self.s), jnp.float32),
+            (gh_local.transpose(1, 0, 2, 3)[::-1],
+             ab_next.transpose(1, 0, 2, 3)[::-1]))
+        ghs = ghs[::-1].transpose(1, 0, 2, 3)               # [b,t,di,s] = dL/dh_t (total)
+
+        h_prev = jnp.concatenate(
+            [jnp.zeros_like(hs[:, :1]), hs[:, :-1]], axis=1)
+        gabar = ghs * h_prev                                 # dL/dabar_t
+        gx_in = ghs                                          # dL/dx_in_t
+        gdelta = (jnp.sum(gabar * abar * a, axis=-1)
+                  + jnp.sum(gx_in * bmat[:, :, None, :], axis=-1) * u)
+        gu = (jnp.sum(gx_in * bmat[:, :, None, :], axis=-1) * delta
+              + params["d"] * gy)
+        gb = jnp.einsum("btds,btd->bts", gx_in, delta * u)
+        gc = jnp.einsum("btds,btd->bts", hs, gy)
+        # dL/dA -> dL/da_log chained here (p2 has no access to params by
+        # contract); p1 already owns every operand, so this is free.
+        ga = jnp.einsum("btds,btds->ds", gabar * abar, delta[..., None]
+                        * jnp.ones_like(abar))
+        ga_log = ga * a  # dA/da_log = -exp(a_log) = a
+        gd = jnp.sum(gy * u, axis=(0, 1))
+        return (gu, gdelta, gb, gc), (ga_log, gd)
+
+    def bwd_p2(self, res2, inter):
+        # The reductions over (b, t) were fused into p1 (they fall out of
+        # the adjoint scan for free); p2 only re-labels the accumulators.
+        ga_log, gd = inter
+        return {"a_log": ga_log, "d": gd}
+
+
+class DepthwiseConv1d(Module):
+    """Causal depthwise conv over time (Mamba's local mixer).
+
+    x: [b, t, d]; kernel w: [k, d].  Causal left padding of k-1.
+    """
+
+    has_params = True
+    param_names = ("w",)
+
+    def __init__(self, d: int, k: int = 4):
+        self.d, self.k = d, k
+
+    def init(self, key) -> Params:
+        return {"w": jax.random.normal(key, (self.k, self.d), jnp.float32)
+                * (1.0 / math.sqrt(self.k))}
+
+    def _shift(self, x, i):
+        # x shifted so that output_t depends on x_{t-(k-1-i)}
+        off = self.k - 1 - i
+        if off == 0:
+            return x
+        return jnp.pad(x, ((0, 0), (off, 0), (0, 0)))[:, : x.shape[1]]
+
+    def fwd(self, params, x):
+        y = sum(self._shift(x, i) * params["w"][i] for i in range(self.k))
+        return y, (), (x,)
+
+    def bwd_p1(self, params, res1, res2, gy):
+        # adjoint of causal shift = anti-causal shift
+        def unshift(g, i):
+            off = self.k - 1 - i
+            if off == 0:
+                return g
+            return jnp.pad(g, ((0, 0), (0, off), (0, 0)))[:, off:]
+
+        gx = sum(unshift(gy, i) * params["w"][i] for i in range(self.k))
+        return gx, (gy,)
+
+    def bwd_p2(self, res2, inter):
+        (x,) = res2
+        (gy,) = inter
+        gw = jnp.stack(
+            [jnp.sum(self._shift(x, i) * gy, axis=(0, 1))
+             for i in range(self.k)], axis=0)
+        return {"w": gw}

@@ -1,0 +1,75 @@
+"""Optimizers as pure jax functions, AOT-exported per pipeline stage.
+
+The paper (§4): "the optimizer calculations are taken into account
+during the throughput measurements" — so each stage's optimizer step is
+a first-class compiled artifact executed by the rust coordinator after
+the final backward-p2 of a training step.
+
+All optimizers share one functional signature so the rust side is
+uniform:
+
+    step(params, grads, slot0, slot1, t) -> (params', slot0', slot1')
+
+where unused slots are passed through (SGD ignores both, momentum-SGD
+uses slot0, Adam/AdamW use slot0=m, slot1=v).  ``t`` is the 1-based step
+counter as a float32 scalar (for Adam bias correction).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _treemap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def sgd(lr: float = 0.1, momentum: float = 0.0):
+    """SGD (paper: ResNet152's optimizer), optional heavy-ball momentum."""
+
+    def step(params, grads, slot0, slot1, t):
+        if momentum == 0.0:
+            new_p = _treemap(lambda p, g: p - lr * g, params, grads)
+            return new_p, slot0, slot1
+        new_m = _treemap(lambda m, g: momentum * m + g, slot0, grads)
+        new_p = _treemap(lambda p, m: p - lr * m, params, new_m)
+        return new_p, new_m, slot1
+
+    return step
+
+
+def adam(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0):
+    """Adam (paper: LLaMa-7b, BERT-Large). L2-style coupled decay."""
+
+    def step(params, grads, m, v, t):
+        if weight_decay != 0.0:
+            grads = _treemap(lambda g, p: g + weight_decay * p, grads, params)
+        new_m = _treemap(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+        new_v = _treemap(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, grads)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        new_p = _treemap(
+            lambda p, mm, vv: p - lr * (mm / c1) / (jnp.sqrt(vv / c2) + eps),
+            params, new_m, new_v)
+        return new_p, new_m, new_v
+
+    return step
+
+
+def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01):
+    """AdamW (paper: Mamba-1.4b) — decoupled weight decay."""
+    inner = adam(lr, b1, b2, eps, weight_decay=0.0)
+
+    def step(params, grads, m, v, t):
+        new_p, new_m, new_v = inner(params, grads, m, v, t)
+        new_p = _treemap(lambda p0, p: p - lr * weight_decay * p0,
+                         params, new_p)
+        return new_p, new_m, new_v
+
+    return step
+
+
+OPTIMIZERS = {"sgd": sgd, "adam": adam, "adamw": adamw}

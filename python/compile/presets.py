@@ -1,0 +1,99 @@
+"""Named model/run configurations (the analogue of the paper's Table 2).
+
+Two tiers:
+
+* ``*-s``     — CPU-scale stand-ins for the paper's four benchmark models,
+                sized so a 4-stage pipeline trains at interactive speed on
+                one host while preserving each architecture's *profile*
+                (uniform vs non-uniform graph, attention-has-no-p2,
+                SSM-stash-heavy, BN-asymmetric).
+* ``*-paper`` — the paper's actual hyperparameters (Table 2 + §3.2).
+                Export-gated: these compile to HLO like any preset but are
+                not runnable on this host (documented in DESIGN.md §3).
+
+``*-tiny`` presets are for integration tests (seconds, 2 stages).
+
+Every preset carries the optimizer from Table 2.  ``n_microbatches``
+fixes the concat width M of the exported ``bwd_p2_concat`` artifact
+(= N for 1F1B-1, 2N for 1F1B-2; rust picks loop-or-concat at runtime).
+"""
+
+PRESETS = {
+    # -- integration-test tier ---------------------------------------------
+    "transformer-tiny": dict(
+        arch="transformer", dim=64, heads=4, blocks=4, seq=32, vocab=256,
+        microbatch=2, stages=2, n_microbatches=2,
+        optimizer="adam", lr=1e-3),
+    "bert-tiny": dict(
+        arch="bert", dim=64, heads=4, blocks=4, seq=32, vocab=256,
+        microbatch=2, stages=2, n_microbatches=2,
+        optimizer="adam", lr=1e-3),
+    "mamba-tiny": dict(
+        arch="mamba", dim=48, blocks=4, seq=32, vocab=256,
+        microbatch=2, stages=2, n_microbatches=2,
+        optimizer="adamw", lr=1e-3),
+    "resnet-tiny": dict(
+        arch="resnet", stacks=[1, 1, 1, 1], image=64, classes=10,
+        microbatch=2, stages=2, n_microbatches=2,
+        optimizer="sgd", lr=0.05),
+
+    # -- CPU-scale benchmark tier (the Fig 3/4 runs on this host) -----------
+    "transformer-s": dict(
+        arch="transformer", dim=256, heads=8, blocks=12, seq=128, vocab=4096,
+        microbatch=1, stages=4, n_microbatches=8,
+        optimizer="adam", lr=3e-4),
+    "bert-s": dict(
+        arch="bert", dim=256, heads=8, blocks=12, seq=128, vocab=4096,
+        microbatch=2, stages=4, n_microbatches=8,
+        optimizer="adam", lr=3e-4),
+    "mamba-s": dict(
+        arch="mamba", dim=256, blocks=12, seq=128, vocab=4096,
+        microbatch=2, stages=4, n_microbatches=8,
+        optimizer="adamw", lr=3e-4),
+    "resnet-s": dict(
+        arch="resnet", stacks=[2, 3, 6, 3], image=64, classes=100,
+        microbatch=8, stages=4, n_microbatches=8, split=[3, 4, 4, 3],
+        optimizer="sgd", lr=0.05),
+
+    # -- e2e training example (examples/train_transformer.rs) ---------------
+    "transformer-m": dict(
+        arch="transformer", dim=512, heads=8, blocks=16, seq=256, vocab=8192,
+        microbatch=1, stages=4, n_microbatches=4,
+        optimizer="adam", lr=3e-4),
+
+    # -- scaling tier (Figs 6/7; BERT-like, mb 2 per the paper §4.3) --------
+    "bert-scale-fixed": dict(   # 32 blocks total, vary stages 4/8/16
+        arch="bert", dim=128, heads=8, blocks=32, seq=64, vocab=1024,
+        microbatch=2, stages=4, n_microbatches=8,
+        optimizer="adam", lr=3e-4),
+    # variable-size tier: 8 blocks per stage (stages set at export)
+    "bert-scale-var": dict(
+        arch="bert", dim=128, heads=8, blocks=32, seq=64, vocab=1024,
+        microbatch=2, stages=4, n_microbatches=8,
+        optimizer="adam", lr=3e-4),
+
+    # -- paper-scale tier (export-gated; Table 2 hyperparameters) -----------
+    "transformer-7b-paper": dict(
+        arch="transformer", dim=4096, heads=32, blocks=32, seq=1024,
+        vocab=32000, microbatch=1, stages=4, n_microbatches=8,
+        optimizer="adam", lr=3e-4),
+    "bert-large-paper": dict(
+        arch="bert", dim=1024, heads=16, blocks=24, seq=512, vocab=30522,
+        microbatch=2, stages=4, n_microbatches=8,
+        optimizer="adam", lr=1e-4),
+    "mamba-1.4b-paper": dict(
+        arch="mamba", dim=2048, blocks=48, seq=1024, vocab=32000,
+        microbatch=2, stages=4, n_microbatches=8,
+        optimizer="adamw", lr=3e-4),
+    "resnet152-paper": dict(
+        arch="resnet", stacks=[3, 8, 36, 3], image=224, classes=1000,
+        microbatch=8, stages=4, n_microbatches=8, split=[10, 14, 14, 12],
+        optimizer="sgd", lr=0.1),
+}
+
+
+def get(name: str, **overrides) -> dict:
+    cfg = dict(PRESETS[name])
+    cfg.update(overrides)
+    cfg["preset"] = name
+    return cfg

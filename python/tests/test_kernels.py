@@ -1,0 +1,164 @@
+"""L1 kernel tests: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and odd, non-tile-aligned sizes) to exercise
+the block-size clamping logic; fixed cases pin the MXU-shaped paths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = np.float32
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(F32))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 64),
+                                   (64, 256, 128), (32, 32, 32)])
+def test_matmul_tile_aligned(m, k, n):
+    rng = np.random.default_rng(0)
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(K.matmul(x, y), ref.matmul(x, y),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96))
+def test_matmul_hypothesis(m, k, n):
+    rng = np.random.default_rng(m * 10007 + k * 101 + n)
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(K.matmul(x, y), ref.matmul(x, y),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_vmem_estimate_under_budget():
+    from compile.kernels.matmul import vmem_bytes
+    # paper-scale transformer dims must fit VMEM (16 MiB) per grid step
+    assert vmem_bytes(4096, 4096, 4096) <= 16 * 2 ** 20
+
+
+def test_matmul_mxu_utilization_full_at_model_dims():
+    from compile.kernels.matmul import mxu_utilization
+    assert mxu_utilization(4096, 4096, 4096) == 1.0
+    assert mxu_utilization(64, 64, 64) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+
+
+@pytest.mark.parametrize("rows,d", [(128, 256), (64, 64), (256, 128)])
+def test_rmsnorm_fwd(rows, d):
+    rng = np.random.default_rng(1)
+    x, g = _rand(rng, rows, d), _rand(rng, d)
+    y, rstd = K.rmsnorm_fwd(x, g)
+    yr, rr = ref.rmsnorm_fwd(x, g)
+    np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(rstd, rr, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 80), d=st.integers(2, 80))
+def test_rmsnorm_roundtrip_hypothesis(rows, d):
+    rng = np.random.default_rng(rows * 131 + d)
+    x, g = _rand(rng, rows, d), _rand(rng, d)
+    gy = _rand(rng, rows, d)
+    _, rstd = K.rmsnorm_fwd(x, g)
+    np.testing.assert_allclose(
+        K.rmsnorm_bwd_p1(x, g, rstd, gy),
+        ref.rmsnorm_bwd_p1(x, g, rstd, gy), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(
+        K.rmsnorm_bwd_p2(x, rstd, gy),
+        ref.rmsnorm_bwd_p2(x, rstd, gy), rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_p1_p2_equal_autograd():
+    """The split halves must jointly reproduce jax.grad of the fused op."""
+    rng = np.random.default_rng(3)
+    x, g = _rand(rng, 32, 48), _rand(rng, 48)
+    gy = _rand(rng, 32, 48)
+
+    def fused(x, g):
+        return jnp.sum(ref.rmsnorm_fwd(x, g)[0] * gy)
+
+    gx_ref, gg_ref = jax.grad(fused, argnums=(0, 1))(x, g)
+    _, rstd = K.rmsnorm_fwd(x, g)
+    np.testing.assert_allclose(K.rmsnorm_bwd_p1(x, g, rstd, gy), gx_ref,
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(K.rmsnorm_bwd_p2(x, rstd, gy), gg_ref,
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# softmax
+
+
+@pytest.mark.parametrize("rows,d", [(128, 128), (64, 32), (16, 256)])
+def test_softmax_fwd_bwd(rows, d):
+    rng = np.random.default_rng(4)
+    x, gy = _rand(rng, rows, d), _rand(rng, rows, d)
+    y = K.softmax_fwd(x)
+    np.testing.assert_allclose(y, ref.softmax_fwd(x), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(K.softmax_bwd(y, gy),
+                               ref.softmax_bwd(ref.softmax_fwd(x), gy),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 64), d=st.integers(1, 64))
+def test_softmax_hypothesis(rows, d):
+    rng = np.random.default_rng(rows * 977 + d)
+    x = _rand(rng, rows, d)
+    np.testing.assert_allclose(K.softmax_fwd(x), ref.softmax_fwd(x),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    rng = np.random.default_rng(5)
+    y = K.softmax_fwd(_rand(rng, 64, 96))
+    np.testing.assert_allclose(jnp.sum(y, axis=-1), np.ones(64),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("h,t,hd", [(4, 64, 32), (2, 128, 16), (8, 32, 64)])
+def test_attention_fwd(h, t, hd, causal):
+    rng = np.random.default_rng(6)
+    q, k, v = (_rand(rng, h, t, hd) for _ in range(3))
+    out = K.attention_fwd(q, k, v, causal=causal, block_q=32, block_k=32)
+    np.testing.assert_allclose(out, ref.attention_fwd(q, k, v, causal=causal),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.sampled_from([16, 24, 32, 48]), hd=st.sampled_from([8, 16, 32]),
+       bq=st.sampled_from([8, 16, 32]))
+def test_attention_blocking_invariance(t, hd, bq):
+    """Output must not depend on the KV/Q blocking chosen."""
+    rng = np.random.default_rng(t * 31 + hd)
+    q, k, v = (_rand(rng, 2, t, hd) for _ in range(3))
+    a = K.attention_fwd(q, k, v, causal=True, block_q=bq, block_k=bq)
+    b = K.attention_fwd(q, k, v, causal=True, block_q=t, block_k=t)
+    np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_vmem_estimate():
+    from compile.kernels.attention import vmem_bytes
+    assert vmem_bytes(1024, 128) <= 16 * 2 ** 20

@@ -1,0 +1,233 @@
+"""L2 layer tests: every module's split backward vs jax.vjp (autograd).
+
+The invariant the whole paper rests on: splitting backward into p1
+(input grad) + p2 (weight grad) is *semantics-preserving* — together
+they must equal what the fused autodiff engine produces.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers as L
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(seed, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def check_module(mod, x, seed=0, rtol=2e-4, atol=2e-4):
+    """Assert p1 ⊎ p2 ≡ jax.vjp for one module instance and input."""
+    params = mod.init(jax.random.PRNGKey(seed)) if mod.has_params else {}
+    y, res1, res2 = mod.fwd(params, x)
+    gy = _rand(seed + 1, *y.shape)
+    gx, inter = mod.bwd_p1(params, res1, res2, gy)
+
+    if mod.has_params:
+        ref_y, vjp = jax.vjp(lambda p, xx: mod.fwd(p, xx)[0], params, x)
+        gp_ref, gx_ref = vjp(gy)
+        grads = mod.bwd_p2(res2, inter)
+        ga, _ = jax.tree_util.tree_flatten(grads)
+        gb, _ = jax.tree_util.tree_flatten(gp_ref)
+        assert len(ga) == len(gb)
+        for a, b in zip(ga, gb):
+            np.testing.assert_allclose(a, b, rtol=rtol, atol=atol)
+    else:
+        ref_y, vjp = jax.vjp(lambda xx: mod.fwd({}, xx)[0], x)
+        (gx_ref,) = vjp(gy)
+        assert inter == (), "param-free module must have empty inter"
+    np.testing.assert_allclose(y, ref_y, rtol=1e-5, atol=1e-5)
+    if x.dtype != jnp.int32:
+        np.testing.assert_allclose(gx, gx_ref, rtol=rtol, atol=atol)
+    return y
+
+
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bias", [True, False])
+def test_linear(bias):
+    check_module(L.Linear(24, 40, bias=bias), _rand(0, 6, 24))
+
+
+def test_linear_3d_input():
+    check_module(L.Linear(16, 32), _rand(1, 4, 10, 16))
+
+
+def test_embedding():
+    ids = jax.random.randint(jax.random.PRNGKey(2), (4, 12), 0, 50)
+    check_module(L.Embedding(50, 16), ids)
+
+
+@pytest.mark.parametrize("shape", [(8, 32), (2, 16, 24)])
+def test_rmsnorm(shape):
+    check_module(L.RMSNorm(shape[-1], use_kernel=False), _rand(3, *shape))
+
+
+def test_rmsnorm_kernel_path_matches_ref_path():
+    x = _rand(4, 16, 32)
+    mk = L.RMSNorm(32, use_kernel=True)
+    mr = L.RMSNorm(32, use_kernel=False)
+    p = mk.init(jax.random.PRNGKey(0))
+    yk, _, _ = mk.fwd(p, x)
+    yr, _, _ = mr.fwd(p, x)
+    np.testing.assert_allclose(yk, yr, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(8, 32), (2, 16, 24)])
+def test_layernorm(shape):
+    check_module(L.LayerNorm(shape[-1]), _rand(5, *shape))
+
+
+def test_relu():
+    check_module(L.ReLU(), _rand(6, 8, 16))
+
+
+def test_gelu():
+    check_module(L.GELU(), _rand(7, 8, 16))
+
+
+@pytest.mark.parametrize("causal,rope", [(True, True), (True, False),
+                                         (False, False)])
+def test_attention(causal, rope):
+    mod = L.Attention(32, 4, 16, causal=causal, rope=rope, bias=False)
+    check_module(mod, _rand(8, 2, 16, 32), rtol=5e-4, atol=5e-4)
+
+
+def test_attention_with_bias():
+    mod = L.Attention(32, 4, 16, causal=False, rope=False, bias=True)
+    check_module(mod, _rand(9, 2, 16, 32), rtol=5e-4, atol=5e-4)
+
+
+def test_attention_has_no_p2_for_sdpa_core():
+    """SDPA residuals (q,k,v,p) live in res1 — released after p1 (paper
+    §4.2: functional ops release their activations during backward-p1)."""
+    mod = L.Attention(32, 4, 16)
+    p = mod.init(jax.random.PRNGKey(0))
+    _, res1, res2 = mod.fwd(p, _rand(10, 2, 16, 32))
+    assert len(res1) == 4          # q, k, v, attention probs
+    assert len(res2) == 2          # x, o — the projection operands only
+
+
+def test_swiglu():
+    check_module(L.SwiGLU(24, 64), _rand(11, 4, 24), rtol=5e-4, atol=5e-4)
+
+
+def test_mlp():
+    check_module(L.MLP(24, 64), _rand(12, 4, 24), rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("stride,pad,k", [(1, 1, 3), (2, 1, 3), (1, 0, 1),
+                                          (2, 3, 7)])
+def test_conv2d(stride, pad, k):
+    mod = L.Conv2d(3, 8, k, stride=stride, padding=pad)
+    check_module(mod, _rand(13, 2, 3, 16, 16), rtol=5e-4, atol=5e-4)
+
+
+def test_conv2d_with_bias():
+    check_module(L.Conv2d(4, 6, 3, padding=1, bias=True),
+                 _rand(14, 2, 4, 8, 8), rtol=5e-4, atol=5e-4)
+
+
+def test_batchnorm2d():
+    check_module(L.BatchNorm2d(6), _rand(15, 4, 6, 8, 8), rtol=5e-4, atol=5e-4)
+
+
+def test_batchnorm_p2_simpler_than_p1():
+    """Paper §4.1: BN's p2 is two reductions while p1 carries the full
+    statistics chain — verify p2 equals the direct reductions."""
+    mod = L.BatchNorm2d(4)
+    x = _rand(16, 2, 4, 6, 6)
+    p = mod.init(jax.random.PRNGKey(0))
+    y, r1, r2 = mod.fwd(p, x)
+    gy = _rand(17, *y.shape)
+    _, inter = mod.bwd_p1(p, r1, r2, gy)
+    g = mod.bwd_p2(r2, inter)
+    xhat, _ = r2
+    np.testing.assert_allclose(g["b"], jnp.sum(gy, axis=(0, 2, 3)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(g["g"], jnp.sum(gy * xhat, axis=(0, 2, 3)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_maxpool():
+    check_module(L.MaxPool2d(3, 2, padding=1), _rand(18, 2, 3, 9, 9))
+
+
+def test_global_avg_pool():
+    check_module(L.GlobalAvgPool(), _rand(19, 2, 4, 6, 6))
+
+
+def test_depthwise_conv1d():
+    check_module(L.DepthwiseConv1d(8, 4), _rand(20, 2, 12, 8),
+                 rtol=5e-4, atol=5e-4)
+
+
+def test_depthwise_conv1d_is_causal():
+    """Output at time t must not depend on inputs after t."""
+    mod = L.DepthwiseConv1d(4, 3)
+    p = mod.init(jax.random.PRNGKey(1))
+    x = _rand(21, 1, 10, 4)
+    y0, _, _ = mod.fwd(p, x)
+    x2 = x.at[:, 7:].set(99.0)
+    y1, _, _ = mod.fwd(p, x2)
+    np.testing.assert_allclose(y0[:, :7], y1[:, :7], rtol=1e-6, atol=1e-6)
+
+
+def test_ssm_scan():
+    mod = L.SSMScan(6, 4)
+    u = _rand(22, 2, 10, 6)
+    delta = jax.nn.softplus(_rand(23, 2, 10, 6))
+    bmat = _rand(24, 2, 10, 4)
+    cmat = _rand(25, 2, 10, 4)
+    params = mod.init(jax.random.PRNGKey(3))
+    y, r1, r2 = mod.fwd(params, (u, delta, bmat, cmat))
+    gy = _rand(26, *y.shape)
+    (gu, gd, gb, gc), inter = mod.bwd_p1(params, r1, r2, gy)
+    grads = mod.bwd_p2(r2, inter)
+
+    ref_y, vjp = jax.vjp(
+        lambda p, uu, dd, bb, cc: mod.fwd(p, (uu, dd, bb, cc))[0],
+        params, u, delta, bmat, cmat)
+    gp_ref, gu_r, gd_r, gb_r, gc_r = vjp(gy)
+    np.testing.assert_allclose(y, ref_y, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gu, gu_r, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(gd, gd_r, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(gb, gb_r, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(gc, gc_r, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(grads["a_log"], gp_ref["a_log"],
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(grads["d"], gp_ref["d"], rtol=5e-4, atol=5e-4)
+
+
+def test_ssm_hidden_states_stashed_in_res2():
+    """The paper's Mamba memory blow-up comes from h living until p2."""
+    mod = L.SSMScan(6, 4)
+    u = _rand(27, 2, 10, 6)
+    args = (u, jax.nn.softplus(u), _rand(28, 2, 10, 4), _rand(29, 2, 10, 4))
+    _, _, res2 = mod.fwd(mod.init(jax.random.PRNGKey(0)), args)
+    hs = res2[-1]
+    assert hs.shape == (2, 10, 6, 4)   # [b, t, di, s] — all time steps
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: the split-backward law on randomly shaped linear layers
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 6), din=st.integers(1, 32), dout=st.integers(1, 32),
+       bias=st.booleans())
+def test_linear_split_law_hypothesis(b, din, dout, bias):
+    check_module(L.Linear(din, dout, bias=bias),
+                 _rand(b * 7 + din, b, din), seed=din * 31 + dout)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(2, 16), d=st.integers(2, 32))
+def test_rmsnorm_split_law_hypothesis(rows, d):
+    check_module(L.RMSNorm(d, use_kernel=False), _rand(rows + d, rows, d),
+                 seed=rows * 13 + d)

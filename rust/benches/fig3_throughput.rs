@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig 3 (sample throughput, 4 models x 4 schedules
+//! +/-2BP) and Fig 4 (peak memory) from real runs with calibrated replay.
+//! `cargo bench --bench fig3_throughput [-- --steps N]`
+
+/// Presets: TWOBP_BENCH_PRESETS="a,b" overrides (quick CI runs); default
+/// is the paper's four CPU-scale models.
+fn presets() -> Vec<String> {
+    match std::env::var("TWOBP_BENCH_PRESETS") {
+        Ok(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+        Err(_) => twobp::config::BENCH_PRESETS.iter().map(|s| s.to_string())
+            .collect(),
+    }
+}
+
+fn main() {
+    let steps = std::env::args().skip_while(|a| a != "--steps").nth(1)
+        .and_then(|s| s.parse().ok()).unwrap_or(2);
+    match {
+        let ps = presets();
+        let refs: Vec<&str> = ps.iter().map(|s| s.as_str()).collect();
+        twobp::experiments::fig3(steps, &refs)
+    } {
+        Ok(s) => print!("{s}"),
+        Err(e) => { eprintln!("fig3 failed: {e:#}"); std::process::exit(1); }
+    }
+}

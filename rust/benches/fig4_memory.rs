@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig 4 (max per-rank peak memory, +/-2BP) from real
+//! runs with byte-exact stash accounting.
+//! `cargo bench --bench fig4_memory [-- --steps N]`
+
+/// Presets: TWOBP_BENCH_PRESETS="a,b" overrides (quick CI runs); default
+/// is the paper's four CPU-scale models.
+fn presets() -> Vec<String> {
+    match std::env::var("TWOBP_BENCH_PRESETS") {
+        Ok(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+        Err(_) => twobp::config::BENCH_PRESETS.iter().map(|s| s.to_string())
+            .collect(),
+    }
+}
+
+fn main() {
+    let steps = std::env::args().skip_while(|a| a != "--steps").nth(1)
+        .and_then(|s| s.parse().ok()).unwrap_or(1);
+    match {
+        let ps = presets();
+        let refs: Vec<&str> = ps.iter().map(|s| s.as_str()).collect();
+        twobp::experiments::fig4(steps, &refs)
+    } {
+        Ok(s) => print!("{s}"),
+        Err(e) => { eprintln!("fig4 failed: {e:#}"); std::process::exit(1); }
+    }
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig 5 (memory-efficient eager-p2 1F1B-2 variant).
+//! `cargo bench --bench fig5_memory_schedule [-- --steps N]`
+fn main() {
+    let steps = std::env::args().skip_while(|a| a != "--steps").nth(1)
+        .and_then(|s| s.parse().ok()).unwrap_or(2);
+    match twobp::experiments::fig5(
+        steps,
+        &std::env::var("TWOBP_BENCH_PRESET").unwrap_or_else(|_| "bert-s".into()),
+    ) {
+        Ok(s) => print!("{s}"),
+        Err(e) => { eprintln!("fig5 failed: {e:#}"); std::process::exit(1); }
+    }
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate Figs 6/7 (fixed- and variable-size scaling to
+//! N=4/8/16 with inter-node comm penalty and OOM detection), calibrated
+//! from real per-op costs of a BERT-like run.
+//! `cargo bench --bench fig6_fig7_scaling [-- --steps N]`
+fn main() {
+    let steps = std::env::args().skip_while(|a| a != "--steps").nth(1)
+        .and_then(|s| s.parse().ok()).unwrap_or(2);
+    match twobp::experiments::fig6_fig7(
+        steps,
+        &std::env::var("TWOBP_BENCH_PRESET")
+            .unwrap_or_else(|_| "bert-scale-fixed".into()),
+    ) {
+        Ok(s) => print!("{s}"),
+        Err(e) => { eprintln!("fig6/7 failed: {e:#}"); std::process::exit(1); }
+    }
+}

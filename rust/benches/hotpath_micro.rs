@@ -1,0 +1,73 @@
+//! Microbenchmarks of the L3 hot path (the §Perf instrument): executable
+//! dispatch, host<->literal conversion, channel transfer, stash churn.
+//!
+//! `cargo bench --bench hotpath_micro`
+//!
+//! The coordinator must never be the bottleneck (DESIGN.md §9): each of
+//! these costs is compared against the smallest real op (a tiny stage's
+//! fwd ≈ hundreds of µs), and the bench fails loudly if L3 overhead gets
+//! within an order of magnitude of it.
+
+use std::path::Path;
+
+use twobp::models::{DType, Manifest};
+use twobp::pipeline::comm::link;
+use twobp::runtime::{scalar_i32, Device, HostTensor};
+use twobp::util::stats::{bench, fmt_duration, summarize};
+
+fn main() -> anyhow::Result<()> {
+    println!("L3 hot-path microbenchmarks\n");
+
+    // host tensor round trip (the wire format)
+    let data: Vec<f32> = (0..64 * 1024).map(|i| i as f32).collect();
+    let t = summarize(&bench(3, 20, || {
+        let h = HostTensor::from_f32(&[256, 256], &data);
+        std::hint::black_box(h.to_f32());
+    }));
+    println!("host_tensor 256x256 f32 encode+decode: {} ± {}",
+             fmt_duration(t.mean), fmt_duration(t.std));
+
+    // channel transfer
+    let (tx, mut rx) = link();
+    let t = summarize(&bench(3, 50, || {
+        tx.send(0, HostTensor::from_f32(&[256, 256], &data)).unwrap();
+        std::hint::black_box(rx.recv(0).unwrap());
+    }));
+    println!("tagged channel send+recv 256 KiB:       {} ± {}",
+             fmt_duration(t.mean), fmt_duration(t.std));
+
+    // literal upload/download
+    if let Ok(_d) = Device::cpu() {
+        let h = HostTensor::from_f32(&[256, 256], &data);
+        let t = summarize(&bench(3, 20, || {
+            let lit = h.to_literal().unwrap();
+            std::hint::black_box(HostTensor::from_literal(&lit).unwrap());
+        }));
+        println!("literal upload+download 256 KiB:        {} ± {}",
+                 fmt_duration(t.mean), fmt_duration(t.std));
+    }
+
+    // zero-grad allocation (per OptStep)
+    let t = summarize(&bench(3, 20, || {
+        std::hint::black_box(
+            HostTensor::zeros(&[512, 512], DType::F32).to_literal().unwrap(),
+        );
+    }));
+    println!("zero-literal alloc 1 MiB:               {} ± {}",
+             fmt_duration(t.mean), fmt_duration(t.std));
+
+    // executable dispatch floor (tiny init artifact, if present)
+    if Path::new("artifacts/transformer-tiny/manifest.json").exists() {
+        let m = Manifest::load(Path::new("artifacts"), "transformer-tiny")?;
+        let d = Device::cpu()?;
+        let exe = d.load(&m.stages[0].init.file)?;
+        let t = summarize(&bench(2, 10, || {
+            std::hint::black_box(exe.run(&[scalar_i32(0)]).unwrap());
+        }));
+        println!("stage0 init dispatch+run:               {} ± {}",
+                 fmt_duration(t.mean), fmt_duration(t.std));
+    } else {
+        println!("(artifacts missing — skipping dispatch bench)");
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate the paper's Table 1 (bubble ratios & gains,
+//! simulated vs closed-form) — `cargo bench --bench table1_bubble_ratios`.
+fn main() {
+    print!("{}", twobp::experiments::table1());
+    println!("(Fig 1 timelines: `twobp gantt` or `cargo bench --bench fig3_throughput`)");
+}

@@ -1,0 +1,153 @@
+//! Run configuration: what to train, with which schedule, for how long.
+//!
+//! Presets mirror the paper's Table 2 (see `python/compile/presets.py`,
+//! which owns the model hyperparameters; this side owns the *run*
+//! parameters and resolves artifact locations).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::schedule::ScheduleKind;
+use crate::util::args::Args;
+
+/// How backward-p2 work is issued (paper Fig 2 / Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum P2Mode {
+    /// One `bwd_p2` call per microbatch (accumulating).
+    Loop,
+    /// Single `bwd_p2_concat` call over all pending microbatches.
+    Concat,
+}
+
+/// A full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub preset: String,
+    pub artifacts: PathBuf,
+    pub schedule: ScheduleKind,
+    pub two_bp: bool,
+    pub n_microbatches: usize,
+    pub p2_mode: P2Mode,
+    pub steps: usize,
+    pub warmup_steps: usize,
+    pub seed: u64,
+    /// Steps cycle over this many distinct synthetic batches (0 = fresh
+    /// random data every step, the paper's throughput setting).
+    pub data_cycle: usize,
+    /// Print per-step losses/timings.
+    pub verbose: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            preset: "transformer-tiny".into(),
+            artifacts: PathBuf::from("artifacts"),
+            schedule: ScheduleKind::OneF1B1,
+            two_bp: true,
+            n_microbatches: 0, // 0 = schedule default (paper convention)
+            p2_mode: P2Mode::Loop,
+            steps: 4,
+            warmup_steps: 1,
+            seed: 0,
+            data_cycle: 0,
+            verbose: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from parsed CLI args (shared by `twobp` subcommands).
+    pub fn from_args(args: &Args) -> Result<RunConfig> {
+        let mut cfg = RunConfig {
+            preset: args.get_or("preset", "transformer-tiny").to_string(),
+            artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
+            steps: args.get_usize("steps", 4),
+            warmup_steps: args.get_usize("warmup", 1),
+            n_microbatches: args.get_usize("microbatches", 0),
+            seed: args.get_usize("seed", 0) as u64,
+            data_cycle: args.get_usize("data-cycle", 0),
+            two_bp: !args.has("no-2bp"),
+            verbose: args.has("verbose"),
+            ..RunConfig::default()
+        };
+        if let Some(s) = args.get("schedule") {
+            cfg.schedule = match ScheduleKind::parse(s) {
+                Some(k) => k,
+                None => bail!("unknown schedule '{s}' (naive|gpipe|1f1b-1|1f1b-2|1f1b-2-eager)"),
+            };
+        }
+        if args.has("concat-p2") {
+            cfg.p2_mode = P2Mode::Concat;
+        }
+        Ok(cfg)
+    }
+
+    pub fn microbatches(&self, n_ranks: usize) -> usize {
+        if self.n_microbatches == 0 {
+            self.schedule.default_microbatches(n_ranks)
+        } else {
+            self.n_microbatches
+        }
+    }
+}
+
+/// The four benchmark models of the paper's Fig 3/4, in CPU-scale form.
+pub const BENCH_PRESETS: [&str; 4] =
+    ["transformer-s", "bert-s", "mamba-s", "resnet-s"];
+
+/// The paper's Table 2, rendered for `twobp config --list`.
+pub fn table2() -> crate::util::table::Table {
+    let mut t = crate::util::table::Table::new(
+        &["Model", "Data type", "Micro-Batch size", "Optimizer",
+          "CPU-scale preset"],
+    )
+    .with_title("Table 2: model hyperparameters used for benchmarking");
+    t.row(vec!["Mamba-1.4b".into(), "fp16→f32".into(), "2".into(),
+               "AdamW".into(), "mamba-s".into()]);
+    t.row(vec!["LLaMa-7b".into(), "fp16→f32".into(), "1".into(),
+               "Adam".into(), "transformer-s".into()]);
+    t.row(vec!["ResNet152".into(), "fp32".into(), "8".into(),
+               "SGD".into(), "resnet-s".into()]);
+    t.row(vec!["BERT-Large".into(), "fp16→f32".into(), "2".into(),
+               "Adam".into(), "bert-s".into()]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn from_args_full() {
+        let args = Args::parse(
+            &sv(&["--preset", "bert-s", "--schedule", "1f1b-2",
+                  "--steps", "7", "--no-2bp", "--concat-p2"]),
+            &["no-2bp", "concat-p2", "verbose"],
+        );
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.preset, "bert-s");
+        assert_eq!(cfg.schedule, ScheduleKind::OneF1B2);
+        assert_eq!(cfg.steps, 7);
+        assert!(!cfg.two_bp);
+        assert_eq!(cfg.p2_mode, P2Mode::Concat);
+    }
+
+    #[test]
+    fn rejects_bad_schedule() {
+        let args = Args::parse(&sv(&["--schedule", "zigzag"]), &[]);
+        assert!(RunConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn default_microbatches_follow_schedule() {
+        let cfg = RunConfig { schedule: ScheduleKind::OneF1B2,
+                              ..RunConfig::default() };
+        assert_eq!(cfg.microbatches(4), 8);
+    }
+}

@@ -1,0 +1,40 @@
+//! # twobp — 2-Stage Backpropagation
+//!
+//! Reproduction of *"2BP: 2-Stage Backpropagation"* (Rae, Lee, Richings,
+//! EPCC 2024) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is **Layer 3**: the pipeline-parallel training coordinator.
+//! It owns the process topology (one worker per pipeline stage), the
+//! schedule (Naive / GPipe / 1F1B-1 / 1F1B-2, each with or without the
+//! paper's 2BP backward split), inter-stage communication, activation /
+//! intermediate-derivative stash management with byte-exact memory
+//! accounting, the optimizer driver, and all measurement.
+//!
+//! Compute is **never** done in Rust: every stage function (`fwd`,
+//! `bwd_p1`, `bwd_p2`, `bwd_p2_concat`, `opt`, `init`, `loss`) is an
+//! AOT-compiled XLA executable produced once by `python/compile/aot.py`
+//! (JAX model + Pallas kernels, lowered to HLO text) and executed through
+//! the PJRT CPU client ([`runtime`]).
+//!
+//! Module map (see DESIGN.md for the full system inventory):
+//!
+//! * [`schedule`] — pipeline schedule plans + validator (paper §3, Fig 1/5)
+//! * [`sim`]      — discrete-event simulator (Table 1, Figs 1/6/7)
+//! * [`runtime`]  — PJRT client wrapper: load + execute HLO artifacts
+//! * [`models`]   — artifact manifest parsing (shapes, byte classes, flops)
+//! * [`pipeline`] — the real distributed executor + memory accountant
+//! * [`config`]   — run configuration and Table-2 presets
+//! * [`metrics`]  — throughput/bubble/memory reporting
+//! * [`util`]     — substrates: mini-JSON, PRNG, stats, tables, CLI args
+
+pub mod config;
+pub mod experiments;
+pub mod metrics;
+pub mod models;
+pub mod pipeline;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod util;
+
+pub use schedule::{Plan, ScheduleKind};

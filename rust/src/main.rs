@@ -1,0 +1,132 @@
+//! `twobp` — the 2BP pipeline-training launcher.
+//!
+//! ```text
+//! twobp train    --preset transformer-tiny --schedule 1f1b-1 [--no-2bp]
+//!                [--steps N] [--microbatches M] [--concat-p2] [--verbose]
+//! twobp gantt    [--ranks N] [--cols W] [--schedule K] [--real --preset P]
+//! twobp simulate --schedule 1f1b-1 --ranks 8 [--no-2bp] [--comm C]
+//! twobp bench    <table1|fig1|fig3|fig4|fig5|table3|fig6|fig7> [--steps N]
+//! twobp config   --list
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use twobp::config::{table2, RunConfig};
+use twobp::metrics::run_summary;
+use twobp::pipeline::train;
+use twobp::schedule::{generate, validate::validate, ScheduleKind};
+use twobp::sim::{simulate, CostModel};
+use twobp::util::args::Args;
+use twobp::util::gantt;
+
+const FLAGS: &[&str] = &["no-2bp", "concat-p2", "verbose", "list", "real",
+                         "csv"];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, FLAGS);
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "gantt" => cmd_gantt(&args),
+        "simulate" => cmd_simulate(&args),
+        "bench" => cmd_bench(&args),
+        "config" => {
+            println!("{}", table2().render());
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: twobp <train|gantt|simulate|bench|config> [options]\n\
+                 see `cargo doc` or README.md for details"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let report = train(&cfg)?;
+    print!("{}", run_summary(&report));
+    Ok(())
+}
+
+fn cmd_gantt(args: &Args) -> Result<()> {
+    let cols = args.get_usize("cols", 96);
+    if args.has("real") {
+        // render a measured timeline from a real (serialized) run
+        let cfg = RunConfig::from_args(args)?;
+        let report = train(&cfg)?;
+        let spans = report.spans();
+        if args.has("csv") {
+            print!("{}", gantt::to_csv(&spans));
+        } else {
+            print!("{}", gantt::render(&spans, cols));
+        }
+        return Ok(());
+    }
+    let n = args.get_usize("ranks", 4);
+    match args.get("schedule") {
+        Some(s) => {
+            let kind = ScheduleKind::parse(s)
+                .ok_or_else(|| anyhow!("unknown schedule '{s}'"))?;
+            for two_bp in [false, true] {
+                let m = args.get_usize("microbatches", 0);
+                let plan = generate(kind, two_bp, n, m, false);
+                let res = simulate(&plan, &CostModel::unit(n), None)
+                    .map_err(|e| anyhow!("{e}"))?;
+                println!("--- {} ---  bubble ratio {:.3}",
+                         plan.describe(), res.bubble_ratio);
+                print!("{}", gantt::render(&res.spans, cols));
+            }
+            Ok(())
+        }
+        None => {
+            print!("{}", twobp::experiments::fig1(n, cols));
+            Ok(())
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let n = args.get_usize("ranks", 4);
+    let kind = ScheduleKind::parse(args.get_or("schedule", "1f1b-1"))
+        .ok_or_else(|| anyhow!("unknown schedule"))?;
+    let two_bp = !args.has("no-2bp");
+    let m = args.get_usize("microbatches", 0);
+    let mut cm = CostModel::ratios(
+        n,
+        args.get_f64("fwd", 1.0),
+        args.get_f64("p1", 1.0),
+        args.get_f64("p2", 1.0),
+    );
+    cm.comm = args.get_f64("comm", 0.0);
+    let plan = generate(kind, two_bp, n, m, false);
+    validate(&plan).map_err(|e| anyhow!("{e}"))?;
+    let res = simulate(&plan, &cm, None).map_err(|e| anyhow!("{e}"))?;
+    println!("{}", plan.describe());
+    println!("makespan       : {:.4}", res.makespan);
+    println!("bubble ratio   : {:.4}", res.bubble_ratio);
+    println!("throughput gain vs no-2BP:");
+    let base = generate(kind, false, n, m, false);
+    let bres = simulate(&base, &cm, None).map_err(|e| anyhow!("{e}"))?;
+    println!("  {:.3}x (makespan {:.4} -> {:.4})",
+             bres.makespan / res.makespan, bres.makespan, res.makespan);
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let exp = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("bench needs an experiment name"))?;
+    let steps = args.get_usize("steps", 3);
+    let out = twobp::experiments::run_experiment(exp, steps)?;
+    print!("{out}");
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Reporting: turn run reports / sim results into the paper's tables.
+
+use crate::pipeline::RunReport;
+use crate::util::stats::{fmt_bytes, fmt_duration};
+use crate::util::table::Table;
+
+/// One row of a throughput comparison (Fig 3-style).
+#[derive(Debug, Clone)]
+pub struct ThroughputRow {
+    pub model: String,
+    pub schedule: String,
+    pub without_2bp: f64,
+    pub with_2bp: f64,
+}
+
+impl ThroughputRow {
+    pub fn gain(&self) -> f64 {
+        self.with_2bp / self.without_2bp
+    }
+}
+
+pub fn throughput_table(rows: &[ThroughputRow], title: &str) -> Table {
+    let mut t = Table::new(
+        &["model", "schedule", "samples/s", "samples/s +2BP", "gain"],
+    )
+    .with_title(title);
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.schedule.clone(),
+            format!("{:.2}", r.without_2bp),
+            format!("{:.2}", r.with_2bp),
+            format!("{:.2}x", r.gain()),
+        ]);
+    }
+    t
+}
+
+/// One row of a peak-memory comparison (Fig 4-style).
+#[derive(Debug, Clone)]
+pub struct MemoryRow {
+    pub model: String,
+    pub schedule: String,
+    pub without_2bp: u64,
+    pub with_2bp: u64,
+}
+
+impl MemoryRow {
+    pub fn increase(&self) -> f64 {
+        self.with_2bp as f64 / self.without_2bp.max(1) as f64
+    }
+}
+
+pub fn memory_table(rows: &[MemoryRow], title: &str) -> Table {
+    let mut t = Table::new(
+        &["model", "schedule", "peak mem", "peak mem +2BP", "increase"],
+    )
+    .with_title(title);
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.schedule.clone(),
+            fmt_bytes(r.without_2bp),
+            fmt_bytes(r.with_2bp),
+            format!("{:.2}x", r.increase()),
+        ]);
+    }
+    t
+}
+
+/// Per-run summary printed after `twobp train`.
+pub fn run_summary(report: &RunReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "run: {} | {}\n",
+        report.preset,
+        report.plan.describe()
+    ));
+    out.push_str(&format!(
+        "steps: {} | mean step (serialized): {}\n",
+        report.step_times.len(),
+        fmt_duration(report.mean_step_time()),
+    ));
+    if let Ok(tput) = report.simulated_throughput() {
+        out.push_str(&format!(
+            "pipeline throughput (calibrated sim): {:.2} samples/s\n",
+            tput
+        ));
+    }
+    let peaks = report.peak_bytes();
+    out.push_str("peak memory per rank: ");
+    out.push_str(
+        &peaks
+            .iter()
+            .map(|p| fmt_bytes(*p))
+            .collect::<Vec<_>>()
+            .join(" | "),
+    );
+    out.push('\n');
+    if !report.losses.is_empty() {
+        out.push_str("loss: ");
+        let show: Vec<String> = report
+            .losses
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| {
+                report.losses.len() <= 12
+                    || *i < 3
+                    || *i >= report.losses.len() - 3
+                    || i % (report.losses.len() / 6).max(1) == 0
+            })
+            .map(|(i, l)| format!("[{i}] {l:.4}"))
+            .collect();
+        out.push_str(&show.join("  "));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gain_and_increase() {
+        let t = ThroughputRow {
+            model: "x".into(), schedule: "gpipe".into(),
+            without_2bp: 100.0, with_2bp: 150.0,
+        };
+        assert!((t.gain() - 1.5).abs() < 1e-12);
+        let m = MemoryRow {
+            model: "x".into(), schedule: "gpipe".into(),
+            without_2bp: 100, with_2bp: 267,
+        };
+        assert!((m.increase() - 2.67).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tables_render() {
+        let t = throughput_table(
+            &[ThroughputRow {
+                model: "transformer".into(), schedule: "1f1b-1".into(),
+                without_2bp: 10.0, with_2bp: 17.0,
+            }],
+            "Fig 3",
+        );
+        let s = t.render();
+        assert!(s.contains("1.70x"));
+    }
+}

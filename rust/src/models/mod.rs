@@ -1,0 +1,364 @@
+//! Artifact manifest parsing — the rust mirror of `python/compile/aot.py`.
+//!
+//! The manifest is the entire runtime contract: flat argument/output
+//! specs for every per-stage executable, per-class byte totals (the
+//! paper's §4.2 memory taxonomy: res1 / res2 / inter), and XLA
+//! cost-analysis flops used to calibrate the simulator.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+
+    pub fn itemsize(&self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype + byte size of one tensor.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub bytes: u64,
+    pub name: Option<String>,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().map(|d| d as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("bad shape"))?;
+        let dtype = DType::parse(
+            v.get("dtype").and_then(|d| d.as_str()).unwrap_or("float32"),
+        )?;
+        let bytes = v.get("bytes").and_then(|b| b.as_u64()).unwrap_or_else(|| {
+            (shape.iter().product::<usize>() * dtype.itemsize()) as u64
+        });
+        let name = v.get("name").and_then(|n| n.as_str()).map(String::from);
+        Ok(TensorSpec { shape, dtype, bytes, name })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Byte totals per residency class for one stage (drives the memory
+/// accountant and the simulator's MemModel).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteClasses {
+    pub params: u64,
+    pub res1: u64,
+    pub res2: u64,
+    pub inter: u64,
+    pub grads: u64,
+    pub activation: u64,
+}
+
+/// One executable's entry (file + flops estimate).
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub file: PathBuf,
+    pub flops: Option<f64>,
+}
+
+/// Everything known about one pipeline stage.
+#[derive(Debug, Clone)]
+pub struct StageInfo {
+    pub index: usize,
+    pub params: Vec<TensorSpec>,
+    pub input: TensorSpec,
+    pub output: TensorSpec,
+    pub gx: TensorSpec,
+    pub res1: Vec<TensorSpec>,
+    pub res2: Vec<TensorSpec>,
+    pub inter: Vec<TensorSpec>,
+    pub grads: Vec<TensorSpec>,
+    pub bytes: ByteClasses,
+    pub init: Artifact,
+    pub fwd: Artifact,
+    pub bwd_p1: Artifact,
+    pub bwd_p2: Artifact,
+    pub bwd_p2_concat: Artifact,
+    pub opt: Artifact,
+}
+
+impl StageInfo {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+}
+
+/// A parsed manifest for one preset.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub arch: String,
+    pub n_stages: usize,
+    pub microbatch: usize,
+    pub samples_per_microbatch: usize,
+    pub concat_m: usize,
+    pub optimizer: String,
+    pub stages: Vec<StageInfo>,
+    pub loss: Artifact,
+    pub logits: TensorSpec,
+    pub labels: TensorSpec,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `artifacts/<preset>/manifest.json`.
+    pub fn load(artifacts_root: &Path, preset: &str) -> Result<Manifest> {
+        let dir = artifacts_root.join(preset);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(&v, &dir)
+    }
+
+    fn from_json(v: &Json, dir: &Path) -> Result<Manifest> {
+        let s = |k: &str| -> Result<String> {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .map(String::from)
+                .ok_or_else(|| anyhow!("missing {k}"))
+        };
+        let u = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_u64())
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow!("missing {k}"))
+        };
+        let art = |av: &Json| -> Result<Artifact> {
+            Ok(Artifact {
+                file: dir.join(
+                    av.get("file")
+                        .and_then(|f| f.as_str())
+                        .ok_or_else(|| anyhow!("artifact missing file"))?,
+                ),
+                flops: av.get("flops").and_then(|f| f.as_f64()),
+            })
+        };
+
+        let mut stages = Vec::new();
+        for sv in v
+            .get("stage")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("missing stage array"))?
+        {
+            let specs = |k: &str| -> Result<Vec<TensorSpec>> {
+                sv.get(k)
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow!("stage missing {k}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let one = |k: &str| -> Result<TensorSpec> {
+                TensorSpec::from_json(
+                    sv.get(k).ok_or_else(|| anyhow!("stage missing {k}"))?,
+                )
+            };
+            let arts = sv
+                .get("artifacts")
+                .ok_or_else(|| anyhow!("stage missing artifacts"))?;
+            let a = |k: &str| -> Result<Artifact> {
+                art(arts.get(k).ok_or_else(|| anyhow!("missing artifact {k}"))?)
+            };
+            let bv = sv.get("bytes").ok_or_else(|| anyhow!("missing bytes"))?;
+            let bu = |k: &str| -> u64 {
+                bv.get(k).and_then(|x| x.as_u64()).unwrap_or(0)
+            };
+            stages.push(StageInfo {
+                index: sv
+                    .get("index")
+                    .and_then(|i| i.as_u64())
+                    .ok_or_else(|| anyhow!("stage missing index"))?
+                    as usize,
+                params: specs("params")?,
+                input: one("input")?,
+                output: one("output")?,
+                gx: one("gx")?,
+                res1: specs("res1")?,
+                res2: specs("res2")?,
+                inter: specs("inter")?,
+                grads: specs("grads")?,
+                bytes: ByteClasses {
+                    params: bu("params"),
+                    res1: bu("res1"),
+                    res2: bu("res2"),
+                    inter: bu("inter"),
+                    grads: bu("grads"),
+                    activation: bu("activation"),
+                },
+                init: a("init")?,
+                fwd: a("fwd")?,
+                bwd_p1: a("bwd_p1")?,
+                bwd_p2: a("bwd_p2")?,
+                bwd_p2_concat: a("bwd_p2_concat")?,
+                opt: a("opt")?,
+            });
+        }
+        let lv = v.get("loss").ok_or_else(|| anyhow!("missing loss"))?;
+        Ok(Manifest {
+            preset: s("preset")?,
+            arch: s("arch")?,
+            n_stages: u("stages")?,
+            microbatch: u("microbatch")?,
+            samples_per_microbatch: u("samples_per_microbatch")?,
+            concat_m: u("n_microbatches_concat")?,
+            optimizer: s("optimizer")?,
+            stages,
+            loss: art(lv)?,
+            logits: TensorSpec::from_json(
+                lv.get("logits").ok_or_else(|| anyhow!("loss missing logits"))?,
+            )?,
+            labels: TensorSpec::from_json(
+                lv.get("labels").ok_or_else(|| anyhow!("loss missing labels"))?,
+            )?,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Total parameter count across stages.
+    pub fn total_params(&self) -> usize {
+        self.stages.iter().map(|s| s.param_count()).sum()
+    }
+
+    /// Simulator memory model (per-microbatch byte classes).
+    pub fn mem_model(&self) -> crate::sim::MemModel {
+        crate::sim::MemModel {
+            // params + grads + 2 opt slots (m, v) — resident all step
+            static_bytes: self
+                .stages
+                .iter()
+                .map(|s| s.bytes.params * 3 + s.bytes.grads)
+                .collect(),
+            res1: self.stages.iter().map(|s| s.bytes.res1).collect(),
+            res2: self.stages.iter().map(|s| s.bytes.res2).collect(),
+            inter: self.stages.iter().map(|s| s.bytes.inter).collect(),
+        }
+    }
+
+    /// Simulator cost model from the manifest's XLA flops estimates,
+    /// normalized so the mean fwd cost is 1.0 (relative shape is what
+    /// matters; calibrate absolute scale with measured seconds/flop).
+    pub fn cost_model_from_flops(&self, comm: f64) -> crate::sim::CostModel {
+        let f: Vec<f64> = self
+            .stages
+            .iter()
+            .map(|s| s.fwd.flops.unwrap_or(1.0))
+            .collect();
+        let scale = 1.0 / (f.iter().sum::<f64>() / f.len() as f64).max(1.0);
+        let get = |sel: fn(&StageInfo) -> &Artifact| -> Vec<f64> {
+            self.stages
+                .iter()
+                .map(|s| sel(s).flops.unwrap_or(1.0) * scale)
+                .collect()
+        };
+        crate::sim::CostModel {
+            fwd: get(|s| &s.fwd),
+            p1: get(|s| &s.bwd_p1),
+            p2: get(|s| &s.bwd_p2),
+            opt: get(|s| &s.opt),
+            loss: self.loss.flops.unwrap_or(0.0) * scale,
+            comm,
+            comm_inter_node: 0.0,
+            ranks_per_node: usize::MAX,
+            concat_factor: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": "t", "arch": "transformer", "stages": 1, "microbatch": 2,
+      "samples_per_microbatch": 2, "n_microbatches_concat": 4,
+      "optimizer": "adam", "lr": 0.001,
+      "stage": [{
+        "index": 0,
+        "params": [{"name": "w", "shape": [4, 4], "dtype": "float32", "bytes": 64}],
+        "input": {"shape": [2, 8], "dtype": "int32", "bytes": 64},
+        "output": {"shape": [2, 8, 4], "dtype": "float32", "bytes": 256},
+        "gx": {"shape": [2, 8], "dtype": "float32", "bytes": 64},
+        "res1": [], "res2": [{"shape": [2, 8], "dtype": "int32", "bytes": 64}],
+        "inter": [{"shape": [2, 8, 4], "dtype": "float32", "bytes": 256}],
+        "res2_batch": [true], "inter_batch": [true],
+        "grads": [{"shape": [4, 4], "dtype": "float32", "bytes": 64}],
+        "bytes": {"params": 64, "res1": 0, "res2": 64, "inter": 256,
+                  "grads": 64, "activation": 256},
+        "artifacts": {
+          "init": {"file": "s0_init.hlo.txt", "flops": 10},
+          "fwd": {"file": "s0_fwd.hlo.txt", "flops": 100},
+          "bwd_p1": {"file": "s0_p1.hlo.txt", "flops": 110},
+          "bwd_p2": {"file": "s0_p2.hlo.txt", "flops": 90},
+          "bwd_p2_concat": {"file": "s0_p2c.hlo.txt", "flops": 360},
+          "opt": {"file": "s0_opt.hlo.txt", "flops": 5}
+        }
+      }],
+      "loss": {"file": "loss.hlo.txt", "flops": 7,
+               "logits": {"shape": [2, 8, 4], "dtype": "float32", "bytes": 256},
+               "labels": {"shape": [2, 8], "dtype": "int32", "bytes": 64}}
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let v = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.arch, "transformer");
+        assert_eq!(m.stages.len(), 1);
+        let st = &m.stages[0];
+        assert_eq!(st.param_count(), 16);
+        assert_eq!(st.bytes.res2, 64);
+        assert_eq!(st.fwd.flops, Some(100.0));
+        assert!(st.fwd.file.ends_with("s0_fwd.hlo.txt"));
+        assert_eq!(m.labels.dtype, DType::I32);
+    }
+
+    #[test]
+    fn cost_model_normalizes() {
+        let v = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/x")).unwrap();
+        let cm = m.cost_model_from_flops(0.0);
+        assert!((cm.fwd[0] - 1.0).abs() < 1e-12);
+        assert!((cm.p1[0] - 1.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mem_model_classes() {
+        let v = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/x")).unwrap();
+        let mm = m.mem_model();
+        assert_eq!(mm.static_bytes[0], 64 * 3 + 64);
+        assert_eq!(mm.res2[0], 64);
+        assert_eq!(mm.inter[0], 256);
+    }
+}

@@ -1,0 +1,174 @@
+//! Inter-stage communication: tagged point-to-point channels.
+//!
+//! Simulates NCCL p2p send/recv between adjacent pipeline ranks.  Each
+//! message is tagged with its microbatch id; the receiver can ask for a
+//! specific tag (out-of-order arrivals are parked), and can *poll*
+//! non-blockingly — the primitive the 2BP greedy-p2 fill rule is built
+//! on ("if the next activation/gradient hasn't arrived, do deferred
+//! weight-gradient work instead of idling").
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::HostTensor;
+
+/// A tagged tensor message (one activation or gradient for one mb).
+pub struct Msg {
+    pub mb: u32,
+    pub tensor: HostTensor,
+}
+
+pub struct TaggedTx {
+    tx: Sender<Msg>,
+}
+
+impl TaggedTx {
+    pub fn send(&self, mb: u32, tensor: HostTensor) -> Result<()> {
+        self.tx
+            .send(Msg { mb, tensor })
+            .map_err(|_| anyhow!("peer rank hung up"))
+    }
+}
+
+pub struct TaggedRx {
+    rx: Receiver<Msg>,
+    parked: HashMap<u32, HostTensor>,
+}
+
+impl TaggedRx {
+    /// Non-blocking: is the message for `mb` already here?
+    pub fn poll(&mut self, mb: u32) -> bool {
+        if self.parked.contains_key(&mb) {
+            return true;
+        }
+        loop {
+            match self.rx.try_recv() {
+                Ok(m) => {
+                    let hit = m.mb == mb;
+                    self.parked.insert(m.mb, m.tensor);
+                    if hit {
+                        return true;
+                    }
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Blocking receive of the message tagged `mb`.
+    pub fn recv(&mut self, mb: u32) -> Result<HostTensor> {
+        if let Some(t) = self.parked.remove(&mb) {
+            return Ok(t);
+        }
+        loop {
+            let m = self
+                .rx
+                .recv()
+                .map_err(|_| anyhow!("peer rank hung up waiting for mb {mb}"))?;
+            if m.mb == mb {
+                return Ok(m.tensor);
+            }
+            self.parked.insert(m.mb, m.tensor);
+        }
+    }
+
+    /// Take an already-parked message without touching the channel.
+    pub fn take_parked(&mut self, mb: u32) -> Option<HostTensor> {
+        self.parked.remove(&mb)
+    }
+}
+
+/// Create a tagged p2p link.
+pub fn link() -> (TaggedTx, TaggedRx) {
+    let (tx, rx) = channel();
+    (TaggedTx { tx }, TaggedRx { rx, parked: HashMap::new() })
+}
+
+/// The channel endpoints owned by one rank.
+#[derive(Default)]
+pub struct RankLinks {
+    /// Activations arriving from rank-1 (None on rank 0).
+    pub act_in: Option<TaggedRx>,
+    /// Activations leaving to rank+1 (None on the last rank).
+    pub act_out: Option<TaggedTx>,
+    /// Gradients arriving from rank+1 (None on the last rank).
+    pub grad_in: Option<TaggedRx>,
+    /// Gradients leaving to rank-1 (None on rank 0).
+    pub grad_out: Option<TaggedTx>,
+}
+
+/// Wire up a linear pipeline of `n` ranks.
+pub fn pipeline_links(n: usize) -> Vec<RankLinks> {
+    let mut links: Vec<RankLinks> = (0..n).map(|_| RankLinks::default()).collect();
+    for r in 0..n.saturating_sub(1) {
+        let (atx, arx) = link();
+        links[r].act_out = Some(atx);
+        links[r + 1].act_in = Some(arx);
+        let (gtx, grx) = link();
+        links[r + 1].grad_out = Some(gtx);
+        links[r].grad_in = Some(grx);
+    }
+    links
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::DType;
+
+    fn t(v: f32) -> HostTensor {
+        HostTensor::from_f32(&[1], &[v])
+    }
+
+    #[test]
+    fn tagged_out_of_order_delivery() {
+        let (tx, mut rx) = link();
+        tx.send(1, t(1.0)).unwrap();
+        tx.send(0, t(0.0)).unwrap();
+        assert_eq!(rx.recv(0).unwrap().to_f32(), vec![0.0]);
+        assert_eq!(rx.recv(1).unwrap().to_f32(), vec![1.0]);
+    }
+
+    #[test]
+    fn poll_parks_mismatches() {
+        let (tx, mut rx) = link();
+        assert!(!rx.poll(0));
+        tx.send(2, t(2.0)).unwrap();
+        assert!(!rx.poll(0));
+        tx.send(0, t(0.0)).unwrap();
+        assert!(rx.poll(0));
+        assert!(rx.take_parked(2).is_some());
+    }
+
+    #[test]
+    fn pipeline_links_shape() {
+        let links = pipeline_links(3);
+        assert!(links[0].act_in.is_none());
+        assert!(links[0].act_out.is_some());
+        assert!(links[0].grad_in.is_some());
+        assert!(links[0].grad_out.is_none());
+        assert!(links[2].act_in.is_some());
+        assert!(links[2].act_out.is_none());
+        assert!(links[2].grad_in.is_none());
+        assert!(links[2].grad_out.is_some());
+        let _ = DType::F32;
+    }
+
+    #[test]
+    fn cross_thread_transfer() {
+        let (tx, mut rx) = link();
+        let h = std::thread::spawn(move || {
+            for mb in (0..4u32).rev() {
+                tx.send(mb, t(mb as f32)).unwrap();
+            }
+        });
+        for mb in 0..4u32 {
+            assert_eq!(rx.recv(mb).unwrap().to_f32(), vec![mb as f32]);
+        }
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,152 @@
+//! Byte-exact memory accountant — the instrument behind Fig 4 / Fig 5.
+//!
+//! Tracks the live bytes a rank holds in each residency class from the
+//! paper's §4.2 taxonomy:
+//!
+//! * `Static`  — params + grad accumulators + optimizer state
+//! * `Res1`    — activations needed only by backward-p1 (released at p1)
+//! * `Res2`    — activations held across the p1→p2 gap
+//! * `Inter`   — the intermediate derivatives ∂L/∂z produced by p1
+//! * `Wire`    — in-flight activation/gradient buffers (recv'd, logits)
+//!
+//! The invariant (tested): at the end of every training step, all
+//! dynamic classes return to zero — a stash leak means a schedule bug.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    Static,
+    Res1,
+    Res2,
+    Inter,
+    Wire,
+}
+
+const NCLASS: usize = 5;
+
+fn idx(c: Class) -> usize {
+    match c {
+        Class::Static => 0,
+        Class::Res1 => 1,
+        Class::Res2 => 2,
+        Class::Inter => 3,
+        Class::Wire => 4,
+    }
+}
+
+/// Per-rank memory accountant.
+#[derive(Debug, Default, Clone)]
+pub struct MemAccountant {
+    live: [u64; NCLASS],
+    peak_total: u64,
+    peak_by_class: [u64; NCLASS],
+}
+
+impl MemAccountant {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&mut self, class: Class, bytes: u64) {
+        self.live[idx(class)] += bytes;
+        let total = self.total();
+        if total > self.peak_total {
+            self.peak_total = total;
+        }
+        let i = idx(class);
+        if self.live[i] > self.peak_by_class[i] {
+            self.peak_by_class[i] = self.live[i];
+        }
+    }
+
+    pub fn free(&mut self, class: Class, bytes: u64) {
+        let i = idx(class);
+        assert!(
+            self.live[i] >= bytes,
+            "memory accountant underflow: freeing {bytes} from {:?} (live {})",
+            class,
+            self.live[i]
+        );
+        self.live[i] -= bytes;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.live.iter().sum()
+    }
+
+    pub fn live(&self, class: Class) -> u64 {
+        self.live[idx(class)]
+    }
+
+    /// Peak of the summed classes — the paper's per-GPU "peak reserved".
+    pub fn peak(&self) -> u64 {
+        self.peak_total
+    }
+
+    pub fn peak_of(&self, class: Class) -> u64 {
+        self.peak_by_class[idx(class)]
+    }
+
+    /// All dynamic classes must be zero at a step boundary.
+    pub fn assert_step_balanced(&self) {
+        for c in [Class::Res1, Class::Res2, Class::Inter, Class::Wire] {
+            assert_eq!(
+                self.live(c),
+                0,
+                "stash leak at step end in {c:?}: {} bytes",
+                self.live(c)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_peak_across_classes() {
+        let mut m = MemAccountant::new();
+        m.alloc(Class::Static, 100);
+        m.alloc(Class::Res2, 50);
+        m.alloc(Class::Inter, 25);
+        assert_eq!(m.peak(), 175);
+        m.free(Class::Res2, 50);
+        m.free(Class::Inter, 25);
+        assert_eq!(m.peak(), 175);
+        assert_eq!(m.total(), 100);
+    }
+
+    #[test]
+    fn step_balance_check_passes_when_drained() {
+        let mut m = MemAccountant::new();
+        m.alloc(Class::Static, 10);
+        m.alloc(Class::Res1, 5);
+        m.free(Class::Res1, 5);
+        m.assert_step_balanced();
+    }
+
+    #[test]
+    #[should_panic(expected = "stash leak")]
+    fn step_balance_check_catches_leak() {
+        let mut m = MemAccountant::new();
+        m.alloc(Class::Res2, 5);
+        m.assert_step_balanced();
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn double_free_caught() {
+        let mut m = MemAccountant::new();
+        m.alloc(Class::Inter, 5);
+        m.free(Class::Inter, 6);
+    }
+
+    #[test]
+    fn per_class_peaks() {
+        let mut m = MemAccountant::new();
+        m.alloc(Class::Res1, 30);
+        m.free(Class::Res1, 30);
+        m.alloc(Class::Res1, 20);
+        assert_eq!(m.peak_of(Class::Res1), 30);
+    }
+}

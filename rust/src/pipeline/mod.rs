@@ -1,0 +1,17 @@
+//! The real pipeline-parallel executor.
+//!
+//! One OS thread per pipeline rank, each owning its own PJRT device
+//! context and compiled stage executables; activations and gradients
+//! travel between adjacent ranks as [`HostTensor`](crate::runtime::HostTensor)
+//! messages over tagged channels (the NCCL-p2p stand-in).  The executor
+//! interprets [`Plan`](crate::schedule::Plan) ops, realizes the 2BP
+//! greedy-fill rule with non-blocking channel polls, accounts every
+//! stash byte (Fig 4/5), and times every op (calibrating the simulator).
+
+pub mod comm;
+pub mod data;
+pub mod memory;
+pub mod stage;
+pub mod training;
+
+pub use training::{train, Cluster, RunReport};

@@ -1,0 +1,629 @@
+//! Per-rank stage worker: owns one device context, the stage's compiled
+//! executables, parameters/optimizer state, and the activation /
+//! intermediate-derivative stashes.  Interprets plan ops, realizes the
+//! 2BP greedy-fill rule via non-blocking channel polls, and accounts
+//! every byte + times every op.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::P2Mode;
+use crate::models::{Manifest, StageInfo};
+use crate::pipeline::comm::RankLinks;
+use crate::pipeline::data::DataGen;
+use crate::pipeline::memory::{Class, MemAccountant};
+use crate::runtime::{
+    literal_bytes, literal_to_f32_scalar, scalar_f32, scalar_i32,
+    zero_literal, Device, Executable, HostTensor,
+};
+use crate::schedule::{Op, Plan};
+use crate::util::gantt::SpanKind;
+
+/// One timed op on this rank (seconds relative to the shared epoch).
+#[derive(Debug, Clone, Copy)]
+pub struct OpTiming {
+    pub kind: SpanKind,
+    pub mb: u32,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// What a worker hands back to the leader after a run.
+#[derive(Debug)]
+pub struct WorkerReport {
+    pub rank: usize,
+    pub timings: Vec<OpTiming>,
+    pub peak_bytes: u64,
+    pub peak_static: u64,
+    pub peak_res1: u64,
+    pub peak_res2: u64,
+    pub peak_inter: u64,
+    /// Mean measured seconds per op kind: (fwd, p1, p2, opt).
+    pub mean_costs: (f64, f64, f64, f64),
+    /// Losses in microbatch order per step (last rank only).
+    pub losses: Vec<f32>,
+    /// Sum of |params| after the run (determinism / equivalence checks).
+    pub param_checksum: f64,
+}
+
+struct MbStash {
+    res1: Option<Vec<xla::Literal>>,
+    res2: Option<Vec<xla::Literal>>,
+    inter: Option<Vec<xla::Literal>>,
+    logits: Option<xla::Literal>,
+    /// Input-grad held until the fused-pair send point (non-2BP mode).
+    gx: Option<HostTensor>,
+}
+
+impl MbStash {
+    fn empty() -> Self {
+        MbStash { res1: None, res2: None, inter: None, logits: None, gx: None }
+    }
+}
+
+pub struct StageWorker {
+    rank: usize,
+    n_ranks: usize,
+    info: StageInfo,
+    vocab: i32,
+    concat_m: usize,
+    p2_mode: P2Mode,
+    greedy: bool,
+    two_bp: bool,
+
+    exe_init: Executable,
+    exe_fwd: Executable,
+    exe_p1: Executable,
+    exe_p2: Executable,
+    exe_p2_concat: Executable,
+    exe_opt: Executable,
+    exe_loss: Option<Executable>,
+
+    params: Vec<xla::Literal>,
+    m_state: Vec<xla::Literal>,
+    v_state: Vec<xla::Literal>,
+    grads: Vec<xla::Literal>,
+    grads_fresh: bool,
+    step_t: f32,
+
+    stash: HashMap<u32, MbStash>,
+    pending_p2: Vec<u32>,
+
+    links: RankLinks,
+    data: DataGen,
+    labels_spec: crate::models::TensorSpec,
+    step: usize,
+
+    pub mem: MemAccountant,
+    pub timings: Vec<OpTiming>,
+    pub losses: Vec<f32>,
+    epoch: Instant,
+}
+
+impl StageWorker {
+    /// Build a worker: create the device, compile this stage's artifacts,
+    /// initialize parameters + optimizer state on-device.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rank: usize,
+        manifest: &Manifest,
+        plan: &Plan,
+        p2_mode: P2Mode,
+        links: RankLinks,
+        seed: u64,
+        data_cycle: usize,
+        epoch: Instant,
+    ) -> Result<StageWorker> {
+        let info = manifest.stages[rank].clone();
+        let device = Device::cpu().context("creating device")?;
+        let exe_init = device.load(&info.init.file)?;
+        let exe_fwd = device.load(&info.fwd.file)?;
+        let exe_p1 = device.load(&info.bwd_p1.file)?;
+        let exe_p2 = device.load(&info.bwd_p2.file)?;
+        let exe_p2_concat = device.load(&info.bwd_p2_concat.file)?;
+        let exe_opt = device.load(&info.opt.file)?;
+        let exe_loss = if rank == manifest.n_stages - 1 {
+            Some(device.load(&manifest.loss.file)?)
+        } else {
+            None
+        };
+
+        let params = exe_init.run(&[scalar_i32(seed as i32)])?;
+        if params.len() != info.params.len() {
+            bail!(
+                "stage {rank}: init produced {} params, manifest says {}",
+                params.len(),
+                info.params.len()
+            );
+        }
+        let zeros_like = |specs: &[crate::models::TensorSpec]| -> Vec<xla::Literal> {
+            specs.iter().map(|s| zero_literal(&s.shape, s.dtype)).collect()
+        };
+        let m_state = zeros_like(&info.params);
+        let v_state = zeros_like(&info.params);
+        let grads = zeros_like(&info.grads);
+
+        let vocab = *manifest.logits.shape.last().unwrap_or(&2) as i32;
+
+        Ok(StageWorker {
+            rank,
+            n_ranks: manifest.n_stages,
+            info,
+            vocab,
+            concat_m: manifest.concat_m,
+            p2_mode,
+            greedy: plan.greedy_p2,
+            two_bp: plan.two_bp,
+            exe_init,
+            exe_fwd,
+            exe_p1,
+            exe_p2,
+            exe_p2_concat,
+            exe_opt,
+            exe_loss,
+            params,
+            m_state,
+            v_state,
+            grads,
+            grads_fresh: true,
+            step_t: 1.0,
+            stash: HashMap::new(),
+            pending_p2: Vec::new(),
+            links,
+            data: DataGen::with_cycle(seed, data_cycle),
+            labels_spec: manifest.labels.clone(),
+            step: 0,
+            mem: MemAccountant::new(),
+            timings: Vec::new(),
+            losses: Vec::new(),
+            epoch,
+        })
+        .map(|mut w| {
+            w.mem.alloc(Class::Static,
+                        w.info.bytes.params * 3 + w.info.bytes.grads);
+            w
+        })
+    }
+
+    /// Re-arm the worker for a fresh run: new params (same seed), zeroed
+    /// optimizer/grad state, cleared stashes/measurements, and a new
+    /// schedule mode.  Compiled executables are reused — this is what
+    /// makes multi-cell benchmarks affordable (compilation dominates).
+    pub fn reset(
+        &mut self,
+        seed: u64,
+        greedy: bool,
+        two_bp: bool,
+        p2_mode: P2Mode,
+        data_cycle: usize,
+    ) -> Result<()> {
+        self.params = self.exe_init.run(&[scalar_i32(seed as i32)])?;
+        let zeros = |specs: &[crate::models::TensorSpec]| -> Vec<xla::Literal> {
+            specs.iter().map(|s| zero_literal(&s.shape, s.dtype)).collect()
+        };
+        self.m_state = zeros(&self.info.params);
+        self.v_state = zeros(&self.info.params);
+        self.grads = zeros(&self.info.grads);
+        self.grads_fresh = true;
+        self.step_t = 1.0;
+        self.stash.clear();
+        self.pending_p2.clear();
+        self.data = DataGen::with_cycle(seed, data_cycle);
+        self.step = 0;
+        self.greedy = greedy;
+        self.two_bp = two_bp;
+        self.p2_mode = p2_mode;
+        self.mem = MemAccountant::new();
+        self.mem.alloc(Class::Static,
+                       self.info.bytes.params * 3 + self.info.bytes.grads);
+        self.timings.clear();
+        self.losses.clear();
+        Ok(())
+    }
+
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn record(&mut self, kind: SpanKind, mb: u32, start: f64) {
+        self.timings.push(OpTiming { kind, mb, start, end: self.now() });
+    }
+
+    // -- greedy-aware receive ------------------------------------------------
+
+    /// Blocking receive with the paper's 2BP fill rule: while the wanted
+    /// message hasn't arrived, run one pending backward-p2 instead of
+    /// idling; fall back to a plain blocking receive when no p2 is left.
+    fn recv_or_fill(&mut self, grad_side: bool, mb: u32) -> Result<HostTensor> {
+        loop {
+            let ready = {
+                let rx = if grad_side {
+                    self.links.grad_in.as_mut()
+                } else {
+                    self.links.act_in.as_mut()
+                }
+                .ok_or_else(|| anyhow!("rank {} has no link", self.rank))?;
+                rx.poll(mb)
+            };
+            if ready {
+                let rx = if grad_side {
+                    self.links.grad_in.as_mut()
+                } else {
+                    self.links.act_in.as_mut()
+                }
+                .unwrap();
+                return rx.recv(mb);
+            }
+            if self.greedy && !self.pending_p2.is_empty() {
+                let next = self.pending_p2[0];
+                self.run_p2_loop(&[next])?;
+            } else {
+                let rx = if grad_side {
+                    self.links.grad_in.as_mut()
+                } else {
+                    self.links.act_in.as_mut()
+                }
+                .unwrap();
+                return rx.recv(mb);
+            }
+        }
+    }
+
+    // -- op execution ---------------------------------------------------------
+
+    pub fn exec(&mut self, op: &Op) -> Result<()> {
+        match op.clone() {
+            Op::Fwd { mb } => self.op_fwd(mb),
+            Op::BwdP1 { mb } => self.op_bwd_p1(mb),
+            Op::BwdP2 { mbs, concat } => self.op_bwd_p2(&mbs, concat),
+            Op::Flush { upto, concat } => self.op_flush(upto, concat),
+            Op::OptStep => self.op_opt(),
+        }
+    }
+
+    /// Run one full training step following `ops`.
+    pub fn run_step(&mut self, ops: &[Op]) -> Result<()> {
+        for op in ops {
+            self.exec(op)
+                .with_context(|| format!("rank {} step {} op {:?}",
+                                         self.rank, self.step, op))?;
+        }
+        self.mem.assert_step_balanced();
+        if !self.stash.is_empty() {
+            bail!("rank {}: stash not empty at step end", self.rank);
+        }
+        if !self.pending_p2.is_empty() {
+            bail!("rank {}: pending p2 at step end", self.rank);
+        }
+        self.step += 1;
+        Ok(())
+    }
+
+    fn op_fwd(&mut self, mb: u32) -> Result<()> {
+        // obtain input
+        let x_host = if self.rank == 0 {
+            self.data.input(&self.info.input, self.vocab, self.step, mb)
+        } else {
+            let t = self.recv_or_fill(false, mb)?;
+            self.mem.alloc(Class::Wire, t.bytes());
+            t
+        };
+        let start = self.now();
+        let x = x_host.to_literal()?;
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&x);
+        let outs = self.exe_fwd.run(&args)?;
+        let n1 = self.info.res1.len();
+        let n2 = self.info.res2.len();
+        if outs.len() != 1 + n1 + n2 {
+            bail!("fwd output arity {} != {}", outs.len(), 1 + n1 + n2);
+        }
+        let mut it = outs.into_iter();
+        let y = it.next().unwrap();
+        let res1: Vec<_> = (&mut it).take(n1).collect();
+        let res2: Vec<_> = it.collect();
+
+        self.mem.alloc(Class::Res1, self.info.bytes.res1);
+        self.mem.alloc(Class::Res2, self.info.bytes.res2);
+        if self.rank > 0 {
+            self.mem.free(Class::Wire, x_host.bytes());
+        }
+
+        let entry = self.stash.entry(mb).or_insert_with(MbStash::empty);
+        entry.res1 = Some(res1);
+        entry.res2 = Some(res2);
+
+        if self.rank + 1 < self.n_ranks {
+            let y_host = HostTensor::from_literal(&y)?;
+            self.links
+                .act_out
+                .as_ref()
+                .ok_or_else(|| anyhow!("missing act_out"))?
+                .send(mb, y_host)?;
+        } else {
+            self.mem.alloc(Class::Wire, literal_bytes(&y));
+            entry.logits = Some(y);
+        }
+        self.record(SpanKind::Fwd, mb, start);
+        Ok(())
+    }
+
+    fn op_bwd_p1(&mut self, mb: u32) -> Result<()> {
+        // obtain the output-gradient
+        let (gy, gy_wire_bytes, start) = if self.rank == self.n_ranks - 1 {
+            let logits = self
+                .stash
+                .get_mut(&mb)
+                .and_then(|s| s.logits.take())
+                .ok_or_else(|| anyhow!("no logits stashed for mb {mb}"))?;
+            let start = self.now();
+            let labels = self
+                .data
+                .labels(&self.labels_spec, self.vocab, self.step, mb)
+                .to_literal()?;
+            let outs = self
+                .exe_loss
+                .as_ref()
+                .unwrap()
+                .run(&[&logits, &labels])?;
+            let loss = literal_to_f32_scalar(&outs[0])?;
+            self.losses.push(loss);
+            let lb = literal_bytes(&logits);
+            self.mem.free(Class::Wire, lb);
+            (outs.into_iter().nth(1).unwrap(), 0u64, start)
+        } else {
+            let t = self.recv_or_fill(true, mb)?;
+            let b = t.bytes();
+            self.mem.alloc(Class::Wire, b);
+            let start = self.now();
+            (t.to_literal()?, b, start)
+        };
+
+        let (res1, res2) = {
+            let entry = self
+                .stash
+                .get_mut(&mb)
+                .ok_or_else(|| anyhow!("no stash for mb {mb}"))?;
+            (
+                entry.res1.take().ok_or_else(|| anyhow!("res1 missing"))?,
+                entry.res2.take().ok_or_else(|| anyhow!("res2 missing"))?,
+            )
+        };
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.extend(res1.iter());
+        args.extend(res2.iter());
+        args.push(&gy);
+        let outs = self.exe_p1.run(&args)?;
+        let ni = self.info.inter.len();
+        if outs.len() != 1 + ni {
+            bail!("bwd_p1 output arity {} != {}", outs.len(), 1 + ni);
+        }
+        let mut it = outs.into_iter();
+        let gx = it.next().unwrap();
+        let inter: Vec<_> = it.collect();
+
+        drop(res1);
+        self.mem.free(Class::Res1, self.info.bytes.res1);
+        self.mem.alloc(Class::Inter, self.info.bytes.inter);
+        if gy_wire_bytes > 0 {
+            self.mem.free(Class::Wire, gy_wire_bytes);
+        }
+
+        let entry = self.stash.get_mut(&mb).unwrap();
+        entry.res2 = Some(res2);
+        entry.inter = Some(inter);
+        self.pending_p2.push(mb);
+
+        if self.rank > 0 {
+            let gx_host = HostTensor::from_literal(&gx)?;
+            if self.two_bp {
+                // 2BP: the input-grad leaves immediately after p1
+                self.links.grad_out.as_ref().unwrap().send(mb, gx_host)?;
+            } else {
+                // fused autograd semantics: hold until the paired p2 ran
+                self.mem.alloc(Class::Wire, gx_host.bytes());
+                entry.gx = Some(gx_host);
+            }
+        }
+        self.record(SpanKind::BwdP1, mb, start);
+        Ok(())
+    }
+
+    /// Loop-mode p2 for the given microbatches (accumulating executable).
+    fn run_p2_loop(&mut self, mbs: &[u32]) -> Result<()> {
+        for &mb in mbs {
+            let start = self.now();
+            let (res2, inter) = {
+                let entry = self
+                    .stash
+                    .get_mut(&mb)
+                    .ok_or_else(|| anyhow!("no stash for p2 of mb {mb}"))?;
+                (
+                    entry.res2.take().ok_or_else(|| anyhow!("res2 gone"))?,
+                    entry.inter.take().ok_or_else(|| anyhow!("inter gone"))?,
+                )
+            };
+            let mut args: Vec<&xla::Literal> = Vec::new();
+            args.extend(res2.iter());
+            args.extend(inter.iter());
+            args.extend(self.grads.iter());
+            let outs = self.exe_p2.run(&args)?;
+            if outs.len() != self.grads.len() {
+                bail!("bwd_p2 arity {} != {}", outs.len(), self.grads.len());
+            }
+            self.grads = outs;
+            self.grads_fresh = false;
+            self.mem.free(Class::Res2, self.info.bytes.res2);
+            self.mem.free(Class::Inter, self.info.bytes.inter);
+            self.pending_p2.retain(|x| *x != mb);
+            self.finish_mb(mb)?;
+            self.record(SpanKind::BwdP2, mb, start);
+        }
+        Ok(())
+    }
+
+    /// Concat-mode p2 over exactly `concat_m` microbatches (Fig 2).
+    fn run_p2_concat(&mut self, mbs: &[u32]) -> Result<()> {
+        let start = self.now();
+        let mut groups: Vec<(Vec<xla::Literal>, Vec<xla::Literal>)> = Vec::new();
+        for &mb in mbs {
+            let entry = self
+                .stash
+                .get_mut(&mb)
+                .ok_or_else(|| anyhow!("no stash for concat p2 of mb {mb}"))?;
+            groups.push((
+                entry.res2.take().ok_or_else(|| anyhow!("res2 gone"))?,
+                entry.inter.take().ok_or_else(|| anyhow!("inter gone"))?,
+            ));
+        }
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        for (res2, inter) in &groups {
+            args.extend(res2.iter());
+            args.extend(inter.iter());
+        }
+        let outs = self.exe_p2_concat.run(&args)?;
+        if outs.len() != self.grads.len() {
+            bail!("bwd_p2_concat arity {} != {}", outs.len(), self.grads.len());
+        }
+        // concat covers the whole step's p2 — valid only on fresh grads
+        self.grads = outs;
+        self.grads_fresh = false;
+        for &mb in mbs {
+            self.mem.free(Class::Res2, self.info.bytes.res2);
+            self.mem.free(Class::Inter, self.info.bytes.inter);
+            self.pending_p2.retain(|x| *x != mb);
+            self.finish_mb(mb)?;
+        }
+        self.record(SpanKind::BwdP2, mbs[0], start);
+        Ok(())
+    }
+
+    /// Per-mb cleanup after its p2: fused-mode grad send + stash removal.
+    fn finish_mb(&mut self, mb: u32) -> Result<()> {
+        let entry = self.stash.get_mut(&mb).unwrap();
+        if let Some(gx_host) = entry.gx.take() {
+            self.mem.free(Class::Wire, gx_host.bytes());
+            self.links
+                .grad_out
+                .as_ref()
+                .ok_or_else(|| anyhow!("missing grad_out"))?
+                .send(mb, gx_host)?;
+        }
+        if entry.res1.is_none()
+            && entry.res2.is_none()
+            && entry.inter.is_none()
+            && entry.logits.is_none()
+        {
+            self.stash.remove(&mb);
+        }
+        Ok(())
+    }
+
+    fn op_bwd_p2(&mut self, mbs: &[u32], concat: bool) -> Result<()> {
+        if concat && mbs.len() == self.concat_m && self.grads_fresh {
+            self.run_p2_concat(mbs)
+        } else {
+            self.run_p2_loop(mbs)
+        }
+    }
+
+    fn op_flush(&mut self, upto: Option<u32>, concat: bool) -> Result<()> {
+        let mut mbs: Vec<u32> = self
+            .pending_p2
+            .iter()
+            .copied()
+            .filter(|mb| upto.map(|u| *mb <= u).unwrap_or(true))
+            .collect();
+        mbs.sort_unstable();
+        if mbs.is_empty() {
+            return Ok(());
+        }
+        let use_concat = (concat || self.p2_mode == P2Mode::Concat)
+            && mbs.len() == self.concat_m
+            && self.grads_fresh;
+        if use_concat {
+            self.run_p2_concat(&mbs)
+        } else {
+            self.run_p2_loop(&mbs)
+        }
+    }
+
+    fn op_opt(&mut self) -> Result<()> {
+        let start = self.now();
+        let t = scalar_f32(self.step_t);
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(self.params.iter());
+        args.extend(self.grads.iter());
+        args.extend(self.m_state.iter());
+        args.extend(self.v_state.iter());
+        args.push(&t);
+        let outs = self.exe_opt.run(&args)?;
+        let np = self.params.len();
+        if outs.len() != 3 * np {
+            bail!("opt arity {} != {}", outs.len(), 3 * np);
+        }
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(np).collect();
+        self.m_state = (&mut it).take(np).collect();
+        self.v_state = it.collect();
+        // reset gradient accumulators (zero-filled, no host staging)
+        self.grads = self
+            .info
+            .grads
+            .iter()
+            .map(|s| zero_literal(&s.shape, s.dtype))
+            .collect();
+        self.grads_fresh = true;
+        self.step_t += 1.0;
+        self.record(SpanKind::Opt, 0, start);
+        Ok(())
+    }
+
+    /// Build the final report (consumes accumulated measurements).
+    pub fn report(&mut self) -> Result<WorkerReport> {
+        let timings = std::mem::take(&mut self.timings);
+        let mean = {
+            let timings = &timings;
+            move |kind: SpanKind| -> f64 {
+                let xs: Vec<f64> = timings
+                    .iter()
+                    .filter(|t| t.kind == kind)
+                    .map(|t| t.end - t.start)
+                    .collect();
+                if xs.is_empty() {
+                    0.0
+                } else {
+                    xs.iter().sum::<f64>() / xs.len() as f64
+                }
+            }
+        };
+        let mean_costs = (
+            mean(SpanKind::Fwd),
+            mean(SpanKind::BwdP1),
+            mean(SpanKind::BwdP2),
+            mean(SpanKind::Opt),
+        );
+        let mut checksum = 0.0f64;
+        for p in &self.params {
+            let h = HostTensor::from_literal(p)?;
+            if h.dtype == crate::models::DType::F32 {
+                checksum += h.to_f32().iter().map(|v| v.abs() as f64).sum::<f64>();
+            }
+        }
+        Ok(WorkerReport {
+            rank: self.rank,
+            timings,
+            peak_bytes: self.mem.peak(),
+            peak_static: self.mem.peak_of(Class::Static),
+            peak_res1: self.mem.peak_of(Class::Res1),
+            peak_res2: self.mem.peak_of(Class::Res2),
+            peak_inter: self.mem.peak_of(Class::Inter),
+            mean_costs,
+            losses: std::mem::take(&mut self.losses),
+            param_checksum: checksum,
+        })
+    }
+}
+

@@ -1,0 +1,332 @@
+//! Training orchestration.
+//!
+//! A [`Cluster`] spawns one worker thread per pipeline rank.  Workers
+//! compile their stage executables **once** and then serve any number of
+//! runs (different schedules, ±2BP, loop/concat p2) — compilation
+//! dominates end-to-end time on this host, so the Fig 3/4 benchmarks
+//! (32 cells) would be infeasible without executable reuse.  Between
+//! runs each worker re-inits parameters from the seed, so every cell
+//! sees an identical model + data stream (what makes the cross-schedule
+//! equivalence checks meaningful).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{P2Mode, RunConfig};
+use crate::models::Manifest;
+use crate::pipeline::comm::pipeline_links;
+use crate::pipeline::stage::{StageWorker, WorkerReport};
+use crate::schedule::{generate, validate::validate, Op, Plan, ScheduleKind};
+use crate::sim::CostModel;
+use crate::util::gantt::Span;
+
+/// Everything measured during a run.
+#[derive(Debug)]
+pub struct RunReport {
+    pub plan: Plan,
+    pub preset: String,
+    /// Mean loss per step (averaged over microbatches; last rank).
+    pub losses: Vec<f32>,
+    /// Wall seconds per step (serialized on this 1-core host — see
+    /// DESIGN.md §3; use `measured_costs` + the simulator for pipeline
+    /// wall-clock).
+    pub step_times: Vec<f64>,
+    pub reports: Vec<WorkerReport>,
+    pub samples_per_step: usize,
+}
+
+impl RunReport {
+    /// Per-rank measured mean op costs, as a simulator CostModel.
+    pub fn measured_costs(&self) -> CostModel {
+        let n = self.reports.len();
+        let pick = |f: fn(&WorkerReport) -> f64| -> Vec<f64> {
+            (0..n)
+                .map(|r| {
+                    f(self
+                        .reports
+                        .iter()
+                        .find(|w| w.rank == r)
+                        .expect("missing rank report"))
+                })
+                .collect()
+        };
+        CostModel {
+            fwd: pick(|w| w.mean_costs.0),
+            p1: pick(|w| w.mean_costs.1),
+            p2: pick(|w| w.mean_costs.2),
+            opt: pick(|w| w.mean_costs.3),
+            loss: 0.0, // folded into the last rank's p1 timing
+            comm: 0.0,
+            comm_inter_node: 0.0,
+            ranks_per_node: usize::MAX,
+            concat_factor: 1.0,
+        }
+    }
+
+    /// Peak bytes per rank (the Fig 4 metric).
+    pub fn peak_bytes(&self) -> Vec<u64> {
+        let mut v = vec![0u64; self.reports.len()];
+        for w in &self.reports {
+            v[w.rank] = w.peak_bytes;
+        }
+        v
+    }
+
+    pub fn max_peak(&self) -> u64 {
+        self.peak_bytes().into_iter().max().unwrap_or(0)
+    }
+
+    /// Throughput from measured per-op costs replayed through the
+    /// simulator (the calibrated pipeline wall-clock; samples/sec).
+    pub fn simulated_throughput(&self) -> Result<f64> {
+        let costs = self.measured_costs();
+        let res = crate::sim::simulate(&self.plan, &costs, None)
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok(self.samples_per_step as f64 / res.makespan)
+    }
+
+    /// Real spans of the measured steps (for gantt rendering).
+    pub fn spans(&self) -> Vec<Vec<Span>> {
+        let mut out = vec![Vec::new(); self.reports.len()];
+        for w in &self.reports {
+            out[w.rank] = w
+                .timings
+                .iter()
+                .map(|t| Span {
+                    start: t.start,
+                    end: t.end,
+                    label: t.kind,
+                    mb: t.mb,
+                })
+                .collect();
+        }
+        out
+    }
+
+    /// Sum of per-rank parameter checksums (equivalence testing).
+    pub fn param_checksum(&self) -> f64 {
+        self.reports.iter().map(|w| w.param_checksum).sum()
+    }
+
+    pub fn mean_step_time(&self) -> f64 {
+        if self.step_times.is_empty() {
+            0.0
+        } else {
+            self.step_times.iter().sum::<f64>() / self.step_times.len() as f64
+        }
+    }
+}
+
+enum Cmd {
+    Run {
+        ops: Vec<Op>,
+        steps: usize,
+        greedy: bool,
+        two_bp: bool,
+        p2_mode: P2Mode,
+        seed: u64,
+        data_cycle: usize,
+    },
+    Shutdown,
+}
+
+/// A persistent set of stage workers for one preset.  Compiles all
+/// artifacts once; serves many runs.
+pub struct Cluster {
+    manifest: Manifest,
+    cmd_txs: Vec<Sender<Cmd>>,
+    rep_rx: Receiver<(usize, WorkerReport)>,
+    done_rx: Receiver<(usize, usize)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Cluster {
+    /// Spawn workers and compile every stage's executables.
+    pub fn new(cfg: &RunConfig) -> Result<Cluster> {
+        let manifest = Manifest::load(&cfg.artifacts, &cfg.preset)
+            .with_context(|| format!("loading preset {}", cfg.preset))?;
+        let n = manifest.n_stages;
+        let links = pipeline_links(n);
+        let epoch = Instant::now();
+        let (rep_tx, rep_rx) = channel::<(usize, WorkerReport)>();
+        let (done_tx, done_rx) = channel::<(usize, usize)>();
+        let (ready_tx, ready_rx) =
+            channel::<core::result::Result<(), String>>();
+
+        // workers start with a neutral plan; real mode comes per-command
+        let init_plan = generate(ScheduleKind::GPipe, true, n, n, false);
+        let mut cmd_txs = Vec::new();
+        let mut handles = Vec::new();
+        for (rank, rank_links) in links.into_iter().enumerate() {
+            let manifest_cl = manifest.clone();
+            let plan_cl = init_plan.clone();
+            let (cmd_tx, cmd_rx) = channel::<Cmd>();
+            cmd_txs.push(cmd_tx);
+            let rep_tx = rep_tx.clone();
+            let done_tx = done_tx.clone();
+            let ready_tx = ready_tx.clone();
+            let seed = cfg.seed;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("stage-{rank}"))
+                    .spawn(move || {
+                        let mut w = match StageWorker::new(
+                            rank, &manifest_cl, &plan_cl, P2Mode::Loop,
+                            rank_links, seed, 0, epoch,
+                        ) {
+                            Ok(w) => {
+                                let _ = ready_tx.send(Ok(()));
+                                w
+                            }
+                            Err(e) => {
+                                let _ = ready_tx
+                                    .send(Err(format!("stage {rank}: {e:#}")));
+                                return;
+                            }
+                        };
+                        while let Ok(cmd) = cmd_rx.recv() {
+                            match cmd {
+                                Cmd::Shutdown => break,
+                                Cmd::Run {
+                                    ops, steps, greedy, two_bp, p2_mode,
+                                    seed, data_cycle,
+                                } => {
+                                    // errors poison the pipeline loudly:
+                                    // the dying thread drops its links, so
+                                    // peers unblock via channel hangup
+                                    if let Err(e) = w.reset(
+                                        seed, greedy, two_bp, p2_mode,
+                                        data_cycle,
+                                    ) {
+                                        panic!("stage {rank} reset: {e:#}");
+                                    }
+                                    for s in 0..steps {
+                                        if let Err(e) = w.run_step(&ops) {
+                                            panic!("stage {rank}: {e:#}");
+                                        }
+                                        let _ = done_tx.send((rank, s));
+                                    }
+                                    match w.report() {
+                                        Ok(r) => {
+                                            let _ = rep_tx.send((rank, r));
+                                        }
+                                        Err(e) => panic!(
+                                            "stage {rank} report: {e:#}"
+                                        ),
+                                    }
+                                }
+                            }
+                        }
+                    })
+                    .context("spawning stage thread")?,
+            );
+        }
+        for _ in 0..n {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("worker died during startup"))?
+                .map_err(|e| anyhow!(e))?;
+        }
+        Ok(Cluster { manifest, cmd_txs, rep_rx, done_rx, handles })
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.manifest.n_stages
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute one run (a full schedule for `cfg.steps` training steps).
+    pub fn run(&self, cfg: &RunConfig) -> Result<RunReport> {
+        let n = self.manifest.n_stages;
+        let m = cfg.microbatches(n);
+        let plan = generate(cfg.schedule, cfg.two_bp, n, m,
+                            cfg.p2_mode == P2Mode::Concat);
+        validate(&plan).map_err(|e| anyhow!("invalid plan: {e}"))?;
+
+        for (rank, tx) in self.cmd_txs.iter().enumerate() {
+            tx.send(Cmd::Run {
+                ops: plan.ranks[rank].clone(),
+                steps: cfg.steps,
+                greedy: plan.greedy_p2,
+                two_bp: plan.two_bp,
+                p2_mode: cfg.p2_mode,
+                seed: cfg.seed,
+                data_cycle: cfg.data_cycle,
+            })
+            .map_err(|_| anyhow!("stage {rank} is gone"))?;
+        }
+
+        // step s completes when all n ranks reported it
+        let mut step_times = Vec::with_capacity(cfg.steps);
+        let mut completed = vec![0usize; cfg.steps];
+        let mut t0 = Instant::now();
+        let mut next_step = 0usize;
+        while next_step < cfg.steps {
+            let (_rank, s) = self
+                .done_rx
+                .recv()
+                .map_err(|_| anyhow!("workers died mid-run"))?;
+            completed[s] += 1;
+            while next_step < cfg.steps && completed[next_step] == n {
+                let dt = t0.elapsed().as_secs_f64();
+                step_times.push(dt);
+                if cfg.verbose {
+                    eprintln!("step {next_step}: {:.3}s", dt);
+                }
+                t0 = Instant::now();
+                next_step += 1;
+            }
+        }
+
+        let mut reports: Vec<WorkerReport> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (_, r) = self
+                .rep_rx
+                .recv()
+                .map_err(|_| anyhow!("workers died before reporting"))?;
+            reports.push(r);
+        }
+        reports.sort_by_key(|w| w.rank);
+
+        let last = reports
+            .iter()
+            .find(|w| w.rank == n - 1)
+            .ok_or_else(|| anyhow!("missing last-rank report"))?;
+        let losses: Vec<f32> = last
+            .losses
+            .chunks(m)
+            .map(|c| c.iter().sum::<f32>() / c.len() as f32)
+            .collect();
+
+        Ok(RunReport {
+            plan,
+            preset: cfg.preset.clone(),
+            losses,
+            step_times,
+            reports,
+            samples_per_step: self.manifest.samples_per_microbatch * m,
+        })
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One-shot convenience: build a cluster, run once.
+pub fn train(cfg: &RunConfig) -> Result<RunReport> {
+    let cluster = Cluster::new(cfg)?;
+    cluster.run(cfg)
+}

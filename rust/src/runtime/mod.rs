@@ -1,0 +1,285 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Each pipeline stage worker owns one [`Device`] (its own
+//! `PjRtClient`, mirroring one device context per accelerator — the
+//! `xla` crate's client is `Rc`-based and single-threaded by design).
+//! Tensors cross thread boundaries only as [`HostTensor`] byte buffers
+//! (the NCCL-p2p stand-in; see DESIGN.md §3).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::models::DType;
+
+/// One accelerator stand-in: a PJRT CPU client.
+pub struct Device {
+    client: xla::PjRtClient,
+}
+
+impl Device {
+    pub fn cpu() -> Result<Device> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Device { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload a host literal to this device.
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("uploading literal: {e:?}"))
+    }
+
+    /// Load an HLO-text artifact and compile it for this device.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled stage function.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flat list of outputs
+    /// (the AOT path lowers with `return_tuple=True`, so PJRT hands back
+    /// one tuple literal which we decompose).  Accepts owned literals or
+    /// references (`&[Literal]` / `&[&Literal]`).
+    ///
+    /// Implementation note: this goes through `execute_b` with buffers
+    /// *we* own — the vendored crate's literal-taking `execute` leaks
+    /// every input buffer it uploads (`buffer.release()` with no
+    /// matching free), which shows up as ~10 MB/s of growth in a tiny
+    /// training loop.  Owning the uploads means they drop (and free)
+    /// here.  The borrowed literals outlive the synchronous execution,
+    /// so the host-to-device transfer always completes in time.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let client = self.exe.client();
+        let uploaded: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| {
+                client
+                    .buffer_from_host_literal(None, l.borrow())
+                    .map_err(|e| anyhow!("{}: uploading input: {e:?}", self.name))
+            })
+            .collect::<Result<_>>()?;
+        let out = self.run_buffers(&uploaded)?;
+        self.download(out)
+    }
+
+    /// Execute with device-resident inputs, keeping outputs on device.
+    /// The fast path for state that survives across ops (parameters,
+    /// optimizer slots, stashed residuals).
+    pub fn run_buffers<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        args: &[B],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut replicas = self
+            .exe
+            .execute_b::<B>(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let replica = replicas
+            .drain(..)
+            .next()
+            .ok_or_else(|| anyhow!("{}: no output replica", self.name))?;
+        Ok(replica)
+    }
+
+    /// Fetch device outputs to host literals, decomposing the
+    /// `return_tuple=True` wrapper if present.
+    pub fn download(&self, bufs: Vec<xla::PjRtBuffer>) -> Result<Vec<xla::Literal>> {
+        let first = bufs
+            .first()
+            .ok_or_else(|| anyhow!("{}: no output buffer", self.name))?;
+        let mut result = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: fetching output: {e:?}", self.name))?;
+        let shape = result
+            .shape()
+            .map_err(|e| anyhow!("{}: output shape: {e:?}", self.name))?;
+        match shape {
+            xla::Shape::Tuple(_) => result
+                .decompose_tuple()
+                .map_err(|e| anyhow!("{}: decomposing tuple: {e:?}", self.name)),
+            _ => {
+                drop(result);
+                bufs.iter()
+                    .map(|b| {
+                        b.to_literal_sync()
+                            .map_err(|e| anyhow!("{}: fetching: {e:?}", self.name))
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Host-side tensor: the inter-stage wire format and stash storage.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    pub fn zeros(shape: &[usize], dtype: DType) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor {
+            shape: shape.to_vec(),
+            dtype,
+            data: vec![0u8; n * dtype.itemsize()],
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], vals: &[f32]) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        // bulk reinterpret (little-endian host): one memcpy, not a
+        // per-element loop (§Perf)
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                vals.as_ptr() as *const u8,
+                std::mem::size_of_val(vals),
+            )
+        };
+        HostTensor {
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+            data: bytes.to_vec(),
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], vals: &[i32]) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                vals.as_ptr() as *const u8,
+                std::mem::size_of_val(vals),
+            )
+        };
+        HostTensor {
+            shape: shape.to_vec(),
+            dtype: DType::I32,
+            data: bytes.to_vec(),
+        }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    /// Upload to a device literal.  Single memcpy via the untyped-data
+    /// constructor (§Perf: the old path staged through a typed Vec,
+    /// costing a second full copy on every wire transfer).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let ty = match self.dtype {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        };
+        xla::Literal::create_from_shape_and_untyped_data(
+            ty, &self.shape, &self.data,
+        )
+        .map_err(|e| anyhow!("literal upload: {e:?}"))
+    }
+
+    /// Download from a device literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let ashape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = ashape.dims().iter().map(|&d| d as usize).collect();
+        match ashape.ty() {
+            xla::ElementType::F32 => {
+                let v = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("literal download: {e:?}"))?;
+                Ok(HostTensor::from_f32(&dims, &v))
+            }
+            xla::ElementType::S32 => {
+                let v = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("literal download: {e:?}"))?;
+                Ok(HostTensor::from_i32(&dims, &v))
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+/// Zero-filled literal without host staging (XLA's CreateFromShape
+/// zero-initializes; §Perf: replaces zeros-Vec + upload-copy per
+/// optimizer step).
+pub fn zero_literal(shape: &[usize], dtype: DType) -> xla::Literal {
+    let ty = match dtype {
+        DType::F32 => xla::PrimitiveType::F32,
+        DType::I32 => xla::PrimitiveType::S32,
+    };
+    xla::Literal::create_from_shape(ty, shape)
+}
+
+/// Scalar literal helpers used by the executor.
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 scalar (e.g. the loss) from a literal.
+pub fn literal_to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("reading scalar: {e:?}"))
+}
+
+/// Logical byte size of a literal.
+pub fn literal_bytes(lit: &xla::Literal) -> u64 {
+    lit.size_bytes() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_f32_roundtrip() {
+        let t = HostTensor::from_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.bytes(), 24);
+        assert_eq!(t.to_f32(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn zeros_sized_correctly() {
+        let t = HostTensor::zeros(&[4, 4], DType::I32);
+        assert_eq!(t.data.len(), 64);
+        assert!(t.data.iter().all(|&b| b == 0));
+    }
+
+    // Device/literal tests live in rust/tests/ (they need the PJRT
+    // runtime and, for end-to-end paths, built artifacts).
+}

@@ -1,0 +1,254 @@
+//! Plan generators for the paper's four schedules, ±2BP (Fig 1) and the
+//! Fig 5 eager-p2 variant.
+//!
+//! Non-2BP semantics (classical autograd): backward is *fused* — the
+//! input gradient is sent upstream only after both p1 and p2 complete.
+//! This is the bottleneck the paper identifies: "current implementations
+//! of pipeline parallelism are being unintentionally bottlenecked by the
+//! automatic differentiation tools".  In plans this is encoded as
+//! `BwdP1(mb)` immediately followed by `BwdP2([mb])`, and the executor /
+//! simulator treat the pair as atomic (send-after-p2).
+//!
+//! 2BP semantics: `BwdP1` sends the input gradient immediately; p2 ops
+//! are deferred (greedy fill + trailing `Flush`).
+
+use super::{Op, Plan, ScheduleKind};
+
+/// Generate a plan.  `n_microbatches` defaults (when 0) to the paper's
+/// convention: M = N for Naive/GPipe/1F1B-1, M = 2N for 1F1B-2.
+pub fn generate(
+    kind: ScheduleKind,
+    two_bp: bool,
+    n_ranks: usize,
+    n_microbatches: usize,
+    concat_p2: bool,
+) -> Plan {
+    assert!(n_ranks >= 1, "need at least one pipeline rank");
+    let m = if n_microbatches == 0 {
+        kind.default_microbatches(n_ranks)
+    } else {
+        n_microbatches
+    };
+    let ranks = (0..n_ranks)
+        .map(|r| rank_ops(kind, two_bp, n_ranks, m, r, concat_p2))
+        .collect();
+    Plan {
+        kind,
+        two_bp,
+        n_ranks,
+        n_microbatches: m,
+        ranks,
+        greedy_p2: two_bp,
+    }
+}
+
+fn fused_bwd(ops: &mut Vec<Op>, mb: u32, concat: bool) {
+    ops.push(Op::BwdP1 { mb });
+    ops.push(Op::BwdP2 { mbs: vec![mb], concat });
+}
+
+fn rank_ops(
+    kind: ScheduleKind,
+    two_bp: bool,
+    n: usize,
+    m: usize,
+    _rank: usize,
+    concat_p2: bool,
+) -> Vec<Op> {
+    let rank = _rank;
+    let mut ops = Vec::new();
+    match kind {
+        // -- naive: strictly sequential microbatches (gradient accumulation,
+        //    as in the paper's ResNet naive runs) --------------------------
+        ScheduleKind::Naive => {
+            for mb in 0..m as u32 {
+                ops.push(Op::Fwd { mb });
+                if two_bp {
+                    ops.push(Op::BwdP1 { mb });
+                } else {
+                    fused_bwd(&mut ops, mb, false);
+                }
+            }
+        }
+
+        // -- GPipe: all forwards, then all backwards (reverse mb order) ----
+        ScheduleKind::GPipe => {
+            for mb in 0..m as u32 {
+                ops.push(Op::Fwd { mb });
+            }
+            for mb in (0..m as u32).rev() {
+                if two_bp {
+                    ops.push(Op::BwdP1 { mb });
+                } else {
+                    fused_bwd(&mut ops, mb, false);
+                }
+            }
+        }
+
+        // -- 1F1B (PipeDream-flush / Megatron): warmup, steady, cooldown ---
+        ScheduleKind::OneF1B1 | ScheduleKind::OneF1B2
+        | ScheduleKind::OneF1B2EagerP2 => {
+            let warmup = (n - 1 - rank).min(m);
+            let mut f: u32 = 0;
+            let mut b: u32 = 0;
+            for _ in 0..warmup {
+                ops.push(Op::Fwd { mb: f });
+                f += 1;
+            }
+            for _ in 0..(m - warmup) {
+                ops.push(Op::Fwd { mb: f });
+                f += 1;
+                if two_bp {
+                    ops.push(Op::BwdP1 { mb: b });
+                } else {
+                    fused_bwd(&mut ops, b, false);
+                }
+                b += 1;
+            }
+            for _ in 0..warmup {
+                if two_bp {
+                    ops.push(Op::BwdP1 { mb: b });
+                } else {
+                    fused_bwd(&mut ops, b, false);
+                }
+                b += 1;
+            }
+        }
+    }
+
+    // -- 2BP epilogue: flush deferred p2 work, then step ---------------------
+    if two_bp {
+        if kind == ScheduleKind::OneF1B2EagerP2 {
+            // Fig 5: partial flush halfway through — cap the stash at ~M/2
+            // microbatches of res2+inter.
+            let half = (m / 2).max(1) as u32 - 1;
+            insert_partial_flush(&mut ops, half, concat_p2);
+        }
+        ops.push(Op::Flush { upto: None, concat: concat_p2 });
+    }
+    ops.push(Op::OptStep);
+    ops
+}
+
+/// Insert `Flush{upto}` right after `BwdP1(upto)` (Fig 5's mid-step p2
+/// drain).  No-op if that p1 is not in the list (e.g. m == 1).
+fn insert_partial_flush(ops: &mut Vec<Op>, upto: u32, concat: bool) {
+    if let Some(pos) = ops
+        .iter()
+        .position(|op| matches!(op, Op::BwdP1 { mb } if *mb == upto))
+    {
+        ops.insert(pos + 1, Op::Flush { upto: Some(upto), concat });
+    }
+}
+
+/// The microbatch indices at which the eager-p2 variant flushes (used by
+/// benches to label Fig 5 output).
+pub fn eager_p2_flush_points(m: usize) -> Vec<u32> {
+    vec![(m / 2).max(1) as u32 - 1, m as u32 - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_ops(ops: &[Op]) -> (usize, usize, usize) {
+        let f = ops.iter().filter(|o| matches!(o, Op::Fwd { .. })).count();
+        let p1 = ops.iter().filter(|o| matches!(o, Op::BwdP1 { .. })).count();
+        let p2 = ops
+            .iter()
+            .map(|o| match o {
+                Op::BwdP2 { mbs, .. } => mbs.len(),
+                _ => 0,
+            })
+            .sum();
+        (f, p1, p2)
+    }
+
+    #[test]
+    fn default_microbatch_counts_follow_paper() {
+        assert_eq!(generate(ScheduleKind::OneF1B1, false, 4, 0, false)
+                       .n_microbatches, 4);
+        assert_eq!(generate(ScheduleKind::OneF1B2, false, 4, 0, false)
+                       .n_microbatches, 8);
+    }
+
+    #[test]
+    fn non_2bp_pairs_p1_with_p2() {
+        for kind in ScheduleKind::all() {
+            let plan = generate(kind, false, 4, 0, false);
+            for ops in &plan.ranks {
+                let (f, p1, p2) = count_ops(ops);
+                assert_eq!(f, plan.n_microbatches);
+                assert_eq!(p1, plan.n_microbatches);
+                assert_eq!(p2, plan.n_microbatches);
+                // every BwdP1 immediately followed by its BwdP2
+                for (i, op) in ops.iter().enumerate() {
+                    if let Op::BwdP1 { mb } = op {
+                        assert_eq!(ops[i + 1],
+                                   Op::BwdP2 { mbs: vec![*mb], concat: false });
+                    }
+                }
+                assert!(!plan.greedy_p2);
+            }
+        }
+    }
+
+    #[test]
+    fn two_bp_defers_all_p2_to_flush() {
+        for kind in ScheduleKind::all() {
+            let plan = generate(kind, true, 4, 0, true);
+            assert!(plan.greedy_p2);
+            for ops in &plan.ranks {
+                let (f, p1, p2) = count_ops(ops);
+                assert_eq!(f, plan.n_microbatches);
+                assert_eq!(p1, plan.n_microbatches);
+                assert_eq!(p2, 0, "2BP plans carry no explicit BwdP2");
+                assert!(matches!(ops[ops.len() - 2],
+                                 Op::Flush { upto: None, .. }));
+                assert!(matches!(ops[ops.len() - 1], Op::OptStep));
+            }
+        }
+    }
+
+    #[test]
+    fn one_f1b_warmup_depth_decreases_with_rank() {
+        let plan = generate(ScheduleKind::OneF1B1, true, 4, 0, false);
+        // leading consecutive Fwds per rank = min(N-1-rank, M)
+        for (r, ops) in plan.ranks.iter().enumerate() {
+            let lead = ops.iter().take_while(|o| matches!(o, Op::Fwd { .. }))
+                .count();
+            // warmup fwds plus the first steady-state fwd
+            let warmup = (4 - 1 - r).min(4);
+            let expect = warmup + usize::from(warmup < 4);
+            assert_eq!(lead, expect, "rank {r} lead {lead}");
+        }
+    }
+
+    #[test]
+    fn last_rank_alternates_1f1b() {
+        let plan = generate(ScheduleKind::OneF1B1, false, 4, 0, false);
+        let ops = &plan.ranks[3];
+        assert!(matches!(ops[0], Op::Fwd { mb: 0 }));
+        assert!(matches!(ops[1], Op::BwdP1 { mb: 0 }));
+    }
+
+    #[test]
+    fn eager_variant_has_partial_flush() {
+        let plan = generate(ScheduleKind::OneF1B2EagerP2, true, 4, 0, false);
+        for ops in &plan.ranks {
+            let partials = ops.iter().filter(
+                |o| matches!(o, Op::Flush { upto: Some(_), .. })).count();
+            assert_eq!(partials, 1);
+        }
+    }
+
+    #[test]
+    fn naive_is_strictly_sequential_per_rank() {
+        let plan = generate(ScheduleKind::Naive, false, 3, 4, false);
+        let ops = &plan.ranks[0];
+        // F0 B0 F1 B1 ... (B = p1+p2 pair)
+        assert!(matches!(ops[0], Op::Fwd { mb: 0 }));
+        assert!(matches!(ops[1], Op::BwdP1 { mb: 0 }));
+        assert!(matches!(ops[3], Op::Fwd { mb: 1 }));
+    }
+}

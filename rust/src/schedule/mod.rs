@@ -1,0 +1,124 @@
+//! Pipeline schedules — the paper's §3 contribution.
+//!
+//! A [`Plan`] is, per pipeline rank, an ordered op list.  The paper's
+//! four schedules (Naive, GPipe, 1F1B-1, 1F1B-2) are generated with or
+//! without the 2BP split:
+//!
+//! * **without 2BP** each `BwdP1(mb)` is immediately followed by
+//!   `BwdP2([mb])` — the fused behaviour of a classical autograd engine;
+//! * **with 2BP** the `BwdP2` ops are *deferred*: the plan enables
+//!   greedy fill (`greedy_p2`) so the executor/simulator runs pending p2
+//!   work whenever the rank would otherwise idle, and a trailing
+//!   [`Op::Flush`] covers the remainder (optionally as one concatenated
+//!   call — Fig 2).
+//!
+//! The Fig 5 *eager-p2* 1F1B-2 variant inserts a mid-step partial flush
+//! to cap stash growth.
+
+mod generators;
+pub mod validate;
+
+pub use generators::{eager_p2_flush_points, generate};
+
+/// One operation in a rank's schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// Forward a microbatch (implicitly: recv activation from rank-1,
+    /// send result to rank+1; the last rank then computes the loss).
+    Fwd { mb: u32 },
+    /// Backward-p1 (input gradient) for a microbatch (implicitly: recv
+    /// output-grad from rank+1, send input-grad to rank-1).
+    BwdP1 { mb: u32 },
+    /// Backward-p2 (weight gradient) for explicit microbatches.
+    /// `concat`: single concatenated call vs per-mb loop (Fig 2/Table 3).
+    BwdP2 { mbs: Vec<u32>, concat: bool },
+    /// Run backward-p2 for every microbatch whose p1 is done but whose
+    /// p2 hasn't run yet, restricted to `upto` lowest-numbered pending
+    /// ones when given (Fig 5 partial flush).
+    Flush { upto: Option<u32>, concat: bool },
+    /// Optimizer step (after all p2 work of the training step).
+    OptStep,
+}
+
+/// Which of the paper's schedules to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// No micro-batch overlap at all: each microbatch traverses the whole
+    /// pipeline before the next starts (the paper's "naive" baseline,
+    /// realized as gradient accumulation as in its ResNet runs).
+    Naive,
+    /// GPipe: all forwards, then all backwards.
+    GPipe,
+    /// 1F1B with M = N microbatches (paper "1F1B-1").
+    OneF1B1,
+    /// 1F1B with M = 2N microbatches (paper "1F1B-2").
+    OneF1B2,
+    /// Fig 5: 1F1B-2 + 2BP with mid-step partial p2 flushes to cap the
+    /// stash (only meaningful with `two_bp = true`).
+    OneF1B2EagerP2,
+}
+
+impl ScheduleKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "naive" => ScheduleKind::Naive,
+            "gpipe" => ScheduleKind::GPipe,
+            "1f1b-1" | "1f1b1" => ScheduleKind::OneF1B1,
+            "1f1b-2" | "1f1b2" => ScheduleKind::OneF1B2,
+            "1f1b-2-eager" | "eager" => ScheduleKind::OneF1B2EagerP2,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::Naive => "naive",
+            ScheduleKind::GPipe => "gpipe",
+            ScheduleKind::OneF1B1 => "1f1b-1",
+            ScheduleKind::OneF1B2 => "1f1b-2",
+            ScheduleKind::OneF1B2EagerP2 => "1f1b-2-eager",
+        }
+    }
+
+    /// The paper's default microbatch count for N pipeline ranks.
+    pub fn default_microbatches(&self, n_ranks: usize) -> usize {
+        match self {
+            ScheduleKind::Naive | ScheduleKind::GPipe
+            | ScheduleKind::OneF1B1 => n_ranks,
+            ScheduleKind::OneF1B2 | ScheduleKind::OneF1B2EagerP2 => 2 * n_ranks,
+        }
+    }
+
+    pub fn all() -> [ScheduleKind; 4] {
+        [ScheduleKind::Naive, ScheduleKind::GPipe,
+         ScheduleKind::OneF1B1, ScheduleKind::OneF1B2]
+    }
+}
+
+/// A complete schedule for one training step.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub kind: ScheduleKind,
+    pub two_bp: bool,
+    pub n_ranks: usize,
+    pub n_microbatches: usize,
+    /// `ranks[r]` is the ordered op list for pipeline rank r.
+    pub ranks: Vec<Vec<Op>>,
+    /// With 2BP: the executor/simulator may run pending p2 work when the
+    /// next op's inputs are not yet available (the paper's "fill idle
+    /// time between backward-p1 calls with backward-p2 calls").
+    pub greedy_p2: bool,
+}
+
+impl Plan {
+    /// Human-readable one-line description, e.g. "1f1b-1+2bp (4 ranks × 4 mb)".
+    pub fn describe(&self) -> String {
+        format!(
+            "{}{} ({} ranks × {} mb)",
+            self.kind.name(),
+            if self.two_bp { "+2bp" } else { "" },
+            self.n_ranks,
+            self.n_microbatches
+        )
+    }
+}

@@ -1,0 +1,241 @@
+//! Static plan validation — the safety net under every schedule the
+//! generators (or a future custom schedule) produce.
+//!
+//! Checks, per rank:
+//!   1. every microbatch is forwarded exactly once and p1'd exactly once;
+//!   2. p1(mb) comes after fwd(mb);
+//!   3. explicit p2 coverage: each mb's p2 runs at most once, always
+//!      after its p1; with greedy/Flush plans, a trailing Flush covers
+//!      the remainder (full-coverage check);
+//!   4. OptStep is last and appears exactly once;
+//! and across ranks:
+//!   5. all ranks agree on the microbatch set;
+//!   6. forward order is identical on all ranks and backward order is
+//!      identical on all ranks (FIFO-channel compatibility: with tagged
+//!      receives this is not required for correctness, but plan-order
+//!      consistency is what makes the schedules analyzable, so we insist).
+
+use super::{Op, Plan};
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct ValidationError {
+    pub rank: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "plan invalid at rank {}: {}", self.rank, self.msg)
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+pub fn validate(plan: &Plan) -> Result<(), ValidationError> {
+    let m = plan.n_microbatches as u32;
+    if plan.ranks.len() != plan.n_ranks {
+        return Err(ValidationError {
+            rank: 0,
+            msg: format!("{} rank lists for {} ranks",
+                         plan.ranks.len(), plan.n_ranks),
+        });
+    }
+
+    let mut fwd_orders: Vec<Vec<u32>> = Vec::new();
+    let mut bwd_orders: Vec<Vec<u32>> = Vec::new();
+
+    for (r, ops) in plan.ranks.iter().enumerate() {
+        let err = |msg: String| Err(ValidationError { rank: r, msg });
+        let mut fwd_seen = vec![false; m as usize];
+        let mut p1_seen = vec![false; m as usize];
+        let mut p2_seen = vec![false; m as usize];
+        let mut has_flush_all = false;
+        let mut opt_seen = false;
+        let mut fwd_order = Vec::new();
+        let mut bwd_order = Vec::new();
+
+        for (i, op) in ops.iter().enumerate() {
+            if opt_seen {
+                return err(format!("op after OptStep at index {i}"));
+            }
+            match op {
+                Op::Fwd { mb } => {
+                    if *mb >= m {
+                        return err(format!("Fwd mb {mb} out of range"));
+                    }
+                    if fwd_seen[*mb as usize] {
+                        return err(format!("mb {mb} forwarded twice"));
+                    }
+                    fwd_seen[*mb as usize] = true;
+                    fwd_order.push(*mb);
+                }
+                Op::BwdP1 { mb } => {
+                    if *mb >= m || !fwd_seen[*mb as usize] {
+                        return err(format!("BwdP1 mb {mb} before its Fwd"));
+                    }
+                    if p1_seen[*mb as usize] {
+                        return err(format!("mb {mb} p1 twice"));
+                    }
+                    p1_seen[*mb as usize] = true;
+                    bwd_order.push(*mb);
+                }
+                Op::BwdP2 { mbs, .. } => {
+                    for mb in mbs {
+                        if *mb >= m || !p1_seen[*mb as usize] {
+                            return err(format!("BwdP2 mb {mb} before its p1"));
+                        }
+                        if p2_seen[*mb as usize] {
+                            return err(format!("mb {mb} p2 twice"));
+                        }
+                        p2_seen[*mb as usize] = true;
+                    }
+                }
+                Op::Flush { upto, .. } => {
+                    // flush covers pending (p1-done, p2-not-done) mbs
+                    for mb in 0..m {
+                        let within =
+                            upto.map(|u| mb <= u).unwrap_or(true);
+                        if within && p1_seen[mb as usize]
+                            && !p2_seen[mb as usize]
+                        {
+                            p2_seen[mb as usize] = true;
+                        }
+                    }
+                    if upto.is_none() {
+                        has_flush_all = true;
+                    }
+                }
+                Op::OptStep => {
+                    opt_seen = true;
+                }
+            }
+        }
+
+        if !opt_seen {
+            return err("missing OptStep".into());
+        }
+        for mb in 0..m as usize {
+            if !fwd_seen[mb] {
+                return err(format!("mb {mb} never forwarded"));
+            }
+            if !p1_seen[mb] {
+                return err(format!("mb {mb} never p1'd"));
+            }
+            if !p2_seen[mb] {
+                return err(format!(
+                    "mb {mb} p2 never runs (and no covering Flush)"));
+            }
+        }
+        if plan.greedy_p2 && !has_flush_all {
+            return err("greedy_p2 plan lacks a full Flush".into());
+        }
+        fwd_orders.push(fwd_order);
+        bwd_orders.push(bwd_order);
+    }
+
+    for r in 1..plan.n_ranks {
+        if fwd_orders[r] != fwd_orders[0] {
+            return Err(ValidationError {
+                rank: r,
+                msg: "forward order differs from rank 0".into(),
+            });
+        }
+        if bwd_orders[r] != bwd_orders[0] {
+            return Err(ValidationError {
+                rank: r,
+                msg: "backward order differs from rank 0".into(),
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{generate, ScheduleKind};
+    use super::*;
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn all_generated_plans_validate() {
+        for kind in ScheduleKind::all() {
+            for two_bp in [false, true] {
+                for n in [1, 2, 3, 4, 8] {
+                    for m_mult in [1, 2] {
+                        let m = kind.default_microbatches(n) * m_mult;
+                        let plan = generate(kind, two_bp, n, m, two_bp);
+                        validate(&plan).unwrap_or_else(|e| {
+                            panic!("{} 2bp={two_bp} n={n} m={m}: {e}",
+                                   kind.name())
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eager_variant_validates() {
+        let plan = generate(ScheduleKind::OneF1B2EagerP2, true, 4, 0, false);
+        validate(&plan).unwrap();
+    }
+
+    #[test]
+    fn rejects_missing_p2_coverage() {
+        let mut plan = generate(ScheduleKind::GPipe, true, 2, 2, false);
+        // drop the Flush on rank 1
+        plan.ranks[1].retain(|op| !matches!(op, Op::Flush { .. }));
+        assert!(validate(&plan).is_err());
+    }
+
+    #[test]
+    fn rejects_p1_before_fwd() {
+        let mut plan = generate(ScheduleKind::GPipe, false, 2, 2, false);
+        plan.ranks[0].swap(0, 2); // move a BwdP1 before its Fwd
+        assert!(validate(&plan).is_err());
+    }
+
+    #[test]
+    fn rejects_double_p2() {
+        let mut plan = generate(ScheduleKind::GPipe, false, 2, 2, false);
+        plan.ranks[0].insert(4, Op::BwdP2 { mbs: vec![1], concat: false });
+        assert!(validate(&plan).is_err());
+    }
+
+    #[test]
+    fn rejects_op_after_optstep() {
+        let mut plan = generate(ScheduleKind::Naive, false, 2, 1, false);
+        plan.ranks[0].push(Op::Fwd { mb: 0 });
+        assert!(validate(&plan).is_err());
+    }
+
+    #[test]
+    fn prop_random_schedule_params_always_validate() {
+        check(
+            "generated plans validate for fuzzed (kind, 2bp, n, m)",
+            200,
+            |rng| {
+                let kinds = [ScheduleKind::Naive, ScheduleKind::GPipe,
+                             ScheduleKind::OneF1B1, ScheduleKind::OneF1B2,
+                             ScheduleKind::OneF1B2EagerP2];
+                let kind = *gen::pick(rng, &kinds);
+                let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
+                    true
+                } else {
+                    gen::bool(rng)
+                };
+                let n = gen::usize_in(rng, 1, 12);
+                let m = gen::usize_in(rng, 1, 24);
+                (kind, two_bp, n, m)
+            },
+            |&(kind, two_bp, n, m)| {
+                let plan = generate(kind, two_bp, n, m, two_bp);
+                validate(&plan).map_err(|e| e.to_string())?;
+                if plan.ranks.iter().any(|ops| ops.is_empty()) {
+                    return Err("empty rank".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,594 @@
+//! The event loop: global earliest-start scheduling over per-rank op
+//! cursors, with the 2BP greedy-p2 fill rule (run deferred weight-grad
+//! work whenever a rank would otherwise idle — non-preemptive, exactly
+//! like the real executor's poll-then-fill loop).
+
+use super::{CostModel, MemModel, SimResult};
+use crate::schedule::{Op, Plan};
+use crate::util::gantt::{Span, SpanKind};
+
+#[derive(Debug)]
+pub struct SimError(pub String);
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "simulation error: {}", self.0)
+    }
+}
+
+impl std::error::Error for SimError {}
+
+struct RankState {
+    t: f64,
+    next: usize,
+    /// p1-done microbatches whose p2 hasn't run (FIFO by p1 completion).
+    pending_p2: Vec<u32>,
+    p2_done: Vec<bool>,
+    spans: Vec<Span>,
+    busy: f64,
+    // memory accounting
+    live: u64,
+    peak: u64,
+}
+
+enum Action {
+    Real,
+    FillP2,
+}
+
+/// Simulate one training step of `plan` under `costs` (+ optional memory
+/// model).  Fused (non-2BP) backward pairs are handled by the send rule:
+/// the upstream rank's p1 readiness waits for the *pair* end on this
+/// rank, because in plan order BwdP2 immediately follows BwdP1 and the
+/// grad-send timestamp is taken after the following BwdP2 when the plan
+/// is non-2BP.
+pub fn simulate(
+    plan: &Plan,
+    costs: &CostModel,
+    mem: Option<&MemModel>,
+) -> Result<SimResult, SimError> {
+    let n = plan.n_ranks;
+    let m = plan.n_microbatches;
+    assert_eq!(costs.fwd.len(), n, "cost model rank count mismatch");
+
+    // completion times (f64::INFINITY = not yet happened)
+    let inf = f64::INFINITY;
+    let mut fwd_done = vec![vec![inf; m]; n];
+    // time the input-grad for mb becomes available to rank r-1
+    let mut grad_sent = vec![vec![inf; m]; n];
+
+    let mut ranks: Vec<RankState> = (0..n)
+        .map(|r| {
+            let static_b = mem.map(|mm| mm.static_bytes[r]).unwrap_or(0);
+            RankState {
+                t: 0.0,
+                next: 0,
+                pending_p2: Vec::new(),
+                p2_done: vec![false; m],
+                spans: Vec::new(),
+                busy: 0.0,
+                live: static_b,
+                peak: static_b,
+            }
+        })
+        .collect();
+
+    let total_ops: usize = plan.ranks.iter().map(|ops| ops.len()).sum();
+    let mut done_ops = 0usize;
+
+    while done_ops < total_ops {
+        // collect candidate actions
+        let mut best: Option<(f64, usize, Action)> = None;
+        for r in 0..n {
+            let st = &ranks[r];
+            if st.next >= plan.ranks[r].len() {
+                continue;
+            }
+            let op = &plan.ranks[r][st.next];
+            let ready = op_ready(op, r, n, plan, costs, &fwd_done, &grad_sent);
+            // Greedy 2BP fill rule: if the next op's input either doesn't
+            // exist yet or arrives only after this rank's current time,
+            // the real executor's poll fails and it starts a pending p2
+            // instead (non-preemptive — it may overshoot the arrival,
+            // which is the paper's non-uniform-graph caveat in §3.2).
+            let can_fill = plan.greedy_p2 && !st.pending_p2.is_empty();
+            let cand = match ready {
+                Some(dep_t) if dep_t <= st.t => {
+                    Some((st.t, Action::Real))
+                }
+                Some(dep_t) => {
+                    if can_fill {
+                        Some((st.t, Action::FillP2))
+                    } else {
+                        Some((dep_t, Action::Real))
+                    }
+                }
+                None => can_fill.then_some((st.t, Action::FillP2)),
+            };
+            if let Some((start, act)) = cand {
+                let better = match &best {
+                    None => true,
+                    Some((bs, _, ba)) => {
+                        start < *bs
+                            || (start == *bs
+                                && matches!(ba, Action::FillP2)
+                                && matches!(act, Action::Real))
+                    }
+                };
+                if better {
+                    best = Some((start, r, act));
+                }
+            }
+        }
+
+        let (start, r, act) = best.ok_or_else(|| {
+            SimError(format!(
+                "deadlock: {done_ops}/{total_ops} ops done; next ops: {:?}",
+                (0..n)
+                    .map(|r| plan.ranks[r].get(ranks[r].next))
+                    .collect::<Vec<_>>()
+            ))
+        })?;
+
+        match act {
+            Action::FillP2 => {
+                let mb = ranks[r].pending_p2.remove(0);
+                run_p2(&mut ranks[r], r, &[mb], false, start, costs, mem);
+            }
+            Action::Real => {
+                let op = plan.ranks[r][ranks[r].next].clone();
+                exec_op(
+                    &op, r, n, plan, costs, mem, start,
+                    &mut ranks, &mut fwd_done, &mut grad_sent,
+                );
+                ranks[r].next += 1;
+                done_ops += 1;
+            }
+        }
+    }
+
+    let makespan = ranks.iter().map(|s| s.t).fold(0.0, f64::max);
+    let busy: Vec<f64> = ranks.iter().map(|s| s.busy).collect();
+    let total_busy: f64 = busy.iter().sum();
+    let bubble_ratio = if makespan > 0.0 {
+        1.0 - total_busy / (n as f64 * makespan)
+    } else {
+        0.0
+    };
+    Ok(SimResult {
+        makespan,
+        bubble_ratio,
+        spans: ranks.iter().map(|s| s.spans.clone()).collect(),
+        peak_bytes: ranks.iter().map(|s| s.peak).collect(),
+        busy,
+    })
+}
+
+/// Dependency-readiness of `op` on rank `r`: Some(t) when its external
+/// input is available at time t, None when the input doesn't exist yet.
+/// Local ordering is implied by the per-rank cursor.
+fn op_ready(
+    op: &Op,
+    r: usize,
+    n: usize,
+    _plan: &Plan,
+    costs: &CostModel,
+    fwd_done: &[Vec<f64>],
+    grad_sent: &[Vec<f64>],
+) -> Option<f64> {
+    match op {
+        Op::Fwd { mb } => {
+            if r == 0 {
+                Some(0.0)
+            } else {
+                let t = fwd_done[r - 1][*mb as usize];
+                t.is_finite().then(|| t + costs.hop(r - 1, r))
+            }
+        }
+        Op::BwdP1 { mb } => {
+            if r == n - 1 {
+                let t = fwd_done[r][*mb as usize];
+                // loss runs on the last rank right before its first p1 use
+                t.is_finite().then(|| t + costs.loss)
+            } else {
+                let t = grad_sent[r + 1][*mb as usize];
+                t.is_finite().then(|| t + costs.hop(r, r + 1))
+            }
+        }
+        // local-only ops: plan order + validator guarantee inputs exist
+        Op::BwdP2 { .. } | Op::Flush { .. } | Op::OptStep => Some(0.0),
+    }
+    .filter(|t| t.is_finite())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn exec_op(
+    op: &Op,
+    r: usize,
+    n: usize,
+    plan: &Plan,
+    costs: &CostModel,
+    mem: Option<&MemModel>,
+    start: f64,
+    ranks: &mut [RankState],
+    fwd_done: &mut [Vec<f64>],
+    grad_sent: &mut [Vec<f64>],
+) {
+    match op {
+        Op::Fwd { mb } => {
+            let st = &mut ranks[r];
+            let end = start + costs.fwd[r];
+            st.spans.push(Span { start, end, label: SpanKind::Fwd, mb: *mb });
+            st.busy += end - start;
+            st.t = end;
+            fwd_done[r][*mb as usize] = end;
+            if let Some(mm) = mem {
+                st.live += mm.res1[r] + mm.res2[r];
+                st.peak = st.peak.max(st.live);
+            }
+        }
+        Op::BwdP1 { mb } => {
+            let end = start + costs.p1[r];
+            let st = &mut ranks[r];
+            st.spans.push(Span { start, end, label: SpanKind::BwdP1, mb: *mb });
+            st.busy += end - start;
+            st.t = end;
+            st.pending_p2.push(*mb);
+            if let Some(mm) = mem {
+                st.live = st.live - mm.res1[r] + mm.inter[r];
+                st.peak = st.peak.max(st.live);
+            }
+            // 2BP: grad leaves right after p1.  Fused (non-2BP): the
+            // following BwdP2 op updates grad_sent instead.
+            if plan.two_bp && r > 0 {
+                grad_sent[r][*mb as usize] = end;
+            }
+            if !plan.two_bp {
+                // fused pair: mark sent tentatively; BwdP2 will overwrite
+                grad_sent[r][*mb as usize] = f64::INFINITY;
+            }
+            let _ = n;
+        }
+        Op::BwdP2 { mbs, concat } => {
+            let mbs: Vec<u32> = mbs.clone();
+            run_p2(&mut ranks[r], r, &mbs, *concat, start, costs, mem);
+            if !plan.two_bp {
+                // fused semantics: the grad for this mb is released only now
+                for mb in &mbs {
+                    grad_sent[r][*mb as usize] = ranks[r].t;
+                }
+            }
+        }
+        Op::Flush { upto, concat } => {
+            let st = &mut ranks[r];
+            let mut mbs: Vec<u32> = st
+                .pending_p2
+                .iter()
+                .copied()
+                .filter(|mb| upto.map(|u| *mb <= u).unwrap_or(true))
+                .collect();
+            mbs.sort_unstable();
+            st.pending_p2.retain(|mb| !mbs.contains(mb));
+            if !mbs.is_empty() {
+                run_p2(st, r, &mbs, *concat, start, costs, mem);
+            }
+        }
+        Op::OptStep => {
+            let st = &mut ranks[r];
+            let end = start + costs.opt[r];
+            st.spans.push(Span { start, end, label: SpanKind::Opt, mb: 0 });
+            st.busy += end - start;
+            st.t = end;
+        }
+    }
+    // remove executed-p2 mbs from pending (explicit BwdP2 case)
+    if let Op::BwdP2 { mbs, .. } = op {
+        let st = &mut ranks[r];
+        st.pending_p2.retain(|mb| !mbs.contains(mb));
+    }
+}
+
+fn run_p2(
+    st: &mut RankState,
+    r: usize,
+    mbs: &[u32],
+    concat: bool,
+    start: f64,
+    costs: &CostModel,
+    mem: Option<&MemModel>,
+) {
+    let k = mbs.len() as f64;
+    let dur = if concat && mbs.len() > 1 {
+        k * costs.p2[r] * costs.concat_factor
+    } else {
+        k * costs.p2[r]
+    };
+    let end = start + dur;
+    st.spans.push(Span {
+        start,
+        end,
+        label: SpanKind::BwdP2,
+        mb: mbs[0],
+    });
+    st.busy += dur;
+    st.t = end;
+    for mb in mbs {
+        st.p2_done[*mb as usize] = true;
+    }
+    if let Some(mm) = mem {
+        st.live -= (mm.res2[r] + mm.inter[r]) * mbs.len() as u64;
+        st.peak = st.peak.max(st.live);
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{generate, validate::validate, ScheduleKind};
+
+    fn bubble(kind: ScheduleKind, two_bp: bool, n: usize) -> f64 {
+        // the paper's naive rows assume no micro-batching (M = 1)
+        let m = if kind == ScheduleKind::Naive { 1 } else { 0 };
+        let plan = generate(kind, two_bp, n, m, false);
+        validate(&plan).unwrap();
+        let res = simulate(&plan, &CostModel::unit(n), None).unwrap();
+        res.bubble_ratio
+    }
+
+    fn assert_close(a: f64, b: f64, what: &str) {
+        assert!((a - b).abs() < 1e-9, "{what}: got {a}, want {b}");
+    }
+
+    /// The paper's Table 1 closed forms, checked exactly for N = 2..10.
+    #[test]
+    fn table1_naive() {
+        for n in 2..=10usize {
+            let nf = n as f64;
+            assert_close(bubble(ScheduleKind::Naive, false, n),
+                         (nf - 1.0) / nf, &format!("naive N={n}"));
+            assert_close(bubble(ScheduleKind::Naive, true, n),
+                         2.0 * (nf - 1.0) / (2.0 * nf + 1.0),
+                         &format!("naive+2bp N={n}"));
+        }
+    }
+
+    #[test]
+    fn table1_gpipe() {
+        for n in 2..=10usize {
+            let nf = n as f64;
+            assert_close(bubble(ScheduleKind::GPipe, false, n),
+                         (nf - 1.0) / (2.0 * nf - 1.0),
+                         &format!("gpipe N={n}"));
+            assert_close(bubble(ScheduleKind::GPipe, true, n),
+                         2.0 * (nf - 1.0) / (2.0 * (nf - 1.0) + 3.0 * nf),
+                         &format!("gpipe+2bp N={n}"));
+        }
+    }
+
+    #[test]
+    fn table1_1f1b1() {
+        for n in 2..=10usize {
+            let nf = n as f64;
+            assert_close(bubble(ScheduleKind::OneF1B1, false, n),
+                         (nf - 1.0) / (2.0 * nf - 1.0),
+                         &format!("1f1b-1 N={n}"));
+            assert_close(bubble(ScheduleKind::OneF1B1, true, n),
+                         (nf - 1.0) / (nf - 1.0 + 3.0 * nf),
+                         &format!("1f1b-1+2bp N={n}"));
+        }
+    }
+
+    #[test]
+    fn table1_1f1b2() {
+        for n in 2..=10usize {
+            let nf = n as f64;
+            assert_close(bubble(ScheduleKind::OneF1B2, false, n),
+                         (nf - 1.0) / (3.0 * nf - 1.0),
+                         &format!("1f1b-2 N={n}"));
+            assert_close(bubble(ScheduleKind::OneF1B2, true, n),
+                         (nf - 1.0) / (nf - 1.0 + 6.0 * nf),
+                         &format!("1f1b-2+2bp N={n}"));
+        }
+    }
+
+    /// Throughput gain = (1-b)/(1-a) from Table 1's last column.
+    #[test]
+    fn table1_throughput_gains() {
+        let n = 4usize;
+        let nf = n as f64;
+        let gain = |k: ScheduleKind| {
+            let a = bubble(k, false, n);
+            let b = bubble(k, true, n);
+            (1.0 - b) / (1.0 - a)
+        };
+        assert_close(gain(ScheduleKind::Naive),
+                     3.0 * nf / (2.0 * nf + 1.0), "naive gain");
+        assert_close(gain(ScheduleKind::GPipe),
+                     3.0 * (2.0 * nf - 1.0) / (2.0 * (nf - 1.0) + 3.0 * nf),
+                     "gpipe gain");
+        assert_close(gain(ScheduleKind::OneF1B1),
+                     3.0 * (2.0 * nf - 1.0) / (nf - 1.0 + 3.0 * nf),
+                     "1f1b-1 gain");
+        assert_close(gain(ScheduleKind::OneF1B2),
+                     3.0 * (3.0 * nf - 1.0) / (nf - 1.0 + 6.0 * nf),
+                     "1f1b-2 gain");
+    }
+
+    #[test]
+    fn two_bp_never_slower_at_unit_costs() {
+        for kind in ScheduleKind::all() {
+            for n in 2..=8 {
+                let a = bubble(kind, false, n);
+                let b = bubble(kind, true, n);
+                assert!(
+                    (1.0 - b) / (1.0 - a) >= 1.0 - 1e-12,
+                    "{} N={n}: 2BP slowed throughput ({a} -> {b})",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_has_no_bubble_without_comm() {
+        for kind in ScheduleKind::all() {
+            for two_bp in [false, true] {
+                let plan = generate(kind, two_bp, 1, 4, false);
+                let res = simulate(&plan, &CostModel::unit(1), None).unwrap();
+                assert!(res.bubble_ratio.abs() < 1e-12,
+                        "{} 2bp={two_bp}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn comm_increases_makespan() {
+        let plan = generate(ScheduleKind::OneF1B1, true, 4, 0, false);
+        let base = simulate(&plan, &CostModel::unit(4), None).unwrap();
+        let mut cm = CostModel::unit(4);
+        cm.comm = 0.25;
+        let with = simulate(&plan, &cm, None).unwrap();
+        assert!(with.makespan > base.makespan);
+    }
+
+    #[test]
+    fn inter_node_hop_penalty_applies() {
+        let mut cm = CostModel::unit(8);
+        cm.comm = 0.1;
+        cm.comm_inter_node = 1.0;
+        cm.ranks_per_node = 4;
+        assert_close(cm.hop(3, 4), 1.1, "inter-node hop");
+        assert_close(cm.hop(2, 3), 0.1, "intra-node hop");
+    }
+
+    #[test]
+    fn memory_peaks_scale_with_schedule() {
+        // GPipe stashes all M microbatches; 1F1B-1 rank N-1 stashes 1.
+        let n = 4;
+        let mm = MemModel {
+            static_bytes: vec![0; n],
+            res1: vec![10; n],
+            res2: vec![100; n],
+            inter: vec![50; n],
+        };
+        let gpipe = simulate(
+            &generate(ScheduleKind::GPipe, false, n, 0, false),
+            &CostModel::unit(n), Some(&mm)).unwrap();
+        let f1b = simulate(
+            &generate(ScheduleKind::OneF1B1, false, n, 0, false),
+            &CostModel::unit(n), Some(&mm)).unwrap();
+        // rank 0 peak: 4 x (res1+res2) stashed, +inter during the first
+        // backward before res1 releases: 4*110 - 10 + 50 = 480
+        assert_eq!(gpipe.peak_bytes[0], 480);
+        // 1F1B rank N-1 holds at most ~1-2 microbatches
+        assert!(f1b.peak_bytes[n - 1] < gpipe.peak_bytes[n - 1]);
+    }
+
+    #[test]
+    fn two_bp_increases_peak_memory() {
+        // the paper's Fig 4: 2BP trades memory for throughput
+        let n = 4;
+        let mm = MemModel {
+            static_bytes: vec![0; n],
+            res1: vec![10; n],
+            res2: vec![100; n],
+            inter: vec![50; n],
+        };
+        for kind in ScheduleKind::all() {
+            let a = simulate(&generate(kind, false, n, 0, false),
+                             &CostModel::unit(n), Some(&mm)).unwrap();
+            let b = simulate(&generate(kind, true, n, 0, false),
+                             &CostModel::unit(n), Some(&mm)).unwrap();
+            assert!(
+                b.max_peak() >= a.max_peak(),
+                "{}: 2BP peak {} < non-2BP {}",
+                kind.name(), b.max_peak(), a.max_peak()
+            );
+        }
+    }
+
+    #[test]
+    fn eager_p2_variant_cuts_1f1b2_peak() {
+        // Fig 5: mid-step flush caps the stash vs plain 1F1B-2 + 2BP
+        let n = 4;
+        let mm = MemModel {
+            static_bytes: vec![0; n],
+            res1: vec![10; n],
+            res2: vec![100; n],
+            inter: vec![50; n],
+        };
+        let plain = simulate(&generate(ScheduleKind::OneF1B2, true, n, 0, false),
+                             &CostModel::unit(n), Some(&mm)).unwrap();
+        let eager = simulate(
+            &generate(ScheduleKind::OneF1B2EagerP2, true, n, 0, false),
+            &CostModel::unit(n), Some(&mm)).unwrap();
+        assert!(
+            eager.max_peak() <= plain.max_peak(),
+            "eager {} vs plain {}", eager.max_peak(), plain.max_peak()
+        );
+    }
+
+    #[test]
+    fn spans_cover_busy_time_exactly() {
+        let plan = generate(ScheduleKind::OneF1B2, true, 4, 0, false);
+        let res = simulate(&plan, &CostModel::ratios(4, 1.0, 1.2, 0.8), None)
+            .unwrap();
+        for (r, spans) in res.spans.iter().enumerate() {
+            let total: f64 = spans.iter().map(|s| s.end - s.start).sum();
+            assert!((total - res.busy[r]).abs() < 1e-9);
+            // spans never overlap
+            let mut sorted = spans.clone();
+            sorted.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            for w in sorted.windows(2) {
+                assert!(w[1].start >= w[0].end - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_simulation_never_deadlocks() {
+        use crate::util::proptest::{check, gen};
+        check(
+            "simulate() terminates for fuzzed plans/costs",
+            150,
+            |rng| {
+                let kinds = [ScheduleKind::Naive, ScheduleKind::GPipe,
+                             ScheduleKind::OneF1B1, ScheduleKind::OneF1B2,
+                             ScheduleKind::OneF1B2EagerP2];
+                let kind = *gen::pick(rng, &kinds);
+                let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
+                    true
+                } else {
+                    gen::bool(rng)
+                };
+                let n = gen::usize_in(rng, 1, 8);
+                let m = gen::usize_in(rng, 1, 16);
+                let f = 0.5 + rng.next_f64();
+                let p1 = 0.5 + rng.next_f64();
+                let p2 = 0.5 + rng.next_f64();
+                let comm = rng.next_f64() * 0.3;
+                (kind, two_bp, n, m, f, p1, p2, comm)
+            },
+            |&(kind, two_bp, n, m, f, p1, p2, comm)| {
+                let plan = generate(kind, two_bp, n, m, two_bp);
+                let mut cm = CostModel::ratios(n, f, p1, p2);
+                cm.comm = comm;
+                let res = simulate(&plan, &cm, None)
+                    .map_err(|e| e.to_string())?;
+                if !(res.bubble_ratio >= -1e-9 && res.bubble_ratio < 1.0) {
+                    return Err(format!("bubble {}", res.bubble_ratio));
+                }
+                // all compute accounted: busy == m*(f+p1+p2) (+opt=0)
+                let want = m as f64 * (f + p1 + p2);
+                for b in &res.busy {
+                    if (b - want).abs() > 1e-6 {
+                        return Err(format!("busy {b} != {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! Discrete-event pipeline simulator.
+//!
+//! Replays a [`Plan`](crate::schedule::Plan) against a [`CostModel`]
+//! (per-rank op durations + communication) and an optional [`MemModel`]
+//! (per-microbatch byte classes from the artifact manifest), producing
+//! per-rank timelines, bubble ratios, throughput and peak-memory
+//! figures.
+//!
+//! Two roles:
+//!
+//! 1. **Theory checks** — with unit costs it must reproduce the paper's
+//!    Table 1 closed forms exactly (tested in `engine.rs`).
+//! 2. **Calibrated replay** — with op costs *measured* from the real
+//!    PJRT runtime it predicts throughput for rank counts this host
+//!    cannot run in parallel (Figs 3/6/7; the host has one core, see
+//!    DESIGN.md §3).
+
+mod engine;
+
+pub use engine::{simulate, SimError};
+
+use crate::util::gantt::Span;
+
+/// Per-rank op durations (seconds, or abstract units).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub fwd: Vec<f64>,
+    pub p1: Vec<f64>,
+    /// Cost of one microbatch's backward-p2.
+    pub p2: Vec<f64>,
+    pub opt: Vec<f64>,
+    /// Loss + initial-gradient cost on the last rank.
+    pub loss: f64,
+    /// Activation/gradient hop latency between adjacent ranks.
+    pub comm: f64,
+    /// Extra latency when a hop crosses a node boundary (Figs 6/7: the
+    /// paper's 4-GPU nodes mean hops at rank%4==3 are inter-node).
+    pub comm_inter_node: f64,
+    pub ranks_per_node: usize,
+    /// Cost multiplier for a concatenated p2 covering k microbatches,
+    /// relative to k separate calls (Table 3 found ≈ 1.0: concat saves
+    /// dispatch but pays the copy).
+    pub concat_factor: f64,
+}
+
+impl CostModel {
+    /// Uniform unit-cost model (the Table 1 idealization: fwd = p1 = p2).
+    pub fn unit(n_ranks: usize) -> Self {
+        CostModel {
+            fwd: vec![1.0; n_ranks],
+            p1: vec![1.0; n_ranks],
+            p2: vec![1.0; n_ranks],
+            opt: vec![0.0; n_ranks],
+            loss: 0.0,
+            comm: 0.0,
+            comm_inter_node: 0.0,
+            ranks_per_node: usize::MAX,
+            concat_factor: 1.0,
+        }
+    }
+
+    /// Uniform costs with explicit f/p1/p2 ratios.
+    pub fn ratios(n_ranks: usize, f: f64, p1: f64, p2: f64) -> Self {
+        CostModel {
+            fwd: vec![f; n_ranks],
+            p1: vec![p1; n_ranks],
+            p2: vec![p2; n_ranks],
+            ..CostModel::unit(n_ranks)
+        }
+    }
+
+    /// Hop latency from rank r to r±1.
+    pub fn hop(&self, from: usize, to: usize) -> f64 {
+        let a = from.min(to);
+        let cross = self.ranks_per_node != usize::MAX
+            && (a + 1) % self.ranks_per_node == 0;
+        self.comm + if cross { self.comm_inter_node } else { 0.0 }
+    }
+}
+
+/// Per-rank, per-microbatch byte classes (from the manifest) driving the
+/// memory timeline (Fig 4/5 cross-check, Fig 7 OOM prediction).
+#[derive(Debug, Clone)]
+pub struct MemModel {
+    /// Static residency: params + grads + optimizer state (+ anything
+    /// held for the whole step), per rank.
+    pub static_bytes: Vec<u64>,
+    /// res1 (released at p1), res2 (held to p2), inter (p1 -> p2) per
+    /// microbatch per rank.
+    pub res1: Vec<u64>,
+    pub res2: Vec<u64>,
+    pub inter: Vec<u64>,
+}
+
+/// Result of simulating one training step.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub makespan: f64,
+    pub busy: Vec<f64>,
+    /// idle / (N * makespan) — the paper's bubble ratio.
+    pub bubble_ratio: f64,
+    pub spans: Vec<Vec<Span>>,
+    /// Peak live bytes per rank (only if a MemModel was supplied).
+    pub peak_bytes: Vec<u64>,
+}
+
+impl SimResult {
+    /// Samples/second given samples per microbatch and total microbatches.
+    pub fn throughput(&self, samples_per_mb: usize, n_mb: usize) -> f64 {
+        (samples_per_mb * n_mb) as f64 / self.makespan
+    }
+
+    /// Max of `peak_bytes` — the paper's Fig 4 "peak memory" metric
+    /// (max over GPUs of per-GPU peak reserved memory).
+    pub fn max_peak(&self) -> u64 {
+        self.peak_bytes.iter().copied().max().unwrap_or(0)
+    }
+}

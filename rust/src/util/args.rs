@@ -1,0 +1,101 @@
+//! Tiny CLI argument parser (substrate: clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding the program name). `flag_names` lists options
+    /// that take no value.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.options.insert(
+                        stripped[..eq].to_string(),
+                        stripped[eq + 1..].to_string(),
+                    );
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a number")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            &sv(&["run", "--preset", "bert-s", "--steps=10", "--verbose"]),
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("preset"), Some("bert-s"));
+        assert_eq!(a.get_usize("steps", 0), 10);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(&sv(&["--x"]), &[]);
+        assert!(a.has("x"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]), &[]);
+        assert_eq!(a.get_or("k", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

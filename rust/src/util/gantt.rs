@@ -1,0 +1,106 @@
+//! ASCII Gantt renderer for pipeline timelines (regenerates the paper's
+//! Figure 1 schedule diagrams as text).
+
+/// One executed span on one rank's timeline.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub start: f64,
+    pub end: f64,
+    pub label: SpanKind,
+    pub mb: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Fwd,
+    BwdP1,
+    BwdP2,
+    Opt,
+    Comm,
+}
+
+impl SpanKind {
+    fn ch(&self) -> char {
+        match self {
+            SpanKind::Fwd => 'F',
+            SpanKind::BwdP1 => '1',
+            SpanKind::BwdP2 => '2',
+            SpanKind::Opt => 'O',
+            SpanKind::Comm => '·',
+        }
+    }
+}
+
+/// Render per-rank spans as an ASCII chart, `cols` characters wide.
+/// Digits/letters show which op occupies each time slice; '.' is idle.
+pub fn render(ranks: &[Vec<Span>], cols: usize) -> String {
+    let makespan = ranks
+        .iter()
+        .flat_map(|r| r.iter().map(|s| s.end))
+        .fold(0.0f64, f64::max);
+    if makespan <= 0.0 {
+        return String::new();
+    }
+    let scale = cols as f64 / makespan;
+    let mut out = String::new();
+    for (ri, spans) in ranks.iter().enumerate() {
+        let mut line = vec!['.'; cols];
+        for s in spans {
+            let a = (s.start * scale).floor() as usize;
+            let b = ((s.end * scale).ceil() as usize).min(cols);
+            for cell in line.iter_mut().take(b).skip(a) {
+                *cell = s.label.ch();
+            }
+        }
+        out.push_str(&format!("rank {:>2} |{}|\n", ri, line.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "          makespan = {:.2}  (F=fwd 1=bwd-p1 2=bwd-p2 O=opt .=idle)\n",
+        makespan
+    ));
+    out
+}
+
+/// CSV export: rank,kind,mb,start,end (for external plotting).
+pub fn to_csv(ranks: &[Vec<Span>]) -> String {
+    let mut out = String::from("rank,kind,microbatch,start,end\n");
+    for (ri, spans) in ranks.iter().enumerate() {
+        for s in spans {
+            out.push_str(&format!(
+                "{},{:?},{},{:.6},{:.6}\n",
+                ri, s.label, s.mb, s.start, s.end
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_spans() {
+        let ranks = vec![
+            vec![
+                Span { start: 0.0, end: 1.0, label: SpanKind::Fwd, mb: 0 },
+                Span { start: 2.0, end: 4.0, label: SpanKind::BwdP1, mb: 0 },
+            ],
+            vec![Span { start: 1.0, end: 2.0, label: SpanKind::Fwd, mb: 0 }],
+        ];
+        let s = render(&ranks, 40);
+        assert!(s.contains("rank  0"));
+        assert!(s.contains('F'));
+        assert!(s.contains('1'));
+        assert!(s.contains("makespan = 4.00"));
+    }
+
+    #[test]
+    fn csv_has_rows() {
+        let ranks = vec![vec![Span {
+            start: 0.0, end: 1.5, label: SpanKind::BwdP2, mb: 3,
+        }]];
+        let csv = to_csv(&ranks);
+        assert!(csv.contains("0,BwdP2,3,0.000000,1.500000"));
+    }
+}

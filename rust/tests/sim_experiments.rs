@@ -1,0 +1,123 @@
+//! Tests over the experiment harness's simulator-only paths (no
+//! artifacts needed — these always run).
+
+use twobp::experiments;
+use twobp::schedule::{generate, validate::validate, ScheduleKind};
+use twobp::sim::{simulate, CostModel, MemModel};
+
+#[test]
+fn table1_report_contains_all_schedules_and_matches() {
+    let out = experiments::table1();
+    for name in ["naive", "gpipe", "1f1b-1", "1f1b-2"] {
+        assert!(out.contains(name), "missing {name}");
+    }
+    // sim and formula columns must agree: every row renders both with
+    // identical text for bubble ratios (4 decimal places)
+    for line in out.lines().filter(|l| l.starts_with("| ")) {
+        let cells: Vec<&str> =
+            line.split('|').map(|c| c.trim()).filter(|c| !c.is_empty())
+                .collect();
+        if cells.len() == 8 && cells[1].parse::<usize>().is_ok() {
+            assert_eq!(cells[2], cells[3], "bubble mismatch: {line}");
+            assert_eq!(cells[4], cells[5], "2BP bubble mismatch: {line}");
+        }
+    }
+}
+
+#[test]
+fn fig1_renders_all_eight_timelines() {
+    let out = experiments::fig1(4, 64);
+    assert_eq!(out.matches("makespan =").count(), 8);
+    assert_eq!(out.matches("+2bp").count(), 4);
+    // 2BP timelines must contain deferred p2 spans
+    assert!(out.contains('2'));
+}
+
+#[test]
+fn gain_monotone_in_p2_share() {
+    // the larger backward-p2's share of the backward pass, the more 2BP
+    // can defer into bubbles: gain must be non-decreasing in p2 share
+    // (1F1B-1, fixed total backward cost)
+    let n = 4;
+    let mut last = 0.0;
+    for p2_share in [0.2, 0.4, 0.6, 0.8] {
+        let cm = CostModel::ratios(n, 1.0, 2.0 * (1.0 - p2_share),
+                                   2.0 * p2_share);
+        let a = simulate(&generate(ScheduleKind::OneF1B1, false, n, 0, false),
+                         &cm, None).unwrap();
+        let b = simulate(&generate(ScheduleKind::OneF1B1, true, n, 0, false),
+                         &cm, None).unwrap();
+        let gain = a.makespan / b.makespan;
+        assert!(gain >= last - 1e-9,
+                "gain not monotone at share {p2_share}: {gain} < {last}");
+        assert!(gain >= 1.0 - 1e-9);
+        last = gain;
+    }
+    assert!(last > 1.2, "gain never became substantial: {last}");
+}
+
+#[test]
+fn comm_degrades_gain_like_paper_fig6() {
+    // paper §4.3: observed gain decays with communication share
+    let n = 8;
+    let gain_at = |comm: f64| {
+        let mut cm = CostModel::unit(n);
+        cm.comm = comm;
+        let a = simulate(&generate(ScheduleKind::OneF1B1, false, n, 0, false),
+                         &cm, None).unwrap();
+        let b = simulate(&generate(ScheduleKind::OneF1B1, true, n, 0, false),
+                         &cm, None).unwrap();
+        a.makespan / b.makespan
+    };
+    assert!(gain_at(0.5) < gain_at(0.0));
+}
+
+#[test]
+fn checkpointing_ablation_tradeoff_shape() {
+    // pure-sim version of the §5 ablation: dropping inter from the stash
+    // must reduce peak memory; surcharging p2 must not increase
+    // throughput
+    let n = 4;
+    let plan = generate(ScheduleKind::OneF1B2, true, n, 0, false);
+    validate(&plan).unwrap();
+    let mm = MemModel {
+        static_bytes: vec![100; n],
+        res1: vec![10; n],
+        res2: vec![50; n],
+        inter: vec![40; n],
+    };
+    let base = simulate(&plan, &CostModel::unit(n), Some(&mm)).unwrap();
+    let mm_ckpt = MemModel { inter: vec![0; n], ..mm };
+    let mut cm = CostModel::unit(n);
+    for r in 0..n {
+        cm.p2[r] += 0.5 * cm.p1[r];
+    }
+    let ckpt = simulate(&plan, &cm, Some(&mm_ckpt)).unwrap();
+    assert!(ckpt.max_peak() < base.max_peak());
+    assert!(ckpt.makespan >= base.makespan - 1e-9);
+}
+
+#[test]
+fn memory_planner_style_prediction_consistency() {
+    // sim peak with a MemModel must be at least static and at most
+    // static + M * (res1+res2+inter) per rank
+    let n = 4;
+    for kind in ScheduleKind::all() {
+        for two_bp in [false, true] {
+            let plan = generate(kind, two_bp, n, 0, false);
+            let m = plan.n_microbatches as u64;
+            let mm = MemModel {
+                static_bytes: vec![1000; n],
+                res1: vec![7; n],
+                res2: vec![13; n],
+                inter: vec![5; n],
+            };
+            let res = simulate(&plan, &CostModel::unit(n), Some(&mm)).unwrap();
+            for &p in &res.peak_bytes {
+                assert!(p >= 1000);
+                assert!(p <= 1000 + m * (7 + 13 + 5),
+                        "{} 2bp={two_bp}: peak {p}", kind.name());
+            }
+        }
+    }
+}
