@@ -1,22 +1,24 @@
 //! Microbenchmarks of the L3 hot path (the §Perf instrument): executable
 //! dispatch, host<->literal conversion, channel transfer, stash churn.
 //!
-//! `cargo bench --bench hotpath_micro`
+//! `cargo bench --features pjrt --bench hotpath_micro`
 //!
 //! The coordinator must never be the bottleneck (DESIGN.md §9): each of
 //! these costs is compared against the smallest real op (a tiny stage's
 //! fwd ≈ hundreds of µs), and the bench fails loudly if L3 overhead gets
-//! within an order of magnitude of it.
+//! within an order of magnitude of it.  Results are also appended to
+//! `BENCH_sim.json` so the perf trajectory is tracked across PRs.
 
 use std::path::Path;
 
 use twobp::models::{DType, Manifest};
 use twobp::pipeline::comm::link;
-use twobp::runtime::{scalar_i32, Device, HostTensor};
-use twobp::util::stats::{bench, fmt_duration, summarize};
+use twobp::runtime::{scalar_i32, Device, HostTensor, ZeroCache};
+use twobp::util::stats::{bench, fmt_duration, summarize, BenchRecorder};
 
 fn main() -> anyhow::Result<()> {
     println!("L3 hot-path microbenchmarks\n");
+    let mut rec = BenchRecorder::default_file();
 
     // host tensor round trip (the wire format)
     let data: Vec<f32> = (0..64 * 1024).map(|i| i as f32).collect();
@@ -26,6 +28,7 @@ fn main() -> anyhow::Result<()> {
     }));
     println!("host_tensor 256x256 f32 encode+decode: {} ± {}",
              fmt_duration(t.mean), fmt_duration(t.std));
+    rec.record_summary("hotpath_host_tensor_roundtrip_s", &t);
 
     // channel transfer
     let (tx, mut rx) = link();
@@ -35,6 +38,7 @@ fn main() -> anyhow::Result<()> {
     }));
     println!("tagged channel send+recv 256 KiB:       {} ± {}",
              fmt_duration(t.mean), fmt_duration(t.std));
+    rec.record_summary("hotpath_channel_256kib_s", &t);
 
     // literal upload/download
     if let Ok(_d) = Device::cpu() {
@@ -45,16 +49,29 @@ fn main() -> anyhow::Result<()> {
         }));
         println!("literal upload+download 256 KiB:        {} ± {}",
                  fmt_duration(t.mean), fmt_duration(t.std));
+        rec.record_summary("hotpath_literal_roundtrip_s", &t);
     }
 
-    // zero-grad allocation (per OptStep)
-    let t = summarize(&bench(3, 20, || {
+    // zero-grad churn: the old per-OptStep path (fresh 1 MiB alloc per
+    // reset) vs the ZeroCache the stage workers now use
+    let t_alloc = summarize(&bench(3, 20, || {
         std::hint::black_box(
             HostTensor::zeros(&[512, 512], DType::F32).to_literal().unwrap(),
         );
     }));
-    println!("zero-literal alloc 1 MiB:               {} ± {}",
-             fmt_duration(t.mean), fmt_duration(t.std));
+    println!("zero-literal alloc 1 MiB (old path):    {} ± {}",
+             fmt_duration(t_alloc.mean), fmt_duration(t_alloc.std));
+    rec.record_summary("hotpath_zero_alloc_1mib_s", &t_alloc);
+
+    let mut zc = ZeroCache::new();
+    let t_cached = summarize(&bench(3, 20, || {
+        std::hint::black_box(zc.get(&[512, 512], DType::F32));
+    }));
+    assert_eq!(zc.len(), 1, "cache must hold one literal per shape");
+    println!("zero-literal via ZeroCache (reused):    {} ± {}  ({:.0}x)",
+             fmt_duration(t_cached.mean), fmt_duration(t_cached.std),
+             t_alloc.mean / t_cached.mean.max(1e-12));
+    rec.record_summary("hotpath_zero_cached_s", &t_cached);
 
     // executable dispatch floor (tiny init artifact, if present)
     if Path::new("artifacts/transformer-tiny/manifest.json").exists() {
@@ -66,8 +83,14 @@ fn main() -> anyhow::Result<()> {
         }));
         println!("stage0 init dispatch+run:               {} ± {}",
                  fmt_duration(t.mean), fmt_duration(t.std));
+        rec.record_summary("hotpath_init_dispatch_s", &t);
     } else {
         println!("(artifacts missing — skipping dispatch bench)");
+    }
+
+    match rec.write() {
+        Ok(()) => println!("\nwrote BENCH_sim.json"),
+        Err(e) => eprintln!("\nwarning: could not write BENCH_sim.json: {e}"),
     }
     Ok(())
 }

@@ -1,0 +1,178 @@
+//! Bench: schedule-space sweep throughput — the event-driven engine +
+//! parallel grid runner against the sequential linear-scan baseline.
+//!
+//! ```text
+//! cargo bench --bench sweep_throughput [-- --quick] [-- --threads K]
+//! ```
+//!
+//! Two parts:
+//!
+//! 1. **Differential comparison** (≥1k cells, 12–64 ranks — the regime
+//!    where the O(total_ops × n_ranks) baseline hurts): times the old
+//!    engine sequentially, the event-driven engine sequentially, and
+//!    the event-driven engine across all cores — asserting along the
+//!    way that all three produce bit-identical results per cell.
+//!    Acceptance target: ≥5x combined speedup.
+//! 2. **Throughput grid** (~10k cells up to 64 ranks × 2048 total
+//!    microbatch-ops): event-driven + parallel only, repeated 3× and
+//!    reported as cells/sec mean ± std.
+//!
+//! Both parts are appended to `BENCH_sim.json` (see
+//! `util::stats::BenchRecorder`) so the perf trajectory is tracked
+//! across PRs.
+
+use std::time::Instant;
+
+use twobp::experiments::sweep::{self, Cell, CellOut};
+use twobp::util::args::Args;
+use twobp::util::json::{obj, Json};
+use twobp::util::stats::{fmt_duration, summarize, BenchRecorder};
+
+fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+fn assert_identical(cells: &[Cell], a: &[CellOut], b: &[CellOut],
+                    what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: result count");
+    for i in 0..cells.len() {
+        assert_eq!(
+            a[i].makespan.to_bits(), b[i].makespan.to_bits(),
+            "{what}: makespan diverged at cell {i} ({})",
+            cells[i].describe()
+        );
+        assert_eq!(
+            a[i].bubble_ratio.to_bits(), b[i].bubble_ratio.to_bits(),
+            "{what}: bubble ratio diverged at cell {i} ({})",
+            cells[i].describe()
+        );
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["quick"]);
+    let quick = args.has("quick");
+    let threads = match args.get_usize("threads", 0) {
+        0 => sweep::default_threads(),
+        t => t,
+    };
+    let mut rec = BenchRecorder::default_file();
+
+    let ratios = [(1.0, 1.0, 1.0), (1.0, 1.2, 0.8), (1.0, 0.6, 1.4),
+                  (1.0, 1.5, 0.5)];
+    let comms = [0.0, 0.05, 0.2];
+
+    // -- part 1: differential comparison against the naive baseline --------
+    let cmp_ranks: &[usize] =
+        if quick { &[2, 4, 8] } else { &[12, 16, 24, 32, 48, 64] };
+    let cmp_mults: &[usize] = if quick { &[1] } else { &[1, 2] };
+    let cells = sweep::grid(cmp_ranks, cmp_mults, &ratios, &comms);
+    if !quick {
+        assert!(cells.len() >= 1000,
+                "comparison grid shrank below 1k cells ({})", cells.len());
+    }
+    let total_ops_est: usize = cells.iter().map(|c| {
+        // fwd + p1 (+ fused p2) per microbatch per rank, roughly
+        c.n_ranks * c.n_microbatches * if c.two_bp { 2 } else { 3 }
+    }).sum();
+    println!(
+        "sweep_throughput: comparison grid = {} cells (~{} sim ops), \
+         {threads} threads available\n",
+        cells.len(), total_ops_est
+    );
+
+    let (naive, t_naive) =
+        time(|| sweep::run_grid(&cells, 1, |_, c| sweep::eval_naive(c)));
+    println!("  naive engine, sequential     : {}",
+             fmt_duration(t_naive));
+    let (ev_seq, t_seq) =
+        time(|| sweep::run_grid(&cells, 1, |_, c| sweep::eval(c)));
+    println!("  event-driven, sequential     : {}  ({:.2}x)",
+             fmt_duration(t_seq), t_naive / t_seq);
+    let (ev_par, t_par) =
+        time(|| sweep::run_grid(&cells, threads, |_, c| sweep::eval(c)));
+    println!("  event-driven, {threads:>2} threads     : {}  ({:.2}x)",
+             fmt_duration(t_par), t_naive / t_par);
+
+    assert_identical(&cells, &naive, &ev_seq, "naive vs event(seq)");
+    assert_identical(&cells, &ev_seq, &ev_par, "event(seq) vs event(par)");
+    println!("  results: all {} cells bit-identical across engines \
+              and thread counts", cells.len());
+
+    let speedup_engine = t_naive / t_seq;
+    let speedup_total = t_naive / t_par;
+    println!(
+        "\n  speedup: engine alone {speedup_engine:.2}x, engine+parallel \
+         {speedup_total:.2}x  (acceptance target >= 5x)\n"
+    );
+
+    rec.record("sweep_comparison", obj(vec![
+        ("cells", Json::Num(cells.len() as f64)),
+        ("naive_seq_s", Json::Num(t_naive)),
+        ("event_seq_s", Json::Num(t_seq)),
+        ("event_par_s", Json::Num(t_par)),
+        ("speedup_engine", Json::Num(speedup_engine)),
+        ("speedup_total", Json::Num(speedup_total)),
+        ("threads", Json::Num(threads as f64)),
+        ("identical", Json::Bool(true)),
+    ]));
+
+    // -- part 2: big-grid throughput (event-driven + parallel only) ---------
+    let tp_ranks: &[usize] = if quick {
+        &[2, 4, 8]
+    } else {
+        &[2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64]
+    };
+    let tp_mults: &[usize] = if quick { &[1] } else { &[1, 2, 3, 4] };
+    let tp_ratios = [(1.0, 1.0, 1.0), (1.0, 1.2, 0.8), (1.0, 0.6, 1.4),
+                     (1.0, 1.5, 0.5), (1.0, 0.8, 1.2), (1.0, 2.0, 1.0)];
+    let tp_comms = [0.0, 0.02, 0.1, 0.3];
+    let big = sweep::grid(tp_ranks, tp_mults, &tp_ratios, &tp_comms);
+    println!("throughput grid = {} cells (ranks up to {}):",
+             big.len(), tp_ranks.last().unwrap());
+
+    let reps = if quick { 1 } else { 3 };
+    let mut cps = Vec::with_capacity(reps);
+    let mut sim_ops = 0usize;
+    for rep in 0..reps {
+        let (outs, dt) =
+            time(|| sweep::run_grid(&big, threads, |_, c| sweep::eval(c)));
+        sim_ops = outs.iter().map(|o| o.total_ops).sum();
+        cps.push(big.len() as f64 / dt);
+        println!("  rep {rep}: {} -> {:.0} cells/s ({:.2e} plan ops/s)",
+                 fmt_duration(dt), big.len() as f64 / dt,
+                 sim_ops as f64 / dt);
+    }
+    let s = summarize(&cps);
+    println!("\n  cells/sec: mean {:.0} ± {:.0} (n={})", s.mean, s.std, s.n);
+
+    rec.record("sweep_throughput", obj(vec![
+        ("cells", Json::Num(big.len() as f64)),
+        ("plan_ops", Json::Num(sim_ops as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("quick", Json::Bool(quick)),
+    ]));
+    rec.record_summary("sweep_throughput_cells_per_sec", &s);
+    match rec.write() {
+        Ok(()) => println!("  wrote BENCH_sim.json"),
+        Err(e) => eprintln!("  warning: could not write BENCH_sim.json: {e}"),
+    }
+
+    if !quick && speedup_total < 5.0 {
+        if threads > 1 {
+            eprintln!(
+                "FAIL: combined speedup {speedup_total:.2}x below the 5x \
+                 acceptance target"
+            );
+            std::process::exit(1);
+        }
+        eprintln!(
+            "warning: single-threaded host — combined speedup \
+             {speedup_total:.2}x is engine-only (target assumes the \
+             parallel runner has cores to use)"
+        );
+    }
+}

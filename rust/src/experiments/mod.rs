@@ -3,12 +3,26 @@
 //! Shared by the `twobp bench` CLI subcommand and the `cargo bench`
 //! targets in `rust/benches/` (each bench target is a thin wrapper).
 //! See DESIGN.md §5 for the experiment index.
+//!
+//! Pure-simulator experiments (`table1`, `fig1`, `schedule_space`, the
+//! checkpoint ablation) always build; the measured ones (`fig3`–`fig5`,
+//! `table3`, `fig6_fig7`) need the real PJRT runtime and sit behind the
+//! `pjrt` feature.  Grid-shaped experiments fan their independent sim
+//! cells out over [`sweep::run_grid`].
+
+pub mod sweep;
+
+use std::collections::HashMap;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::config::{P2Mode, RunConfig, BENCH_PRESETS};
+#[cfg(feature = "pjrt")]
 use crate::metrics::{memory_table, throughput_table, MemoryRow, ThroughputRow};
 use crate::models::Manifest;
+#[cfg(feature = "pjrt")]
 use crate::pipeline::train;
 use crate::schedule::{generate, validate::validate, ScheduleKind};
 use crate::sim::{simulate, CostModel};
@@ -16,6 +30,7 @@ use crate::util::gantt;
 use crate::util::table::Table;
 
 /// Table 1: analytic bubble ratios vs simulated, for N = 2..16.
+/// The (schedule × N) cells are independent sims — swept in parallel.
 pub fn table1() -> String {
     let mut t = Table::new(&[
         "schedule", "N", "bubble (sim)", "bubble (paper formula)",
@@ -24,8 +39,14 @@ pub fn table1() -> String {
     ])
     .with_title("Table 1: bubble ratios and throughput gains \
                  (equal fwd/p1/p2 cost, sim vs closed form)");
-    for kind in ScheduleKind::all() {
-        for n in [2usize, 4, 8, 16] {
+    let cells: Vec<(ScheduleKind, usize)> = ScheduleKind::all()
+        .into_iter()
+        .flat_map(|kind| [2usize, 4, 8, 16].into_iter().map(move |n| (kind, n)))
+        .collect();
+    let rows = sweep::run_grid(
+        &cells,
+        sweep::default_threads(),
+        |_, &(kind, n)| -> Vec<String> {
             let nf = n as f64;
             // paper closed forms
             let (b0f, b1f) = match kind {
@@ -54,7 +75,7 @@ pub fn table1() -> String {
                     .bubble_ratio
             };
             let (b0, b1) = (sim_b(false), sim_b(true));
-            t.row(vec![
+            vec![
                 kind.name().into(),
                 n.to_string(),
                 format!("{b0:.4}"),
@@ -63,8 +84,11 @@ pub fn table1() -> String {
                 format!("{b1f:.4}"),
                 format!("{:.3}x", (1.0 - b1) / (1.0 - b0)),
                 format!("{:.3}x", (1.0 - b1f) / (1.0 - b0f)),
-            ]);
-        }
+            ]
+        },
+    );
+    for row in rows {
+        t.row(row);
     }
     t.render()
 }
@@ -89,9 +113,134 @@ pub fn fig1(n: usize, cols: usize) -> String {
     out
 }
 
+/// Schedule-space exploration (the ROADMAP's "as many scenarios as you
+/// can imagine", PipeDream-style): sweep every schedule variant ± 2BP
+/// over a (ranks × microbatch-multiplier × cost-ratio × comm) grid in
+/// parallel, and report, per variant, the bubble-ratio envelope and
+/// where 2BP pays off the most against the fused-autograd baseline.
+pub fn schedule_space(
+    ranks: &[usize],
+    m_mults: &[usize],
+    threads: usize,
+) -> String {
+    let ratios = [(1.0, 1.0, 1.0), (1.0, 1.2, 0.8), (1.0, 0.6, 1.4)];
+    let comms = [0.0, 0.1];
+    let cells = sweep::grid(ranks, m_mults, &ratios, &comms);
+    let threads = if threads == 0 {
+        sweep::default_threads()
+    } else {
+        threads
+    };
+    let t0 = Instant::now();
+    let outs = sweep::run_grid(&cells, threads, |_, c| sweep::eval(c));
+    let dt = t0.elapsed().as_secs_f64();
+
+    // fused-autograd baselines for gain pairing, keyed by everything but
+    // the 2BP flag (the eager variant's baseline is plain 1F1B-2)
+    type Key = (&'static str, usize, usize, u64, u64, u64, u64);
+    let key = |c: &sweep::Cell, kind: ScheduleKind| -> Key {
+        (kind.name(), c.n_ranks, c.n_microbatches, c.fwd.to_bits(),
+         c.p1.to_bits(), c.p2.to_bits(), c.comm.to_bits())
+    };
+    let mut base: HashMap<Key, f64> = HashMap::new();
+    for (c, o) in cells.iter().zip(&outs) {
+        if !c.two_bp {
+            base.insert(key(c, c.kind), o.makespan);
+        }
+    }
+
+    struct Agg {
+        cells: usize,
+        bubble_sum: f64,
+        bubble_min: f64,
+        min_cell: usize,
+        best_gain: f64,
+        best_gain_cell: Option<usize>,
+    }
+    let combos = sweep::combos();
+    let mut aggs: Vec<Agg> = combos
+        .iter()
+        .map(|_| Agg {
+            cells: 0,
+            bubble_sum: 0.0,
+            bubble_min: f64::INFINITY,
+            min_cell: 0,
+            best_gain: 0.0,
+            best_gain_cell: None,
+        })
+        .collect();
+
+    for (i, (c, o)) in cells.iter().zip(&outs).enumerate() {
+        let slot = combos
+            .iter()
+            .position(|&(k, b)| k == c.kind && b == c.two_bp)
+            .expect("cell outside combo set");
+        let a = &mut aggs[slot];
+        a.cells += 1;
+        a.bubble_sum += o.bubble_ratio;
+        if o.bubble_ratio < a.bubble_min {
+            a.bubble_min = o.bubble_ratio;
+            a.min_cell = i;
+        }
+        if c.two_bp {
+            let base_kind = if c.kind == ScheduleKind::OneF1B2EagerP2 {
+                ScheduleKind::OneF1B2
+            } else {
+                c.kind
+            };
+            if let Some(ms0) = base.get(&key(c, base_kind)) {
+                let gain = ms0 / o.makespan;
+                if gain > a.best_gain {
+                    a.best_gain = gain;
+                    a.best_gain_cell = Some(i);
+                }
+            }
+        }
+    }
+
+    let mut t = Table::new(&[
+        "schedule", "cells", "mean bubble", "min bubble", "best 2BP gain",
+        "best-gain cell",
+    ])
+    .with_title("Schedule-space sweep: bubble envelope and 2BP payoff \
+                 per schedule variant");
+    for (slot, &(kind, two_bp)) in combos.iter().enumerate() {
+        let a = &aggs[slot];
+        if a.cells == 0 {
+            continue;
+        }
+        t.row(vec![
+            format!("{}{}", kind.name(), if two_bp { "+2bp" } else { "" }),
+            a.cells.to_string(),
+            format!("{:.4}", a.bubble_sum / a.cells as f64),
+            format!("{:.4} ({})", a.bubble_min,
+                    cells[a.min_cell].describe()),
+            match a.best_gain_cell {
+                Some(_) => format!("{:.3}x", a.best_gain),
+                None => "-".into(),
+            },
+            match a.best_gain_cell {
+                Some(i) => cells[i].describe(),
+                None => "-".into(),
+            },
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "{} cells in {:.3}s — {:.0} cells/s on {} threads \
+         (event-driven engine)\n",
+        cells.len(),
+        dt,
+        cells.len() as f64 / dt.max(1e-9),
+        threads,
+    ));
+    out
+}
+
 /// Per-preset measured run for one (schedule, 2bp) cell against a
 /// persistent cluster: trains for `steps` real steps and returns
 /// (throughput samples/s via calibrated replay, max per-rank peak bytes).
+#[cfg(feature = "pjrt")]
 fn run_cell(
     cluster: &crate::pipeline::Cluster,
     preset: &str,
@@ -112,6 +261,7 @@ fn run_cell(
     Ok((report.simulated_throughput()?, report.max_peak()))
 }
 
+#[cfg(feature = "pjrt")]
 fn cluster_for(preset: &str) -> Result<crate::pipeline::Cluster> {
     crate::pipeline::Cluster::new(&RunConfig {
         preset: preset.into(),
@@ -129,6 +279,7 @@ fn cluster_for(preset: &str) -> Result<crate::pipeline::Cluster> {
 /// replayed through every schedule ± 2BP; the real runs still execute
 /// (memory accounting + correctness), only their *timing* is taken from
 /// the clean calibration.  See DESIGN.md §3.
+#[cfg(feature = "pjrt")]
 pub fn fig3(steps: usize, presets: &[&str]) -> Result<String> {
     let mut rows = Vec::new();
     let mut mem_rows = Vec::new();
@@ -197,6 +348,7 @@ pub fn fig3(steps: usize, presets: &[&str]) -> Result<String> {
 }
 
 /// Fig 4 standalone (memory only, all four models).
+#[cfg(feature = "pjrt")]
 pub fn fig4(steps: usize, presets: &[&str]) -> Result<String> {
     let mut mem_rows = Vec::new();
     for preset in presets {
@@ -219,6 +371,7 @@ pub fn fig4(steps: usize, presets: &[&str]) -> Result<String> {
 }
 
 /// Fig 5: eager-p2 1F1B-2 variant vs plain 1F1B-2 (+2BP) memory.
+#[cfg(feature = "pjrt")]
 pub fn fig5(steps: usize, preset: &str) -> Result<String> {
     let cluster = cluster_for(preset)?;
     let (t_plain, m_plain) = run_cell(
@@ -244,6 +397,7 @@ pub fn fig5(steps: usize, preset: &str) -> Result<String> {
 }
 
 /// Table 3: concat vs loop backward-p2 under 1F1B-1 + 2BP.
+#[cfg(feature = "pjrt")]
 pub fn table3(steps: usize, presets: &[&str]) -> Result<String> {
     let mut t = Table::new(&["model", "tput w/ concat", "tput w/o concat",
                              "ratio"])
@@ -270,7 +424,10 @@ pub fn table3(steps: usize, presets: &[&str]) -> Result<String> {
 /// Figs 6/7: scaling. Uses measured per-op costs from a real N=4 run of
 /// `preset`, then scales block counts per stage in the simulator:
 /// fixed-size (32 blocks split over N) and variable-size (8 blocks per
-/// stage), with an inter-node comm penalty above 4 ranks/node.
+/// stage), with an inter-node comm penalty above 4 ranks/node.  The
+/// (figure × schedule × N) sim cells run in parallel via the sweep
+/// runner; only the one calibration run is serial.
+#[cfg(feature = "pjrt")]
 pub fn fig6_fig7(steps: usize, preset: &str) -> Result<String> {
     // calibrate per-block costs from a real contention-free (naive) run
     let cfg = RunConfig {
@@ -316,81 +473,106 @@ pub fn fig6_fig7(steps: usize, preset: &str) -> Result<String> {
             "Figs 6/7: scaling (per-block costs calibrated from {preset}: \
              f={f_b:.2e}s p1={p1_b:.2e}s p2={p2_b:.2e}s/block)"));
     let mem = manifest.mem_model();
+
+    let mut sim_cells: Vec<(&'static str, bool, ScheduleKind, usize)> =
+        Vec::new();
     for (figure, fixed) in [("fig6-fixed", true), ("fig7-variable", false)] {
         for kind in [ScheduleKind::OneF1B1, ScheduleKind::OneF1B2] {
             for n in [4usize, 8, 16] {
-                let blocks_per_stage =
-                    if fixed { (32 + n - 1) / n } else { 8 };
-                let scale = blocks_per_stage as f64;
-                let mut cm = CostModel {
-                    fwd: vec![f_b * scale; n],
-                    p1: vec![p1_b * scale; n],
-                    p2: vec![p2_b * scale; n],
-                    opt: vec![measured.opt[0]; n],
-                    loss: 0.0,
-                    comm,
-                    comm_inter_node: comm_inter,
-                    ranks_per_node: 4,
-                    concat_factor: 1.0,
-                };
-                cm.comm = comm;
-                let mm = crate::sim::MemModel {
-                    static_bytes: vec![
-                        (mem.static_bytes.iter().sum::<u64>() as f64
-                            / mem.static_bytes.len() as f64
-                            * scale / blocks_cal) as u64; n],
-                    res1: vec![(mem.res1[0] as f64 * scale
-                        / blocks_cal.max(1.0)) as u64; n],
-                    res2: vec![(mem.res2[0] as f64 * scale
-                        / blocks_cal.max(1.0)) as u64; n],
-                    inter: vec![(mem.inter[0] as f64 * scale
-                        / blocks_cal.max(1.0)) as u64; n],
-                };
-                let samples = manifest.samples_per_microbatch;
-                let run = |two_bp: bool| -> Result<(f64, u64)> {
-                    let plan = generate(kind, two_bp, n, 0, false);
-                    validate(&plan).map_err(|e| anyhow!("{e}"))?;
-                    let res = simulate(&plan, &cm, Some(&mm))
-                        .map_err(|e| anyhow!("{e}"))?;
-                    Ok((res.throughput(samples, plan.n_microbatches),
-                        res.max_peak()))
-                };
-                let (t0, _) = run(false)?;
-                let (t1, peak1) = run(true)?;
-                // Fig 7's OOM: 16 GB per device at paper scale; flag when
-                // the scaled stash exceeds a 2 GiB budget on this scale
-                let oom = !fixed && peak1 > 2 * (1 << 30);
-                t.row(vec![
-                    figure.into(),
-                    kind.name().into(),
-                    n.to_string(),
-                    blocks_per_stage.to_string(),
-                    format!("{t0:.2}"),
-                    if oom { "OOM".into() } else { format!("{t1:.2}") },
-                    if oom { "-".into() }
-                    else { format!("{:.2}x", t1 / t0) },
-                    if oom { "stash exceeds budget (paper: OOM at N=16)".into() }
-                    else { String::new() },
-                ]);
+                sim_cells.push((figure, fixed, kind, n));
             }
         }
+    }
+    let rows = sweep::run_grid(
+        &sim_cells,
+        sweep::default_threads(),
+        |_, &(figure, fixed, kind, n)| -> Result<Vec<String>> {
+            let blocks_per_stage = if fixed { (32 + n - 1) / n } else { 8 };
+            let scale = blocks_per_stage as f64;
+            let cm = CostModel {
+                fwd: vec![f_b * scale; n],
+                p1: vec![p1_b * scale; n],
+                p2: vec![p2_b * scale; n],
+                opt: vec![measured.opt[0]; n],
+                loss: 0.0,
+                comm,
+                comm_inter_node: comm_inter,
+                ranks_per_node: 4,
+                concat_factor: 1.0,
+            };
+            let mm = crate::sim::MemModel {
+                static_bytes: vec![
+                    (mem.static_bytes.iter().sum::<u64>() as f64
+                        / mem.static_bytes.len() as f64
+                        * scale / blocks_cal) as u64; n],
+                res1: vec![(mem.res1[0] as f64 * scale
+                    / blocks_cal.max(1.0)) as u64; n],
+                res2: vec![(mem.res2[0] as f64 * scale
+                    / blocks_cal.max(1.0)) as u64; n],
+                inter: vec![(mem.inter[0] as f64 * scale
+                    / blocks_cal.max(1.0)) as u64; n],
+            };
+            let samples = manifest.samples_per_microbatch;
+            let run = |two_bp: bool| -> Result<(f64, u64)> {
+                let plan = generate(kind, two_bp, n, 0, false);
+                validate(&plan).map_err(|e| anyhow!("{e}"))?;
+                let res = simulate(&plan, &cm, Some(&mm))
+                    .map_err(|e| anyhow!("{e}"))?;
+                Ok((res.throughput(samples, plan.n_microbatches),
+                    res.max_peak()))
+            };
+            let (t0, _) = run(false)?;
+            let (t1, peak1) = run(true)?;
+            // Fig 7's OOM: 16 GB per device at paper scale; flag when
+            // the scaled stash exceeds a 2 GiB budget on this scale
+            let oom = !fixed && peak1 > 2 * (1 << 30);
+            Ok(vec![
+                figure.into(),
+                kind.name().into(),
+                n.to_string(),
+                blocks_per_stage.to_string(),
+                format!("{t0:.2}"),
+                if oom { "OOM".into() } else { format!("{t1:.2}") },
+                if oom { "-".into() }
+                else { format!("{:.2}x", t1 / t0) },
+                if oom { "stash exceeds budget (paper: OOM at N=16)".into() }
+                else { String::new() },
+            ])
+        },
+    );
+    for row in rows {
+        t.row(row?);
     }
     Ok(t.render())
 }
 
 /// `twobp bench <exp>` dispatcher.
 pub fn run_experiment(name: &str, steps: usize) -> Result<String> {
-    let quick: Vec<&str> = BENCH_PRESETS.to_vec();
     match name {
         "table1" => Ok(table1()),
         "fig1" => Ok(fig1(4, 96)),
-        "fig3" | "fig4" => fig3(steps, &quick),
-        "fig5" => fig5(steps, "bert-s"),
-        "table3" => table3(steps, &quick),
-        "fig6" | "fig7" | "scaling" => fig6_fig7(steps, "bert-scale-fixed"),
+        "sweep" | "schedule-space" => {
+            Ok(schedule_space(&[2, 4, 8, 16, 32], &[1, 2], 0))
+        }
         "ckpt" | "ablation" => ablation_checkpoint("bert-s", 4),
+        #[cfg(feature = "pjrt")]
+        "fig3" | "fig4" => fig3(steps, &BENCH_PRESETS.to_vec()),
+        #[cfg(feature = "pjrt")]
+        "fig5" => fig5(steps, "bert-s"),
+        #[cfg(feature = "pjrt")]
+        "table3" => table3(steps, &BENCH_PRESETS.to_vec()),
+        #[cfg(feature = "pjrt")]
+        "fig6" | "fig7" | "scaling" => fig6_fig7(steps, "bert-scale-fixed"),
+        #[cfg(not(feature = "pjrt"))]
+        "fig3" | "fig4" | "fig5" | "table3" | "fig6" | "fig7" | "scaling" => {
+            let _ = steps;
+            Err(anyhow!(
+                "experiment '{name}' needs the real runtime; rebuild with \
+                 `--features pjrt` (vendored xla crate required)"
+            ))
+        }
         other => Err(anyhow!("unknown experiment '{other}' \
-            (table1|fig1|fig3|fig4|fig5|table3|fig6|fig7|ckpt)")),
+            (table1|fig1|fig3|fig4|fig5|table3|fig6|fig7|ckpt|sweep)")),
     }
 }
 
@@ -405,7 +587,8 @@ pub fn run_experiment(name: &str, steps: usize) -> Result<String> {
 /// the share of backward-p1 that must be replayed to rebuild the
 /// intermediates.  Sweeping α maps the throughput/memory trade-off the
 /// paper wants to investigate, using the same calibrated byte classes
-/// and the 1F1B-2 + 2BP schedule (its worst memory case).
+/// and the 1F1B-2 + 2BP schedule (its worst memory case).  The α cells
+/// are independent sims and run through the parallel sweep runner.
 pub fn ablation_checkpoint(preset: &str, n: usize) -> Result<String> {
     let manifest = Manifest::load(std::path::Path::new("artifacts"), preset)?;
     let mem = manifest.mem_model();
@@ -420,8 +603,8 @@ pub fn ablation_checkpoint(preset: &str, n: usize) -> Result<String> {
 
     let plan = generate(ScheduleKind::OneF1B2, true, n, 0, false);
     validate(&plan).map_err(|e| anyhow!("{e}"))?;
-    let mut scale = |cm: &CostModel| -> CostModel {
-        let mut c = cm.clone();
+    let costs_n = {
+        let mut c = base_costs.clone();
         if c.fwd.len() != n {
             let rep = |v: &Vec<f64>| vec![v[0]; n];
             c.fwd = rep(&c.fwd);
@@ -431,7 +614,6 @@ pub fn ablation_checkpoint(preset: &str, n: usize) -> Result<String> {
         }
         c
     };
-    let costs_n = scale(&base_costs);
     let mm_n = crate::sim::MemModel {
         static_bytes: vec![mem.static_bytes[0]; n],
         res1: vec![mem.res1[0]; n],
@@ -443,25 +625,34 @@ pub fn ablation_checkpoint(preset: &str, n: usize) -> Result<String> {
     let base_tput = base.throughput(samples, plan.n_microbatches);
     let base_peak = base.max_peak();
 
-    for alpha in [0.0, 0.25, 0.5, 0.75, 1.0] {
-        let mut cm = costs_n.clone();
-        for r in 0..n {
-            cm.p2[r] += alpha * cm.p1[r];
-        }
-        // checkpointing: inter is not stashed
-        let mm = crate::sim::MemModel {
-            inter: vec![0; n],
-            ..mm_n.clone()
-        };
-        let res = simulate(&plan, &cm, Some(&mm)).map_err(|e| anyhow!("{e}"))?;
-        let tput = res.throughput(samples, plan.n_microbatches);
-        t.row(vec![
-            format!("{alpha:.2}"),
-            format!("{tput:.2}"),
-            format!("{:.3}x", tput / base_tput),
-            crate::util::stats::fmt_bytes(res.max_peak()),
-            format!("{:.3}x", res.max_peak() as f64 / base_peak as f64),
-        ]);
+    let alphas = [0.0, 0.25, 0.5, 0.75, 1.0];
+    let rows = sweep::run_grid(
+        &alphas,
+        sweep::default_threads(),
+        |_, &alpha| -> Result<Vec<String>> {
+            let mut cm = costs_n.clone();
+            for r in 0..n {
+                cm.p2[r] += alpha * cm.p1[r];
+            }
+            // checkpointing: inter is not stashed
+            let mm = crate::sim::MemModel {
+                inter: vec![0; n],
+                ..mm_n.clone()
+            };
+            let res =
+                simulate(&plan, &cm, Some(&mm)).map_err(|e| anyhow!("{e}"))?;
+            let tput = res.throughput(samples, plan.n_microbatches);
+            Ok(vec![
+                format!("{alpha:.2}"),
+                format!("{tput:.2}"),
+                format!("{:.3}x", tput / base_tput),
+                crate::util::stats::fmt_bytes(res.max_peak()),
+                format!("{:.3}x", res.max_peak() as f64 / base_peak as f64),
+            ])
+        },
+    );
+    for row in rows {
+        t.row(row?);
     }
     let mut out = t.render();
     out.push_str(&format!(

@@ -1,0 +1,266 @@
+//! Parallel grid sweeps over pure simulator cells.
+//!
+//! Every paper artifact is, at heart, a grid of independent
+//! `(plan, cost model) -> SimResult` evaluations.  [`run_grid`] is the
+//! generic runner: scoped worker threads pull cell indices from a
+//! shared atomic cursor and results are returned **in cell order**, so
+//! parallel and sequential runs are byte-identical.  `table1`,
+//! `fig6_fig7`, and `ablation_checkpoint` are built on it, as are the
+//! `schedule_space` experiment and the `sweep_throughput` bench.
+//!
+//! Cells must be pure (no interior mutability, no I/O): the runner
+//! gives no ordering guarantee *during* execution, only for results.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::schedule::{generate, Plan, ScheduleKind};
+use crate::sim::{simulate, simulate_naive, CostModel, SimResult};
+
+/// How many workers to use when the caller doesn't say: one per
+/// available core (the sweep is embarrassingly parallel and CPU-bound).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Evaluate `f` over every cell, `threads` at a time, returning results
+/// ordered by cell index (deterministic regardless of thread count).
+///
+/// A worker panic propagates out of the scope, so a failing cell fails
+/// the whole sweep loudly rather than yielding a partial grid.
+pub fn run_grid<C, R, F>(cells: &[C], threads: usize, f: F) -> Vec<R>
+where
+    C: Sync,
+    R: Send,
+    F: Fn(usize, &C) -> R + Sync,
+{
+    let n = cells.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads.max(1).min(n);
+    if workers == 1 {
+        return cells.iter().enumerate().map(|(i, c)| f(i, c)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let collected: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i, &cells[i])));
+                }
+                collected.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut got = collected.into_inner().unwrap();
+    debug_assert_eq!(got.len(), n, "sweep lost cells");
+    got.sort_by_key(|(i, _)| *i);
+    got.into_iter().map(|(_, r)| r).collect()
+}
+
+/// One point of a schedule-space grid: which schedule, at what scale,
+/// under which relative op costs.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub kind: ScheduleKind,
+    pub two_bp: bool,
+    pub n_ranks: usize,
+    /// 0 = the schedule's paper-default microbatch count.
+    pub n_microbatches: usize,
+    /// Relative op costs fwd : bwd-p1 : bwd-p2.
+    pub fwd: f64,
+    pub p1: f64,
+    pub p2: f64,
+    /// Activation/gradient hop latency (same units as op costs).
+    pub comm: f64,
+}
+
+impl Cell {
+    pub fn plan(&self) -> Plan {
+        generate(self.kind, self.two_bp, self.n_ranks, self.n_microbatches,
+                 false)
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        let mut cm = CostModel::ratios(self.n_ranks, self.fwd, self.p1,
+                                       self.p2);
+        cm.comm = self.comm;
+        cm
+    }
+
+    /// e.g. `1f1b-2+2bp n=8 m=16 f:p1:p2=1:1.2:0.8 comm=0.1`
+    pub fn describe(&self) -> String {
+        format!(
+            "{}{} n={} m={} f:p1:p2={}:{}:{} comm={}",
+            self.kind.name(),
+            if self.two_bp { "+2bp" } else { "" },
+            self.n_ranks,
+            if self.n_microbatches == 0 {
+                self.kind.default_microbatches(self.n_ranks)
+            } else {
+                self.n_microbatches
+            },
+            self.fwd, self.p1, self.p2, self.comm,
+        )
+    }
+}
+
+/// What a sweep keeps per cell (the full [`SimResult`] span lists would
+/// dominate memory at 10k+ cells).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellOut {
+    pub makespan: f64,
+    pub bubble_ratio: f64,
+    /// Plan op count (`Plan::total_ops`): a Flush counts as one op and
+    /// greedy p2 fills are not included, so this understates dispatched
+    /// events for 2BP plans — a grid-size proxy, not a work measure.
+    pub total_ops: usize,
+}
+
+fn shrink(plan: &Plan, res: &SimResult) -> CellOut {
+    CellOut {
+        makespan: res.makespan,
+        bubble_ratio: res.bubble_ratio,
+        total_ops: plan.total_ops(),
+    }
+}
+
+/// Evaluate one cell with the event-driven engine.
+pub fn eval(cell: &Cell) -> CellOut {
+    let plan = cell.plan();
+    let res = simulate(&plan, &cell.cost_model(), None)
+        .unwrap_or_else(|e| panic!("cell {}: {e}", cell.describe()));
+    shrink(&plan, &res)
+}
+
+/// Evaluate one cell with the linear-scan reference engine (the bench
+/// baseline; results must equal [`eval`]'s exactly).
+pub fn eval_naive(cell: &Cell) -> CellOut {
+    let plan = cell.plan();
+    let res = simulate_naive(&plan, &cell.cost_model(), None)
+        .unwrap_or_else(|e| panic!("cell {}: {e}", cell.describe()));
+    shrink(&plan, &res)
+}
+
+/// The (schedule variant, 2BP) combinations a sweep covers: every
+/// paper schedule ± 2BP plus the eager-p2 variant (2BP-only).  Shared
+/// by [`grid`] and the `schedule_space` aggregation so the two can
+/// never drift apart.
+pub fn combos() -> Vec<(ScheduleKind, bool)> {
+    let mut combos: Vec<(ScheduleKind, bool)> = Vec::new();
+    for kind in ScheduleKind::all() {
+        combos.push((kind, false));
+        combos.push((kind, true));
+    }
+    combos.push((ScheduleKind::OneF1B2EagerP2, true));
+    combos
+}
+
+/// Build the cross product
+/// (every schedule variant ± 2BP) × ranks × microbatch multiplier ×
+/// (fwd, p1, p2) ratio × comm.  The eager-p2 variant only exists with
+/// 2BP; microbatch counts are `mult × paper default` for the kind.
+pub fn grid(
+    ranks: &[usize],
+    m_mults: &[usize],
+    ratios: &[(f64, f64, f64)],
+    comms: &[f64],
+) -> Vec<Cell> {
+    let combos = combos();
+    let mut cells = Vec::with_capacity(
+        combos.len() * ranks.len() * m_mults.len() * ratios.len()
+            * comms.len(),
+    );
+    for &(kind, two_bp) in &combos {
+        for &n in ranks {
+            for &mult in m_mults {
+                for &(f, p1, p2) in ratios {
+                    for &comm in comms {
+                        cells.push(Cell {
+                            kind,
+                            two_bp,
+                            n_ranks: n,
+                            n_microbatches: mult
+                                * kind.default_microbatches(n),
+                            fwd: f,
+                            p1,
+                            p2,
+                            comm,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_grid_preserves_cell_order() {
+        let cells: Vec<usize> = (0..97).collect();
+        let out = run_grid(&cells, 8, |i, &c| {
+            assert_eq!(i, c);
+            c * 3
+        });
+        assert_eq!(out, (0..97).map(|c| c * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_grid_parallel_matches_sequential() {
+        let cells = grid(&[2, 4], &[1], &[(1.0, 1.2, 0.8)], &[0.0, 0.1]);
+        let seq = run_grid(&cells, 1, |_, c| eval(c));
+        let par = run_grid(&cells, 4, |_, c| eval(c));
+        assert_eq!(seq.len(), par.len());
+        for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(),
+                       "cell {i} ({})", cells[i].describe());
+            assert_eq!(a.bubble_ratio.to_bits(), b.bubble_ratio.to_bits());
+        }
+    }
+
+    #[test]
+    fn run_grid_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(run_grid(&empty, 4, |_, &c| c).is_empty());
+        assert_eq!(run_grid(&[7u32], 4, |_, &c| c + 1), vec![8]);
+    }
+
+    #[test]
+    fn grid_covers_all_variants() {
+        let cells = grid(&[2, 4, 8], &[1, 2], &[(1.0, 1.0, 1.0)], &[0.0]);
+        // 9 (kind, 2bp) combos × 3 ranks × 2 mults × 1 ratio × 1 comm
+        assert_eq!(cells.len(), 9 * 3 * 2);
+        assert!(cells.iter().any(
+            |c| c.kind == ScheduleKind::OneF1B2EagerP2 && c.two_bp));
+        assert!(cells.iter().all(
+            |c| c.kind != ScheduleKind::OneF1B2EagerP2 || c.two_bp));
+    }
+
+    #[test]
+    fn engines_agree_across_a_small_grid() {
+        let cells = grid(&[2, 3, 5], &[1, 2],
+                         &[(1.0, 1.0, 1.0), (1.0, 0.6, 1.4)], &[0.0, 0.2]);
+        let a = run_grid(&cells, default_threads(), |_, c| eval(c));
+        let b = run_grid(&cells, 1, |_, c| eval_naive(c));
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.makespan.to_bits(), y.makespan.to_bits(),
+                       "cell {i}: {}", cells[i].describe());
+            assert_eq!(x.bubble_ratio.to_bits(), y.bubble_ratio.to_bits(),
+                       "cell {i}: {}", cells[i].describe());
+        }
+    }
+}

@@ -14,7 +14,12 @@
 //! `bwd_p1`, `bwd_p2`, `bwd_p2_concat`, `opt`, `init`, `loss`) is an
 //! AOT-compiled XLA executable produced once by `python/compile/aot.py`
 //! (JAX model + Pallas kernels, lowered to HLO text) and executed through
-//! the PJRT CPU client ([`runtime`]).
+//! the PJRT CPU client (`runtime`).
+//!
+//! The real-runtime path (`runtime`, `pipeline`, and the measured
+//! experiments) sits behind the `pjrt` cargo feature so the simulator /
+//! schedule / sweep core builds, tests, and benches with no artifacts
+//! and no vendored `xla` crate present.
 //!
 //! Module map (see DESIGN.md for the full system inventory):
 //!
@@ -31,7 +36,9 @@ pub mod config;
 pub mod experiments;
 pub mod metrics;
 pub mod models;
+#[cfg(feature = "pjrt")]
 pub mod pipeline;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod schedule;
 pub mod sim;

@@ -5,15 +5,18 @@
 //!                [--steps N] [--microbatches M] [--concat-p2] [--verbose]
 //! twobp gantt    [--ranks N] [--cols W] [--schedule K] [--real --preset P]
 //! twobp simulate --schedule 1f1b-1 --ranks 8 [--no-2bp] [--comm C]
-//! twobp bench    <table1|fig1|fig3|fig4|fig5|table3|fig6|fig7> [--steps N]
+//! twobp sweep    [--ranks 2,4,8,16,32] [--mults 1,2] [--threads K]
+//! twobp bench    <table1|fig1|fig3|fig4|fig5|table3|fig6|fig7|ckpt|sweep>
+//!                [--steps N]
 //! twobp config   --list
 //! ```
+//!
+//! `train`, `gantt --real`, and the measured bench experiments need the
+//! `pjrt` feature (real runtime); everything else is pure simulator.
 
 use anyhow::{anyhow, Result};
 
-use twobp::config::{table2, RunConfig};
-use twobp::metrics::run_summary;
-use twobp::pipeline::train;
+use twobp::config::table2;
 use twobp::schedule::{generate, validate::validate, ScheduleKind};
 use twobp::sim::{simulate, CostModel};
 use twobp::util::args::Args;
@@ -30,6 +33,7 @@ fn main() {
         "train" => cmd_train(&args),
         "gantt" => cmd_gantt(&args),
         "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
         "bench" => cmd_bench(&args),
         "config" => {
             println!("{}", table2().render());
@@ -37,7 +41,8 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: twobp <train|gantt|simulate|bench|config> [options]\n\
+                "usage: twobp <train|gantt|simulate|sweep|bench|config> \
+                 [options]\n\
                  see `cargo doc` or README.md for details"
             );
             std::process::exit(2);
@@ -49,26 +54,48 @@ fn main() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = RunConfig::from_args(args)?;
-    let report = train(&cfg)?;
-    print!("{}", run_summary(&report));
+    let cfg = twobp::config::RunConfig::from_args(args)?;
+    let report = twobp::pipeline::train(&cfg)?;
+    print!("{}", twobp::metrics::run_summary(&report));
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    Err(anyhow!(
+        "`twobp train` needs the real runtime; rebuild with \
+         `--features pjrt` (vendored xla crate required)"
+    ))
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_gantt_real(args: &Args, cols: usize) -> Result<()> {
+    // render a measured timeline from a real (serialized) run
+    let cfg = twobp::config::RunConfig::from_args(args)?;
+    let report = twobp::pipeline::train(&cfg)?;
+    let spans = report.spans();
+    if args.has("csv") {
+        print!("{}", gantt::to_csv(&spans));
+    } else {
+        print!("{}", gantt::render(&spans, cols));
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_gantt_real(_args: &Args, _cols: usize) -> Result<()> {
+    Err(anyhow!(
+        "`twobp gantt --real` needs the real runtime; rebuild with \
+         `--features pjrt` (vendored xla crate required)"
+    ))
 }
 
 fn cmd_gantt(args: &Args) -> Result<()> {
     let cols = args.get_usize("cols", 96);
     if args.has("real") {
-        // render a measured timeline from a real (serialized) run
-        let cfg = RunConfig::from_args(args)?;
-        let report = train(&cfg)?;
-        let spans = report.spans();
-        if args.has("csv") {
-            print!("{}", gantt::to_csv(&spans));
-        } else {
-            print!("{}", gantt::render(&spans, cols));
-        }
-        return Ok(());
+        return cmd_gantt_real(args, cols);
     }
     let n = args.get_usize("ranks", 4);
     match args.get("schedule") {
@@ -117,6 +144,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let bres = simulate(&base, &cm, None).map_err(|e| anyhow!("{e}"))?;
     println!("  {:.3}x (makespan {:.4} -> {:.4})",
              bres.makespan / res.makespan, bres.makespan, res.makespan);
+    Ok(())
+}
+
+/// Parallel schedule-space sweep (pure simulator; see
+/// `experiments::schedule_space`).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let ranks = args
+        .get_usize_list("ranks", &[2, 4, 8, 16, 32])
+        .map_err(|e| anyhow!(e))?;
+    let mults = args.get_usize_list("mults", &[1, 2]).map_err(|e| anyhow!(e))?;
+    let threads = args.get_usize("threads", 0);
+    if ranks.is_empty() || mults.is_empty() {
+        return Err(anyhow!("--ranks and --mults need at least one value"));
+    }
+    print!("{}", twobp::experiments::schedule_space(&ranks, &mults, threads));
     Ok(())
 }
 

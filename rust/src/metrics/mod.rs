@@ -1,7 +1,10 @@
 //! Reporting: turn run reports / sim results into the paper's tables.
 
+#[cfg(feature = "pjrt")]
 use crate::pipeline::RunReport;
-use crate::util::stats::{fmt_bytes, fmt_duration};
+use crate::util::stats::fmt_bytes;
+#[cfg(feature = "pjrt")]
+use crate::util::stats::fmt_duration;
 use crate::util::table::Table;
 
 /// One row of a throughput comparison (Fig 3-style).
@@ -69,6 +72,7 @@ pub fn memory_table(rows: &[MemoryRow], title: &str) -> Table {
 }
 
 /// Per-run summary printed after `twobp train`.
+#[cfg(feature = "pjrt")]
 pub fn run_summary(report: &RunReport) -> String {
     let mut out = String::new();
     out.push_str(&format!(

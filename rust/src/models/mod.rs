@@ -12,7 +12,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::util::json::Json;
 
 /// Element type of a tensor in the manifest.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
     F32,
     I32,

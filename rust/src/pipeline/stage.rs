@@ -15,8 +15,8 @@ use crate::pipeline::comm::RankLinks;
 use crate::pipeline::data::DataGen;
 use crate::pipeline::memory::{Class, MemAccountant};
 use crate::runtime::{
-    literal_bytes, literal_to_f32_scalar, scalar_f32, scalar_i32,
-    zero_literal, Device, Executable, HostTensor,
+    literal_bytes, literal_to_f32_scalar, scalar_f32, scalar_i32, Device,
+    Executable, HostTensor, ZeroCache,
 };
 use crate::schedule::{Op, Plan};
 use crate::util::gantt::SpanKind;
@@ -82,10 +82,18 @@ pub struct StageWorker {
     exe_loss: Option<Executable>,
 
     params: Vec<xla::Literal>,
+    /// Adam slots; empty while `opt_fresh` (the shared zeros stand in).
     m_state: Vec<xla::Literal>,
     v_state: Vec<xla::Literal>,
+    /// Gradient accumulators; empty while `grads_fresh` (the shared
+    /// zeros stand in — see [`ZeroCache`]).
     grads: Vec<xla::Literal>,
     grads_fresh: bool,
+    opt_fresh: bool,
+    /// Shared zero literals: allocated once per distinct (shape, dtype)
+    /// at worker construction, reused across steps and runs.
+    zero_grads: Vec<std::rc::Rc<xla::Literal>>,
+    zero_params: Vec<std::rc::Rc<xla::Literal>>,
     step_t: f32,
 
     stash: HashMap<u32, MbStash>,
@@ -138,12 +146,11 @@ impl StageWorker {
                 info.params.len()
             );
         }
-        let zeros_like = |specs: &[crate::models::TensorSpec]| -> Vec<xla::Literal> {
-            specs.iter().map(|s| zero_literal(&s.shape, s.dtype)).collect()
-        };
-        let m_state = zeros_like(&info.params);
-        let v_state = zeros_like(&info.params);
-        let grads = zeros_like(&info.grads);
+        // fresh grads/Adam slots are shared zero literals, not per-step
+        // allocations (the hotpath_micro "zero-literal alloc" fix)
+        let mut zeros = ZeroCache::new();
+        let zero_params = zeros.zeros_like(&info.params);
+        let zero_grads = zeros.zeros_like(&info.grads);
 
         let vocab = *manifest.logits.shape.last().unwrap_or(&2) as i32;
 
@@ -164,10 +171,13 @@ impl StageWorker {
             exe_opt,
             exe_loss,
             params,
-            m_state,
-            v_state,
-            grads,
+            m_state: Vec::new(),
+            v_state: Vec::new(),
+            grads: Vec::new(),
             grads_fresh: true,
+            opt_fresh: true,
+            zero_grads,
+            zero_params,
             step_t: 1.0,
             stash: HashMap::new(),
             pending_p2: Vec::new(),
@@ -200,13 +210,13 @@ impl StageWorker {
         data_cycle: usize,
     ) -> Result<()> {
         self.params = self.exe_init.run(&[scalar_i32(seed as i32)])?;
-        let zeros = |specs: &[crate::models::TensorSpec]| -> Vec<xla::Literal> {
-            specs.iter().map(|s| zero_literal(&s.shape, s.dtype)).collect()
-        };
-        self.m_state = zeros(&self.info.params);
-        self.v_state = zeros(&self.info.params);
-        self.grads = zeros(&self.info.grads);
+        // fresh grads/Adam slots: drop the stale state and fall back to
+        // the shared zeros (no reallocation between runs)
+        self.m_state = Vec::new();
+        self.v_state = Vec::new();
+        self.grads = Vec::new();
         self.grads_fresh = true;
+        self.opt_fresh = true;
         self.step_t = 1.0;
         self.stash.clear();
         self.pending_p2.clear();
@@ -225,6 +235,17 @@ impl StageWorker {
 
     fn now(&self) -> f64 {
         self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Gradient-accumulator inputs for the next p2/opt call: the shared
+    /// zero literals before any p2 ran this step, the accumulated
+    /// literals afterwards.
+    fn grad_inputs(&self) -> Vec<&xla::Literal> {
+        if self.grads_fresh {
+            self.zero_grads.iter().map(|l| l.as_ref()).collect()
+        } else {
+            self.grads.iter().collect()
+        }
     }
 
     fn record(&mut self, kind: SpanKind, mb: u32, start: f64) {
@@ -448,10 +469,11 @@ impl StageWorker {
             let mut args: Vec<&xla::Literal> = Vec::new();
             args.extend(res2.iter());
             args.extend(inter.iter());
-            args.extend(self.grads.iter());
+            args.extend(self.grad_inputs());
             let outs = self.exe_p2.run(&args)?;
-            if outs.len() != self.grads.len() {
-                bail!("bwd_p2 arity {} != {}", outs.len(), self.grads.len());
+            if outs.len() != self.info.grads.len() {
+                bail!("bwd_p2 arity {} != {}", outs.len(),
+                      self.info.grads.len());
             }
             self.grads = outs;
             self.grads_fresh = false;
@@ -484,8 +506,9 @@ impl StageWorker {
             args.extend(inter.iter());
         }
         let outs = self.exe_p2_concat.run(&args)?;
-        if outs.len() != self.grads.len() {
-            bail!("bwd_p2_concat arity {} != {}", outs.len(), self.grads.len());
+        if outs.len() != self.info.grads.len() {
+            bail!("bwd_p2_concat arity {} != {}", outs.len(),
+                  self.info.grads.len());
         }
         // concat covers the whole step's p2 — valid only on fresh grads
         self.grads = outs;
@@ -555,9 +578,15 @@ impl StageWorker {
         let t = scalar_f32(self.step_t);
         let mut args: Vec<&xla::Literal> = Vec::new();
         args.extend(self.params.iter());
-        args.extend(self.grads.iter());
-        args.extend(self.m_state.iter());
-        args.extend(self.v_state.iter());
+        args.extend(self.grad_inputs());
+        if self.opt_fresh {
+            // first step: both Adam slots are the shared zeros
+            args.extend(self.zero_params.iter().map(|l| l.as_ref()));
+            args.extend(self.zero_params.iter().map(|l| l.as_ref()));
+        } else {
+            args.extend(self.m_state.iter());
+            args.extend(self.v_state.iter());
+        }
         args.push(&t);
         let outs = self.exe_opt.run(&args)?;
         let np = self.params.len();
@@ -568,13 +597,10 @@ impl StageWorker {
         self.params = (&mut it).take(np).collect();
         self.m_state = (&mut it).take(np).collect();
         self.v_state = it.collect();
-        // reset gradient accumulators (zero-filled, no host staging)
-        self.grads = self
-            .info
-            .grads
-            .iter()
-            .map(|s| zero_literal(&s.shape, s.dtype))
-            .collect();
+        self.opt_fresh = false;
+        // reset gradient accumulators to the shared zeros (no
+        // per-OptStep allocation — see ZeroCache)
+        self.grads = Vec::new();
         self.grads_fresh = true;
         self.step_t += 1.0;
         self.record(SpanKind::Opt, 0, start);

@@ -242,6 +242,66 @@ pub fn zero_literal(shape: &[usize], dtype: DType) -> xla::Literal {
     xla::Literal::create_from_shape(ty, shape)
 }
 
+/// Shared zero literals, one per (shape, dtype).
+///
+/// Zeros only ever feed ops as *inputs* (fresh gradient accumulators,
+/// fresh Adam slots) — outputs are always new literals — so a single
+/// immutable zero literal per shape can be handed out any number of
+/// times.  This removes the per-OptStep/per-reset allocation churn the
+/// `hotpath_micro` bench flags as "zero-literal alloc 1 MiB": the
+/// worker allocates each distinct zero exactly once for its lifetime.
+///
+/// Safety assumption: callers go through [`Executable::run`], which
+/// uploads every host literal to a fresh device buffer per call.  If a
+/// future execute path aliases or donates *input* buffers (e.g.
+/// buffer donation on the opt step), shared zeros must not be passed
+/// twice to one call — revisit this cache before enabling donation.
+pub struct ZeroCache {
+    map: std::collections::HashMap<(Vec<usize>, DType), std::rc::Rc<xla::Literal>>,
+}
+
+impl Default for ZeroCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ZeroCache {
+    pub fn new() -> ZeroCache {
+        ZeroCache { map: std::collections::HashMap::new() }
+    }
+
+    /// The shared zero literal for (shape, dtype), allocating on first
+    /// use only.
+    pub fn get(&mut self, shape: &[usize], dtype: DType) -> std::rc::Rc<xla::Literal> {
+        if let Some(l) = self.map.get(&(shape.to_vec(), dtype)) {
+            return l.clone();
+        }
+        let l = std::rc::Rc::new(zero_literal(shape, dtype));
+        self.map.insert((shape.to_vec(), dtype), l.clone());
+        l
+    }
+
+    /// Shared zeros matching each spec (deduplicated across equal
+    /// shapes — a transformer stage's many identical block params share
+    /// one literal).
+    pub fn zeros_like(
+        &mut self,
+        specs: &[crate::models::TensorSpec],
+    ) -> Vec<std::rc::Rc<xla::Literal>> {
+        specs.iter().map(|s| self.get(&s.shape, s.dtype)).collect()
+    }
+
+    /// Distinct literals currently cached (for tests/benches).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
 /// Scalar literal helpers used by the executor.
 pub fn scalar_i32(v: i32) -> xla::Literal {
     xla::Literal::scalar(v)

@@ -56,7 +56,11 @@ fn rank_ops(
     concat_p2: bool,
 ) -> Vec<Op> {
     let rank = _rank;
-    let mut ops = Vec::new();
+    // exact op count: m fwds + m p1s (+ m fused p2s), plus at most two
+    // flushes and the opt step — pre-sized so the sweep hot path never
+    // reallocates mid-generation
+    let cap = m * if two_bp { 2 } else { 3 } + 3;
+    let mut ops = Vec::with_capacity(cap);
     match kind {
         // -- naive: strictly sequential microbatches (gradient accumulation,
         //    as in the paper's ResNet naive runs) --------------------------

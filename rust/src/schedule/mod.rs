@@ -93,6 +93,14 @@ impl ScheduleKind {
         [ScheduleKind::Naive, ScheduleKind::GPipe,
          ScheduleKind::OneF1B1, ScheduleKind::OneF1B2]
     }
+
+    /// Every generator variant, including the Fig 5 eager-p2 one (which
+    /// is only meaningful with `two_bp = true`).  The sweep grid and the
+    /// fuzzers iterate this.
+    pub fn all_variants() -> [ScheduleKind; 5] {
+        [ScheduleKind::Naive, ScheduleKind::GPipe, ScheduleKind::OneF1B1,
+         ScheduleKind::OneF1B2, ScheduleKind::OneF1B2EagerP2]
+    }
 }
 
 /// A complete schedule for one training step.
@@ -111,6 +119,12 @@ pub struct Plan {
 }
 
 impl Plan {
+    /// Total op count across all ranks (the event count a simulation
+    /// dispatches; sweep throughput is often quoted per op).
+    pub fn total_ops(&self) -> usize {
+        self.ranks.iter().map(|ops| ops.len()).sum()
+    }
+
     /// Human-readable one-line description, e.g. "1f1b-1+2bp (4 ranks × 4 mb)".
     pub fn describe(&self) -> String {
         format!(

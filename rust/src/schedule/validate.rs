@@ -215,10 +215,7 @@ mod tests {
             "generated plans validate for fuzzed (kind, 2bp, n, m)",
             200,
             |rng| {
-                let kinds = [ScheduleKind::Naive, ScheduleKind::GPipe,
-                             ScheduleKind::OneF1B1, ScheduleKind::OneF1B2,
-                             ScheduleKind::OneF1B2EagerP2];
-                let kind = *gen::pick(rng, &kinds);
+                let kind = *gen::pick(rng, &ScheduleKind::all_variants());
                 let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
                     true
                 } else {

@@ -1,7 +1,27 @@
-//! The event loop: global earliest-start scheduling over per-rank op
-//! cursors, with the 2BP greedy-p2 fill rule (run deferred weight-grad
-//! work whenever a rank would otherwise idle — non-preemptive, exactly
-//! like the real executor's poll-then-fill loop).
+//! The simulation kernels.
+//!
+//! Two engines share one op-semantics core ([`op_ready`], [`exec_op`],
+//! [`run_p2`]):
+//!
+//! * [`simulate`] — the production **event-driven** kernel: a min-heap
+//!   of per-rank ready events plus dependency wakeups, O(1) amortized
+//!   examinations per op.  See the module docs in [`crate::sim`] for the
+//!   event-queue invariants.
+//! * [`reference::simulate_naive`] — the original linear-scan loop
+//!   (rescan every rank after every dispatched action), kept as the
+//!   differential oracle and as the baseline the `sweep_throughput`
+//!   bench measures speedup against.
+//!
+//! Both realize the same semantics: global earliest-start scheduling
+//! over per-rank op cursors, with the 2BP greedy-p2 fill rule (run
+//! deferred weight-grad work whenever a rank would otherwise idle —
+//! non-preemptive, exactly like the real executor's poll-then-fill
+//! loop), and the non-2BP fused-pair send rule (the input gradient is
+//! released only after the paired backward-p2).  The differential
+//! proptest at the bottom of this file holds them bit-for-bit equal.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::{CostModel, MemModel, SimResult};
 use crate::schedule::{Op, Plan};
@@ -22,8 +42,7 @@ struct RankState {
     t: f64,
     next: usize,
     /// p1-done microbatches whose p2 hasn't run (FIFO by p1 completion).
-    pending_p2: Vec<u32>,
-    p2_done: Vec<bool>,
+    pending_p2: VecDeque<u32>,
     spans: Vec<Span>,
     busy: f64,
     // memory accounting
@@ -31,122 +50,33 @@ struct RankState {
     peak: u64,
 }
 
+/// What a rank does next.  The discriminant order encodes the dispatch
+/// tie-break: at equal start times a real (plan-cursor) op beats a
+/// greedy p2 fill, matching the reference engine's scan rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum Action {
-    Real,
-    FillP2,
+    Real = 0,
+    FillP2 = 1,
 }
 
-/// Simulate one training step of `plan` under `costs` (+ optional memory
-/// model).  Fused (non-2BP) backward pairs are handled by the send rule:
-/// the upstream rank's p1 readiness waits for the *pair* end on this
-/// rank, because in plan order BwdP2 immediately follows BwdP1 and the
-/// grad-send timestamp is taken after the following BwdP2 when the plan
-/// is non-2BP.
-pub fn simulate(
-    plan: &Plan,
-    costs: &CostModel,
-    mem: Option<&MemModel>,
-) -> Result<SimResult, SimError> {
-    let n = plan.n_ranks;
-    let m = plan.n_microbatches;
-    assert_eq!(costs.fwd.len(), n, "cost model rank count mismatch");
-
-    // completion times (f64::INFINITY = not yet happened)
-    let inf = f64::INFINITY;
-    let mut fwd_done = vec![vec![inf; m]; n];
-    // time the input-grad for mb becomes available to rank r-1
-    let mut grad_sent = vec![vec![inf; m]; n];
-
-    let mut ranks: Vec<RankState> = (0..n)
+fn make_states(plan: &Plan, mem: Option<&MemModel>) -> Vec<RankState> {
+    (0..plan.n_ranks)
         .map(|r| {
             let static_b = mem.map(|mm| mm.static_bytes[r]).unwrap_or(0);
             RankState {
                 t: 0.0,
                 next: 0,
-                pending_p2: Vec::new(),
-                p2_done: vec![false; m],
+                pending_p2: VecDeque::new(),
                 spans: Vec::new(),
                 busy: 0.0,
                 live: static_b,
                 peak: static_b,
             }
         })
-        .collect();
+        .collect()
+}
 
-    let total_ops: usize = plan.ranks.iter().map(|ops| ops.len()).sum();
-    let mut done_ops = 0usize;
-
-    while done_ops < total_ops {
-        // collect candidate actions
-        let mut best: Option<(f64, usize, Action)> = None;
-        for r in 0..n {
-            let st = &ranks[r];
-            if st.next >= plan.ranks[r].len() {
-                continue;
-            }
-            let op = &plan.ranks[r][st.next];
-            let ready = op_ready(op, r, n, plan, costs, &fwd_done, &grad_sent);
-            // Greedy 2BP fill rule: if the next op's input either doesn't
-            // exist yet or arrives only after this rank's current time,
-            // the real executor's poll fails and it starts a pending p2
-            // instead (non-preemptive — it may overshoot the arrival,
-            // which is the paper's non-uniform-graph caveat in §3.2).
-            let can_fill = plan.greedy_p2 && !st.pending_p2.is_empty();
-            let cand = match ready {
-                Some(dep_t) if dep_t <= st.t => {
-                    Some((st.t, Action::Real))
-                }
-                Some(dep_t) => {
-                    if can_fill {
-                        Some((st.t, Action::FillP2))
-                    } else {
-                        Some((dep_t, Action::Real))
-                    }
-                }
-                None => can_fill.then_some((st.t, Action::FillP2)),
-            };
-            if let Some((start, act)) = cand {
-                let better = match &best {
-                    None => true,
-                    Some((bs, _, ba)) => {
-                        start < *bs
-                            || (start == *bs
-                                && matches!(ba, Action::FillP2)
-                                && matches!(act, Action::Real))
-                    }
-                };
-                if better {
-                    best = Some((start, r, act));
-                }
-            }
-        }
-
-        let (start, r, act) = best.ok_or_else(|| {
-            SimError(format!(
-                "deadlock: {done_ops}/{total_ops} ops done; next ops: {:?}",
-                (0..n)
-                    .map(|r| plan.ranks[r].get(ranks[r].next))
-                    .collect::<Vec<_>>()
-            ))
-        })?;
-
-        match act {
-            Action::FillP2 => {
-                let mb = ranks[r].pending_p2.remove(0);
-                run_p2(&mut ranks[r], r, &[mb], false, start, costs, mem);
-            }
-            Action::Real => {
-                let op = plan.ranks[r][ranks[r].next].clone();
-                exec_op(
-                    &op, r, n, plan, costs, mem, start,
-                    &mut ranks, &mut fwd_done, &mut grad_sent,
-                );
-                ranks[r].next += 1;
-                done_ops += 1;
-            }
-        }
-    }
-
+fn finish(n: usize, ranks: Vec<RankState>) -> SimResult {
     let makespan = ranks.iter().map(|s| s.t).fold(0.0, f64::max);
     let busy: Vec<f64> = ranks.iter().map(|s| s.busy).collect();
     let total_busy: f64 = busy.iter().sum();
@@ -155,13 +85,59 @@ pub fn simulate(
     } else {
         0.0
     };
-    Ok(SimResult {
+    SimResult {
         makespan,
         bubble_ratio,
         spans: ranks.iter().map(|s| s.spans.clone()).collect(),
         peak_bytes: ranks.iter().map(|s| s.peak).collect(),
         busy,
-    })
+    }
+}
+
+fn deadlock_error(plan: &Plan, ranks: &[RankState], done: usize,
+                  total: usize) -> SimError {
+    SimError(format!(
+        "deadlock: {done}/{total} ops done; next ops: {:?}",
+        (0..plan.n_ranks)
+            .map(|r| plan.ranks[r].get(ranks[r].next))
+            .collect::<Vec<_>>()
+    ))
+}
+
+/// The per-rank dispatch decision (shared by both engines): when can
+/// rank `r` act next, and is that action its next plan op or a greedy
+/// p2 fill?  `None` = blocked with nothing to fill.
+fn candidate(
+    r: usize,
+    plan: &Plan,
+    costs: &CostModel,
+    ranks: &[RankState],
+    fwd_done: &[Vec<f64>],
+    grad_sent: &[Vec<f64>],
+) -> Option<(f64, Action)> {
+    let st = &ranks[r];
+    if st.next >= plan.ranks[r].len() {
+        return None;
+    }
+    let op = &plan.ranks[r][st.next];
+    let ready = op_ready(op, r, plan.n_ranks, costs, fwd_done, grad_sent);
+    // Greedy 2BP fill rule: if the next op's input either doesn't exist
+    // yet or arrives only after this rank's current time, the real
+    // executor's poll fails and it starts a pending p2 instead
+    // (non-preemptive — it may overshoot the arrival, which is the
+    // paper's non-uniform-graph caveat in §3.2).
+    let can_fill = plan.greedy_p2 && !st.pending_p2.is_empty();
+    match ready {
+        Some(dep_t) if dep_t <= st.t => Some((st.t, Action::Real)),
+        Some(dep_t) => {
+            if can_fill {
+                Some((st.t, Action::FillP2))
+            } else {
+                Some((dep_t, Action::Real))
+            }
+        }
+        None => can_fill.then_some((st.t, Action::FillP2)),
+    }
 }
 
 /// Dependency-readiness of `op` on rank `r`: Some(t) when its external
@@ -171,7 +147,6 @@ fn op_ready(
     op: &Op,
     r: usize,
     n: usize,
-    _plan: &Plan,
     costs: &CostModel,
     fwd_done: &[Vec<f64>],
     grad_sent: &[Vec<f64>],
@@ -201,6 +176,10 @@ fn op_ready(
     .filter(|t| t.is_finite())
 }
 
+/// Execute one plan op on rank `r` at `start`, updating its timeline,
+/// memory accounting, and the completion tables.  Returns the neighbor
+/// rank (if any) whose next op may have just become ready — the wakeup
+/// edge the event-driven engine subscribes to.
 #[allow(clippy::too_many_arguments)]
 fn exec_op(
     op: &Op,
@@ -213,7 +192,8 @@ fn exec_op(
     ranks: &mut [RankState],
     fwd_done: &mut [Vec<f64>],
     grad_sent: &mut [Vec<f64>],
-) {
+) -> Option<usize> {
+    let mut wake = None;
     match op {
         Op::Fwd { mb } => {
             let st = &mut ranks[r];
@@ -226,6 +206,9 @@ fn exec_op(
                 st.live += mm.res1[r] + mm.res2[r];
                 st.peak = st.peak.max(st.live);
             }
+            if r + 1 < n {
+                wake = Some(r + 1);
+            }
         }
         Op::BwdP1 { mb } => {
             let end = start + costs.p1[r];
@@ -233,7 +216,7 @@ fn exec_op(
             st.spans.push(Span { start, end, label: SpanKind::BwdP1, mb: *mb });
             st.busy += end - start;
             st.t = end;
-            st.pending_p2.push(*mb);
+            st.pending_p2.push_back(*mb);
             if let Some(mm) = mem {
                 st.live = st.live - mm.res1[r] + mm.inter[r];
                 st.peak = st.peak.max(st.live);
@@ -242,22 +225,26 @@ fn exec_op(
             // following BwdP2 op updates grad_sent instead.
             if plan.two_bp && r > 0 {
                 grad_sent[r][*mb as usize] = end;
+                wake = Some(r - 1);
             }
             if !plan.two_bp {
                 // fused pair: mark sent tentatively; BwdP2 will overwrite
                 grad_sent[r][*mb as usize] = f64::INFINITY;
             }
-            let _ = n;
         }
         Op::BwdP2 { mbs, concat } => {
-            let mbs: Vec<u32> = mbs.clone();
-            run_p2(&mut ranks[r], r, &mbs, *concat, start, costs, mem);
+            run_p2(&mut ranks[r], r, mbs, *concat, start, costs, mem);
             if !plan.two_bp {
                 // fused semantics: the grad for this mb is released only now
-                for mb in &mbs {
+                for mb in mbs {
                     grad_sent[r][*mb as usize] = ranks[r].t;
                 }
+                if r > 0 {
+                    wake = Some(r - 1);
+                }
             }
+            let st = &mut ranks[r];
+            st.pending_p2.retain(|mb| !mbs.contains(mb));
         }
         Op::Flush { upto, concat } => {
             let st = &mut ranks[r];
@@ -281,11 +268,7 @@ fn exec_op(
             st.t = end;
         }
     }
-    // remove executed-p2 mbs from pending (explicit BwdP2 case)
-    if let Op::BwdP2 { mbs, .. } = op {
-        let st = &mut ranks[r];
-        st.pending_p2.retain(|mb| !mbs.contains(mb));
-    }
+    wake
 }
 
 fn run_p2(
@@ -312,9 +295,6 @@ fn run_p2(
     });
     st.busy += dur;
     st.t = end;
-    for mb in mbs {
-        st.p2_done[*mb as usize] = true;
-    }
     if let Some(mm) = mem {
         st.live -= (mm.res2[r] + mm.inter[r]) * mbs.len() as u64;
         st.peak = st.peak.max(st.live);
@@ -322,9 +302,260 @@ fn run_p2(
 }
 
 // ---------------------------------------------------------------------------
+// Event-driven engine
+// ---------------------------------------------------------------------------
+
+/// One queued dispatch opportunity.  Ordered ascending by
+/// (start, action, rank) — exactly the reference engine's pick rule:
+/// earliest start wins, a real op beats a fill at equal time, lowest
+/// rank breaks remaining ties.  `gen` is a per-rank staleness stamp and
+/// takes no part in the ordering.
+#[derive(Clone, Copy)]
+struct Event {
+    start: f64,
+    act: Action,
+    rank: u32,
+    gen: u32,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // starts are finite by construction (op_ready filters infinities)
+        self.start
+            .partial_cmp(&other.start)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| self.act.cmp(&other.act))
+            .then_with(|| self.rank.cmp(&other.rank))
+    }
+}
+
+/// Simulate one training step of `plan` under `costs` (+ optional memory
+/// model) with the event-driven kernel.
+///
+/// Fused (non-2BP) backward pairs are handled by the send rule: the
+/// upstream rank's p1 readiness waits for the *pair* end on this rank,
+/// because in plan order BwdP2 immediately follows BwdP1 and the
+/// grad-send timestamp is taken after the following BwdP2 when the plan
+/// is non-2BP.
+pub fn simulate(
+    plan: &Plan,
+    costs: &CostModel,
+    mem: Option<&MemModel>,
+) -> Result<SimResult, SimError> {
+    let n = plan.n_ranks;
+    assert_eq!(costs.fwd.len(), n, "cost model rank count mismatch");
+
+    // completion times (f64::INFINITY = not yet happened)
+    let inf = f64::INFINITY;
+    let m = plan.n_microbatches;
+    let mut fwd_done = vec![vec![inf; m]; n];
+    // time the input-grad for mb becomes available to rank r-1
+    let mut grad_sent = vec![vec![inf; m]; n];
+    let mut ranks = make_states(plan, mem);
+
+    let total_ops = plan.total_ops();
+    let mut done_ops = 0usize;
+
+    let mut gen: Vec<u32> = vec![0; n];
+    let mut heap: BinaryHeap<Reverse<Event>> =
+        BinaryHeap::with_capacity(2 * n + 4);
+
+    let push = |heap: &mut BinaryHeap<Reverse<Event>>,
+                ranks: &[RankState],
+                fwd_done: &[Vec<f64>],
+                grad_sent: &[Vec<f64>],
+                r: usize,
+                gen: u32|
+     -> bool {
+        if let Some((start, act)) = candidate(r, plan, costs, ranks,
+                                              fwd_done, grad_sent) {
+            heap.push(Reverse(Event { start, act, rank: r as u32, gen }));
+            true
+        } else {
+            false
+        }
+    };
+
+    for r in 0..n {
+        push(&mut heap, &ranks, &fwd_done, &grad_sent, r, gen[r]);
+    }
+
+    while done_ops < total_ops {
+        // pop the earliest still-valid event (stale stamps are skipped)
+        let ev = loop {
+            match heap.pop() {
+                Some(Reverse(e)) if e.gen == gen[e.rank as usize] => {
+                    break Some(e)
+                }
+                Some(_) => continue,
+                None => break None,
+            }
+        };
+        let ev = match ev {
+            Some(e) => e,
+            None => {
+                // Defensive full rescan.  With complete wakeup edges an
+                // empty heap means no rank has a candidate (deadlock);
+                // rebuilding from scratch keeps release builds exact
+                // even if an edge were ever missed.
+                let mut found = false;
+                for r in 0..n {
+                    gen[r] = gen[r].wrapping_add(1);
+                    if push(&mut heap, &ranks, &fwd_done, &grad_sent, r,
+                            gen[r]) {
+                        found = true;
+                    }
+                }
+                debug_assert!(
+                    !found,
+                    "event heap starved while candidates were runnable"
+                );
+                if found {
+                    continue;
+                }
+                return Err(deadlock_error(plan, &ranks, done_ops, total_ops));
+            }
+        };
+
+        let r = ev.rank as usize;
+        let wake = match ev.act {
+            Action::FillP2 => {
+                let mb = ranks[r]
+                    .pending_p2
+                    .pop_front()
+                    .expect("fill event with empty pending queue");
+                run_p2(&mut ranks[r], r, &[mb], false, ev.start, costs, mem);
+                None
+            }
+            Action::Real => {
+                // `op` borrows `plan`, not the mutable sim state, so no
+                // per-dispatch clone on the sweep hot path
+                let op = &plan.ranks[r][ranks[r].next];
+                let wake = exec_op(
+                    op, r, n, plan, costs, mem, ev.start,
+                    &mut ranks, &mut fwd_done, &mut grad_sent,
+                );
+                ranks[r].next += 1;
+                done_ops += 1;
+                wake
+            }
+        };
+
+        // the executed rank always needs a fresh candidate; a woken
+        // neighbor re-evaluates because a dependency it may be blocked
+        // on (fwd activation from r-1, input-grad from r+1) just landed
+        gen[r] = gen[r].wrapping_add(1);
+        push(&mut heap, &ranks, &fwd_done, &grad_sent, r, gen[r]);
+        if let Some(w) = wake {
+            gen[w] = gen[w].wrapping_add(1);
+            push(&mut heap, &ranks, &fwd_done, &grad_sent, w, gen[w]);
+        }
+    }
+
+    Ok(finish(n, ranks))
+}
+
+// ---------------------------------------------------------------------------
+// Reference engine
+// ---------------------------------------------------------------------------
+
+/// The original linear-scan simulation loop, kept verbatim in behavior:
+/// rescan every rank's candidate after every dispatched action and pick
+/// the global earliest (ties: real op over fill, then lowest rank).
+/// O(total_ops × n_ranks) — the differential oracle for [`simulate`]
+/// and the baseline for the `sweep_throughput` bench.
+pub mod reference {
+    use super::*;
+
+    /// Simulate with the linear-scan loop.  Produces results
+    /// bit-for-bit identical to [`simulate`] (enforced by the
+    /// differential proptest in this file).
+    pub fn simulate_naive(
+        plan: &Plan,
+        costs: &CostModel,
+        mem: Option<&MemModel>,
+    ) -> Result<SimResult, SimError> {
+        let n = plan.n_ranks;
+        assert_eq!(costs.fwd.len(), n, "cost model rank count mismatch");
+
+        let inf = f64::INFINITY;
+        let m = plan.n_microbatches;
+        let mut fwd_done = vec![vec![inf; m]; n];
+        let mut grad_sent = vec![vec![inf; m]; n];
+        let mut ranks = make_states(plan, mem);
+
+        let total_ops = plan.total_ops();
+        let mut done_ops = 0usize;
+
+        while done_ops < total_ops {
+            // collect candidate actions
+            let mut best: Option<(f64, usize, Action)> = None;
+            for r in 0..n {
+                let cand =
+                    candidate(r, plan, costs, &ranks, &fwd_done, &grad_sent);
+                if let Some((start, act)) = cand {
+                    let better = match &best {
+                        None => true,
+                        Some((bs, _, ba)) => {
+                            start < *bs
+                                || (start == *bs
+                                    && matches!(ba, Action::FillP2)
+                                    && matches!(act, Action::Real))
+                        }
+                    };
+                    if better {
+                        best = Some((start, r, act));
+                    }
+                }
+            }
+
+            let (start, r, act) = best.ok_or_else(|| {
+                deadlock_error(plan, &ranks, done_ops, total_ops)
+            })?;
+
+            match act {
+                Action::FillP2 => {
+                    let mb = ranks[r]
+                        .pending_p2
+                        .pop_front()
+                        .expect("fill with empty pending queue");
+                    run_p2(&mut ranks[r], r, &[mb], false, start, costs, mem);
+                }
+                Action::Real => {
+                    let op = plan.ranks[r][ranks[r].next].clone();
+                    let _ = exec_op(
+                        &op, r, n, plan, costs, mem, start,
+                        &mut ranks, &mut fwd_done, &mut grad_sent,
+                    );
+                    ranks[r].next += 1;
+                    done_ops += 1;
+                }
+            }
+        }
+
+        Ok(finish(n, ranks))
+    }
+}
+
+// ---------------------------------------------------------------------------
 
 #[cfg(test)]
 mod tests {
+    use super::reference::simulate_naive;
     use super::*;
     use crate::schedule::{generate, validate::validate, ScheduleKind};
 
@@ -554,10 +785,7 @@ mod tests {
             "simulate() terminates for fuzzed plans/costs",
             150,
             |rng| {
-                let kinds = [ScheduleKind::Naive, ScheduleKind::GPipe,
-                             ScheduleKind::OneF1B1, ScheduleKind::OneF1B2,
-                             ScheduleKind::OneF1B2EagerP2];
-                let kind = *gen::pick(rng, &kinds);
+                let kind = *gen::pick(rng, &ScheduleKind::all_variants());
                 let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
                     true
                 } else {
@@ -590,5 +818,107 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Every field of a [`SimResult`], compared bitwise.
+    fn assert_identical(a: &SimResult, b: &SimResult, what: &str) {
+        let f = |x: f64| x.to_bits();
+        assert_eq!(f(a.makespan), f(b.makespan), "{what}: makespan");
+        assert_eq!(f(a.bubble_ratio), f(b.bubble_ratio), "{what}: bubble");
+        assert_eq!(a.busy.len(), b.busy.len(), "{what}: busy len");
+        for (x, y) in a.busy.iter().zip(&b.busy) {
+            assert_eq!(f(*x), f(*y), "{what}: busy");
+        }
+        assert_eq!(a.peak_bytes, b.peak_bytes, "{what}: peaks");
+        assert_eq!(a.spans.len(), b.spans.len(), "{what}: span ranks");
+        for (ra, rb) in a.spans.iter().zip(&b.spans) {
+            assert_eq!(ra.len(), rb.len(), "{what}: span count");
+            for (sa, sb) in ra.iter().zip(rb) {
+                assert!(
+                    f(sa.start) == f(sb.start)
+                        && f(sa.end) == f(sb.end)
+                        && sa.label == sb.label
+                        && sa.mb == sb.mb,
+                    "{what}: span {sa:?} != {sb:?}"
+                );
+            }
+        }
+    }
+
+    /// The differential oracle: for fuzzed valid plans + cost/memory
+    /// models, the event-driven engine and the linear-scan reference
+    /// must agree bit-for-bit on makespan, busy times, bubble ratio,
+    /// span sets, and peak bytes.
+    #[test]
+    fn prop_event_engine_matches_reference() {
+        use crate::util::proptest::{check, gen};
+        check(
+            "event-driven simulate() == reference simulate_naive()",
+            400,
+            |rng| {
+                let kind = *gen::pick(rng, &ScheduleKind::all_variants());
+                let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
+                    true
+                } else {
+                    gen::bool(rng)
+                };
+                let n = gen::usize_in(rng, 1, 8);
+                let m = gen::usize_in(rng, 1, 16);
+                let concat = gen::bool(rng);
+                let costs = (
+                    0.25 + rng.next_f64(),
+                    0.25 + rng.next_f64(),
+                    0.25 + rng.next_f64(),
+                    rng.next_f64() * 0.2,        // opt
+                    rng.next_f64() * 0.3,        // loss
+                    if gen::bool(rng) { rng.next_f64() * 0.4 } else { 0.0 },
+                    0.8 + rng.next_f64() * 0.4,  // concat factor
+                );
+                let with_mem = gen::bool(rng);
+                let mem_seed = rng.next_u64();
+                (kind, two_bp, n, m, concat, costs, with_mem, mem_seed)
+            },
+            |&(kind, two_bp, n, m, concat, costs, with_mem, mem_seed)| {
+                let (f, p1, p2, opt, loss, comm, cf) = costs;
+                let plan = generate(kind, two_bp, n, m, concat);
+                validate(&plan).map_err(|e| e.to_string())?;
+                let mut cm = CostModel::ratios(n, f, p1, p2);
+                cm.opt = vec![opt; n];
+                cm.loss = loss;
+                cm.comm = comm;
+                cm.concat_factor = cf;
+                if mem_seed & 1 == 1 {
+                    cm.comm_inter_node = 0.5;
+                    cm.ranks_per_node = 1 + (mem_seed >> 1) as usize % 4;
+                }
+                let mm = MemModel {
+                    static_bytes: vec![mem_seed % 100; n],
+                    res1: vec![(mem_seed >> 8) % 50; n],
+                    res2: vec![(mem_seed >> 16) % 50; n],
+                    inter: vec![(mem_seed >> 24) % 50; n],
+                };
+                let mem = with_mem.then_some(&mm);
+                let a = simulate(&plan, &cm, mem)
+                    .map_err(|e| format!("event: {e}"))?;
+                let b = simulate_naive(&plan, &cm, mem)
+                    .map_err(|e| format!("reference: {e}"))?;
+                assert_identical(&a, &b, &plan.describe());
+                Ok(())
+            },
+        );
+    }
+
+    /// The reference engine also reproduces the Table 1 closed forms
+    /// (it is the oracle — it must not drift).
+    #[test]
+    fn reference_engine_reproduces_closed_forms() {
+        for n in 2..=8usize {
+            let nf = n as f64;
+            let plan = generate(ScheduleKind::OneF1B1, true, n, 0, false);
+            let res =
+                simulate_naive(&plan, &CostModel::unit(n), None).unwrap();
+            assert_close(res.bubble_ratio, (nf - 1.0) / (nf - 1.0 + 3.0 * nf),
+                         &format!("reference 1f1b-1+2bp N={n}"));
+        }
     }
 }

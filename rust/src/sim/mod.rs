@@ -14,9 +14,55 @@
 //!    PJRT runtime it predicts throughput for rank counts this host
 //!    cannot run in parallel (Figs 3/6/7; the host has one core, see
 //!    DESIGN.md §3).
+//!
+//! # The event-driven kernel and its invariants
+//!
+//! [`simulate`] is an event-driven discrete-event kernel: a min-heap of
+//! per-rank *dispatch events* `(start, action, rank)` plus dependency
+//! wakeups, instead of rescanning every rank after every dispatched op
+//! (the original loop, retained as [`simulate_naive`] — the
+//! differential oracle and the sweep bench baseline).  Each op is
+//! examined O(1) amortized times, so schedule-space sweeps over
+//! thousands of (schedule × ranks × microbatches × cost-ratio) cells
+//! become interactive (`experiments::sweep`).
+//!
+//! The kernel preserves the reference semantics **bit-for-bit** (a
+//! differential proptest over fuzzed plans enforces equality of
+//! makespan, busy times, bubble ratio, span sets, and peak bytes).  The
+//! invariants that make that hold:
+//!
+//! 1. **Earliest-event processing.**  The heap always pops the globally
+//!    earliest runnable action (ties: real plan op before greedy fill,
+//!    then lowest rank — the reference scan order).  Because every
+//!    unexecuted action starts no earlier than the popped one, any
+//!    question of the form "has dependency X arrived by time t?" is
+//!    already decided when asked — which is exactly what keeps the
+//!    **greedy-p2 fill rule non-preemptive and exact**: a rank that
+//!    goes idle at time t fills with a deferred p2 only if its next
+//!    op's input is not available at t, and no later-processed event
+//!    can retroactively make that input available at ≤ t.
+//! 2. **Complete wakeup edges.**  A blocked rank's decision can change
+//!    only when one of its next op's external inputs lands.  Those
+//!    writes are: `fwd_done[r]` by `Fwd` on rank r (wakes r+1),
+//!    `grad_sent[r]` by `BwdP1` on rank r under 2BP (wakes r-1), and
+//!    `grad_sent[r]` by `BwdP2` on rank r under fused (non-2BP)
+//!    autograd (wakes r-1).  The last edge is how the **fused-pair
+//!    grad-send timestamp is preserved**: without 2BP the input-grad
+//!    is released only when the paired backward-p2 finishes, so the
+//!    upstream wakeup fires at the pair end — never at p1 end.
+//! 3. **Staleness stamps.**  Each rank carries a generation counter;
+//!    (re)computing its candidate bumps the stamp and pushes a fresh
+//!    event.  Popped events with stale stamps are discarded, so the
+//!    heap never dispatches from outdated state.
+//!
+//! Everything downstream of the dispatch decision (op execution, span
+//! recording, byte accounting) is one shared code path between the two
+//! engines, so the oracle comparison isolates exactly the scheduling
+//! logic.
 
-mod engine;
+pub mod engine;
 
+pub use engine::reference::simulate_naive;
 pub use engine::{simulate, SimError};
 
 use crate::util::gantt::Span;

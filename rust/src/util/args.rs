@@ -61,6 +61,30 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Comma-separated integer list, e.g. `--ranks 2,4,8`.  Returns
+    /// `default` when the option is absent; errors (rather than
+    /// panicking like the scalar getters) because sweep grids are easy
+    /// to typo.
+    pub fn get_usize_list(
+        &self,
+        key: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim())
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse::<usize>().map_err(|_| {
+                        format!("--{key}: '{s}' is not an integer")
+                    })
+                })
+                .collect(),
+        }
+    }
+
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
     }
@@ -97,5 +121,14 @@ mod tests {
         let a = Args::parse(&sv(&[]), &[]);
         assert_eq!(a.get_or("k", "d"), "d");
         assert_eq!(a.get_usize("n", 7), 7);
+    }
+
+    #[test]
+    fn usize_lists() {
+        let a = Args::parse(&sv(&["--ranks", "2,4, 8"]), &[]);
+        assert_eq!(a.get_usize_list("ranks", &[1]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.get_usize_list("mults", &[1, 2]).unwrap(), vec![1, 2]);
+        let bad = Args::parse(&sv(&["--ranks", "2,x"]), &[]);
+        assert!(bad.get_usize_list("ranks", &[1]).is_err());
     }
 }

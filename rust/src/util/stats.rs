@@ -1,7 +1,13 @@
 //! Small statistics helpers for the bench harness (criterion is
-//! unavailable offline — see DESIGN.md §4 S14).
+//! unavailable offline — see DESIGN.md §4 S14), plus the
+//! machine-readable `BENCH_sim.json` recorder that tracks the perf
+//! trajectory across PRs.
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use super::json::Json;
 
 /// Summary statistics over a sample of measurements.
 #[derive(Debug, Clone, Copy)]
@@ -73,6 +79,67 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+impl Summary {
+    /// `{n, mean, std, min, max, median}` for the bench recorder.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("n".into(), Json::Num(self.n as f64));
+        m.insert("mean".into(), Json::Num(self.mean));
+        m.insert("std".into(), Json::Num(self.std));
+        m.insert("min".into(), Json::Num(self.min));
+        m.insert("max".into(), Json::Num(self.max));
+        m.insert("median".into(), Json::Num(self.median));
+        Json::Obj(m)
+    }
+}
+
+/// Accumulates named bench measurements and writes them as one JSON
+/// object (default file: `BENCH_sim.json`).  Existing entries from a
+/// previous run are kept and merged, so several bench binaries
+/// (`sweep_throughput`, `hotpath_micro`, ...) can contribute to the
+/// same machine-readable perf record.
+#[derive(Debug)]
+pub struct BenchRecorder {
+    path: PathBuf,
+    root: BTreeMap<String, Json>,
+}
+
+impl BenchRecorder {
+    /// Open (or start) the record at `path`, keeping any parseable
+    /// existing entries.
+    pub fn open(path: &Path) -> BenchRecorder {
+        let root = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|v| match v {
+                Json::Obj(m) => Some(m),
+                _ => None,
+            })
+            .unwrap_or_default();
+        BenchRecorder { path: path.to_path_buf(), root }
+    }
+
+    /// The conventional cross-PR record next to the crate root.
+    pub fn default_file() -> BenchRecorder {
+        BenchRecorder::open(Path::new("BENCH_sim.json"))
+    }
+
+    /// Insert/overwrite one named entry.
+    pub fn record(&mut self, name: &str, value: Json) {
+        self.root.insert(name.to_string(), value);
+    }
+
+    /// Insert a timing summary under `name`.
+    pub fn record_summary(&mut self, name: &str, s: &Summary) {
+        self.record(name, s.to_json());
+    }
+
+    /// Write the merged record back to disk.
+    pub fn write(&self) -> std::io::Result<()> {
+        std::fs::write(&self.path, Json::Obj(self.root.clone()).to_string())
+    }
+}
+
 /// A simple wall-clock stopwatch accumulating named spans (profiling
 /// substrate for the §Perf pass).
 #[derive(Debug, Default)]
@@ -124,6 +191,31 @@ mod tests {
         assert_eq!(fmt_bytes(512), "512 B");
         assert!(fmt_bytes(2048).contains("KiB"));
         assert!(fmt_duration(0.002).contains("ms"));
+    }
+
+    #[test]
+    fn bench_recorder_merges_across_opens() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "twobp_bench_rec_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let mut a = BenchRecorder::open(&path);
+        a.record_summary("alpha", &summarize(&[1.0, 2.0, 3.0]));
+        a.write().unwrap();
+        let mut b = BenchRecorder::open(&path);
+        b.record("beta", crate::util::json::obj(vec![
+            ("cells", Json::Num(100.0)),
+            ("cells_per_sec", Json::Num(123.5)),
+        ]));
+        b.write().unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("alpha").and_then(|a| a.get("n"))
+                       .and_then(|n| n.as_u64()), Some(3));
+        assert_eq!(v.get("beta").and_then(|b| b.get("cells"))
+                       .and_then(|c| c.as_u64()), Some(100));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

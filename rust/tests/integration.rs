@@ -1,8 +1,10 @@
 //! Integration tests over the real runtime + artifacts.
 //!
-//! These need `make artifacts` to have produced the `*-tiny` presets;
-//! every test skips (with a loud message) when artifacts are missing so
-//! `cargo test` stays green on a fresh checkout.
+//! These need the `pjrt` feature (vendored xla crate) and `make
+//! artifacts` to have produced the `*-tiny` presets; every test skips
+//! (with a loud message) when artifacts are missing so `cargo test`
+//! stays green on a fresh checkout.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 

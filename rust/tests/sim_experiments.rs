@@ -1,9 +1,9 @@
 //! Tests over the experiment harness's simulator-only paths (no
 //! artifacts needed — these always run).
 
-use twobp::experiments;
+use twobp::experiments::{self, sweep};
 use twobp::schedule::{generate, validate::validate, ScheduleKind};
-use twobp::sim::{simulate, CostModel, MemModel};
+use twobp::sim::{simulate, simulate_naive, CostModel, MemModel};
 
 #[test]
 fn table1_report_contains_all_schedules_and_matches() {
@@ -95,6 +95,62 @@ fn checkpointing_ablation_tradeoff_shape() {
     let ckpt = simulate(&plan, &cm, Some(&mm_ckpt)).unwrap();
     assert!(ckpt.max_peak() < base.max_peak());
     assert!(ckpt.makespan >= base.makespan - 1e-9);
+}
+
+#[test]
+fn schedule_space_sweep_reports_all_variants() {
+    let out = experiments::schedule_space(&[2, 4], &[1], 0);
+    for name in ["naive", "gpipe", "1f1b-1", "1f1b-2", "1f1b-2-eager+2bp"] {
+        assert!(out.contains(name), "missing {name} in:\n{out}");
+    }
+    assert!(out.contains("cells/s"), "missing throughput footer");
+    // 9 variant combos × 2 ranks × 1 mult × 3 ratios × 2 comms
+    assert!(out.contains("108 cells"), "unexpected cell count:\n{out}");
+}
+
+#[test]
+fn sweep_results_identical_across_engines_and_thread_counts() {
+    let cells = sweep::grid(&[2, 4, 6], &[1, 2],
+                            &[(1.0, 1.0, 1.0), (1.0, 1.3, 0.7)], &[0.0, 0.15]);
+    let event_par = sweep::run_grid(&cells, 8, |_, c| sweep::eval(c));
+    let event_seq = sweep::run_grid(&cells, 1, |_, c| sweep::eval(c));
+    let naive_seq = sweep::run_grid(&cells, 1, |_, c| sweep::eval_naive(c));
+    for i in 0..cells.len() {
+        for other in [&event_seq[i], &naive_seq[i]] {
+            assert_eq!(event_par[i].makespan.to_bits(),
+                       other.makespan.to_bits(),
+                       "cell {i}: {}", cells[i].describe());
+            assert_eq!(event_par[i].bubble_ratio.to_bits(),
+                       other.bubble_ratio.to_bits(),
+                       "cell {i}: {}", cells[i].describe());
+        }
+    }
+}
+
+#[test]
+fn bubble_ratio_closed_form_holds_at_scale() {
+    // the event engine must stay exact far beyond the unit-test N range
+    // (this is the regime the old linear scan made too slow to sweep)
+    for n in [32usize, 64] {
+        let nf = n as f64;
+        let plan = generate(ScheduleKind::OneF1B1, true, n, 0, false);
+        let res = simulate(&plan, &CostModel::unit(n), None).unwrap();
+        let want = (nf - 1.0) / (nf - 1.0 + 3.0 * nf);
+        assert!((res.bubble_ratio - want).abs() < 1e-9,
+                "N={n}: {} vs {want}", res.bubble_ratio);
+    }
+}
+
+#[test]
+fn naive_reference_engine_agrees_on_experiment_scale_cell() {
+    let plan = generate(ScheduleKind::OneF1B2, true, 8, 0, false);
+    let mut cm = CostModel::ratios(8, 1.0, 1.4, 0.9);
+    cm.comm = 0.05;
+    let a = simulate(&plan, &cm, None).unwrap();
+    let b = simulate_naive(&plan, &cm, None).unwrap();
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.bubble_ratio.to_bits(), b.bubble_ratio.to_bits());
+    assert_eq!(a.peak_bytes, b.peak_bytes);
 }
 
 #[test]

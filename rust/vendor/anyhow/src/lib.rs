@@ -1,0 +1,197 @@
+//! Offline drop-in subset of the `anyhow` error-handling crate.
+//!
+//! This workspace builds with no registry access (DESIGN.md §4 S14), so
+//! the real `anyhow` cannot be fetched.  This vendored shim implements
+//! exactly the surface the `twobp` crate uses:
+//!
+//! * [`Error`] — a context-chain error (no downcasting, no backtraces);
+//! * [`Result<T>`] with the `Error` default;
+//! * [`anyhow!`] / [`bail!`] macros;
+//! * the [`Context`] extension trait (`.context` / `.with_context`) on
+//!   `Result<_, E>` for both std errors and `Error` itself;
+//! * `From<E: std::error::Error>` so `?` converts foreign errors.
+//!
+//! Formatting matches anyhow's conventions: `{}` shows the outermost
+//! message, `{:#}` the full `outer: ...: root` chain.  Like the real
+//! crate, `Error` deliberately does **not** implement
+//! `std::error::Error` — that is what keeps the blanket `From`/`Context`
+//! impls coherent.
+
+use std::fmt;
+
+/// A chain of messages, innermost (root cause) first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, msg) in self.chain.iter().rev().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{msg}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.write_chain(f)
+        } else {
+            write!(f, "{}", self.chain.last().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // capture the source chain, root cause first
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        chain.reverse();
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:literal, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($msg:expr $(,)?) => { $crate::Error::msg($msg) };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) };
+}
+
+mod private {
+    /// Sealed conversion into [`crate::Error`].  Implemented for std
+    /// errors and for `Error` itself; the two impls stay coherent
+    /// because `Error` does not implement `std::error::Error`.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+use private::IntoError;
+
+/// `.context(...)` / `.with_context(|| ...)` on results.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: private::IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(format!("{a}"), "plain");
+        let n = 3;
+        let b = anyhow!("n = {n}");
+        assert_eq!(format!("{b}"), "n = 3");
+        let c = anyhow!("n = {}", 4);
+        assert_eq!(format!("{c}"), "n = 4");
+        let d = anyhow!(String::from("owned"));
+        assert_eq!(format!("{d}"), "owned");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "boom 1");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let e: Result<()> = Err(io_err()).context("reading manifest");
+        let e = e.with_context(|| format!("loading preset {}", "bert-s"));
+        let err = e.unwrap_err();
+        assert_eq!(format!("{err}"), "loading preset bert-s");
+        assert_eq!(
+            format!("{err:#}"),
+            "loading preset bert-s: reading manifest: no such file"
+        );
+    }
+
+    #[test]
+    fn question_mark_converts_foreign_errors() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let e: Result<()> = Err(anyhow!("root"));
+        let err = e.context("outer").unwrap_err();
+        assert_eq!(format!("{err:#}"), "outer: root");
+    }
+}
