@@ -3,6 +3,8 @@
 //!
 //! ```text
 //! cargo bench --bench sweep_throughput [-- --quick] [-- --threads K]
+//!     [-- --baseline BENCH_baseline.json]
+//!     [-- --write-baseline BENCH_baseline.json]
 //! ```
 //!
 //! Two parts:
@@ -20,7 +22,16 @@
 //! Both parts are appended to `BENCH_sim.json` (see
 //! `util::stats::BenchRecorder`) so the perf trajectory is tracked
 //! across PRs.
+//!
+//! **Regression gate** (the CI guard over the perf trajectory): with
+//! `--baseline <file>`, the measured cells/sec mean is compared against
+//! the committed baseline entry for the current mode
+//! (`quick_cells_per_sec` / `full_cells_per_sec`) and the process exits
+//! non-zero on a >20% regression.  `--write-baseline <file>` refreshes
+//! that entry in place — run it on a quiet machine when a deliberate
+//! change moves the number.
 
+use std::path::Path;
 use std::time::Instant;
 
 use twobp::experiments::sweep::{self, Cell, CellOut};
@@ -159,6 +170,55 @@ fn main() {
     match rec.write() {
         Ok(()) => println!("  wrote BENCH_sim.json"),
         Err(e) => eprintln!("  warning: could not write BENCH_sim.json: {e}"),
+    }
+
+    // -- part 3: cells/sec regression gate vs a committed baseline ----------
+    let mode_key = if quick {
+        "quick_cells_per_sec"
+    } else {
+        "full_cells_per_sec"
+    };
+    if let Some(path) = args.get("write-baseline") {
+        let mut base = BenchRecorder::open(Path::new(path));
+        base.record(mode_key, Json::Num(s.mean));
+        match base.write() {
+            Ok(()) => println!("  wrote {mode_key} = {:.0} to {path}", s.mean),
+            Err(e) => {
+                eprintln!("FAIL: could not write baseline {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    if let Some(path) = args.get("baseline") {
+        let base_cps = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|v| v.get(mode_key).and_then(|x| x.as_f64()));
+        match base_cps {
+            None => {
+                eprintln!(
+                    "FAIL: baseline {path} is missing a numeric \
+                     '{mode_key}' entry"
+                );
+                std::process::exit(1);
+            }
+            Some(base_cps) => {
+                let ratio = s.mean / base_cps;
+                println!(
+                    "  regression gate: {:.0} cells/s vs baseline {:.0} \
+                     ({:.2}x, fail below 0.80x)",
+                    s.mean, base_cps, ratio
+                );
+                if ratio < 0.8 {
+                    eprintln!(
+                        "FAIL: sweep throughput regressed >20% vs {path} \
+                         ({:.0} < 0.8 x {:.0} cells/s)",
+                        s.mean, base_cps
+                    );
+                    std::process::exit(1);
+                }
+            }
+        }
     }
 
     if !quick && speedup_total < 5.0 {

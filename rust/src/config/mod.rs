@@ -6,7 +6,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::schedule::ScheduleKind;
 use crate::util::args::Args;
@@ -72,11 +72,11 @@ impl RunConfig {
             verbose: args.has("verbose"),
             ..RunConfig::default()
         };
-        if let Some(s) = args.get("schedule") {
-            cfg.schedule = match ScheduleKind::parse(s) {
-                Some(k) => k,
-                None => bail!("unknown schedule '{s}' (naive|gpipe|1f1b-1|1f1b-2|1f1b-2-eager)"),
-            };
+        if let Some(kind) = args
+            .get_parsed::<ScheduleKind>("schedule")
+            .map_err(|e| anyhow::anyhow!(e))?
+        {
+            cfg.schedule = kind;
         }
         if args.has("concat-p2") {
             cfg.p2_mode = P2Mode::Concat;

@@ -23,7 +23,10 @@
 //!
 //! Module map (see DESIGN.md for the full system inventory):
 //!
-//! * [`schedule`] — pipeline schedule plans + validator (paper §3, Fig 1/5)
+//! * [`schedule`] — pipeline schedule plans + validator + plan DSL
+//!   (paper §3, Fig 1/5; `docs/PLAN_FORMAT.md`)
+//! * [`planner`]  — memory-constrained schedule auto-tuner (beam search
+//!   over validated plans, PipeDream/BaPipe-style)
 //! * [`sim`]      — discrete-event simulator (Table 1, Figs 1/6/7)
 //! * [`runtime`]  — PJRT client wrapper: load + execute HLO artifacts
 //! * [`models`]   — artifact manifest parsing (shapes, byte classes, flops)
@@ -36,6 +39,7 @@ pub mod config;
 pub mod experiments;
 pub mod metrics;
 pub mod models;
+pub mod planner;
 #[cfg(feature = "pjrt")]
 pub mod pipeline;
 #[cfg(feature = "pjrt")]

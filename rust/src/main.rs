@@ -3,11 +3,15 @@
 //! ```text
 //! twobp train    --preset transformer-tiny --schedule 1f1b-1 [--no-2bp]
 //!                [--steps N] [--microbatches M] [--concat-p2] [--verbose]
-//! twobp gantt    [--ranks N] [--cols W] [--schedule K] [--real --preset P]
+//! twobp gantt    [--ranks N] [--cols W] [--schedule K] [--plan FILE]
+//!                [--real --preset P]
 //! twobp simulate --schedule 1f1b-1 --ranks 8 [--no-2bp] [--comm C]
 //! twobp sweep    [--ranks 2,4,8,16,32] [--mults 1,2] [--threads K]
-//! twobp bench    <table1|fig1|fig3|fig4|fig5|table3|fig6|fig7|ckpt|sweep>
-//!                [--steps N]
+//! twobp tune     [--ranks N] [--budget 4.5G] [--beam K] [--gens G]
+//!                [--seed S] [--fwd F --p1 X --p2 Y --comm C]
+//!                [--out FILE.plan] [--gantt] [--threads K]
+//! twobp bench    <table1|fig1|fig3|fig4|fig5|table3|fig6|fig7|ckpt|sweep
+//!                 |planner> [--steps N]
 //! twobp config   --list
 //! ```
 //!
@@ -17,13 +21,15 @@
 use anyhow::{anyhow, Result};
 
 use twobp::config::table2;
-use twobp::schedule::{generate, validate::validate, ScheduleKind};
+use twobp::planner::{tune, BeamConfig, TuneProfile};
+use twobp::schedule::{generate, plan_io, validate::validate, ScheduleKind};
 use twobp::sim::{simulate, CostModel};
 use twobp::util::args::Args;
 use twobp::util::gantt;
+use twobp::util::stats::{fmt_bytes, parse_bytes};
 
 const FLAGS: &[&str] = &["no-2bp", "concat-p2", "verbose", "list", "real",
-                         "csv"];
+                         "csv", "gantt"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -34,6 +40,7 @@ fn main() {
         "gantt" => cmd_gantt(&args),
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
+        "tune" => cmd_tune(&args),
         "bench" => cmd_bench(&args),
         "config" => {
             println!("{}", table2().render());
@@ -41,7 +48,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: twobp <train|gantt|simulate|sweep|bench|config> \
+                "usage: twobp <train|gantt|simulate|sweep|tune|bench|config> \
                  [options]\n\
                  see `cargo doc` or README.md for details"
             );
@@ -92,16 +99,48 @@ fn cmd_gantt_real(_args: &Args, _cols: usize) -> Result<()> {
     ))
 }
 
+/// Cost model from the shared `--fwd/--p1/--p2/--comm` ratio flags
+/// (defaults to unit costs — the Fig 1 idealization).
+fn cost_model_from_args(args: &Args, n: usize) -> CostModel {
+    let mut cm = CostModel::ratios(
+        n,
+        args.get_f64("fwd", 1.0),
+        args.get_f64("p1", 1.0),
+        args.get_f64("p2", 1.0),
+    );
+    cm.comm = args.get_f64("comm", 0.0);
+    cm
+}
+
 fn cmd_gantt(args: &Args) -> Result<()> {
     let cols = args.get_usize("cols", 96);
     if args.has("real") {
         return cmd_gantt_real(args, cols);
     }
+    if let Some(path) = args.get("plan") {
+        // render an arbitrary `.plan` file (hand-written or a
+        // `twobp tune --out` winner) — see docs/PLAN_FORMAT.md
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
+        let plan = plan_io::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        let cm = cost_model_from_args(args, plan.n_ranks);
+        // eval_plan = validate + simulate: the one rejection path shared
+        // with the planner
+        let res = twobp::sim::eval_plan(&plan, &cm, None, None)
+            .map_err(|e| anyhow!("{path}: {e}"))?
+            .result;
+        if args.has("csv") {
+            print!("{}", gantt::to_csv(&res.spans));
+        } else {
+            println!("--- {} ({path}) ---  bubble ratio {:.3}",
+                     plan.describe(), res.bubble_ratio);
+            print!("{}", gantt::render(&res.spans, cols));
+        }
+        return Ok(());
+    }
     let n = args.get_usize("ranks", 4);
-    match args.get("schedule") {
-        Some(s) => {
-            let kind = ScheduleKind::parse(s)
-                .ok_or_else(|| anyhow!("unknown schedule '{s}'"))?;
+    match args.get_parsed::<ScheduleKind>("schedule").map_err(|e| anyhow!(e))? {
+        Some(kind) => {
             for two_bp in [false, true] {
                 let m = args.get_usize("microbatches", 0);
                 let plan = generate(kind, two_bp, n, m, false);
@@ -122,17 +161,13 @@ fn cmd_gantt(args: &Args) -> Result<()> {
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let n = args.get_usize("ranks", 4);
-    let kind = ScheduleKind::parse(args.get_or("schedule", "1f1b-1"))
-        .ok_or_else(|| anyhow!("unknown schedule"))?;
+    let kind = args
+        .get_parsed::<ScheduleKind>("schedule")
+        .map_err(|e| anyhow!(e))?
+        .unwrap_or(ScheduleKind::OneF1B1);
     let two_bp = !args.has("no-2bp");
     let m = args.get_usize("microbatches", 0);
-    let mut cm = CostModel::ratios(
-        n,
-        args.get_f64("fwd", 1.0),
-        args.get_f64("p1", 1.0),
-        args.get_f64("p2", 1.0),
-    );
-    cm.comm = args.get_f64("comm", 0.0);
+    let cm = cost_model_from_args(args, n);
     let plan = generate(kind, two_bp, n, m, false);
     validate(&plan).map_err(|e| anyhow!("{e}"))?;
     let res = simulate(&plan, &cm, None).map_err(|e| anyhow!("{e}"))?;
@@ -159,6 +194,103 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         return Err(anyhow!("--ranks and --mults need at least one value"));
     }
     print!("{}", twobp::experiments::schedule_space(&ranks, &mults, threads));
+    Ok(())
+}
+
+/// Memory-constrained schedule auto-tuning (the `planner/` subsystem):
+/// beam-search the legal-plan space for the best-throughput schedule
+/// whose per-rank peak fits `--budget`.  Profile defaults to the
+/// LLaMa-like one; `--fwd/--p1/--p2/--comm` override the cost shape.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let n = args.get_usize("ranks", 4);
+    let budget = match args.get("budget") {
+        Some(s) => Some(parse_bytes(s).map_err(|e| anyhow!(e))?),
+        None => None,
+    };
+    let custom_costs = ["fwd", "p1", "p2", "comm"]
+        .iter()
+        .any(|k| args.get(k).is_some());
+    let profile = if custom_costs {
+        TuneProfile::from_ratios(
+            n,
+            args.get_f64("fwd", 1.0),
+            args.get_f64("p1", 1.05),
+            args.get_f64("p2", 0.95),
+            args.get_f64("comm", 0.05),
+        )
+    } else {
+        TuneProfile::llama_like(n)
+    };
+    let defaults = BeamConfig::default();
+    let cfg = BeamConfig {
+        beam_width: args.get_usize("beam", defaults.beam_width),
+        generations: args.get_usize("gens", defaults.generations),
+        mutations_per_parent: args
+            .get_usize("mutations", defaults.mutations_per_parent),
+        max_microbatches: args.get_usize("microbatches-max", 0),
+        seed: args.get_usize("seed", defaults.seed as usize) as u64,
+        threads: args.get_usize("threads", 0),
+        budget_bytes: budget,
+        patience: args.get_usize("patience", defaults.patience),
+    };
+    let report = tune(&profile, n, &cfg).map_err(|e| anyhow!(e))?;
+
+    println!(
+        "planner: profile {}, {} ranks, budget {}/rank",
+        report.profile_name,
+        report.n_ranks,
+        report
+            .budget_bytes
+            .map(fmt_bytes)
+            .unwrap_or_else(|| "unconstrained".into()),
+    );
+    println!(
+        "  evaluated {} candidates over {} generations \
+         ({} over budget, {} sim-rejected; beam {}, seed {})",
+        report.evaluated, report.generations_run, report.rejected_budget,
+        report.rejected_sim, cfg.beam_width, cfg.seed,
+    );
+    println!(
+        "  best samples/s by generation: {}",
+        report
+            .history
+            .iter()
+            .map(|t| format!("{t:.4}"))
+            .collect::<Vec<_>>()
+            .join(" -> "),
+    );
+    let best = &report.best;
+    println!(
+        "winner: {} [{} from {}]\n  throughput {:.4} samples/s   \
+         peak {}   makespan {:.3}",
+        best.plan.describe(), best.origin, best.seed, best.throughput,
+        fmt_bytes(best.max_peak), best.makespan,
+    );
+    match &report.named_best {
+        Some(nb) => println!(
+            "vs best named schedule that fits: {} at {:.4} samples/s, \
+             peak {} -> {:.3}x",
+            nb.plan.describe(),
+            nb.throughput,
+            fmt_bytes(nb.max_peak),
+            best.throughput / nb.throughput,
+        ),
+        None => println!(
+            "no unmodified named schedule fits this budget \
+             (the winner is planner-built)"
+        ),
+    }
+
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &best.text)
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("wrote winner to {path} (render: twobp gantt --plan {path})");
+    }
+    if args.has("gantt") {
+        let res = simulate(&best.plan, &profile.costs, None)
+            .map_err(|e| anyhow!("{e}"))?;
+        print!("{}", gantt::render(&res.spans, args.get_usize("cols", 96)));
+    }
     Ok(())
 }
 

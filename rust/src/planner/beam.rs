@@ -1,0 +1,460 @@
+//! Deterministic beam search over the legal-plan space.
+//!
+//! **Seeding** covers (schedule kind × 2BP × microbatch count × flush
+//! point): every generator combo from `experiments::sweep::combos()` at
+//! several microbatch counts, plus partial-flush-enriched variants of
+//! each 2BP seed (the Fig 5 memory knob at arbitrary points).
+//! **Evaluation** is [`crate::sim::eval_plan`] under the profile's cost
+//! and memory models — candidates whose `peak_bytes` exceed the budget
+//! are rejected outright, as are plans the simulator reports as
+//! deadlocked (see [`super::moves`] on validity vs liveness).
+//! **Search** keeps the `beam_width` best by throughput and expands
+//! each survivor with validated local moves for up to `generations`
+//! rounds, stopping early after `patience` rounds without improvement.
+//!
+//! Everything is deterministic for a fixed [`BeamConfig::seed`]: the
+//! PRNG is consumed only in the sequential mutation loop, candidate
+//! evaluation fans out through the order-preserving
+//! `experiments::sweep::run_grid`, the candidate pool is a `BTreeMap`
+//! keyed by canonical DSL text, and ranking ties break on that text.
+//! Thread count never changes the result.
+
+use std::collections::BTreeMap;
+
+use crate::experiments::sweep::{combos, default_threads, run_grid};
+use crate::schedule::{generate, plan_io, Plan};
+use crate::sim::eval_plan;
+use crate::util::prng::SplitMix64;
+
+use super::{moves, TuneProfile};
+
+/// Search hyper-parameters.  The defaults finish in well under a second
+/// on the event-driven engine at paper scales (N ≤ 16).
+#[derive(Debug, Clone)]
+pub struct BeamConfig {
+    pub beam_width: usize,
+    pub generations: usize,
+    pub mutations_per_parent: usize,
+    /// Largest microbatch count seeded (0 = 4 × n_ranks).
+    pub max_microbatches: usize,
+    pub seed: u64,
+    /// Worker threads for candidate evaluation (0 = one per core).
+    pub threads: usize,
+    /// Per-rank peak-byte budget; `None` = unconstrained.
+    pub budget_bytes: Option<u64>,
+    /// Stop after this many generations without a throughput gain.
+    pub patience: usize,
+}
+
+impl Default for BeamConfig {
+    fn default() -> Self {
+        BeamConfig {
+            beam_width: 8,
+            generations: 10,
+            mutations_per_parent: 6,
+            max_microbatches: 0,
+            seed: 0x2B9,
+            threads: 0,
+            budget_bytes: None,
+            patience: 4,
+        }
+    }
+}
+
+/// One evaluated, budget-fitting plan.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub plan: Plan,
+    /// Canonical DSL text — also the dedup fingerprint and the ranking
+    /// tie-break, and ready to write as a `.plan` file.
+    pub text: String,
+    pub makespan: f64,
+    /// Samples/sec under the profile.
+    pub throughput: f64,
+    pub max_peak: u64,
+    /// The seed schedule this candidate descends from.
+    pub seed: String,
+    /// "seed", or "g<generation>:<move>" for mutated candidates.
+    pub origin: String,
+}
+
+/// Total ranking order: throughput desc, then peak asc, then DSL text.
+fn better(a: &Candidate, b: &Candidate) -> std::cmp::Ordering {
+    b.throughput
+        .total_cmp(&a.throughput)
+        .then_with(|| a.max_peak.cmp(&b.max_peak))
+        .then_with(|| a.text.cmp(&b.text))
+}
+
+/// What [`tune`] found.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub profile_name: String,
+    pub n_ranks: usize,
+    pub budget_bytes: Option<u64>,
+    /// The winner.  Always `>=` every fitting generator schedule on
+    /// throughput, because all generator combos are in the seed pool.
+    pub best: Candidate,
+    /// Best *unmodified* generator schedule that fits the budget
+    /// (`None` when none does while an enriched/mutated plan still
+    /// could — e.g. only a planner-inserted flush point fits).
+    pub named_best: Option<Candidate>,
+    pub evaluated: usize,
+    pub rejected_budget: usize,
+    pub rejected_sim: usize,
+    pub generations_run: usize,
+    /// Best throughput after seeding (index 0) and each generation.
+    pub history: Vec<f64>,
+}
+
+impl TuneReport {
+    /// Winner's throughput gain over the best fitting named schedule.
+    pub fn gain_vs_named(&self) -> Option<f64> {
+        self.named_best
+            .as_ref()
+            .map(|nb| self.best.throughput / nb.throughput)
+    }
+}
+
+/// One unevaluated candidate: (plan, canonical text, seed, origin).
+type Pending = (Plan, String, String, String);
+
+enum EvalOut {
+    Fit(Box<Candidate>),
+    OverBudget,
+    SimFail,
+}
+
+#[derive(Default)]
+struct Tally {
+    evaluated: usize,
+    rejected_budget: usize,
+    rejected_sim: usize,
+}
+
+/// Fold one evaluation batch into the candidate pool, the named-plan
+/// leader, and the rejection tally.
+fn absorb(
+    outs: Vec<EvalOut>,
+    named_texts: &std::collections::BTreeSet<String>,
+    pool: &mut BTreeMap<String, Candidate>,
+    named_best: &mut Option<Candidate>,
+    tally: &mut Tally,
+) {
+    for out in outs {
+        tally.evaluated += 1;
+        match out {
+            EvalOut::OverBudget => tally.rejected_budget += 1,
+            EvalOut::SimFail => tally.rejected_sim += 1,
+            EvalOut::Fit(cand) => {
+                if named_texts.contains(&cand.text) {
+                    let replace = named_best
+                        .as_ref()
+                        .map(|nb| {
+                            better(&cand, nb) == std::cmp::Ordering::Less
+                        })
+                        .unwrap_or(true);
+                    if replace {
+                        *named_best = Some((*cand).clone());
+                    }
+                }
+                pool.entry(cand.text.clone()).or_insert(*cand);
+            }
+        }
+    }
+}
+
+fn evaluate(
+    pending: &[Pending],
+    profile: &TuneProfile,
+    cfg: &BeamConfig,
+    threads: usize,
+) -> Vec<EvalOut> {
+    run_grid(pending, threads, |_, (plan, text, seed, origin)| {
+        match eval_plan(
+            plan,
+            &profile.costs,
+            Some(&profile.mem),
+            cfg.budget_bytes,
+        ) {
+            Err(_) => EvalOut::SimFail,
+            Ok(ev) if !ev.fits => EvalOut::OverBudget,
+            Ok(ev) => EvalOut::Fit(Box::new(Candidate {
+                plan: plan.clone(),
+                text: text.clone(),
+                makespan: ev.result.makespan,
+                throughput: ev.result.throughput(
+                    profile.samples_per_microbatch,
+                    plan.n_microbatches,
+                ),
+                max_peak: ev.max_peak,
+                seed: seed.clone(),
+                origin: origin.clone(),
+            })),
+        }
+    })
+}
+
+/// The microbatch counts seeded for `n` ranks (ascending, deduped,
+/// capped at `max_m`): {N, 3N/2, 2N, 3N, 4N}.
+fn microbatch_grid(n: usize, max_m: usize) -> Vec<usize> {
+    let mut ms: Vec<usize> = [n, 3 * n / 2, 2 * n, 3 * n, 4 * n]
+        .into_iter()
+        .filter(|&m| m >= 1 && m <= max_m)
+        .collect();
+    ms.sort_unstable();
+    ms.dedup();
+    if ms.is_empty() {
+        ms.push(max_m.max(1));
+    }
+    ms
+}
+
+/// Run the search.  `Err` when the profile shape mismatches `n_ranks`
+/// or when *no* candidate fits the budget.
+pub fn tune(
+    profile: &TuneProfile,
+    n_ranks: usize,
+    cfg: &BeamConfig,
+) -> Result<TuneReport, String> {
+    if profile.costs.fwd.len() != n_ranks
+        || profile.mem.static_bytes.len() != n_ranks
+    {
+        return Err(format!(
+            "profile '{}' is shaped for {} ranks, tune asked for {n_ranks}",
+            profile.name,
+            profile.costs.fwd.len()
+        ));
+    }
+    let threads = if cfg.threads == 0 {
+        default_threads()
+    } else {
+        cfg.threads
+    };
+    // a 0-wide beam (e.g. `twobp tune --beam 0`) would make every
+    // select() empty and panic; treat it as the narrowest search
+    let beam_width = cfg.beam_width.max(1);
+    let max_m = if cfg.max_microbatches == 0 {
+        4 * n_ranks
+    } else {
+        cfg.max_microbatches
+    };
+
+    // -- seeding -----------------------------------------------------------
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut seen: std::collections::BTreeSet<String> =
+        std::collections::BTreeSet::new();
+    let mut named_texts: std::collections::BTreeSet<String> =
+        std::collections::BTreeSet::new();
+    for (kind, two_bp) in combos() {
+        for &m in &microbatch_grid(n_ranks, max_m) {
+            let plan = generate(kind, two_bp, n_ranks, m, false);
+            let text = plan_io::to_text(&plan);
+            let desc = plan.describe();
+            if seen.insert(text.clone()) {
+                named_texts.insert(text.clone());
+                pending.push((plan.clone(), text, desc.clone(), "seed".into()));
+            }
+            // flush-point-enriched 2BP variants (generalized Fig 5)
+            if two_bp && m >= 3 {
+                for k in [m / 4, m / 2, 3 * m / 4] {
+                    let k = k.clamp(1, m - 2) as u32;
+                    if let Some(enriched) =
+                        moves::with_partial_flush(&plan, k, false)
+                    {
+                        let etext = plan_io::to_text(&enriched);
+                        if seen.insert(etext.clone()) {
+                            pending.push((
+                                enriched,
+                                etext,
+                                format!("{desc} +flush@{k}"),
+                                "seed".into(),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let mut tally = Tally::default();
+    let mut pool: BTreeMap<String, Candidate> = BTreeMap::new();
+    let mut named_best: Option<Candidate> = None;
+
+    let outs = evaluate(&pending, profile, cfg, threads);
+    absorb(outs, &named_texts, &mut pool, &mut named_best, &mut tally);
+
+    if pool.is_empty() {
+        return Err(format!(
+            "no schedule fits the budget: all {} seed candidates \
+             rejected ({} over budget, {} simulation failures)",
+            tally.evaluated, tally.rejected_budget, tally.rejected_sim
+        ));
+    }
+
+    let select = |pool: &BTreeMap<String, Candidate>| -> Vec<Candidate> {
+        let mut all: Vec<Candidate> = pool.values().cloned().collect();
+        all.sort_by(better);
+        all.truncate(beam_width);
+        all
+    };
+
+    // -- beam loop ---------------------------------------------------------
+    let mut beam = select(&pool);
+    let mut history = vec![beam[0].throughput];
+    let mut best_tput = beam[0].throughput;
+    let mut rng = SplitMix64::new(cfg.seed ^ 0x2B97_C4E5);
+    let mut stale = 0usize;
+    let mut generations_run = 0usize;
+
+    for g in 1..=cfg.generations {
+        let mut children: Vec<Pending> = Vec::new();
+        for parent in &beam {
+            for _ in 0..cfg.mutations_per_parent {
+                for _attempt in 0..8 {
+                    if let Some((child, mv)) =
+                        moves::mutate(&parent.plan, &mut rng)
+                    {
+                        let text = plan_io::to_text(&child);
+                        if seen.contains(&text) {
+                            // duplicate of an already-tried plan: retry
+                            // with fresh randomness rather than forfeit
+                            // this mutation slot
+                            continue;
+                        }
+                        seen.insert(text.clone());
+                        children.push((
+                            child,
+                            text,
+                            parent.seed.clone(),
+                            format!("g{g}:{mv}"),
+                        ));
+                        break;
+                    }
+                }
+            }
+        }
+        let outs = evaluate(&children, profile, cfg, threads);
+        absorb(outs, &named_texts, &mut pool, &mut named_best, &mut tally);
+
+        beam = select(&pool);
+        history.push(beam[0].throughput);
+        generations_run = g;
+        if beam[0].throughput > best_tput * (1.0 + 1e-12) {
+            best_tput = beam[0].throughput;
+            stale = 0;
+        } else {
+            stale += 1;
+            if stale >= cfg.patience {
+                break;
+            }
+        }
+    }
+
+    Ok(TuneReport {
+        profile_name: profile.name.clone(),
+        n_ranks,
+        budget_bytes: cfg.budget_bytes,
+        best: beam[0].clone(),
+        named_best,
+        evaluated: tally.evaluated,
+        rejected_budget: tally.rejected_budget,
+        rejected_sim: tally.rejected_sim,
+        generations_run,
+        history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate::validate;
+
+    fn quick_cfg() -> BeamConfig {
+        BeamConfig {
+            beam_width: 6,
+            generations: 4,
+            mutations_per_parent: 4,
+            seed: 7,
+            ..BeamConfig::default()
+        }
+    }
+
+    #[test]
+    fn unconstrained_tune_finds_a_valid_winner() {
+        let profile = TuneProfile::llama_like(4);
+        let report = tune(&profile, 4, &quick_cfg()).unwrap();
+        validate(&report.best.plan).unwrap();
+        let nb = report.named_best.as_ref().expect("some named plan fits");
+        assert!(
+            report.best.throughput >= nb.throughput,
+            "winner {} < named {}",
+            report.best.throughput,
+            nb.throughput
+        );
+        // round-trips through the DSL
+        let back = plan_io::parse(&report.best.text).unwrap();
+        assert_eq!(back, report.best.plan);
+    }
+
+    #[test]
+    fn tune_is_deterministic_per_seed() {
+        let profile = TuneProfile::llama_like(2);
+        let cfg = BeamConfig { threads: 1, ..quick_cfg() };
+        let a = tune(&profile, 2, &cfg).unwrap();
+        let cfg4 = BeamConfig { threads: 4, ..quick_cfg() };
+        let b = tune(&profile, 2, &cfg4).unwrap();
+        assert_eq!(a.best.text, b.best.text, "thread count changed result");
+        assert_eq!(
+            a.best.makespan.to_bits(),
+            b.best.makespan.to_bits()
+        );
+        assert_eq!(a.history.len(), b.history.len());
+    }
+
+    #[test]
+    fn impossible_budget_errors_out() {
+        let profile = TuneProfile::llama_like(2);
+        let cfg = BeamConfig {
+            budget_bytes: Some(1), // nothing fits one byte
+            ..quick_cfg()
+        };
+        let err = tune(&profile, 2, &cfg).unwrap_err();
+        assert!(err.contains("no schedule fits"), "{err}");
+    }
+
+    #[test]
+    fn rank_mismatch_errors_out() {
+        let profile = TuneProfile::llama_like(2);
+        assert!(tune(&profile, 4, &quick_cfg()).is_err());
+    }
+
+    #[test]
+    fn budget_is_a_hard_constraint() {
+        let profile = TuneProfile::llama_like(4);
+        // binding budget: 90% of the unconstrained winner's peak
+        let unconstrained = tune(&profile, 4, &quick_cfg()).unwrap();
+        let budget = unconstrained.best.max_peak * 9 / 10;
+        let cfg = BeamConfig {
+            budget_bytes: Some(budget),
+            ..quick_cfg()
+        };
+        let constrained = tune(&profile, 4, &cfg).unwrap();
+        assert!(
+            constrained.best.max_peak <= budget,
+            "winner peak {} exceeds budget {budget}",
+            constrained.best.max_peak
+        );
+        assert!(constrained.rejected_budget > 0, "budget never rejected");
+        if let Some(nb) = &constrained.named_best {
+            assert!(constrained.best.throughput >= nb.throughput);
+        }
+    }
+
+    #[test]
+    fn microbatch_grid_is_sane() {
+        assert_eq!(microbatch_grid(4, 16), vec![4, 6, 8, 12, 16]);
+        assert_eq!(microbatch_grid(1, 4), vec![1, 2, 3, 4]);
+        assert_eq!(microbatch_grid(4, 2), vec![2]); // capped, fallback
+    }
+}

@@ -1,0 +1,230 @@
+//! Local plan mutations — the beam search's neighborhood.
+//!
+//! Every move returns a *candidate* plan; [`mutate`] gates it through
+//! `schedule::validate` so only legal plans leave this module.  Note
+//! that validity (per-rank op coherence + cross-rank order consistency)
+//! does not guarantee liveness: a validated plan can still deadlock the
+//! pipeline (rank r waiting on a forward rank r−1 has scheduled after a
+//! backward that waits on rank r).  The simulator detects that as a
+//! `SimError`, and the beam discards such candidates at evaluation —
+//! liveness is a *scoring* concern, not a validity one.
+//!
+//! The move set:
+//!
+//! * **swap-adjacent** — swap two neighboring ops of different kinds on
+//!   one rank (changes the fwd/bwd interleave, e.g. warmup depth,
+//!   without touching the cross-rank forward/backward orders);
+//! * **shift-flush-point** — move a partial flush's `upto` bound ±1
+//!   (trades stash headroom against mid-step p2 stalls, Fig 5's knob);
+//! * **insert-flush / remove-flush** — add a partial flush after some
+//!   `b<k>` or delete one (memory reducer / throughput raiser);
+//! * **toggle-concat** — flip a flush between per-mb p2 calls and one
+//!   concatenated call (Table 3's trade, live when `concat_factor ≠ 1`).
+
+use crate::schedule::{validate::validate, Op, Plan};
+use crate::util::prng::SplitMix64;
+
+/// Apply one randomly chosen local move.  Returns `None` when the
+/// sampled move is inapplicable, is a no-op, or yields a plan the
+/// validator rejects; callers just retry with fresh randomness.
+pub fn mutate(plan: &Plan, rng: &mut SplitMix64) -> Option<(Plan, &'static str)> {
+    let (cand, name) = match rng.below(8) {
+        // swap carries most of the throughput exploration — weight it up
+        0..=3 => (swap_adjacent(plan, rng)?, "swap-adjacent"),
+        4 => (shift_flush_point(plan, rng)?, "shift-flush-point"),
+        5 => (insert_partial_flush(plan, rng)?, "insert-flush"),
+        6 => (remove_partial_flush(plan, rng)?, "remove-flush"),
+        _ => (toggle_flush_concat(plan, rng)?, "toggle-concat"),
+    };
+    if cand == *plan {
+        return None;
+    }
+    validate(&cand).ok()?;
+    Some((cand, name))
+}
+
+/// Positions of `Flush` ops, optionally only partial ones.
+fn flush_positions(plan: &Plan, partial_only: bool) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (r, ops) in plan.ranks.iter().enumerate() {
+        for (i, op) in ops.iter().enumerate() {
+            if let Op::Flush { upto, .. } = op {
+                if !partial_only || upto.is_some() {
+                    out.push((r, i));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn swap_adjacent(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
+    let r = rng.below(plan.n_ranks as u64) as usize;
+    let ops = &plan.ranks[r];
+    if ops.len() < 2 {
+        return None;
+    }
+    let i = rng.below(ops.len() as u64 - 1) as usize;
+    let (a, b) = (&ops[i], &ops[i + 1]);
+    // same-kind swaps either permute the cross-rank order (invalid on
+    // N > 1) or reorder interchangeable p2 work (a no-op for timing);
+    // OptStep must stay last — skip them all cheaply.
+    if std::mem::discriminant(a) == std::mem::discriminant(b)
+        || matches!(a, Op::OptStep)
+        || matches!(b, Op::OptStep)
+    {
+        return None;
+    }
+    let mut out = plan.clone();
+    out.ranks[r].swap(i, i + 1);
+    Some(out)
+}
+
+fn shift_flush_point(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
+    let pts = flush_positions(plan, true);
+    if pts.is_empty() {
+        return None;
+    }
+    let (r, i) = pts[rng.below(pts.len() as u64) as usize];
+    let delta: i64 = if rng.next_u64() & 1 == 1 { 1 } else { -1 };
+    let mut out = plan.clone();
+    if let Op::Flush { upto: Some(k), .. } = &mut out.ranks[r][i] {
+        let nk = *k as i64 + delta;
+        if nk < 0 || nk >= plan.n_microbatches as i64 {
+            return None;
+        }
+        *k = nk as u32;
+    }
+    Some(out)
+}
+
+fn insert_partial_flush(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
+    // only meaningful with deferred p2 (otherwise nothing is pending)
+    if !plan.greedy_p2 || plan.n_microbatches < 2 {
+        return None;
+    }
+    let r = rng.below(plan.n_ranks as u64) as usize;
+    let k = rng.below(plan.n_microbatches as u64) as u32;
+    let mut out = plan.clone();
+    if !crate::schedule::insert_partial_flush(&mut out.ranks[r], k, false) {
+        return None;
+    }
+    Some(out)
+}
+
+fn remove_partial_flush(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
+    let pts = flush_positions(plan, true);
+    if pts.is_empty() {
+        return None;
+    }
+    let (r, i) = pts[rng.below(pts.len() as u64) as usize];
+    let mut out = plan.clone();
+    out.ranks[r].remove(i);
+    Some(out)
+}
+
+fn toggle_flush_concat(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
+    let pts = flush_positions(plan, false);
+    if pts.is_empty() {
+        return None;
+    }
+    let (r, i) = pts[rng.below(pts.len() as u64) as usize];
+    let mut out = plan.clone();
+    if let Op::Flush { concat, .. } = &mut out.ranks[r][i] {
+        *concat = !*concat;
+    }
+    Some(out)
+}
+
+/// Insert `flush@k` right after `b<k>` on **every** rank — the seeding
+/// helper that generalizes the Fig 5 eager-p2 variant to an arbitrary
+/// flush point.  `None` if any rank lacks `b<k>` (k out of range).
+/// Placement is the generator's own `insert_partial_flush`, so seeded
+/// variants can never drift from the eager-p2 generator.
+pub fn with_partial_flush(plan: &Plan, k: u32, concat: bool) -> Option<Plan> {
+    let mut out = plan.clone();
+    for ops in &mut out.ranks {
+        if !crate::schedule::insert_partial_flush(ops, k, concat) {
+            return None;
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{generate, ScheduleKind};
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn with_partial_flush_reproduces_the_eager_generator() {
+        // inserting the Fig 5 flush point into plain 1F1B-2 must yield
+        // exactly the eager-p2 generator's op lists
+        for n in [1usize, 2, 4, 6] {
+            let m = 2 * n;
+            let plain = generate(ScheduleKind::OneF1B2, true, n, m, false);
+            let eager =
+                generate(ScheduleKind::OneF1B2EagerP2, true, n, m, false);
+            let k = (m / 2).max(1) as u32 - 1;
+            let enriched = with_partial_flush(&plain, k, false).unwrap();
+            assert_eq!(enriched.ranks, eager.ranks, "n={n}");
+        }
+    }
+
+    #[test]
+    fn with_partial_flush_rejects_out_of_range() {
+        let plan = generate(ScheduleKind::OneF1B1, true, 2, 2, false);
+        assert!(with_partial_flush(&plan, 99, false).is_none());
+    }
+
+    /// Every accepted mutation validates, preserves the plan's shape
+    /// parameters, and chains of mutations stay legal.
+    #[test]
+    fn prop_mutations_preserve_validity() {
+        check(
+            "chained planner mutations always validate",
+            120,
+            |rng| {
+                let kind = *gen::pick(rng, &ScheduleKind::all_variants());
+                let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
+                    true
+                } else {
+                    gen::bool(rng)
+                };
+                let n = gen::usize_in(rng, 1, 6);
+                let m = gen::usize_in(rng, 1, 12);
+                let seed = rng.next_u64();
+                (kind, two_bp, n, m, seed)
+            },
+            |&(kind, two_bp, n, m, seed)| {
+                let mut plan = generate(kind, two_bp, n, m, two_bp);
+                let mut rng = SplitMix64::new(seed);
+                let mut accepted = 0;
+                for _ in 0..40 {
+                    if let Some((next, _name)) = mutate(&plan, &mut rng) {
+                        validate(&next).map_err(|e| {
+                            format!("mutation escaped validation: {e}")
+                        })?;
+                        if next.n_ranks != plan.n_ranks
+                            || next.n_microbatches != plan.n_microbatches
+                            || next.two_bp != plan.two_bp
+                            || next.greedy_p2 != plan.greedy_p2
+                        {
+                            return Err("mutation changed plan shape".into());
+                        }
+                        plan = next;
+                        accepted += 1;
+                    }
+                }
+                // non-degeneracy: 2BP plans with m >= 2 always admit
+                // insert-flush and toggle-concat, so 40 tries accepting
+                // nothing would mean the move set is broken
+                if two_bp && m >= 2 && accepted == 0 {
+                    return Err("no mutation ever accepted".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

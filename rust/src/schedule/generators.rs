@@ -135,13 +135,24 @@ fn rank_ops(
 }
 
 /// Insert `Flush{upto}` right after `BwdP1(upto)` (Fig 5's mid-step p2
-/// drain).  No-op if that p1 is not in the list (e.g. m == 1).
-fn insert_partial_flush(ops: &mut Vec<Op>, upto: u32, concat: bool) {
-    if let Some(pos) = ops
+/// drain).  Returns whether it inserted — false when that p1 is not in
+/// the list (e.g. m == 1, or an out-of-range flush point).  Shared with
+/// the planner's seeding/mutation moves (re-exported from the parent
+/// module) so generator and planner flush placement can never drift.
+pub(crate) fn insert_partial_flush(
+    ops: &mut Vec<Op>,
+    upto: u32,
+    concat: bool,
+) -> bool {
+    match ops
         .iter()
         .position(|op| matches!(op, Op::BwdP1 { mb } if *mb == upto))
     {
-        ops.insert(pos + 1, Op::Flush { upto: Some(upto), concat });
+        Some(pos) => {
+            ops.insert(pos + 1, Op::Flush { upto: Some(upto), concat });
+            true
+        }
+        None => false,
     }
 }
 

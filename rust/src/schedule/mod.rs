@@ -16,9 +16,11 @@
 //! to cap stash growth.
 
 mod generators;
+pub mod plan_io;
 pub mod validate;
 
 pub use generators::{eager_p2_flush_points, generate};
+pub(crate) use generators::insert_partial_flush;
 
 /// One operation in a rank's schedule.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -58,15 +60,50 @@ pub enum ScheduleKind {
     OneF1B2EagerP2,
 }
 
+/// `ScheduleKind::parse` failure: carries the rejected input and lists
+/// every accepted name, so CLI/DSL errors are self-explanatory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseScheduleKindError {
+    pub input: String,
+}
+
+impl std::fmt::Display for ParseScheduleKindError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown schedule '{}' (valid: {})",
+            self.input,
+            ScheduleKind::VALID_NAMES.join(", ")
+        )
+    }
+}
+
+impl std::error::Error for ParseScheduleKindError {}
+
+impl std::str::FromStr for ScheduleKind {
+    type Err = ParseScheduleKindError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        ScheduleKind::parse(s)
+    }
+}
+
 impl ScheduleKind {
-    pub fn parse(s: &str) -> Option<Self> {
-        Some(match s {
+    /// Every name [`ScheduleKind::parse`] accepts (canonical name first
+    /// per kind; the error message and docs quote this list).
+    pub const VALID_NAMES: [&'static str; 8] = [
+        "naive", "gpipe", "1f1b-1", "1f1b1", "1f1b-2", "1f1b2",
+        "1f1b-2-eager", "eager",
+    ];
+
+    pub fn parse(s: &str) -> Result<Self, ParseScheduleKindError> {
+        Ok(match s {
             "naive" => ScheduleKind::Naive,
             "gpipe" => ScheduleKind::GPipe,
             "1f1b-1" | "1f1b1" => ScheduleKind::OneF1B1,
             "1f1b-2" | "1f1b2" => ScheduleKind::OneF1B2,
             "1f1b-2-eager" | "eager" => ScheduleKind::OneF1B2EagerP2,
-            _ => return None,
+            _ => return Err(ParseScheduleKindError { input: s.to_string() }),
         })
     }
 
@@ -104,7 +141,10 @@ impl ScheduleKind {
 }
 
 /// A complete schedule for one training step.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares every field (the DSL round-trip property in
+/// [`plan_io`] relies on exact equality).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Plan {
     pub kind: ScheduleKind,
     pub two_bp: bool,
@@ -134,5 +174,30 @@ impl Plan {
             self.n_ranks,
             self.n_microbatches
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_canonical_names() {
+        for kind in ScheduleKind::all_variants() {
+            assert_eq!(ScheduleKind::parse(kind.name()), Ok(kind));
+        }
+    }
+
+    #[test]
+    fn parse_error_lists_valid_names() {
+        let err = ScheduleKind::parse("zigzag").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("zigzag"), "{msg}");
+        for name in ScheduleKind::VALID_NAMES {
+            assert!(msg.contains(name), "missing {name} in: {msg}");
+        }
+        // and through FromStr (the CLI arg path)
+        assert!("bogus".parse::<ScheduleKind>().is_err());
+        assert_eq!("gpipe".parse::<ScheduleKind>(), Ok(ScheduleKind::GPipe));
     }
 }

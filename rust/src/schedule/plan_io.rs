@@ -1,0 +1,498 @@
+//! The plan DSL: a line-oriented text format (`.plan` files) that
+//! round-trips [`Plan`] exactly, so hand-built and planner-found
+//! schedules are first-class inputs everywhere a generated one is
+//! (sweeps, gantt, the simulator, the tuner).
+//!
+//! Canonical form (see `docs/PLAN_FORMAT.md` for the full grammar):
+//!
+//! ```text
+//! plan v1
+//! kind 1f1b-1
+//! two_bp true
+//! ranks 2
+//! microbatches 2
+//! greedy_p2 true
+//! rank 0 | f0 f1 b0 b1 flush opt
+//! rank 1 | f0 b0 f1 b1 flush opt
+//! ```
+//!
+//! Op tokens: `f<mb>` forward, `b<mb>` backward-p1, `w(<mb>,...)`
+//! explicit backward-p2 (`wc(...)` = concatenated call), `flush` /
+//! `flushc` full flush, `flush@<k>` / `flushc@<k>` partial flush of
+//! pending microbatches ≤ k, `opt` optimizer step.  `#` starts a
+//! comment; blank lines are ignored.  Header keys may appear in any
+//! order and anywhere in the file; a repeated key takes its last
+//! value.  The one ordering rule: `ranks` must be declared before the
+//! first `rank` line (it sizes the rank table) and may not change
+//! afterwards.  The canonical form [`to_text`] emits lists all headers
+//! first.
+//!
+//! The parser is purely syntactic: it reconstructs a [`Plan`] and
+//! leaves semantic checks (fwd-before-p1, p2 coverage, cross-rank
+//! order consistency, ...) to [`super::validate::validate`], exactly as
+//! for generator-built plans.  [`parse`] ∘ [`to_text`] is the identity
+//! on every `Plan` (enforced by a proptest below).
+
+use super::{Op, Plan, ScheduleKind};
+
+/// A parse failure, pointing at the 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanIoError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for PlanIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "plan parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for PlanIoError {}
+
+// ---------------------------------------------------------------------------
+// Serializer
+// ---------------------------------------------------------------------------
+
+fn op_token(op: &Op, out: &mut String) {
+    match op {
+        Op::Fwd { mb } => {
+            out.push('f');
+            out.push_str(&mb.to_string());
+        }
+        Op::BwdP1 { mb } => {
+            out.push('b');
+            out.push_str(&mb.to_string());
+        }
+        Op::BwdP2 { mbs, concat } => {
+            out.push_str(if *concat { "wc(" } else { "w(" });
+            for (i, mb) in mbs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&mb.to_string());
+            }
+            out.push(')');
+        }
+        Op::Flush { upto, concat } => {
+            out.push_str(if *concat { "flushc" } else { "flush" });
+            if let Some(u) = upto {
+                out.push('@');
+                out.push_str(&u.to_string());
+            }
+        }
+        Op::OptStep => out.push_str("opt"),
+    }
+}
+
+/// Serialize a plan to its canonical text form.
+pub fn to_text(plan: &Plan) -> String {
+    let mut out = String::with_capacity(64 + plan.total_ops() * 4);
+    out.push_str("# twobp plan file — docs/PLAN_FORMAT.md\n");
+    out.push_str("plan v1\n");
+    out.push_str(&format!("kind {}\n", plan.kind.name()));
+    out.push_str(&format!("two_bp {}\n", plan.two_bp));
+    out.push_str(&format!("ranks {}\n", plan.n_ranks));
+    out.push_str(&format!("microbatches {}\n", plan.n_microbatches));
+    out.push_str(&format!("greedy_p2 {}\n", plan.greedy_p2));
+    for (r, ops) in plan.ranks.iter().enumerate() {
+        out.push_str(&format!("rank {r} |"));
+        for op in ops {
+            out.push(' ');
+            op_token(op, &mut out);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+fn parse_u32(s: &str, line: usize, what: &str) -> Result<u32, PlanIoError> {
+    s.parse::<u32>().map_err(|_| PlanIoError {
+        line,
+        msg: format!("{what}: '{s}' is not a non-negative integer"),
+    })
+}
+
+fn parse_bool(s: &str, line: usize, key: &str) -> Result<bool, PlanIoError> {
+    match s {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        _ => Err(PlanIoError {
+            line,
+            msg: format!("{key}: expected 'true' or 'false', got '{s}'"),
+        }),
+    }
+}
+
+fn parse_op(tok: &str, line: usize) -> Result<Op, PlanIoError> {
+    let err = |msg: String| PlanIoError { line, msg };
+    if tok == "opt" {
+        return Ok(Op::OptStep);
+    }
+    if let Some(rest) = tok.strip_prefix("flushc") {
+        return Ok(Op::Flush {
+            upto: match rest.strip_prefix('@') {
+                Some(k) => Some(parse_u32(k, line, "flushc@")?),
+                None if rest.is_empty() => None,
+                None => return Err(err(format!("bad op token '{tok}'"))),
+            },
+            concat: true,
+        });
+    }
+    if let Some(rest) = tok.strip_prefix("flush") {
+        return Ok(Op::Flush {
+            upto: match rest.strip_prefix('@') {
+                Some(k) => Some(parse_u32(k, line, "flush@")?),
+                None if rest.is_empty() => None,
+                None => return Err(err(format!("bad op token '{tok}'"))),
+            },
+            concat: false,
+        });
+    }
+    if let Some(rest) = tok.strip_prefix('f') {
+        return Ok(Op::Fwd { mb: parse_u32(rest, line, "f")? });
+    }
+    if let Some(rest) = tok.strip_prefix('b') {
+        return Ok(Op::BwdP1 { mb: parse_u32(rest, line, "b")? });
+    }
+    for (prefix, concat) in [("wc(", true), ("w(", false)] {
+        if let Some(rest) = tok.strip_prefix(prefix) {
+            let inner = rest.strip_suffix(')').ok_or_else(|| {
+                err(format!("'{tok}' is missing the closing ')'"))
+            })?;
+            if inner.is_empty() {
+                return Err(err(format!(
+                    "'{tok}': backward-p2 needs at least one microbatch"
+                )));
+            }
+            let mbs = inner
+                .split(',')
+                .map(|m| parse_u32(m, line, "w()"))
+                .collect::<Result<Vec<u32>, _>>()?;
+            return Ok(Op::BwdP2 { mbs, concat });
+        }
+    }
+    Err(err(format!(
+        "unknown op token '{tok}' \
+         (expected f<N>, b<N>, w(..), wc(..), flush[c][@N], or opt)"
+    )))
+}
+
+/// Parse the text form back into a [`Plan`].  Inverse of [`to_text`];
+/// also accepts extra whitespace, `#` comments, and header keys in any
+/// order.  Semantic validity is *not* checked here — run the result
+/// through [`super::validate::validate`].
+pub fn parse(text: &str) -> Result<Plan, PlanIoError> {
+    let mut kind: Option<ScheduleKind> = None;
+    let mut two_bp: Option<bool> = None;
+    let mut n_ranks: Option<usize> = None;
+    let mut n_microbatches: Option<usize> = None;
+    let mut greedy_p2: Option<bool> = None;
+    let mut ranks: Vec<Option<Vec<Op>>> = Vec::new();
+    let mut saw_magic = false;
+
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let err = |msg: String| PlanIoError { line: lineno, msg };
+        let line = match raw.find('#') {
+            Some(pos) => &raw[..pos],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if !saw_magic {
+            if line != "plan v1" {
+                return Err(err(format!(
+                    "expected header 'plan v1', got '{line}'"
+                )));
+            }
+            saw_magic = true;
+            continue;
+        }
+        let (key, rest) = match line.split_once(char::is_whitespace) {
+            Some((k, r)) => (k, r.trim()),
+            None => (line, ""),
+        };
+        match key {
+            "kind" => {
+                kind = Some(
+                    ScheduleKind::parse(rest)
+                        .map_err(|e| err(e.to_string()))?,
+                );
+            }
+            "two_bp" => two_bp = Some(parse_bool(rest, lineno, "two_bp")?),
+            "greedy_p2" => {
+                greedy_p2 = Some(parse_bool(rest, lineno, "greedy_p2")?)
+            }
+            "ranks" => {
+                let n = parse_u32(rest, lineno, "ranks")? as usize;
+                if n == 0 {
+                    return Err(err("ranks must be >= 1".into()));
+                }
+                // the rank-line table is sized off the first value; a
+                // conflicting re-declaration would desync them
+                if !ranks.is_empty() && n != ranks.len() {
+                    return Err(err(
+                        "'ranks' re-declared after rank lines".into(),
+                    ));
+                }
+                n_ranks = Some(n);
+            }
+            "microbatches" => {
+                let m = parse_u32(rest, lineno, "microbatches")? as usize;
+                if m == 0 {
+                    return Err(err("microbatches must be >= 1".into()));
+                }
+                n_microbatches = Some(m);
+            }
+            "rank" => {
+                let n = n_ranks.ok_or_else(|| {
+                    err("'ranks' must be declared before rank lines".into())
+                })?;
+                if ranks.is_empty() {
+                    ranks = vec![None; n];
+                }
+                let (r_str, ops_str) = rest.split_once('|').ok_or_else(|| {
+                    err("rank line needs the form 'rank <r> | <ops>'".into())
+                })?;
+                let r = parse_u32(r_str.trim(), lineno, "rank")? as usize;
+                if r >= n {
+                    return Err(err(format!(
+                        "rank {r} out of range (ranks = {n})"
+                    )));
+                }
+                if ranks[r].is_some() {
+                    return Err(err(format!("rank {r} listed twice")));
+                }
+                let ops = ops_str
+                    .split_whitespace()
+                    .map(|tok| parse_op(tok, lineno))
+                    .collect::<Result<Vec<Op>, _>>()?;
+                ranks[r] = Some(ops);
+            }
+            other => {
+                return Err(err(format!("unknown header key '{other}'")));
+            }
+        }
+    }
+
+    let at_end = |msg: &str| PlanIoError {
+        line: text.lines().count(),
+        msg: msg.to_string(),
+    };
+    if !saw_magic {
+        return Err(at_end("empty plan file (missing 'plan v1' header)"));
+    }
+    let kind = kind.ok_or_else(|| at_end("missing 'kind' header"))?;
+    let two_bp = two_bp.ok_or_else(|| at_end("missing 'two_bp' header"))?;
+    let n_ranks = n_ranks.ok_or_else(|| at_end("missing 'ranks' header"))?;
+    let n_microbatches = n_microbatches
+        .ok_or_else(|| at_end("missing 'microbatches' header"))?;
+    let greedy_p2 =
+        greedy_p2.ok_or_else(|| at_end("missing 'greedy_p2' header"))?;
+    if ranks.is_empty() {
+        ranks = vec![None; n_ranks];
+    }
+    let ranks = ranks
+        .into_iter()
+        .enumerate()
+        .map(|(r, ops)| {
+            ops.ok_or_else(|| at_end(&format!("missing 'rank {r}' line")))
+        })
+        .collect::<Result<Vec<Vec<Op>>, _>>()?;
+
+    Ok(Plan { kind, two_bp, n_ranks, n_microbatches, ranks, greedy_p2 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{generate, validate::validate};
+    use super::*;
+    use crate::util::proptest::{check, gen};
+
+    fn sample() -> Plan {
+        generate(ScheduleKind::OneF1B1, true, 2, 2, false)
+    }
+
+    #[test]
+    fn round_trips_a_generated_plan() {
+        let plan = sample();
+        let text = to_text(&plan);
+        let back = parse(&text).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn parses_the_documented_example() {
+        let text = "\
+# hand-written
+plan v1
+kind 1f1b-1
+two_bp true
+ranks 2
+microbatches 2
+greedy_p2 true
+rank 0 | f0 f1 b0 b1 flush opt
+rank 1 | f0 b0 f1 b1 flush opt
+";
+        let plan = parse(text).unwrap();
+        assert_eq!(plan.kind, ScheduleKind::OneF1B1);
+        assert_eq!(plan.n_ranks, 2);
+        assert_eq!(plan.ranks[1][0], Op::Fwd { mb: 0 });
+        assert_eq!(plan.ranks[1][1], Op::BwdP1 { mb: 0 });
+        validate(&plan).unwrap();
+    }
+
+    #[test]
+    fn parses_every_op_token_form() {
+        let text = "\
+plan v1
+kind gpipe
+two_bp false
+ranks 1
+microbatches 4
+greedy_p2 false
+rank 0 | f0 f1 f2 f3 b3 w(3) b2 wc(2) b1 b0 flush@1 flushc opt
+";
+        let plan = parse(text).unwrap();
+        let ops = &plan.ranks[0];
+        assert_eq!(ops[5], Op::BwdP2 { mbs: vec![3], concat: false });
+        assert_eq!(ops[7], Op::BwdP2 { mbs: vec![2], concat: true });
+        assert_eq!(ops[10], Op::Flush { upto: Some(1), concat: false });
+        assert_eq!(ops[11], Op::Flush { upto: None, concat: true });
+        assert_eq!(ops[12], Op::OptStep);
+        validate(&plan).unwrap();
+        // and the canonical form round-trips
+        assert_eq!(parse(&to_text(&plan)).unwrap(), plan);
+    }
+
+    #[test]
+    fn tolerates_comments_blank_lines_and_header_order() {
+        let text = "\
+
+# leading comment
+plan v1
+microbatches 1   # trailing comment
+ranks 1
+greedy_p2 false
+kind naive
+two_bp false
+
+rank 0 | f0 b0 w(0) opt
+";
+        let plan = parse(text).unwrap();
+        validate(&plan).unwrap();
+        assert_eq!(plan.n_microbatches, 1);
+    }
+
+    #[test]
+    fn rejects_malformed_inputs() {
+        let cases: &[(&str, &str)] = &[
+            ("", "plan v1"),
+            ("plan v2\n", "plan v1"),
+            ("plan v1\nkind zigzag\n", "unknown schedule"),
+            ("plan v1\nbogus 3\n", "unknown header key"),
+            ("plan v1\nrank 0 | opt\n", "'ranks' must be declared"),
+            (
+                "plan v1\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\nrank 0 | zap\n",
+                "unknown op token",
+            ),
+            (
+                "plan v1\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\nrank 0 | w()\n",
+                "at least one microbatch",
+            ),
+            (
+                "plan v1\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\nrank 0 | w(1\n",
+                "closing ')'",
+            ),
+            (
+                "plan v1\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\n\
+                 rank 0 | opt\nrank 0 | opt\n",
+                "listed twice",
+            ),
+            (
+                "plan v1\nkind naive\ntwo_bp false\nranks 2\n\
+                 microbatches 1\ngreedy_p2 false\nrank 0 | f0 b0 w(0) opt\n",
+                "missing 'rank 1'",
+            ),
+            (
+                "plan v1\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\nrank 7 | opt\n",
+                "out of range",
+            ),
+            (
+                "plan v1\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\nrank 0 | f0 b0 w(0) opt\n\
+                 ranks 3\nrank 2 | opt\n",
+                "re-declared",
+            ),
+            (
+                "plan v1\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\n",
+                "missing 'greedy_p2'",
+            ),
+        ];
+        for (text, want) in cases {
+            match parse(text) {
+                Ok(_) => panic!("parse accepted: {text:?}"),
+                Err(e) => assert!(
+                    e.to_string().contains(want),
+                    "error {e} does not mention '{want}' for {text:?}"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn error_reports_line_numbers() {
+        let text = "plan v1\nkind naive\ntwo_bp maybe\n";
+        let e = parse(text).unwrap_err();
+        assert_eq!(e.line, 3);
+    }
+
+    /// Satellite: `Plan → text → Plan` is bit-identical for fuzzed
+    /// generator plans, and the serialized text is accepted by both the
+    /// parser and the validator.
+    #[test]
+    fn prop_dsl_round_trip_is_identity() {
+        check(
+            "plan DSL round-trips generator plans exactly",
+            300,
+            |rng| {
+                let kind = *gen::pick(rng, &ScheduleKind::all_variants());
+                let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
+                    true
+                } else {
+                    gen::bool(rng)
+                };
+                let n = gen::usize_in(rng, 1, 10);
+                let m = gen::usize_in(rng, 1, 20);
+                let concat = gen::bool(rng);
+                (kind, two_bp, n, m, concat)
+            },
+            |&(kind, two_bp, n, m, concat)| {
+                let plan = generate(kind, two_bp, n, m, concat);
+                let text = to_text(&plan);
+                let back = parse(&text)
+                    .map_err(|e| format!("parse failed: {e}\n{text}"))?;
+                if back != plan {
+                    return Err(format!("round-trip drifted:\n{text}"));
+                }
+                validate(&back).map_err(|e| {
+                    format!("parsed plan failed validation: {e}")
+                })?;
+                Ok(())
+            },
+        );
+    }
+}

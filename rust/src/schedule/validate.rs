@@ -7,6 +7,10 @@
 //!   3. explicit p2 coverage: each mb's p2 runs at most once, always
 //!      after its p1; with greedy/Flush plans, a trailing Flush covers
 //!      the remainder (full-coverage check);
+//!   3b. greedy-p2 plans carry no *explicit* `BwdP2` ops: the greedy
+//!      fill may already have run any pending microbatch, so an
+//!      explicit op could execute the same p2 twice (schedule p2 points
+//!      in such plans with partial `Flush` instead);
 //!   4. OptStep is last and appears exactly once;
 //! and across ranks:
 //!   5. all ranks agree on the microbatch set;
@@ -80,6 +84,14 @@ pub fn validate(plan: &Plan) -> Result<(), ValidationError> {
                     bwd_order.push(*mb);
                 }
                 Op::BwdP2 { mbs, .. } => {
+                    if plan.greedy_p2 {
+                        return err(
+                            "explicit BwdP2 in a greedy-p2 plan (the fill \
+                             rule may already have run these microbatches; \
+                             use a partial Flush instead)"
+                                .into(),
+                        );
+                    }
                     for mb in mbs {
                         if *mb >= m || !p1_seen[*mb as usize] {
                             return err(format!("BwdP2 mb {mb} before its p1"));
@@ -200,6 +212,20 @@ mod tests {
         let mut plan = generate(ScheduleKind::GPipe, false, 2, 2, false);
         plan.ranks[0].insert(4, Op::BwdP2 { mbs: vec![1], concat: false });
         assert!(validate(&plan).is_err());
+    }
+
+    #[test]
+    fn rejects_explicit_p2_in_greedy_plan() {
+        let mut plan = generate(ScheduleKind::GPipe, true, 2, 2, false);
+        // a hand-built (DSL) plan could try to pair an explicit p2 with
+        // the greedy fill — ambiguous, so the validator forbids it
+        let pos = plan.ranks[0]
+            .iter()
+            .position(|op| matches!(op, Op::Flush { .. }))
+            .unwrap();
+        plan.ranks[0].insert(pos, Op::BwdP2 { mbs: vec![0], concat: false });
+        let err = validate(&plan).unwrap_err();
+        assert!(err.msg.contains("greedy-p2"), "{err}");
     }
 
     #[test]

@@ -162,3 +162,37 @@ impl SimResult {
         self.peak_bytes.iter().copied().max().unwrap_or(0)
     }
 }
+
+/// Evaluation of one concrete plan against a cost/memory model and an
+/// optional per-rank byte budget — the planner's unit of work, also
+/// behind `twobp gantt --plan`.
+#[derive(Debug, Clone)]
+pub struct PlanEval {
+    pub result: SimResult,
+    /// `result.max_peak()`, cached (0 when no `MemModel` was given).
+    pub max_peak: u64,
+    /// Every rank's peak fits the budget (vacuously true without a
+    /// budget or without a `MemModel`).
+    pub fits: bool,
+}
+
+/// One-stop "how good is this plan" entry point: statically validate,
+/// simulate, and score the peak against an optional per-rank budget.
+///
+/// Validation failures and simulator deadlocks (possible for custom /
+/// mutated plans whose cross-rank interleave is inconsistent even
+/// though each rank is locally coherent) both surface as [`SimError`],
+/// so callers have exactly one rejection path.
+pub fn eval_plan(
+    plan: &crate::schedule::Plan,
+    costs: &CostModel,
+    mem: Option<&MemModel>,
+    budget: Option<u64>,
+) -> Result<PlanEval, SimError> {
+    crate::schedule::validate::validate(plan)
+        .map_err(|e| SimError(e.to_string()))?;
+    let result = simulate(plan, costs, mem)?;
+    let max_peak = result.max_peak();
+    let fits = budget.map(|b| max_peak <= b).unwrap_or(true);
+    Ok(PlanEval { result, max_peak, fits })
+}

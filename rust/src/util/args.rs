@@ -85,6 +85,28 @@ impl Args {
         }
     }
 
+    /// Parse `--key value` through `FromStr`, attributing failures to
+    /// the flag: `Ok(None)` when the option is absent, otherwise
+    /// `Err("--key: <the type's own parse error>")`.  This is how
+    /// domain types with descriptive errors (e.g.
+    /// [`crate::schedule::ScheduleKind`], which lists its valid names)
+    /// surface those messages on the CLI instead of a bare panic.
+    pub fn get_parsed<T: std::str::FromStr>(
+        &self,
+        key: &str,
+    ) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
     }
@@ -121,6 +143,21 @@ mod tests {
         let a = Args::parse(&sv(&[]), &[]);
         assert_eq!(a.get_or("k", "d"), "d");
         assert_eq!(a.get_usize("n", 7), 7);
+    }
+
+    #[test]
+    fn get_parsed_threads_domain_errors() {
+        use crate::schedule::ScheduleKind;
+        let a = Args::parse(&sv(&["--schedule", "1f1b-2"]), &[]);
+        assert_eq!(
+            a.get_parsed::<ScheduleKind>("schedule").unwrap(),
+            Some(ScheduleKind::OneF1B2)
+        );
+        assert_eq!(a.get_parsed::<ScheduleKind>("absent").unwrap(), None);
+        let bad = Args::parse(&sv(&["--schedule", "zigzag"]), &[]);
+        let err = bad.get_parsed::<ScheduleKind>("schedule").unwrap_err();
+        assert!(err.starts_with("--schedule:"), "{err}");
+        assert!(err.contains("zigzag") && err.contains("1f1b-2"), "{err}");
     }
 
     #[test]

@@ -65,6 +65,48 @@ pub fn fmt_duration(secs: f64) -> String {
     }
 }
 
+/// Parse a byte count: a plain integer, or a binary-suffixed value
+/// (`4G`, `4GiB`, `512MiB`, `1.5g`, `300kb` — K/M/G/T, all 1024-based,
+/// case-insensitive).  The inverse-ish of [`fmt_bytes`], for CLI flags
+/// like `twobp tune --budget`.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let t = s.trim().to_ascii_lowercase();
+    let strip = |sufs: &[&str]| -> Option<String> {
+        sufs.iter()
+            .find_map(|suf| t.strip_suffix(suf))
+            .map(|p| p.trim().to_string())
+    };
+    let (digits, mult): (String, f64) =
+        if let Some(p) = strip(&["tib", "tb"]) {
+            (p, (1u64 << 40) as f64)
+        } else if let Some(p) = strip(&["gib", "gb"]) {
+            (p, (1u64 << 30) as f64)
+        } else if let Some(p) = strip(&["mib", "mb"]) {
+            (p, (1u64 << 20) as f64)
+        } else if let Some(p) = strip(&["kib", "kb"]) {
+            (p, 1024.0)
+        } else if let Some(p) = strip(&["t"]) {
+            (p, (1u64 << 40) as f64)
+        } else if let Some(p) = strip(&["g"]) {
+            (p, (1u64 << 30) as f64)
+        } else if let Some(p) = strip(&["m"]) {
+            (p, (1u64 << 20) as f64)
+        } else if let Some(p) = strip(&["k"]) {
+            (p, 1024.0)
+        } else if let Some(p) = strip(&["b"]) {
+            (p, 1.0)
+        } else {
+            (t.clone(), 1.0)
+        };
+    let v: f64 = digits.parse().map_err(|_| {
+        format!("'{s}' is not a byte count (examples: 4G, 512MiB, 1073741824)")
+    })?;
+    if !(v.is_finite() && v >= 0.0) {
+        return Err(format!("'{s}' is not a non-negative byte count"));
+    }
+    Ok((v * mult).round() as u64)
+}
+
 pub fn fmt_bytes(b: u64) -> String {
     const K: f64 = 1024.0;
     let b = b as f64;
@@ -191,6 +233,22 @@ mod tests {
         assert_eq!(fmt_bytes(512), "512 B");
         assert!(fmt_bytes(2048).contains("KiB"));
         assert!(fmt_duration(0.002).contains("ms"));
+    }
+
+    #[test]
+    fn parse_bytes_forms() {
+        assert_eq!(parse_bytes("1073741824"), Ok(1u64 << 30));
+        assert_eq!(parse_bytes("1g"), Ok(1u64 << 30));
+        assert_eq!(parse_bytes("4GiB"), Ok(4u64 << 30));
+        assert_eq!(parse_bytes("512MiB"), Ok(512u64 << 20));
+        assert_eq!(parse_bytes("300kb"), Ok(300 * 1024));
+        assert_eq!(parse_bytes(" 2 T "), Ok(2u64 << 40));
+        assert_eq!(parse_bytes("1.5k"), Ok(1536));
+        assert_eq!(parse_bytes("0"), Ok(0));
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("g").is_err());
+        assert!(parse_bytes("-4g").is_err());
+        assert!(parse_bytes("4x").is_err());
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Acceptance tests for the `planner/` subsystem (ISSUE 2): on a 4-rank
+//! LLaMa-like profile with a *binding* memory budget, `tune` must find
+//! a valid plan whose throughput is at least that of the best built-in
+//! schedule that fits, deterministically for a fixed seed; and every
+//! emitted plan must pass `schedule::validate` and round-trip through
+//! the plan DSL.
+
+use twobp::experiments::sweep::combos;
+use twobp::planner::{tune, BeamConfig, TuneProfile};
+use twobp::schedule::{generate, plan_io, validate::validate};
+use twobp::sim::eval_plan;
+
+const SEED: u64 = 0x2B92_0240;
+
+fn cfg_with(budget: Option<u64>) -> BeamConfig {
+    BeamConfig { budget_bytes: budget, seed: SEED, ..BeamConfig::default() }
+}
+
+/// A budget that binds by construction: one byte below the peak of the
+/// *unconstrained* tuning winner, so the throughput champion itself no
+/// longer fits and the search must trade memory for speed.
+fn binding_budget(profile: &TuneProfile, n: usize) -> u64 {
+    let unconstrained = tune(profile, n, &cfg_with(None)).unwrap();
+    unconstrained.best.max_peak - 1
+}
+
+/// Best built-in (generator) schedule that fits `budget`, recomputed
+/// independently of the tuner's bookkeeping over all combos × the
+/// tuner's microbatch grid.  Returns (throughput, description).
+fn best_named_fitting(
+    profile: &TuneProfile,
+    n: usize,
+    budget: Option<u64>,
+) -> Option<(f64, String)> {
+    let mut best: Option<(f64, String)> = None;
+    for (kind, two_bp) in combos() {
+        for m in [n, 3 * n / 2, 2 * n, 3 * n, 4 * n] {
+            let plan = generate(kind, two_bp, n, m, false);
+            let ev = eval_plan(&plan, &profile.costs, Some(&profile.mem),
+                               budget)
+                .unwrap();
+            if !ev.fits {
+                continue;
+            }
+            let tput =
+                ev.result.throughput(profile.samples_per_microbatch, m);
+            if best.as_ref().map(|(t, _)| tput > *t).unwrap_or(true) {
+                best = Some((tput, plan.describe()));
+            }
+        }
+    }
+    best
+}
+
+#[test]
+fn tune_beats_named_schedules_under_binding_budget() {
+    let n = 4;
+    let profile = TuneProfile::llama_like(n);
+    let budget = binding_budget(&profile, n);
+    let report = tune(&profile, n, &cfg_with(Some(budget))).unwrap();
+
+    // the budget really binds: some candidates were rejected for memory
+    assert!(report.rejected_budget > 0, "budget was not binding");
+
+    // 1. the winner is a valid plan and fits the budget
+    validate(&report.best.plan).unwrap();
+    assert!(
+        report.best.max_peak <= budget,
+        "winner peak {} over budget {budget}",
+        report.best.max_peak
+    );
+
+    // 2. winner throughput >= every built-in schedule that fits
+    let (named_tput, named_desc) =
+        best_named_fitting(&profile, n, Some(budget))
+            .expect("no built-in schedule fits the budget");
+    assert!(
+        report.best.throughput >= named_tput - 1e-12,
+        "planner winner {:.6} samples/s below best built-in {named_desc} \
+         at {named_tput:.6}",
+        report.best.throughput
+    );
+
+    // 3. the tuner's own named-best agrees with the independent scan
+    let nb = report.named_best.as_ref().expect("tuner lost the named best");
+    assert!(
+        (nb.throughput - named_tput).abs() <= 1e-9 * named_tput.max(1.0),
+        "tuner named-best {:.6} != independent scan {named_tput:.6}",
+        nb.throughput
+    );
+
+    // 4. the winner's claimed numbers replay exactly in the simulator
+    let replay = eval_plan(
+        &report.best.plan,
+        &profile.costs,
+        Some(&profile.mem),
+        Some(budget),
+    )
+    .unwrap();
+    assert_eq!(
+        replay.result.makespan.to_bits(),
+        report.best.makespan.to_bits()
+    );
+    assert_eq!(replay.max_peak, report.best.max_peak);
+
+    // 5. the winner round-trips through the plan DSL bit-identically
+    let back = plan_io::parse(&report.best.text).unwrap();
+    assert_eq!(back, report.best.plan);
+    validate(&back).unwrap();
+}
+
+#[test]
+fn tune_is_reproducible_for_a_fixed_seed() {
+    let n = 4;
+    let profile = TuneProfile::llama_like(n);
+    let budget = binding_budget(&profile, n);
+    let run = |threads: usize| {
+        let cfg = BeamConfig {
+            threads,
+            ..cfg_with(Some(budget))
+        };
+        tune(&profile, n, &cfg).unwrap()
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.best.text, b.best.text, "thread count changed the winner");
+    assert_eq!(a.best.makespan.to_bits(), b.best.makespan.to_bits());
+    assert_eq!(a.evaluated, b.evaluated);
+    assert_eq!(a.history.len(), b.history.len());
+    for (x, y) in a.history.iter().zip(&b.history) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+#[test]
+fn unconstrained_tune_is_at_least_as_good_as_every_named_schedule() {
+    let n = 4;
+    let profile = TuneProfile::llama_like(n);
+    let report = tune(&profile, n, &cfg_with(None)).unwrap();
+    validate(&report.best.plan).unwrap();
+    let (named_tput, named_desc) =
+        best_named_fitting(&profile, n, None).unwrap();
+    assert!(
+        report.best.throughput >= named_tput - 1e-12,
+        "unconstrained winner {:.6} below named {named_desc} \
+         at {named_tput:.6}",
+        report.best.throughput
+    );
+    if let Some(gain) = report.gain_vs_named() {
+        assert!(gain >= 1.0 - 1e-12, "gain vs named {gain} < 1");
+    }
+    // winners export as parseable, valid .plan text
+    let back = plan_io::parse(&report.best.text).unwrap();
+    validate(&back).unwrap();
+    assert_eq!(back, report.best.plan);
+}

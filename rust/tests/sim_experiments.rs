@@ -177,3 +177,13 @@ fn memory_planner_style_prediction_consistency() {
         }
     }
 }
+
+#[test]
+fn planner_search_report_covers_the_budget_ladder() {
+    let out = experiments::planner_search(2, 0, 0x2B9);
+    assert!(out.contains("Planner search"), "missing title:\n{out}");
+    // the unconstrained row plus four derived budget rows
+    assert!(out.contains("∞"), "missing unconstrained row:\n{out}");
+    assert!(out.contains("planner winner"), "missing winner column:\n{out}");
+    assert!(out.contains("search effort per budget"), "missing footer:\n{out}");
+}
