@@ -1,0 +1,293 @@
+//! Bench: planner candidate-evaluation throughput — the Tier A scoring
+//! fast path (`sim::score_plan` + one reused `Scratch`) against the
+//! Tier B per-candidate `sim::eval_plan` baseline (full `validate` +
+//! span-recording simulate + budget check), which is exactly what the
+//! beam search paid per candidate before the two-tier split.
+//!
+//! ```text
+//! cargo bench --bench planner_throughput [-- --quick]
+//!     [-- --baseline BENCH_baseline.json]
+//!     [-- --write-baseline BENCH_baseline.json]
+//! ```
+//!
+//! The corpus is deterministic: the llama_like(4) tune profile's seed
+//! pool (every generator combo × the planner's microbatch grid) plus
+//! seeded chains of validated local moves — the same plan shapes the
+//! beam actually evaluates, including valid-but-deadlocked mutants
+//! (both paths must reject those identically).  Before timing, every
+//! candidate is evaluated both ways and the paths are asserted
+//! bit-identical on makespan/bubble/peak/fits.
+//!
+//! Acceptance target (ISSUE 3): the scoring path sustains **>= 3x**
+//! candidates/sec over the `eval_plan` baseline (asserted in full
+//! mode; quick mode prints it).  Results append to `BENCH_planner.json`
+//! at the **repo root** (resolved via `CARGO_MANIFEST_DIR`, so the
+//! file lands in the same place regardless of the invocation cwd) —
+//! the cross-PR perf trajectory for planner workloads.
+//!
+//! **Regression gate**: with `--baseline <file>`, the measured scoring
+//! cands/sec mean is compared against the committed entry for the
+//! current mode (`planner_quick_cands_per_sec` /
+//! `planner_full_cands_per_sec`) and the process exits non-zero on a
+//! >20% regression — the same rule as `sweep_throughput`.
+//! `--write-baseline <file>` refreshes that entry in place.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+use std::time::Instant;
+
+use twobp::experiments::sweep::combos;
+use twobp::planner::beam::microbatch_grid;
+use twobp::planner::{moves, tune, BeamConfig, TuneProfile};
+use twobp::schedule::{generate, validate::validate, Plan};
+use twobp::sim::{eval_plan, score_plan, Scratch};
+use twobp::util::args::Args;
+use twobp::util::json::{obj, Json};
+use twobp::util::prng::SplitMix64;
+use twobp::util::stats::{fmt_duration, summarize, BenchRecorder};
+
+const GIB: u64 = 1 << 30;
+
+/// Deterministic candidate corpus: every (kind, 2bp) seed at the
+/// planner's own microbatch grid (`beam::microbatch_grid` at its
+/// default 4N cap — the bench can't drift from what the beam seeds),
+/// plus a chain of `chain_len` validated local moves from each seed.
+/// Dedup by fingerprint, like the beam.
+fn corpus(n_ranks: usize, chain_len: usize, seed: u64) -> Vec<Plan> {
+    let mut plans: Vec<Plan> = Vec::new();
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
+    for (kind, two_bp) in combos() {
+        for &m in &microbatch_grid(n_ranks, 4 * n_ranks) {
+            let p = generate(kind, two_bp, n_ranks, m, false);
+            validate(&p).expect("generator seed must validate");
+            if seen.insert(p.fingerprint()) {
+                plans.push(p);
+            }
+        }
+    }
+    let mut rng = SplitMix64::new(seed);
+    let seeds: Vec<Plan> = plans.clone();
+    for base in &seeds {
+        let mut cur = base.clone();
+        for _ in 0..chain_len {
+            if let Some((next, _mv)) = moves::mutate(&cur, &mut rng) {
+                if seen.insert(next.fingerprint()) {
+                    plans.push(next.clone());
+                }
+                cur = next;
+            }
+        }
+    }
+    plans
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["quick"]);
+    let quick = args.has("quick");
+
+    let profile = TuneProfile::llama_like(4);
+    let budget = Some(6 * GIB); // binds for deep-stash candidates
+    let chain_len = if quick { 12 } else { 40 };
+    let plans = corpus(4, chain_len, 0x2B9_0003);
+    println!(
+        "planner_throughput: {} candidates (llama-like profile, N=4, \
+         budget 6 GiB/rank, mutation chains of {chain_len})\n",
+        plans.len()
+    );
+
+    // -- agreement: both paths identical per candidate, before timing ------
+    let mut scratch = Scratch::new();
+    let mut live = 0usize;
+    let mut dead = 0usize;
+    for (i, p) in plans.iter().enumerate() {
+        let base = eval_plan(p, &profile.costs, Some(&profile.mem), budget);
+        let fast = score_plan(p, &profile.costs, Some(&profile.mem), budget,
+                              &mut scratch);
+        match (base, fast) {
+            (Err(_), Err(_)) => dead += 1,
+            (Ok(b), Ok(f)) => {
+                assert_eq!(
+                    b.result.makespan.to_bits(),
+                    f.makespan.to_bits(),
+                    "candidate {i} ({}): makespan diverged",
+                    p.describe()
+                );
+                assert_eq!(
+                    b.result.bubble_ratio.to_bits(),
+                    f.bubble_ratio.to_bits(),
+                    "candidate {i}: bubble diverged"
+                );
+                assert_eq!(b.max_peak, f.max_peak,
+                           "candidate {i}: peak diverged");
+                assert_eq!(b.fits, f.fits, "candidate {i}: fits diverged");
+                live += 1;
+            }
+            (b, f) => panic!(
+                "candidate {i} ({}): paths disagree on rejection \
+                 (baseline err: {}, scored err: {})",
+                p.describe(),
+                b.is_err(),
+                f.is_err()
+            ),
+        }
+    }
+    println!(
+        "  agreement: all {} candidates bit-identical across paths \
+         ({live} live, {dead} deadlocked — rejected by both)\n",
+        plans.len()
+    );
+
+    // -- timing ------------------------------------------------------------
+    let reps = if quick { 3 } else { 5 };
+    let run_baseline = || {
+        for p in &plans {
+            let _ = eval_plan(p, &profile.costs, Some(&profile.mem), budget);
+        }
+    };
+    let run_scored = |scratch: &mut Scratch| {
+        for p in &plans {
+            let _ = score_plan(p, &profile.costs, Some(&profile.mem), budget,
+                               scratch);
+        }
+    };
+
+    run_baseline(); // warmup
+    let mut base_cps = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        run_baseline();
+        let dt = t0.elapsed().as_secs_f64();
+        base_cps.push(plans.len() as f64 / dt);
+    }
+    run_scored(&mut scratch); // warmup (and buffer growth)
+    let mut fast_cps = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        run_scored(&mut scratch);
+        let dt = t0.elapsed().as_secs_f64();
+        fast_cps.push(plans.len() as f64 / dt);
+    }
+
+    let base_s = summarize(&base_cps);
+    let fast_s = summarize(&fast_cps);
+    let speedup = fast_s.mean / base_s.mean;
+    println!(
+        "  eval_plan baseline : {:>10.0} cands/s (± {:.0}, n={reps})",
+        base_s.mean, base_s.std
+    );
+    println!(
+        "  score_plan+scratch : {:>10.0} cands/s (± {:.0}, n={reps})",
+        fast_s.mean, fast_s.std
+    );
+    println!(
+        "\n  speedup: {speedup:.2}x  (acceptance target >= 3x)\n"
+    );
+
+    // -- end-to-end: a small tune() ride on the fast path -----------------
+    let t0 = Instant::now();
+    let report = tune(
+        &profile,
+        4,
+        &BeamConfig {
+            budget_bytes: budget,
+            generations: 4,
+            seed: 0x2B9,
+            ..BeamConfig::default()
+        },
+    )
+    .expect("tune");
+    let tune_dt = t0.elapsed().as_secs_f64();
+    println!(
+        "  tune end-to-end: {} candidates in {} ({:.0} cands/s incl. \
+         search overhead)\n",
+        report.evaluated,
+        fmt_duration(tune_dt),
+        report.evaluated as f64 / tune_dt
+    );
+
+    // -- record the trajectory at the repo root ---------------------------
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under <repo>/rust");
+    let mut rec = BenchRecorder::open(&repo_root.join("BENCH_planner.json"));
+    rec.record("planner_eval", obj(vec![
+        ("candidates", Json::Num(plans.len() as f64)),
+        ("live", Json::Num(live as f64)),
+        ("deadlocked", Json::Num(dead as f64)),
+        ("baseline_cands_per_sec", Json::Num(base_s.mean)),
+        ("scored_cands_per_sec", Json::Num(fast_s.mean)),
+        ("speedup", Json::Num(speedup)),
+        ("quick", Json::Bool(quick)),
+    ]));
+    rec.record("tune_end_to_end", obj(vec![
+        ("evaluated", Json::Num(report.evaluated as f64)),
+        ("seconds", Json::Num(tune_dt)),
+        ("cands_per_sec", Json::Num(report.evaluated as f64 / tune_dt)),
+    ]));
+    let mode_key = if quick {
+        "planner_quick_cands_per_sec"
+    } else {
+        "planner_full_cands_per_sec"
+    };
+    rec.record_summary(mode_key, &fast_s);
+    match rec.write() {
+        Ok(()) => println!("  wrote {}", repo_root
+            .join("BENCH_planner.json").display()),
+        Err(e) => eprintln!("  warning: could not write BENCH_planner.json: \
+                             {e}"),
+    }
+
+    // -- regression gate vs a committed baseline ---------------------------
+    if let Some(path) = args.get("write-baseline") {
+        let mut base = BenchRecorder::open(Path::new(path));
+        base.record(mode_key, Json::Num(fast_s.mean));
+        match base.write() {
+            Ok(()) => println!("  wrote {mode_key} = {:.0} to {path}",
+                               fast_s.mean),
+            Err(e) => {
+                eprintln!("FAIL: could not write baseline {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    if let Some(path) = args.get("baseline") {
+        let committed = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|v| v.get(mode_key).and_then(|x| x.as_f64()));
+        match committed {
+            None => {
+                eprintln!(
+                    "FAIL: baseline {path} is missing a numeric \
+                     '{mode_key}' entry"
+                );
+                std::process::exit(1);
+            }
+            Some(committed) => {
+                let ratio = fast_s.mean / committed;
+                println!(
+                    "  regression gate: {:.0} cands/s vs baseline {:.0} \
+                     ({:.2}x, fail below 0.80x)",
+                    fast_s.mean, committed, ratio
+                );
+                if ratio < 0.8 {
+                    eprintln!(
+                        "FAIL: planner eval throughput regressed >20% vs \
+                         {path} ({:.0} < 0.8 x {:.0} cands/s)",
+                        fast_s.mean, committed
+                    );
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+
+    if !quick && speedup < 3.0 {
+        eprintln!(
+            "FAIL: scoring fast path speedup {speedup:.2}x below the 3x \
+             acceptance target"
+        );
+        std::process::exit(1);
+    }
+}

@@ -11,13 +11,14 @@
 //!
 //! 1. **Differential comparison** (≥1k cells, 12–64 ranks — the regime
 //!    where the O(total_ops × n_ranks) baseline hurts): times the old
-//!    engine sequentially, the event-driven engine sequentially, and
-//!    the event-driven engine across all cores — asserting along the
-//!    way that all three produce bit-identical results per cell.
+//!    engine sequentially, the event-driven engine sequentially (span
+//!    recording and the span-free scoring fast path separately), and
+//!    the scoring path across all cores — asserting along the way that
+//!    every variant produces bit-identical results per cell.
 //!    Acceptance target: ≥5x combined speedup.
 //! 2. **Throughput grid** (~10k cells up to 64 ranks × 2048 total
-//!    microbatch-ops): event-driven + parallel only, repeated 3× and
-//!    reported as cells/sec mean ± std.
+//!    microbatch-ops): scoring fast path (per-worker `Scratch`) +
+//!    parallel only, repeated 3× and reported as cells/sec mean ± std.
 //!
 //! Both parts are appended to `BENCH_sim.json` (see
 //! `util::stats::BenchRecorder`) so the perf trajectory is tracked
@@ -35,6 +36,7 @@ use std::path::Path;
 use std::time::Instant;
 
 use twobp::experiments::sweep::{self, Cell, CellOut};
+use twobp::sim::Scratch;
 use twobp::util::args::Args;
 use twobp::util::json::{obj, Json};
 use twobp::util::stats::{fmt_duration, summarize, BenchRecorder};
@@ -101,19 +103,28 @@ fn main() {
              fmt_duration(t_naive));
     let (ev_seq, t_seq) =
         time(|| sweep::run_grid(&cells, 1, |_, c| sweep::eval(c)));
-    println!("  event-driven, sequential     : {}  ({:.2}x)",
+    println!("  event-driven (spans), seq    : {}  ({:.2}x)",
              fmt_duration(t_seq), t_naive / t_seq);
-    let (ev_par, t_par) =
-        time(|| sweep::run_grid(&cells, threads, |_, c| sweep::eval(c)));
-    println!("  event-driven, {threads:>2} threads     : {}  ({:.2}x)",
+    let (sc_seq, t_sc_seq) = time(|| {
+        sweep::run_grid_with(&cells, 1, Scratch::new,
+                             |s, _, c| sweep::eval_scored(c, s))
+    });
+    println!("  scoring fast path, seq       : {}  ({:.2}x)",
+             fmt_duration(t_sc_seq), t_naive / t_sc_seq);
+    let (sc_par, t_par) = time(|| {
+        sweep::run_grid_with(&cells, threads, Scratch::new,
+                             |s, _, c| sweep::eval_scored(c, s))
+    });
+    println!("  scoring path, {threads:>2} threads     : {}  ({:.2}x)",
              fmt_duration(t_par), t_naive / t_par);
 
     assert_identical(&cells, &naive, &ev_seq, "naive vs event(seq)");
-    assert_identical(&cells, &ev_seq, &ev_par, "event(seq) vs event(par)");
-    println!("  results: all {} cells bit-identical across engines \
-              and thread counts", cells.len());
+    assert_identical(&cells, &ev_seq, &sc_seq, "event(seq) vs scored(seq)");
+    assert_identical(&cells, &sc_seq, &sc_par, "scored(seq) vs scored(par)");
+    println!("  results: all {} cells bit-identical across engines, \
+              tiers, and thread counts", cells.len());
 
-    let speedup_engine = t_naive / t_seq;
+    let speedup_engine = t_naive / t_sc_seq;
     let speedup_total = t_naive / t_par;
     println!(
         "\n  speedup: engine alone {speedup_engine:.2}x, engine+parallel \
@@ -124,7 +135,8 @@ fn main() {
         ("cells", Json::Num(cells.len() as f64)),
         ("naive_seq_s", Json::Num(t_naive)),
         ("event_seq_s", Json::Num(t_seq)),
-        ("event_par_s", Json::Num(t_par)),
+        ("scored_seq_s", Json::Num(t_sc_seq)),
+        ("scored_par_s", Json::Num(t_par)),
         ("speedup_engine", Json::Num(speedup_engine)),
         ("speedup_total", Json::Num(speedup_total)),
         ("threads", Json::Num(threads as f64)),
@@ -149,8 +161,10 @@ fn main() {
     let mut cps = Vec::with_capacity(reps);
     let mut sim_ops = 0usize;
     for rep in 0..reps {
-        let (outs, dt) =
-            time(|| sweep::run_grid(&big, threads, |_, c| sweep::eval(c)));
+        let (outs, dt) = time(|| {
+            sweep::run_grid_with(&big, threads, Scratch::new,
+                                 |s, _, c| sweep::eval_scored(c, s))
+        });
         sim_ops = outs.iter().map(|o| o.total_ops).sum();
         cps.push(big.len() as f64 / dt);
         println!("  rep {rep}: {} -> {:.0} cells/s ({:.2e} plan ops/s)",

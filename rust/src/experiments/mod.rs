@@ -132,7 +132,9 @@ pub fn schedule_space(
         threads
     };
     let t0 = Instant::now();
-    let outs = sweep::run_grid(&cells, threads, |_, c| sweep::eval(c));
+    // Tier A scoring fast path: one reusable Scratch per worker
+    let outs = sweep::run_grid_with(&cells, threads, crate::sim::Scratch::new,
+                                    |s, _, c| sweep::eval_scored(c, s));
     let dt = t0.elapsed().as_secs_f64();
 
     // fused-autograd baselines for gain pairing, keyed by everything but
@@ -228,13 +230,127 @@ pub fn schedule_space(
     let mut out = t.render();
     out.push_str(&format!(
         "{} cells in {:.3}s — {:.0} cells/s on {} threads \
-         (event-driven engine)\n",
+         (event-driven engine, scoring fast path)\n",
         cells.len(),
         dt,
         cells.len() as f64 / dt.max(1e-9),
         threads,
     ));
     out
+}
+
+/// Sweep a **directory of `.plan` files** — the DSL-file counterpart of
+/// the generator-grid [`schedule_space`] (`twobp sweep --plans <dir>`).
+/// Every `*.plan` file is parsed, fully validated once, and then
+/// evaluated through the Tier A scoring fast path under the shared
+/// `--fwd/--p1/--p2/--comm` cost shape (per-plan rank counts may
+/// differ; each plan gets a cost model of its own width).  Files are
+/// processed in name order and fan out over the parallel runner with
+/// one `Scratch` per worker, so results are deterministic regardless
+/// of thread count.
+///
+/// Unparseable or invalid files fail the sweep with the file named;
+/// valid-but-deadlocked plans are reported per row rather than
+/// aborting the rest (liveness is a property of the plan, and knowing
+/// which plan in a corpus deadlocks is the point of sweeping it).
+pub fn plan_space(
+    dir: &std::path::Path,
+    ratios: (f64, f64, f64),
+    comm: f64,
+    threads: usize,
+) -> Result<String> {
+    use crate::schedule::plan_io;
+    use crate::schedule::Plan;
+
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow!("reading {}: {e}", dir.display()))?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.extension().map(|ext| ext == "plan").unwrap_or(false)
+        })
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(anyhow!(
+            "no .plan files in {} (write one with `twobp tune --out`, \
+             grammar in docs/PLAN_FORMAT.md)",
+            dir.display()
+        ));
+    }
+
+    let mut cells: Vec<(String, Plan)> = Vec::with_capacity(paths.len());
+    for path in &paths {
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let plan = plan_io::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        // the one full validate of each plan's lifetime — after this
+        // the scoring path may assume structural validity
+        validate(&plan).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        cells.push((name, plan));
+    }
+
+    let threads = if threads == 0 {
+        sweep::default_threads()
+    } else {
+        threads
+    };
+    let (f, p1, p2) = ratios;
+    let t0 = Instant::now();
+    let outs = sweep::run_grid_with(
+        &cells,
+        threads,
+        crate::sim::Scratch::new,
+        |scratch, _, (_, plan)| {
+            let mut cm = CostModel::ratios(plan.n_ranks, f, p1, p2);
+            cm.comm = comm;
+            crate::sim::score_plan(plan, &cm, None, None, scratch)
+        },
+    );
+    let dt = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&[
+        "file", "plan", "ops", "makespan", "bubble", "note",
+    ])
+    .with_title(&format!(
+        "Plan-file sweep: {} ({} plans, f:p1:p2={f}:{p1}:{p2} comm={comm}, \
+         scoring fast path)",
+        dir.display(),
+        cells.len(),
+    ));
+    for ((name, plan), out) in cells.iter().zip(&outs) {
+        match out {
+            Ok(score) => t.row(vec![
+                name.clone(),
+                plan.describe(),
+                plan.total_ops().to_string(),
+                format!("{:.4}", score.makespan),
+                format!("{:.4}", score.bubble_ratio),
+                String::new(),
+            ]),
+            Err(e) => t.row(vec![
+                name.clone(),
+                plan.describe(),
+                plan.total_ops().to_string(),
+                "-".into(),
+                "-".into(),
+                format!("{e}"),
+            ]),
+        };
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "{} plans in {:.3}s on {} threads — render one with \
+         `twobp gantt --plan <file>`\n",
+        cells.len(),
+        dt,
+        threads,
+    ));
+    Ok(out)
 }
 
 /// Planner search (the tentpole of the `planner/` subsystem): tune the

@@ -10,12 +10,17 @@
 //!
 //! Cells must be pure (no interior mutability, no I/O): the runner
 //! gives no ordering guarantee *during* execution, only for results.
+//! [`run_grid_with`] adds per-worker mutable state on top — the hook
+//! that gives every worker its own [`crate::sim::Scratch`] so bulk
+//! evaluation rides the Tier A scoring fast path (see the two-tier
+//! contract in [`crate::sim`]) with zero per-cell allocation.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::schedule::{generate, Plan, ScheduleKind};
-use crate::sim::{simulate, simulate_naive, CostModel, SimResult};
+use crate::sim::{score_plan, simulate, simulate_naive, CostModel, Scratch,
+                 SimResult};
 
 /// How many workers to use when the caller doesn't say: one per
 /// available core (the sweep is embarrassingly parallel and CPU-bound).
@@ -36,13 +41,45 @@ where
     R: Send,
     F: Fn(usize, &C) -> R + Sync,
 {
+    run_grid_with(cells, threads, || (), |_state: &mut (), i, c| f(i, c))
+}
+
+/// [`run_grid`] with **per-worker mutable state**: each worker thread
+/// calls `init` exactly once and threads the value through every cell
+/// it evaluates.  This is how the scoring fast path rides the parallel
+/// runner — `init` builds a [`crate::sim::Scratch`] per worker, so
+/// every worker reuses its own simulation buffers across thousands of
+/// cells with no sharing and no per-cell allocation.
+///
+/// Cells must stay pure with respect to *results*: the state may cache
+/// and be mutated freely, but `f`'s return value for cell `i` must not
+/// depend on which worker ran it or what ran before (the scratch
+/// contract).  Results are returned in cell order, so thread count
+/// never changes the output.
+pub fn run_grid_with<C, R, S, I, F>(
+    cells: &[C],
+    threads: usize,
+    init: I,
+    f: F,
+) -> Vec<R>
+where
+    C: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &C) -> R + Sync,
+{
     let n = cells.len();
     if n == 0 {
         return Vec::new();
     }
     let workers = threads.max(1).min(n);
     if workers == 1 {
-        return cells.iter().enumerate().map(|(i, c)| f(i, c)).collect();
+        let mut state = init();
+        return cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| f(&mut state, i, c))
+            .collect();
     }
 
     let cursor = AtomicUsize::new(0);
@@ -50,13 +87,14 @@ where
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
+                let mut state = init();
                 let mut local: Vec<(usize, R)> = Vec::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
-                    local.push((i, f(i, &cells[i])));
+                    local.push((i, f(&mut state, i, &cells[i])));
                 }
                 collected.lock().unwrap().extend(local);
             });
@@ -135,12 +173,29 @@ fn shrink(plan: &Plan, res: &SimResult) -> CellOut {
     }
 }
 
-/// Evaluate one cell with the event-driven engine.
+/// Evaluate one cell with the event-driven engine (Tier B: records and
+/// then discards spans — kept as the mid-fidelity reference point the
+/// bench compares; sweeps themselves ride [`eval_scored`]).
 pub fn eval(cell: &Cell) -> CellOut {
     let plan = cell.plan();
     let res = simulate(&plan, &cell.cost_model(), None)
         .unwrap_or_else(|e| panic!("cell {}: {e}", cell.describe()));
     shrink(&plan, &res)
+}
+
+/// Evaluate one cell through the Tier A scoring fast path: span-free
+/// and allocation-free across calls via the caller's `scratch` (pair
+/// with [`run_grid_with`] for one scratch per worker).  Bit-identical
+/// to [`eval`] on makespan and bubble ratio.
+pub fn eval_scored(cell: &Cell, scratch: &mut Scratch) -> CellOut {
+    let plan = cell.plan();
+    let score = score_plan(&plan, &cell.cost_model(), None, None, scratch)
+        .unwrap_or_else(|e| panic!("cell {}: {e}", cell.describe()));
+    CellOut {
+        makespan: score.makespan,
+        bubble_ratio: score.bubble_ratio,
+        total_ops: plan.total_ops(),
+    }
 }
 
 /// Evaluate one cell with the linear-scan reference engine (the bench
@@ -237,6 +292,43 @@ mod tests {
         let empty: Vec<u32> = Vec::new();
         assert!(run_grid(&empty, 4, |_, &c| c).is_empty());
         assert_eq!(run_grid(&[7u32], 4, |_, &c| c + 1), vec![8]);
+    }
+
+    #[test]
+    fn run_grid_with_reuses_per_worker_state() {
+        // each worker's state counts the cells it saw; results must be
+        // independent of that partitioning and stay in cell order
+        let cells: Vec<usize> = (0..53).collect();
+        for threads in [1usize, 4] {
+            let out = run_grid_with(
+                &cells,
+                threads,
+                || 0usize,
+                |seen: &mut usize, i, &c| {
+                    *seen += 1;
+                    assert!(*seen <= cells.len());
+                    assert_eq!(i, c);
+                    c * 2
+                },
+            );
+            assert_eq!(out, (0..53).map(|c| c * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn eval_scored_matches_eval_with_one_scratch() {
+        let cells = grid(&[1, 2, 4, 5], &[1, 2],
+                         &[(1.0, 1.0, 1.0), (1.0, 0.6, 1.4)], &[0.0, 0.1]);
+        let full = run_grid(&cells, 1, |_, c| eval(c));
+        let scored = run_grid_with(&cells, 1, Scratch::new,
+                                   |s, _, c| eval_scored(c, s));
+        for (i, (a, b)) in full.iter().zip(&scored).enumerate() {
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(),
+                       "cell {i} ({})", cells[i].describe());
+            assert_eq!(a.bubble_ratio.to_bits(), b.bubble_ratio.to_bits(),
+                       "cell {i} ({})", cells[i].describe());
+            assert_eq!(a.total_ops, b.total_ops);
+        }
     }
 
     #[test]

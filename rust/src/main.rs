@@ -7,6 +7,7 @@
 //!                [--real --preset P]
 //! twobp simulate --schedule 1f1b-1 --ranks 8 [--no-2bp] [--comm C]
 //! twobp sweep    [--ranks 2,4,8,16,32] [--mults 1,2] [--threads K]
+//!                [--plans DIR [--fwd F --p1 X --p2 Y --comm C]]
 //! twobp tune     [--ranks N] [--budget 4.5G] [--beam K] [--gens G]
 //!                [--seed S] [--fwd F --p1 X --p2 Y --comm C]
 //!                [--out FILE.plan] [--gantt] [--threads K]
@@ -183,13 +184,41 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 /// Parallel schedule-space sweep (pure simulator; see
-/// `experiments::schedule_space`).
+/// `experiments::schedule_space`).  With `--plans DIR`, sweeps a
+/// directory of `.plan` files instead of the generator grid — every
+/// file evaluated through the scoring fast path under the shared
+/// `--fwd/--p1/--p2/--comm` cost shape (`experiments::plan_space`).
 fn cmd_sweep(args: &Args) -> Result<()> {
+    let threads = args.get_usize("threads", 0);
+    if let Some(dir) = args.get("plans") {
+        if args.get("ranks").is_some() || args.get("mults").is_some() {
+            return Err(anyhow!(
+                "--plans sweeps a directory of .plan files; --ranks/--mults \
+                 apply only to the generator grid (drop them, or drop \
+                 --plans)"
+            ));
+        }
+        let ratios = (
+            args.get_f64("fwd", 1.0),
+            args.get_f64("p1", 1.0),
+            args.get_f64("p2", 1.0),
+        );
+        let comm = args.get_f64("comm", 0.0);
+        print!(
+            "{}",
+            twobp::experiments::plan_space(
+                std::path::Path::new(dir),
+                ratios,
+                comm,
+                threads,
+            )?
+        );
+        return Ok(());
+    }
     let ranks = args
         .get_usize_list("ranks", &[2, 4, 8, 16, 32])
         .map_err(|e| anyhow!(e))?;
     let mults = args.get_usize_list("mults", &[1, 2]).map_err(|e| anyhow!(e))?;
-    let threads = args.get_usize("threads", 0);
     if ranks.is_empty() || mults.is_empty() {
         return Err(anyhow!("--ranks and --mults need at least one value"));
     }

@@ -3,9 +3,14 @@
 //! **Seeding** covers (schedule kind × 2BP × microbatch count × flush
 //! point): every generator combo from `experiments::sweep::combos()` at
 //! several microbatch counts, plus partial-flush-enriched variants of
-//! each 2BP seed (the Fig 5 memory knob at arbitrary points).
-//! **Evaluation** is [`crate::sim::eval_plan`] under the profile's cost
-//! and memory models — candidates whose `peak_bytes` exceed the budget
+//! each 2BP seed (the Fig 5 memory knob at arbitrary points).  Seeds
+//! are fully validated once; mutated candidates are gated by the moves'
+//! incremental revalidation (see [`super::moves`]).
+//! **Evaluation** rides the Tier A scoring fast path:
+//! [`crate::sim::score_plan`] under the profile's cost and memory
+//! models, with one reusable [`Scratch`] per worker thread
+//! (`run_grid_with`), so a candidate costs one span-free simulation and
+//! zero allocations — candidates whose `max_peak` exceeds the budget
 //! are rejected outright, as are plans the simulator reports as
 //! deadlocked (see [`super::moves`] on validity vs liveness).
 //! **Search** keeps the `beam_width` best by throughput and expands
@@ -15,15 +20,19 @@
 //! Everything is deterministic for a fixed [`BeamConfig::seed`]: the
 //! PRNG is consumed only in the sequential mutation loop, candidate
 //! evaluation fans out through the order-preserving
-//! `experiments::sweep::run_grid`, the candidate pool is a `BTreeMap`
-//! keyed by canonical DSL text, and ranking ties break on that text.
-//! Thread count never changes the result.
+//! `experiments::sweep::run_grid_with`, the candidate pool and dedup
+//! sets are keyed by [`Plan::fingerprint`] (a stable structural hash —
+//! no per-candidate DSL serialization or `String` clone), and ranking
+//! ties break on canonical DSL text, computed lazily only when two
+//! candidates actually tie on (throughput, peak).  Thread count never
+//! changes the result, and for a fixed seed the winner is the same plan
+//! the text-keyed implementation found.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
-use crate::experiments::sweep::{combos, default_threads, run_grid};
-use crate::schedule::{generate, plan_io, Plan};
-use crate::sim::eval_plan;
+use crate::experiments::sweep::{combos, default_threads, run_grid_with};
+use crate::schedule::{generate, plan_io, validate::validate, Plan};
+use crate::sim::{score_plan, Scratch};
 use crate::util::prng::SplitMix64;
 
 use super::{moves, TuneProfile};
@@ -61,12 +70,14 @@ impl Default for BeamConfig {
     }
 }
 
-/// One evaluated, budget-fitting plan.
+/// One evaluated, budget-fitting plan as reported to callers.  During
+/// the search candidates live as the text-free [`SearchCand`]; the DSL
+/// `text` here is serialized once, at report time, for the winner and
+/// the named-best only.
 #[derive(Debug, Clone)]
 pub struct Candidate {
     pub plan: Plan,
-    /// Canonical DSL text — also the dedup fingerprint and the ranking
-    /// tie-break, and ready to write as a `.plan` file.
+    /// Canonical DSL text, ready to write as a `.plan` file.
     pub text: String,
     pub makespan: f64,
     /// Samples/sec under the profile.
@@ -78,12 +89,58 @@ pub struct Candidate {
     pub origin: String,
 }
 
-/// Total ranking order: throughput desc, then peak asc, then DSL text.
-fn better(a: &Candidate, b: &Candidate) -> std::cmp::Ordering {
+/// A candidate as the search holds it: the plan, its structural
+/// fingerprint (the pool/dedup key), and its scores.  The DSL text is
+/// *not* part of evaluation — `text_cache` fills lazily, only when a
+/// ranking tie actually needs it (and then at most once per
+/// candidate, surviving clones into the beam).
+#[derive(Debug, Clone)]
+struct SearchCand {
+    plan: Plan,
+    fp: u64,
+    makespan: f64,
+    throughput: f64,
+    max_peak: u64,
+    seed: String,
+    origin: String,
+    text_cache: std::cell::OnceCell<String>,
+}
+
+impl SearchCand {
+    /// Canonical DSL text, serialized on first use and cached.
+    fn text(&self) -> &str {
+        self.text_cache.get_or_init(|| plan_io::to_text(&self.plan))
+    }
+
+    fn publish(&self) -> Candidate {
+        Candidate {
+            plan: self.plan.clone(),
+            text: self.text().to_string(),
+            makespan: self.makespan,
+            throughput: self.throughput,
+            max_peak: self.max_peak,
+            seed: self.seed.clone(),
+            origin: self.origin.clone(),
+        }
+    }
+}
+
+/// Total ranking order: throughput desc, then peak asc, then canonical
+/// DSL text — serialized lazily (and cached per candidate), only for
+/// the exact ties on both numbers, so the hot path never materializes
+/// plan text.  (Distinct pool entries always have distinct
+/// fingerprints, so equal fingerprints mean the same plan.)
+fn better(a: &SearchCand, b: &SearchCand) -> std::cmp::Ordering {
     b.throughput
         .total_cmp(&a.throughput)
         .then_with(|| a.max_peak.cmp(&b.max_peak))
-        .then_with(|| a.text.cmp(&b.text))
+        .then_with(|| {
+            if a.fp == b.fp {
+                std::cmp::Ordering::Equal
+            } else {
+                a.text().cmp(b.text())
+            }
+        })
 }
 
 /// What [`tune`] found.
@@ -116,11 +173,11 @@ impl TuneReport {
     }
 }
 
-/// One unevaluated candidate: (plan, canonical text, seed, origin).
-type Pending = (Plan, String, String, String);
+/// One unevaluated candidate: (plan, fingerprint, seed, origin).
+type Pending = (Plan, u64, String, String);
 
 enum EvalOut {
-    Fit(Box<Candidate>),
+    Fit(Box<SearchCand>),
     OverBudget,
     SimFail,
 }
@@ -136,9 +193,9 @@ struct Tally {
 /// leader, and the rejection tally.
 fn absorb(
     outs: Vec<EvalOut>,
-    named_texts: &std::collections::BTreeSet<String>,
-    pool: &mut BTreeMap<String, Candidate>,
-    named_best: &mut Option<Candidate>,
+    named_fps: &BTreeSet<u64>,
+    pool: &mut BTreeMap<u64, SearchCand>,
+    named_best: &mut Option<SearchCand>,
     tally: &mut Tally,
 ) {
     for out in outs {
@@ -147,7 +204,7 @@ fn absorb(
             EvalOut::OverBudget => tally.rejected_budget += 1,
             EvalOut::SimFail => tally.rejected_sim += 1,
             EvalOut::Fit(cand) => {
-                if named_texts.contains(&cand.text) {
+                if named_fps.contains(&cand.fp) {
                     let replace = named_best
                         .as_ref()
                         .map(|nb| {
@@ -158,46 +215,59 @@ fn absorb(
                         *named_best = Some((*cand).clone());
                     }
                 }
-                pool.entry(cand.text.clone()).or_insert(*cand);
+                pool.entry(cand.fp).or_insert(*cand);
             }
         }
     }
 }
 
+/// Score one batch of already-validated candidates on the Tier A fast
+/// path: each worker owns a [`Scratch`] and reuses it across every
+/// candidate it pulls, so the per-candidate cost is one span-free
+/// simulation — no validate pass, no span vectors, no allocations.
 fn evaluate(
     pending: &[Pending],
     profile: &TuneProfile,
     cfg: &BeamConfig,
     threads: usize,
 ) -> Vec<EvalOut> {
-    run_grid(pending, threads, |_, (plan, text, seed, origin)| {
-        match eval_plan(
-            plan,
-            &profile.costs,
-            Some(&profile.mem),
-            cfg.budget_bytes,
-        ) {
-            Err(_) => EvalOut::SimFail,
-            Ok(ev) if !ev.fits => EvalOut::OverBudget,
-            Ok(ev) => EvalOut::Fit(Box::new(Candidate {
-                plan: plan.clone(),
-                text: text.clone(),
-                makespan: ev.result.makespan,
-                throughput: ev.result.throughput(
-                    profile.samples_per_microbatch,
-                    plan.n_microbatches,
-                ),
-                max_peak: ev.max_peak,
-                seed: seed.clone(),
-                origin: origin.clone(),
-            })),
-        }
-    })
+    run_grid_with(
+        pending,
+        threads,
+        Scratch::new,
+        |scratch, _, (plan, fp, seed, origin)| {
+            match score_plan(
+                plan,
+                &profile.costs,
+                Some(&profile.mem),
+                cfg.budget_bytes,
+                scratch,
+            ) {
+                Err(_) => EvalOut::SimFail,
+                Ok(score) if !score.fits => EvalOut::OverBudget,
+                Ok(score) => EvalOut::Fit(Box::new(SearchCand {
+                    plan: plan.clone(),
+                    fp: *fp,
+                    makespan: score.makespan,
+                    throughput: score.throughput(
+                        profile.samples_per_microbatch,
+                        plan.n_microbatches,
+                    ),
+                    max_peak: score.max_peak,
+                    seed: seed.clone(),
+                    origin: origin.clone(),
+                    text_cache: std::cell::OnceCell::new(),
+                })),
+            }
+        },
+    )
 }
 
 /// The microbatch counts seeded for `n` ranks (ascending, deduped,
-/// capped at `max_m`): {N, 3N/2, 2N, 3N, 4N}.
-fn microbatch_grid(n: usize, max_m: usize) -> Vec<usize> {
+/// capped at `max_m`): {N, 3N/2, 2N, 3N, 4N}.  Public so the
+/// `planner_throughput` bench builds its corpus from exactly the
+/// shapes the beam seeds — retuning this grid retunes the bench too.
+pub fn microbatch_grid(n: usize, max_m: usize) -> Vec<usize> {
     let mut ms: Vec<usize> = [n, 3 * n / 2, 2 * n, 3 * n, 4 * n]
         .into_iter()
         .filter(|&m| m >= 1 && m <= max_m)
@@ -241,19 +311,30 @@ pub fn tune(
     };
 
     // -- seeding -----------------------------------------------------------
+    // Seeds take the one full `validate` pass of their lifetime here;
+    // everything descending from them is incrementally revalidated by
+    // the move that produced it, so `score_plan` never validates.
+    let mut tally = Tally::default();
     let mut pending: Vec<Pending> = Vec::new();
-    let mut seen: std::collections::BTreeSet<String> =
-        std::collections::BTreeSet::new();
-    let mut named_texts: std::collections::BTreeSet<String> =
-        std::collections::BTreeSet::new();
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
+    let mut named_fps: BTreeSet<u64> = BTreeSet::new();
     for (kind, two_bp) in combos() {
         for &m in &microbatch_grid(n_ranks, max_m) {
             let plan = generate(kind, two_bp, n_ranks, m, false);
-            let text = plan_io::to_text(&plan);
+            let fp = plan.fingerprint();
             let desc = plan.describe();
-            if seen.insert(text.clone()) {
-                named_texts.insert(text.clone());
-                pending.push((plan.clone(), text, desc.clone(), "seed".into()));
+            if seen.insert(fp) {
+                named_fps.insert(fp);
+                if validate(&plan).is_ok() {
+                    pending.push((plan.clone(), fp, desc.clone(),
+                                  "seed".into()));
+                } else {
+                    // generators always validate (tested); count a
+                    // hypothetical failure exactly like the old
+                    // validate-at-eval path did
+                    tally.evaluated += 1;
+                    tally.rejected_sim += 1;
+                }
             }
             // flush-point-enriched 2BP variants (generalized Fig 5)
             if two_bp && m >= 3 {
@@ -262,14 +343,19 @@ pub fn tune(
                     if let Some(enriched) =
                         moves::with_partial_flush(&plan, k, false)
                     {
-                        let etext = plan_io::to_text(&enriched);
-                        if seen.insert(etext.clone()) {
-                            pending.push((
-                                enriched,
-                                etext,
-                                format!("{desc} +flush@{k}"),
-                                "seed".into(),
-                            ));
+                        let efp = enriched.fingerprint();
+                        if seen.insert(efp) {
+                            if validate(&enriched).is_ok() {
+                                pending.push((
+                                    enriched,
+                                    efp,
+                                    format!("{desc} +flush@{k}"),
+                                    "seed".into(),
+                                ));
+                            } else {
+                                tally.evaluated += 1;
+                                tally.rejected_sim += 1;
+                            }
                         }
                     }
                 }
@@ -277,12 +363,11 @@ pub fn tune(
         }
     }
 
-    let mut tally = Tally::default();
-    let mut pool: BTreeMap<String, Candidate> = BTreeMap::new();
-    let mut named_best: Option<Candidate> = None;
+    let mut pool: BTreeMap<u64, SearchCand> = BTreeMap::new();
+    let mut named_best: Option<SearchCand> = None;
 
     let outs = evaluate(&pending, profile, cfg, threads);
-    absorb(outs, &named_texts, &mut pool, &mut named_best, &mut tally);
+    absorb(outs, &named_fps, &mut pool, &mut named_best, &mut tally);
 
     if pool.is_empty() {
         return Err(format!(
@@ -292,8 +377,8 @@ pub fn tune(
         ));
     }
 
-    let select = |pool: &BTreeMap<String, Candidate>| -> Vec<Candidate> {
-        let mut all: Vec<Candidate> = pool.values().cloned().collect();
+    let select = |pool: &BTreeMap<u64, SearchCand>| -> Vec<SearchCand> {
+        let mut all: Vec<SearchCand> = pool.values().cloned().collect();
         all.sort_by(better);
         all.truncate(beam_width);
         all
@@ -315,17 +400,17 @@ pub fn tune(
                     if let Some((child, mv)) =
                         moves::mutate(&parent.plan, &mut rng)
                     {
-                        let text = plan_io::to_text(&child);
-                        if seen.contains(&text) {
+                        let fp = child.fingerprint();
+                        if seen.contains(&fp) {
                             // duplicate of an already-tried plan: retry
                             // with fresh randomness rather than forfeit
                             // this mutation slot
                             continue;
                         }
-                        seen.insert(text.clone());
+                        seen.insert(fp);
                         children.push((
                             child,
-                            text,
+                            fp,
                             parent.seed.clone(),
                             format!("g{g}:{mv}"),
                         ));
@@ -335,7 +420,7 @@ pub fn tune(
             }
         }
         let outs = evaluate(&children, profile, cfg, threads);
-        absorb(outs, &named_texts, &mut pool, &mut named_best, &mut tally);
+        absorb(outs, &named_fps, &mut pool, &mut named_best, &mut tally);
 
         beam = select(&pool);
         history.push(beam[0].throughput);
@@ -355,8 +440,8 @@ pub fn tune(
         profile_name: profile.name.clone(),
         n_ranks,
         budget_bytes: cfg.budget_bytes,
-        best: beam[0].clone(),
-        named_best,
+        best: beam[0].publish(),
+        named_best: named_best.as_ref().map(SearchCand::publish),
         evaluated: tally.evaluated,
         rejected_budget: tally.rejected_budget,
         rejected_sim: tally.rejected_sim,
@@ -449,6 +534,31 @@ mod tests {
         if let Some(nb) = &constrained.named_best {
             assert!(constrained.best.throughput >= nb.throughput);
         }
+    }
+
+    /// The winner's scores come from the span-free Tier A path; they
+    /// must replay bit-identically through the Tier B `eval_plan`
+    /// (validate + full simulate) — the two-tier contract end-to-end
+    /// at the planner level.
+    #[test]
+    fn winner_scores_replay_through_tier_b() {
+        let profile = TuneProfile::llama_like(4);
+        let report = tune(&profile, 4, &quick_cfg()).unwrap();
+        let replay = crate::sim::eval_plan(
+            &report.best.plan,
+            &profile.costs,
+            Some(&profile.mem),
+            None,
+        )
+        .unwrap();
+        assert_eq!(replay.result.makespan.to_bits(),
+                   report.best.makespan.to_bits());
+        assert_eq!(replay.max_peak, report.best.max_peak);
+        let tput = replay.result.throughput(
+            profile.samples_per_microbatch,
+            report.best.plan.n_microbatches,
+        );
+        assert_eq!(tput.to_bits(), report.best.throughput.to_bits());
     }
 
     #[test]

@@ -14,12 +14,20 @@
 //!   grid, plus partial-flush-enriched 2BP variants (the Fig 5 knob,
 //!   generalized to arbitrary flush points);
 //! * **local moves** ([`moves`]) — swap/shift/flush-point mutations,
-//!   each gated by `schedule::validate` so the search space stays
-//!   inside legal plans;
+//!   each gated by *incremental revalidation* (every move declares
+//!   which validator invariants it can break and rechecks only those,
+//!   with a full-`validate` differential debug-assert) so the search
+//!   space stays inside legal plans without paying a full validation
+//!   pass per candidate;
 //! * **beam search** ([`beam`]) — deterministic seeded beam over the
-//!   candidates, evaluated through [`crate::sim::eval_plan`] (the
-//!   event-driven simulator + `MemModel`), with hard rejection of
-//!   budget-violating plans via `peak_bytes`.
+//!   candidates, deduped by [`crate::schedule::Plan::fingerprint`] and
+//!   evaluated through the Tier A scoring fast path
+//!   ([`crate::sim::score_plan`] + one reusable
+//!   [`crate::sim::Scratch`] per worker — span-free and
+//!   allocation-free; see the two-tier contract in [`crate::sim`]),
+//!   with hard rejection of budget-violating plans via `max_peak`.
+//!   Winners are re-rendered through Tier B ([`crate::sim::eval_plan`])
+//!   when a timeline is needed.
 //!
 //! Winners serialize through the plan DSL
 //! ([`crate::schedule::plan_io`]), so a found schedule is a `.plan`

@@ -1,13 +1,41 @@
 //! Local plan mutations — the beam search's neighborhood.
 //!
 //! Every move returns a *candidate* plan; [`mutate`] gates it through
-//! `schedule::validate` so only legal plans leave this module.  Note
-//! that validity (per-rank op coherence + cross-rank order consistency)
-//! does not guarantee liveness: a validated plan can still deadlock the
-//! pipeline (rank r waiting on a forward rank r−1 has scheduled after a
-//! backward that waits on rank r).  The simulator detects that as a
-//! `SimError`, and the beam discards such candidates at evaluation —
-//! liveness is a *scoring* concern, not a validity one.
+//! **incremental revalidation** so only legal plans leave this module.
+//! Note that validity (per-rank op coherence + cross-rank order
+//! consistency) does not guarantee liveness: a validated plan can still
+//! deadlock the pipeline (rank r waiting on a forward rank r−1 has
+//! scheduled after a backward that waits on rank r).  The simulator
+//! detects that as a `SimError`, and the beam discards such candidates
+//! at evaluation — liveness is a *scoring* concern, not a validity one.
+//!
+//! # Incremental revalidation
+//!
+//! A full `schedule::validate` pass walks every rank and rebuilds the
+//! cross-rank forward/backward order vectors — O(total ops) plus
+//! allocations, paid once per *candidate* in the old beam.  But each
+//! local move knows exactly which validator invariants it can break,
+//! and declares that as a [`Recheck`]:
+//!
+//! * **swap-adjacent** swaps two neighboring ops *of different kinds*
+//!   on one rank.  Ops of one kind keep their relative order, so the
+//!   cross-rank forward order, backward order, and mb multiset are
+//!   untouched; only that rank's local invariants (fwd-before-p1,
+//!   p2-after-p1, flush coverage) can break → `Recheck::Rank(r)`.
+//! * **shift-flush-point / insert-flush / remove-flush** edit `Flush`
+//!   ops on one rank.  `Flush` takes no part in the cross-rank orders,
+//!   so only that rank's coverage/position invariants can break →
+//!   `Recheck::Rank(r)`.
+//! * **toggle-concat** flips a flag the validator never reads →
+//!   `Recheck::None`.
+//!
+//! [`mutate`] runs only the declared recheck (via
+//! `validate::validate_rank`); a `debug_assert` holds the incremental
+//! decision equal to a full `validate` pass on every candidate, and a
+//! differential proptest below fuzzes the agreement per move kind.
+//! The caller must pass a plan that is itself valid — the beam
+//! guarantees this by fully validating seeds once and mutating only
+//! accepted candidates.
 //!
 //! The move set:
 //!
@@ -21,26 +49,78 @@
 //! * **toggle-concat** — flip a flush between per-mb p2 calls and one
 //!   concatenated call (Table 3's trade, live when `concat_factor ≠ 1`).
 
-use crate::schedule::{validate::validate, Op, Plan};
+use crate::schedule::validate::{validate, validate_rank};
+use crate::schedule::{Op, Plan};
 use crate::util::prng::SplitMix64;
+
+/// The validator work a move's candidate still owes — declared by the
+/// move itself, from a per-move argument about which invariants it can
+/// possibly break (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Recheck {
+    /// The move cannot break any validator invariant (e.g. toggling a
+    /// concat flag, which validation never reads).
+    None,
+    /// The move touched a single rank's op list and provably preserved
+    /// the mb multiset and the cross-rank per-kind orders; only that
+    /// rank's local invariants need rechecking.
+    Rank(usize),
+}
 
 /// Apply one randomly chosen local move.  Returns `None` when the
 /// sampled move is inapplicable, is a no-op, or yields a plan the
-/// validator rejects; callers just retry with fresh randomness.
+/// (incremental) validation rejects; callers just retry with fresh
+/// randomness.  `plan` itself must be valid.
 pub fn mutate(plan: &Plan, rng: &mut SplitMix64) -> Option<(Plan, &'static str)> {
-    let (cand, name) = match rng.below(8) {
-        // swap carries most of the throughput exploration — weight it up
-        0..=3 => (swap_adjacent(plan, rng)?, "swap-adjacent"),
-        4 => (shift_flush_point(plan, rng)?, "shift-flush-point"),
-        5 => (insert_partial_flush(plan, rng)?, "insert-flush"),
-        6 => (remove_partial_flush(plan, rng)?, "remove-flush"),
-        _ => (toggle_flush_concat(plan, rng)?, "toggle-concat"),
-    };
+    let (cand, name, recheck) = propose(plan, rng)?;
     if cand == *plan {
         return None;
     }
-    validate(&cand).ok()?;
+    let ok = match recheck {
+        Recheck::None => true,
+        Recheck::Rank(r) => validate_rank(&cand, r).is_ok(),
+    };
+    // the incremental decision must equal the full validator's —
+    // the differential safety net under the per-move arguments above
+    debug_assert_eq!(
+        ok,
+        validate(&cand).is_ok(),
+        "incremental revalidation diverged from full validate ({name})"
+    );
+    if !ok {
+        return None;
+    }
     Some((cand, name))
+}
+
+/// Sample one move and build its candidate *without* any validation —
+/// the raw proposal plus the move's declared [`Recheck`].  Exposed for
+/// the differential proptest; external callers use [`mutate`].
+pub(crate) fn propose(
+    plan: &Plan,
+    rng: &mut SplitMix64,
+) -> Option<(Plan, &'static str, Recheck)> {
+    Some(match rng.below(8) {
+        // swap carries most of the throughput exploration — weight it up
+        0..=3 => {
+            let (p, r) = swap_adjacent(plan, rng)?;
+            (p, "swap-adjacent", Recheck::Rank(r))
+        }
+        4 => {
+            let (p, r) = shift_flush_point(plan, rng)?;
+            (p, "shift-flush-point", Recheck::Rank(r))
+        }
+        5 => {
+            let (p, r) = insert_partial_flush(plan, rng)?;
+            (p, "insert-flush", Recheck::Rank(r))
+        }
+        6 => {
+            let (p, r) = remove_partial_flush(plan, rng)?;
+            (p, "remove-flush", Recheck::Rank(r))
+        }
+        _ => (toggle_flush_concat(plan, rng)?, "toggle-concat",
+              Recheck::None),
+    })
 }
 
 /// Positions of `Flush` ops, optionally only partial ones.
@@ -58,7 +138,7 @@ fn flush_positions(plan: &Plan, partial_only: bool) -> Vec<(usize, usize)> {
     out
 }
 
-fn swap_adjacent(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
+fn swap_adjacent(plan: &Plan, rng: &mut SplitMix64) -> Option<(Plan, usize)> {
     let r = rng.below(plan.n_ranks as u64) as usize;
     let ops = &plan.ranks[r];
     if ops.len() < 2 {
@@ -68,7 +148,10 @@ fn swap_adjacent(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
     let (a, b) = (&ops[i], &ops[i + 1]);
     // same-kind swaps either permute the cross-rank order (invalid on
     // N > 1) or reorder interchangeable p2 work (a no-op for timing);
-    // OptStep must stay last — skip them all cheaply.
+    // OptStep must stay last — skip them all cheaply.  Different-kind
+    // swaps are also what keeps `Recheck::Rank` sound: they never
+    // reorder ops *within* a kind, so the cross-rank order vectors are
+    // unchanged by construction.
     if std::mem::discriminant(a) == std::mem::discriminant(b)
         || matches!(a, Op::OptStep)
         || matches!(b, Op::OptStep)
@@ -77,10 +160,13 @@ fn swap_adjacent(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
     }
     let mut out = plan.clone();
     out.ranks[r].swap(i, i + 1);
-    Some(out)
+    Some((out, r))
 }
 
-fn shift_flush_point(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
+fn shift_flush_point(
+    plan: &Plan,
+    rng: &mut SplitMix64,
+) -> Option<(Plan, usize)> {
     let pts = flush_positions(plan, true);
     if pts.is_empty() {
         return None;
@@ -95,10 +181,13 @@ fn shift_flush_point(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
         }
         *k = nk as u32;
     }
-    Some(out)
+    Some((out, r))
 }
 
-fn insert_partial_flush(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
+fn insert_partial_flush(
+    plan: &Plan,
+    rng: &mut SplitMix64,
+) -> Option<(Plan, usize)> {
     // only meaningful with deferred p2 (otherwise nothing is pending)
     if !plan.greedy_p2 || plan.n_microbatches < 2 {
         return None;
@@ -109,10 +198,13 @@ fn insert_partial_flush(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
     if !crate::schedule::insert_partial_flush(&mut out.ranks[r], k, false) {
         return None;
     }
-    Some(out)
+    Some((out, r))
 }
 
-fn remove_partial_flush(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
+fn remove_partial_flush(
+    plan: &Plan,
+    rng: &mut SplitMix64,
+) -> Option<(Plan, usize)> {
     let pts = flush_positions(plan, true);
     if pts.is_empty() {
         return None;
@@ -120,7 +212,7 @@ fn remove_partial_flush(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
     let (r, i) = pts[rng.below(pts.len() as u64) as usize];
     let mut out = plan.clone();
     out.ranks[r].remove(i);
-    Some(out)
+    Some((out, r))
 }
 
 fn toggle_flush_concat(plan: &Plan, rng: &mut SplitMix64) -> Option<Plan> {
@@ -222,6 +314,59 @@ mod tests {
                 // nothing would mean the move set is broken
                 if two_bp && m >= 2 && accepted == 0 {
                     return Err("no mutation ever accepted".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Satellite: the incremental revalidation decision agrees with a
+    /// full `validate` pass on accept *and* reject, for every move
+    /// kind, walking chains of accepted candidates exactly like the
+    /// beam does.
+    #[test]
+    fn prop_incremental_revalidation_matches_full_validate() {
+        check(
+            "incremental recheck == full validate for every move kind",
+            200,
+            |rng| {
+                let kind = *gen::pick(rng, &ScheduleKind::all_variants());
+                let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
+                    true
+                } else {
+                    gen::bool(rng)
+                };
+                let n = gen::usize_in(rng, 1, 6);
+                let m = gen::usize_in(rng, 1, 12);
+                let seed = rng.next_u64();
+                (kind, two_bp, n, m, seed)
+            },
+            |&(kind, two_bp, n, m, seed)| {
+                let mut plan = generate(kind, two_bp, n, m, two_bp);
+                let mut rng = SplitMix64::new(seed);
+                for _ in 0..60 {
+                    let (cand, name, recheck) =
+                        match propose(&plan, &mut rng) {
+                            Some(p) => p,
+                            None => continue,
+                        };
+                    if cand == plan {
+                        continue;
+                    }
+                    let incremental = match recheck {
+                        Recheck::None => true,
+                        Recheck::Rank(r) => validate_rank(&cand, r).is_ok(),
+                    };
+                    let full = validate(&cand).is_ok();
+                    if incremental != full {
+                        return Err(format!(
+                            "{name}: incremental said {incremental}, \
+                             full validate said {full}"
+                        ));
+                    }
+                    if full {
+                        plan = cand;
+                    }
                 }
                 Ok(())
             },

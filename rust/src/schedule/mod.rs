@@ -165,6 +165,67 @@ impl Plan {
         self.ranks.iter().map(|ops| ops.len()).sum()
     }
 
+    /// Stable 64-bit structural fingerprint: FNV-1a over an injective
+    /// encoding of every field (kind, flags, shape, and each rank's op
+    /// list).  Two plans have equal fingerprints iff they are equal —
+    /// up to 64-bit hash collisions, which at planner pool sizes
+    /// (thousands of candidates, birthday bound ≈ k²/2⁶⁵) are
+    /// negligible.  The value is independent of process, platform, and
+    /// Rust version, so it can be persisted or compared across runs.
+    ///
+    /// This is the planner's dedup / pool key: hashing a plan costs one
+    /// pass over its ops, where the previous text key paid a full DSL
+    /// serialization plus a heap-allocated `String` per candidate.
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |x: u64| {
+            for b in x.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(PRIME);
+            }
+        };
+        mix(match self.kind {
+            ScheduleKind::Naive => 0,
+            ScheduleKind::GPipe => 1,
+            ScheduleKind::OneF1B1 => 2,
+            ScheduleKind::OneF1B2 => 3,
+            ScheduleKind::OneF1B2EagerP2 => 4,
+        });
+        mix(self.two_bp as u64 | (self.greedy_p2 as u64) << 1);
+        mix(self.n_ranks as u64);
+        mix(self.n_microbatches as u64);
+        for ops in &self.ranks {
+            // length prefixes keep the encoding injective across rank
+            // and mbs-list boundaries
+            mix(ops.len() as u64);
+            for op in ops {
+                match op {
+                    Op::Fwd { mb } => {
+                        mix(1);
+                        mix(*mb as u64);
+                    }
+                    Op::BwdP1 { mb } => {
+                        mix(2);
+                        mix(*mb as u64);
+                    }
+                    Op::BwdP2 { mbs, concat } => {
+                        mix(3 | (*concat as u64) << 8);
+                        mix(mbs.len() as u64);
+                        for mb in mbs {
+                            mix(*mb as u64);
+                        }
+                    }
+                    Op::Flush { upto, concat } => {
+                        mix(4 | (*concat as u64) << 8);
+                        mix(upto.map(|u| u as u64 + 1).unwrap_or(0));
+                    }
+                    Op::OptStep => mix(5),
+                }
+            }
+        }
+        h
+    }
+
     /// Human-readable one-line description, e.g. "1f1b-1+2bp (4 ranks × 4 mb)".
     pub fn describe(&self) -> String {
         format!(
@@ -186,6 +247,69 @@ mod tests {
         for kind in ScheduleKind::all_variants() {
             assert_eq!(ScheduleKind::parse(kind.name()), Ok(kind));
         }
+    }
+
+    /// Fingerprint ↔ plan-identity: across the whole generator space
+    /// (plus concat and flag variations), distinct plans get distinct
+    /// fingerprints and equal plans hash equal — the property the
+    /// planner's hash-keyed dedup rests on.
+    #[test]
+    fn fingerprint_separates_generator_space() {
+        use std::collections::BTreeMap;
+        let mut by_fp: BTreeMap<u64, Plan> = BTreeMap::new();
+        let mut count = 0usize;
+        for kind in ScheduleKind::all_variants() {
+            for two_bp in [false, true] {
+                for n in [1usize, 2, 3, 4] {
+                    for m in [1usize, 2, 4, 7] {
+                        for concat in [false, true] {
+                            let p = generate(kind, two_bp, n, m, concat);
+                            assert_eq!(p.fingerprint(), p.fingerprint());
+                            assert_eq!(p.clone().fingerprint(),
+                                       p.fingerprint());
+                            match by_fp.get(&p.fingerprint()) {
+                                Some(q) => assert_eq!(
+                                    *q, p,
+                                    "fingerprint collision between \
+                                     distinct plans"
+                                ),
+                                None => {
+                                    by_fp.insert(p.fingerprint(), p);
+                                }
+                            }
+                            count += 1;
+                        }
+                    }
+                }
+            }
+        }
+        // sanity: the space is non-trivial and mostly distinct plans
+        assert!(count >= 100 && by_fp.len() > count / 2);
+    }
+
+    /// The fingerprint covers every field the plan DSL serializes: any
+    /// single-field change moves the hash.
+    #[test]
+    fn fingerprint_tracks_every_field() {
+        let base = generate(ScheduleKind::OneF1B1, true, 2, 4, false);
+        let fp = base.fingerprint();
+        let mut kind = base.clone();
+        kind.kind = ScheduleKind::GPipe;
+        assert_ne!(kind.fingerprint(), fp, "kind label ignored");
+        let mut flag = base.clone();
+        flag.greedy_p2 = false;
+        assert_ne!(flag.fingerprint(), fp, "greedy_p2 ignored");
+        let mut ops = base.clone();
+        if let Some(Op::Flush { concat, .. }) = ops.ranks[0]
+            .iter_mut()
+            .find(|op| matches!(op, Op::Flush { .. }))
+        {
+            *concat = true;
+        }
+        assert_ne!(ops.fingerprint(), fp, "flush concat ignored");
+        let mut swapped = base.clone();
+        swapped.ranks[0].swap(0, 1);
+        assert_ne!(swapped.fingerprint(), fp, "op order ignored");
     }
 
     #[test]

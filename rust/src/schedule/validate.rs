@@ -35,8 +35,120 @@ impl std::fmt::Display for ValidationError {
 
 impl std::error::Error for ValidationError {}
 
-pub fn validate(plan: &Plan) -> Result<(), ValidationError> {
+/// Validate rank `r`'s op list in isolation — the per-rank invariants
+/// 1–4 of the module docs (fwd/p1 exactly once and ordered, p2
+/// coverage, no explicit `BwdP2` under greedy-p2, OptStep last).
+/// Returns the rank's (forward order, backward order) for the
+/// cross-rank checks in [`validate`].
+///
+/// This is also the planner's **incremental revalidation** primitive:
+/// a local move that provably cannot change other ranks, the mb
+/// multiset, or the per-kind cross-rank orders (see `planner::moves`
+/// for the per-move argument) rechecks only the mutated rank through
+/// this function instead of paying a full [`validate`] pass per
+/// candidate.
+pub fn validate_rank(
+    plan: &Plan,
+    r: usize,
+) -> Result<(Vec<u32>, Vec<u32>), ValidationError> {
     let m = plan.n_microbatches as u32;
+    let ops = &plan.ranks[r];
+    let err = |msg: String| Err(ValidationError { rank: r, msg });
+    let mut fwd_seen = vec![false; m as usize];
+    let mut p1_seen = vec![false; m as usize];
+    let mut p2_seen = vec![false; m as usize];
+    let mut has_flush_all = false;
+    let mut opt_seen = false;
+    let mut fwd_order = Vec::new();
+    let mut bwd_order = Vec::new();
+
+    for (i, op) in ops.iter().enumerate() {
+        if opt_seen {
+            return err(format!("op after OptStep at index {i}"));
+        }
+        match op {
+            Op::Fwd { mb } => {
+                if *mb >= m {
+                    return err(format!("Fwd mb {mb} out of range"));
+                }
+                if fwd_seen[*mb as usize] {
+                    return err(format!("mb {mb} forwarded twice"));
+                }
+                fwd_seen[*mb as usize] = true;
+                fwd_order.push(*mb);
+            }
+            Op::BwdP1 { mb } => {
+                if *mb >= m || !fwd_seen[*mb as usize] {
+                    return err(format!("BwdP1 mb {mb} before its Fwd"));
+                }
+                if p1_seen[*mb as usize] {
+                    return err(format!("mb {mb} p1 twice"));
+                }
+                p1_seen[*mb as usize] = true;
+                bwd_order.push(*mb);
+            }
+            Op::BwdP2 { mbs, .. } => {
+                if plan.greedy_p2 {
+                    return err(
+                        "explicit BwdP2 in a greedy-p2 plan (the fill \
+                         rule may already have run these microbatches; \
+                         use a partial Flush instead)"
+                            .into(),
+                    );
+                }
+                for mb in mbs {
+                    if *mb >= m || !p1_seen[*mb as usize] {
+                        return err(format!("BwdP2 mb {mb} before its p1"));
+                    }
+                    if p2_seen[*mb as usize] {
+                        return err(format!("mb {mb} p2 twice"));
+                    }
+                    p2_seen[*mb as usize] = true;
+                }
+            }
+            Op::Flush { upto, .. } => {
+                // flush covers pending (p1-done, p2-not-done) mbs
+                for mb in 0..m {
+                    let within =
+                        upto.map(|u| mb <= u).unwrap_or(true);
+                    if within && p1_seen[mb as usize]
+                        && !p2_seen[mb as usize]
+                    {
+                        p2_seen[mb as usize] = true;
+                    }
+                }
+                if upto.is_none() {
+                    has_flush_all = true;
+                }
+            }
+            Op::OptStep => {
+                opt_seen = true;
+            }
+        }
+    }
+
+    if !opt_seen {
+        return err("missing OptStep".into());
+    }
+    for mb in 0..m as usize {
+        if !fwd_seen[mb] {
+            return err(format!("mb {mb} never forwarded"));
+        }
+        if !p1_seen[mb] {
+            return err(format!("mb {mb} never p1'd"));
+        }
+        if !p2_seen[mb] {
+            return err(format!(
+                "mb {mb} p2 never runs (and no covering Flush)"));
+        }
+    }
+    if plan.greedy_p2 && !has_flush_all {
+        return err("greedy_p2 plan lacks a full Flush".into());
+    }
+    Ok((fwd_order, bwd_order))
+}
+
+pub fn validate(plan: &Plan) -> Result<(), ValidationError> {
     if plan.ranks.len() != plan.n_ranks {
         return Err(ValidationError {
             rank: 0,
@@ -48,99 +160,8 @@ pub fn validate(plan: &Plan) -> Result<(), ValidationError> {
     let mut fwd_orders: Vec<Vec<u32>> = Vec::new();
     let mut bwd_orders: Vec<Vec<u32>> = Vec::new();
 
-    for (r, ops) in plan.ranks.iter().enumerate() {
-        let err = |msg: String| Err(ValidationError { rank: r, msg });
-        let mut fwd_seen = vec![false; m as usize];
-        let mut p1_seen = vec![false; m as usize];
-        let mut p2_seen = vec![false; m as usize];
-        let mut has_flush_all = false;
-        let mut opt_seen = false;
-        let mut fwd_order = Vec::new();
-        let mut bwd_order = Vec::new();
-
-        for (i, op) in ops.iter().enumerate() {
-            if opt_seen {
-                return err(format!("op after OptStep at index {i}"));
-            }
-            match op {
-                Op::Fwd { mb } => {
-                    if *mb >= m {
-                        return err(format!("Fwd mb {mb} out of range"));
-                    }
-                    if fwd_seen[*mb as usize] {
-                        return err(format!("mb {mb} forwarded twice"));
-                    }
-                    fwd_seen[*mb as usize] = true;
-                    fwd_order.push(*mb);
-                }
-                Op::BwdP1 { mb } => {
-                    if *mb >= m || !fwd_seen[*mb as usize] {
-                        return err(format!("BwdP1 mb {mb} before its Fwd"));
-                    }
-                    if p1_seen[*mb as usize] {
-                        return err(format!("mb {mb} p1 twice"));
-                    }
-                    p1_seen[*mb as usize] = true;
-                    bwd_order.push(*mb);
-                }
-                Op::BwdP2 { mbs, .. } => {
-                    if plan.greedy_p2 {
-                        return err(
-                            "explicit BwdP2 in a greedy-p2 plan (the fill \
-                             rule may already have run these microbatches; \
-                             use a partial Flush instead)"
-                                .into(),
-                        );
-                    }
-                    for mb in mbs {
-                        if *mb >= m || !p1_seen[*mb as usize] {
-                            return err(format!("BwdP2 mb {mb} before its p1"));
-                        }
-                        if p2_seen[*mb as usize] {
-                            return err(format!("mb {mb} p2 twice"));
-                        }
-                        p2_seen[*mb as usize] = true;
-                    }
-                }
-                Op::Flush { upto, .. } => {
-                    // flush covers pending (p1-done, p2-not-done) mbs
-                    for mb in 0..m {
-                        let within =
-                            upto.map(|u| mb <= u).unwrap_or(true);
-                        if within && p1_seen[mb as usize]
-                            && !p2_seen[mb as usize]
-                        {
-                            p2_seen[mb as usize] = true;
-                        }
-                    }
-                    if upto.is_none() {
-                        has_flush_all = true;
-                    }
-                }
-                Op::OptStep => {
-                    opt_seen = true;
-                }
-            }
-        }
-
-        if !opt_seen {
-            return err("missing OptStep".into());
-        }
-        for mb in 0..m as usize {
-            if !fwd_seen[mb] {
-                return err(format!("mb {mb} never forwarded"));
-            }
-            if !p1_seen[mb] {
-                return err(format!("mb {mb} never p1'd"));
-            }
-            if !p2_seen[mb] {
-                return err(format!(
-                    "mb {mb} p2 never runs (and no covering Flush)"));
-            }
-        }
-        if plan.greedy_p2 && !has_flush_all {
-            return err("greedy_p2 plan lacks a full Flush".into());
-        }
+    for r in 0..plan.ranks.len() {
+        let (fwd_order, bwd_order) = validate_rank(plan, r)?;
         fwd_orders.push(fwd_order);
         bwd_orders.push(bwd_order);
     }

@@ -1,29 +1,38 @@
 //! The simulation kernels.
 //!
-//! Two engines share one op-semantics core ([`op_ready`], [`exec_op`],
-//! [`run_p2`]):
+//! Three entry points share one op-semantics core ([`op_ready`],
+//! [`exec_op`], [`run_p2`]) and, for the two event-driven ones, one
+//! dispatch driver ([`drive_events`]):
 //!
-//! * [`simulate`] — the production **event-driven** kernel: a min-heap
-//!   of per-rank ready events plus dependency wakeups, O(1) amortized
-//!   examinations per op.  See the module docs in [`crate::sim`] for the
-//!   event-queue invariants.
+//! * [`simulate`] — **Tier B** (rendering): the event-driven kernel
+//!   with full per-op [`Span`] recording, O(1) amortized examinations
+//!   per op.  See the module docs in [`crate::sim`] for the event-queue
+//!   invariants and the two-tier evaluation contract.
+//! * [`score_plan`] — **Tier A** (scoring): the same event-driven
+//!   kernel compiled without span recording, running entirely inside a
+//!   caller-owned [`Scratch`] workspace so that evaluating thousands of
+//!   candidate plans performs no per-call heap allocation.  Returns
+//!   only the numbers a search ranks on ([`Score`]).
 //! * [`reference::simulate_naive`] — the original linear-scan loop
 //!   (rescan every rank after every dispatched action), kept as the
 //!   differential oracle and as the baseline the `sweep_throughput`
 //!   bench measures speedup against.
 //!
-//! Both realize the same semantics: global earliest-start scheduling
-//! over per-rank op cursors, with the 2BP greedy-p2 fill rule (run
-//! deferred weight-grad work whenever a rank would otherwise idle —
-//! non-preemptive, exactly like the real executor's poll-then-fill
-//! loop), and the non-2BP fused-pair send rule (the input gradient is
-//! released only after the paired backward-p2).  The differential
-//! proptest at the bottom of this file holds them bit-for-bit equal.
+//! All three realize the same semantics: global earliest-start
+//! scheduling over per-rank op cursors, with the 2BP greedy-p2 fill
+//! rule (run deferred weight-grad work whenever a rank would otherwise
+//! idle — non-preemptive, exactly like the real executor's
+//! poll-then-fill loop), and the non-2BP fused-pair send rule (the
+//! input gradient is released only after the paired backward-p2).
+//! Differential proptests at the bottom of this file hold
+//! `simulate == simulate_naive` bit-for-bit on every output field, and
+//! `score_plan == simulate` bit-for-bit on makespan, total busy time,
+//! bubble ratio, and peak bytes.
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, VecDeque};
 
-use super::{CostModel, MemModel, SimResult};
+use super::{CostModel, MemModel, Score, SimResult};
 use crate::schedule::{Op, Plan};
 use crate::util::gantt::{Span, SpanKind};
 
@@ -38,16 +47,45 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
+/// Per-rank mutable simulation state.  Spans are *not* stored here —
+/// they live in a separate `Vec<Vec<Span>>` owned by the Tier B
+/// callers, so the Tier A scoring path carries no span storage at all.
 struct RankState {
     t: f64,
     next: usize,
     /// p1-done microbatches whose p2 hasn't run (FIFO by p1 completion).
     pending_p2: VecDeque<u32>,
-    spans: Vec<Span>,
     busy: f64,
     // memory accounting
     live: u64,
     peak: u64,
+}
+
+impl RankState {
+    fn new(static_b: u64) -> RankState {
+        RankState {
+            t: 0.0,
+            next: 0,
+            pending_p2: VecDeque::new(),
+            busy: 0.0,
+            live: static_b,
+            peak: static_b,
+        }
+    }
+
+    /// Restore exactly the state [`RankState::new`] produces, keeping
+    /// allocations.  `new` and `reset` are the only two initializers —
+    /// a field added to one must be added to the other, which is why
+    /// they sit side by side (and why the scratch-reuse differential
+    /// proptest fuzzes fresh-vs-reused equality).
+    fn reset(&mut self, static_b: u64) {
+        self.t = 0.0;
+        self.next = 0;
+        self.pending_p2.clear();
+        self.busy = 0.0;
+        self.live = static_b;
+        self.peak = static_b;
+    }
 }
 
 /// What a rank does next.  The discriminant order encodes the dispatch
@@ -59,38 +97,91 @@ enum Action {
     FillP2 = 1,
 }
 
+/// Flat (rank × microbatch) completion-time tables, stride
+/// `m = n_microbatches`.  `f64::INFINITY` = not yet happened.
+/// `fwd_done[r][mb]` is the end of `Fwd(mb)` on rank r; `grad_sent`
+/// is the time the input-grad for mb becomes available to rank r-1.
+struct Tables<'a> {
+    fwd_done: &'a mut [f64],
+    grad_sent: &'a mut [f64],
+    m: usize,
+}
+
+impl Tables<'_> {
+    /// Flat index for (rank, microbatch).  The debug assert is the
+    /// moral equivalent of the old `Vec<Vec<f64>>` inner bounds check:
+    /// with the flattened layout an out-of-range `mb` would otherwise
+    /// silently alias into the next rank's row.  Release builds rely
+    /// on the caller contract (validated plans only — see
+    /// [`score_plan`]).
+    #[inline]
+    fn at(&self, r: usize, mb: u32) -> usize {
+        debug_assert!(
+            (mb as usize) < self.m,
+            "microbatch {mb} out of range (m = {}); plan not validated?",
+            self.m
+        );
+        r * self.m + mb as usize
+    }
+
+    #[inline]
+    fn fd(&self, r: usize, mb: u32) -> f64 {
+        self.fwd_done[self.at(r, mb)]
+    }
+
+    #[inline]
+    fn gs(&self, r: usize, mb: u32) -> f64 {
+        self.grad_sent[self.at(r, mb)]
+    }
+
+    #[inline]
+    fn set_fd(&mut self, r: usize, mb: u32, t: f64) {
+        let i = self.at(r, mb);
+        self.fwd_done[i] = t;
+    }
+
+    #[inline]
+    fn set_gs(&mut self, r: usize, mb: u32, t: f64) {
+        let i = self.at(r, mb);
+        self.grad_sent[i] = t;
+    }
+}
+
 fn make_states(plan: &Plan, mem: Option<&MemModel>) -> Vec<RankState> {
     (0..plan.n_ranks)
         .map(|r| {
-            let static_b = mem.map(|mm| mm.static_bytes[r]).unwrap_or(0);
-            RankState {
-                t: 0.0,
-                next: 0,
-                pending_p2: VecDeque::new(),
-                spans: Vec::new(),
-                busy: 0.0,
-                live: static_b,
-                peak: static_b,
-            }
+            RankState::new(mem.map(|mm| mm.static_bytes[r]).unwrap_or(0))
         })
         .collect()
 }
 
-fn finish(n: usize, ranks: Vec<RankState>) -> SimResult {
+/// The scalar reductions both tiers report — one implementation shared
+/// by [`finish`] (Tier B) and [`score_plan`] (Tier A), so the
+/// advertised bit-identity between them is structural rather than two
+/// copies kept in sync by convention.  Returns
+/// `(makespan, total_busy, bubble_ratio)`.
+fn reduce(n: usize, ranks: &[RankState]) -> (f64, f64, f64) {
     let makespan = ranks.iter().map(|s| s.t).fold(0.0, f64::max);
-    let busy: Vec<f64> = ranks.iter().map(|s| s.busy).collect();
-    let total_busy: f64 = busy.iter().sum();
+    let total_busy: f64 = ranks.iter().map(|s| s.busy).sum();
     let bubble_ratio = if makespan > 0.0 {
         1.0 - total_busy / (n as f64 * makespan)
     } else {
         0.0
     };
+    (makespan, total_busy, bubble_ratio)
+}
+
+/// Assemble the Tier B result.  The span vectors are **moved** into the
+/// [`SimResult`] (they were recorded into this exact `Vec<Vec<Span>>`),
+/// so finishing a simulation copies nothing.
+fn finish(n: usize, ranks: &[RankState], spans: Vec<Vec<Span>>) -> SimResult {
+    let (makespan, _total_busy, bubble_ratio) = reduce(n, ranks);
     SimResult {
         makespan,
         bubble_ratio,
-        spans: ranks.iter().map(|s| s.spans.clone()).collect(),
+        spans,
         peak_bytes: ranks.iter().map(|s| s.peak).collect(),
-        busy,
+        busy: ranks.iter().map(|s| s.busy).collect(),
     }
 }
 
@@ -104,7 +195,7 @@ fn deadlock_error(plan: &Plan, ranks: &[RankState], done: usize,
     ))
 }
 
-/// The per-rank dispatch decision (shared by both engines): when can
+/// The per-rank dispatch decision (shared by all engines): when can
 /// rank `r` act next, and is that action its next plan op or a greedy
 /// p2 fill?  `None` = blocked with nothing to fill.
 fn candidate(
@@ -112,15 +203,14 @@ fn candidate(
     plan: &Plan,
     costs: &CostModel,
     ranks: &[RankState],
-    fwd_done: &[Vec<f64>],
-    grad_sent: &[Vec<f64>],
+    tb: &Tables<'_>,
 ) -> Option<(f64, Action)> {
     let st = &ranks[r];
     if st.next >= plan.ranks[r].len() {
         return None;
     }
     let op = &plan.ranks[r][st.next];
-    let ready = op_ready(op, r, plan.n_ranks, costs, fwd_done, grad_sent);
+    let ready = op_ready(op, r, plan.n_ranks, costs, tb);
     // Greedy 2BP fill rule: if the next op's input either doesn't exist
     // yet or arrives only after this rank's current time, the real
     // executor's poll fails and it starts a pending p2 instead
@@ -148,25 +238,24 @@ fn op_ready(
     r: usize,
     n: usize,
     costs: &CostModel,
-    fwd_done: &[Vec<f64>],
-    grad_sent: &[Vec<f64>],
+    tb: &Tables<'_>,
 ) -> Option<f64> {
     match op {
         Op::Fwd { mb } => {
             if r == 0 {
                 Some(0.0)
             } else {
-                let t = fwd_done[r - 1][*mb as usize];
+                let t = tb.fd(r - 1, *mb);
                 t.is_finite().then(|| t + costs.hop(r - 1, r))
             }
         }
         Op::BwdP1 { mb } => {
             if r == n - 1 {
-                let t = fwd_done[r][*mb as usize];
+                let t = tb.fd(r, *mb);
                 // loss runs on the last rank right before its first p1 use
                 t.is_finite().then(|| t + costs.loss)
             } else {
-                let t = grad_sent[r + 1][*mb as usize];
+                let t = tb.gs(r + 1, *mb);
                 t.is_finite().then(|| t + costs.hop(r, r + 1))
             }
         }
@@ -180,8 +269,14 @@ fn op_ready(
 /// memory accounting, and the completion tables.  Returns the neighbor
 /// rank (if any) whose next op may have just become ready — the wakeup
 /// edge the event-driven engine subscribes to.
+///
+/// `SPANS` selects span recording at compile time: the Tier A scoring
+/// path instantiates `SPANS = false` with an empty `spans` slice, and
+/// every span push (the only thing that would index it) folds away.
+/// `flush_buf` is a caller-owned staging buffer for `Flush` targets so
+/// the hot path never allocates.
 #[allow(clippy::too_many_arguments)]
-fn exec_op(
+fn exec_op<const SPANS: bool>(
     op: &Op,
     r: usize,
     n: usize,
@@ -190,18 +285,22 @@ fn exec_op(
     mem: Option<&MemModel>,
     start: f64,
     ranks: &mut [RankState],
-    fwd_done: &mut [Vec<f64>],
-    grad_sent: &mut [Vec<f64>],
+    tb: &mut Tables<'_>,
+    spans: &mut [Vec<Span>],
+    flush_buf: &mut Vec<u32>,
 ) -> Option<usize> {
     let mut wake = None;
     match op {
         Op::Fwd { mb } => {
             let st = &mut ranks[r];
             let end = start + costs.fwd[r];
-            st.spans.push(Span { start, end, label: SpanKind::Fwd, mb: *mb });
+            if SPANS {
+                spans[r].push(Span { start, end, label: SpanKind::Fwd,
+                                     mb: *mb });
+            }
             st.busy += end - start;
             st.t = end;
-            fwd_done[r][*mb as usize] = end;
+            tb.set_fd(r, *mb, end);
             if let Some(mm) = mem {
                 st.live += mm.res1[r] + mm.res2[r];
                 st.peak = st.peak.max(st.live);
@@ -213,7 +312,10 @@ fn exec_op(
         Op::BwdP1 { mb } => {
             let end = start + costs.p1[r];
             let st = &mut ranks[r];
-            st.spans.push(Span { start, end, label: SpanKind::BwdP1, mb: *mb });
+            if SPANS {
+                spans[r].push(Span { start, end, label: SpanKind::BwdP1,
+                                     mb: *mb });
+            }
             st.busy += end - start;
             st.t = end;
             st.pending_p2.push_back(*mb);
@@ -224,20 +326,22 @@ fn exec_op(
             // 2BP: grad leaves right after p1.  Fused (non-2BP): the
             // following BwdP2 op updates grad_sent instead.
             if plan.two_bp && r > 0 {
-                grad_sent[r][*mb as usize] = end;
+                tb.set_gs(r, *mb, end);
                 wake = Some(r - 1);
             }
             if !plan.two_bp {
                 // fused pair: mark sent tentatively; BwdP2 will overwrite
-                grad_sent[r][*mb as usize] = f64::INFINITY;
+                tb.set_gs(r, *mb, f64::INFINITY);
             }
         }
         Op::BwdP2 { mbs, concat } => {
-            run_p2(&mut ranks[r], r, mbs, *concat, start, costs, mem);
+            run_p2::<SPANS>(&mut ranks[r], spans, r, mbs, *concat, start,
+                            costs, mem);
             if !plan.two_bp {
                 // fused semantics: the grad for this mb is released only now
+                let t_end = ranks[r].t;
                 for mb in mbs {
-                    grad_sent[r][*mb as usize] = ranks[r].t;
+                    tb.set_gs(r, *mb, t_end);
                 }
                 if r > 0 {
                     wake = Some(r - 1);
@@ -248,22 +352,27 @@ fn exec_op(
         }
         Op::Flush { upto, concat } => {
             let st = &mut ranks[r];
-            let mut mbs: Vec<u32> = st
-                .pending_p2
-                .iter()
-                .copied()
-                .filter(|mb| upto.map(|u| *mb <= u).unwrap_or(true))
-                .collect();
-            mbs.sort_unstable();
-            st.pending_p2.retain(|mb| !mbs.contains(mb));
-            if !mbs.is_empty() {
-                run_p2(st, r, &mbs, *concat, start, costs, mem);
+            flush_buf.clear();
+            flush_buf.extend(
+                st.pending_p2
+                    .iter()
+                    .copied()
+                    .filter(|mb| upto.map(|u| *mb <= u).unwrap_or(true)),
+            );
+            flush_buf.sort_unstable();
+            st.pending_p2.retain(|mb| !flush_buf.contains(mb));
+            if !flush_buf.is_empty() {
+                run_p2::<SPANS>(st, spans, r, flush_buf, *concat, start,
+                                costs, mem);
             }
         }
         Op::OptStep => {
             let st = &mut ranks[r];
             let end = start + costs.opt[r];
-            st.spans.push(Span { start, end, label: SpanKind::Opt, mb: 0 });
+            if SPANS {
+                spans[r].push(Span { start, end, label: SpanKind::Opt,
+                                     mb: 0 });
+            }
             st.busy += end - start;
             st.t = end;
         }
@@ -271,8 +380,9 @@ fn exec_op(
     wake
 }
 
-fn run_p2(
+fn run_p2<const SPANS: bool>(
     st: &mut RankState,
+    spans: &mut [Vec<Span>],
     r: usize,
     mbs: &[u32],
     concat: bool,
@@ -287,12 +397,14 @@ fn run_p2(
         k * costs.p2[r]
     };
     let end = start + dur;
-    st.spans.push(Span {
-        start,
-        end,
-        label: SpanKind::BwdP2,
-        mb: mbs[0],
-    });
+    if SPANS {
+        spans[r].push(Span {
+            start,
+            end,
+            label: SpanKind::BwdP2,
+            mb: mbs[0],
+        });
+    }
     st.busy += dur;
     st.t = end;
     if let Some(mm) = mem {
@@ -343,47 +455,36 @@ impl Ord for Event {
     }
 }
 
-/// Simulate one training step of `plan` under `costs` (+ optional memory
-/// model) with the event-driven kernel.
-///
-/// Fused (non-2BP) backward pairs are handled by the send rule: the
-/// upstream rank's p1 readiness waits for the *pair* end on this rank,
-/// because in plan order BwdP2 immediately follows BwdP1 and the
-/// grad-send timestamp is taken after the following BwdP2 when the plan
-/// is non-2BP.
-pub fn simulate(
+/// The event-driven dispatch loop shared by [`simulate`] (Tier B,
+/// `SPANS = true`) and [`score_plan`] (Tier A, `SPANS = false`).  All
+/// storage is caller-owned; the loop itself allocates nothing beyond
+/// heap growth (bounded by ~2 events per rank, retained across calls
+/// by the scoring scratch).
+#[allow(clippy::too_many_arguments)]
+fn drive_events<const SPANS: bool>(
     plan: &Plan,
     costs: &CostModel,
     mem: Option<&MemModel>,
-) -> Result<SimResult, SimError> {
+    ranks: &mut [RankState],
+    tb: &mut Tables<'_>,
+    heap: &mut BinaryHeap<Reverse<Event>>,
+    gen: &mut [u32],
+    spans: &mut [Vec<Span>],
+    flush_buf: &mut Vec<u32>,
+) -> Result<(), SimError> {
     let n = plan.n_ranks;
-    assert_eq!(costs.fwd.len(), n, "cost model rank count mismatch");
-
-    // completion times (f64::INFINITY = not yet happened)
-    let inf = f64::INFINITY;
-    let m = plan.n_microbatches;
-    let mut fwd_done = vec![vec![inf; m]; n];
-    // time the input-grad for mb becomes available to rank r-1
-    let mut grad_sent = vec![vec![inf; m]; n];
-    let mut ranks = make_states(plan, mem);
-
     let total_ops = plan.total_ops();
     let mut done_ops = 0usize;
 
-    let mut gen: Vec<u32> = vec![0; n];
-    let mut heap: BinaryHeap<Reverse<Event>> =
-        BinaryHeap::with_capacity(2 * n + 4);
-
     let push = |heap: &mut BinaryHeap<Reverse<Event>>,
                 ranks: &[RankState],
-                fwd_done: &[Vec<f64>],
-                grad_sent: &[Vec<f64>],
+                tb: &Tables<'_>,
                 r: usize,
-                gen: u32|
+                gen_r: u32|
      -> bool {
-        if let Some((start, act)) = candidate(r, plan, costs, ranks,
-                                              fwd_done, grad_sent) {
-            heap.push(Reverse(Event { start, act, rank: r as u32, gen }));
+        if let Some((start, act)) = candidate(r, plan, costs, ranks, tb) {
+            heap.push(Reverse(Event { start, act, rank: r as u32,
+                                      gen: gen_r }));
             true
         } else {
             false
@@ -391,7 +492,7 @@ pub fn simulate(
     };
 
     for r in 0..n {
-        push(&mut heap, &ranks, &fwd_done, &grad_sent, r, gen[r]);
+        push(heap, ranks, tb, r, gen[r]);
     }
 
     while done_ops < total_ops {
@@ -415,8 +516,7 @@ pub fn simulate(
                 let mut found = false;
                 for r in 0..n {
                     gen[r] = gen[r].wrapping_add(1);
-                    if push(&mut heap, &ranks, &fwd_done, &grad_sent, r,
-                            gen[r]) {
+                    if push(heap, ranks, tb, r, gen[r]) {
                         found = true;
                     }
                 }
@@ -427,7 +527,7 @@ pub fn simulate(
                 if found {
                     continue;
                 }
-                return Err(deadlock_error(plan, &ranks, done_ops, total_ops));
+                return Err(deadlock_error(plan, ranks, done_ops, total_ops));
             }
         };
 
@@ -438,16 +538,17 @@ pub fn simulate(
                     .pending_p2
                     .pop_front()
                     .expect("fill event with empty pending queue");
-                run_p2(&mut ranks[r], r, &[mb], false, ev.start, costs, mem);
+                run_p2::<SPANS>(&mut ranks[r], spans, r, &[mb], false,
+                                ev.start, costs, mem);
                 None
             }
             Action::Real => {
                 // `op` borrows `plan`, not the mutable sim state, so no
                 // per-dispatch clone on the sweep hot path
                 let op = &plan.ranks[r][ranks[r].next];
-                let wake = exec_op(
+                let wake = exec_op::<SPANS>(
                     op, r, n, plan, costs, mem, ev.start,
-                    &mut ranks, &mut fwd_done, &mut grad_sent,
+                    ranks, tb, spans, flush_buf,
                 );
                 ranks[r].next += 1;
                 done_ops += 1;
@@ -459,14 +560,159 @@ pub fn simulate(
         // neighbor re-evaluates because a dependency it may be blocked
         // on (fwd activation from r-1, input-grad from r+1) just landed
         gen[r] = gen[r].wrapping_add(1);
-        push(&mut heap, &ranks, &fwd_done, &grad_sent, r, gen[r]);
+        push(heap, ranks, tb, r, gen[r]);
         if let Some(w) = wake {
             gen[w] = gen[w].wrapping_add(1);
-            push(&mut heap, &ranks, &fwd_done, &grad_sent, w, gen[w]);
+            push(heap, ranks, tb, w, gen[w]);
         }
     }
 
-    Ok(finish(n, ranks))
+    Ok(())
+}
+
+/// Simulate one training step of `plan` under `costs` (+ optional memory
+/// model) with the event-driven kernel, recording per-op spans — the
+/// **Tier B** (rendering) entry point of the two-tier contract in
+/// [`crate::sim`].
+///
+/// Fused (non-2BP) backward pairs are handled by the send rule: the
+/// upstream rank's p1 readiness waits for the *pair* end on this rank,
+/// because in plan order BwdP2 immediately follows BwdP1 and the
+/// grad-send timestamp is taken after the following BwdP2 when the plan
+/// is non-2BP.
+pub fn simulate(
+    plan: &Plan,
+    costs: &CostModel,
+    mem: Option<&MemModel>,
+) -> Result<SimResult, SimError> {
+    let n = plan.n_ranks;
+    assert_eq!(costs.fwd.len(), n, "cost model rank count mismatch");
+
+    let inf = f64::INFINITY;
+    let m = plan.n_microbatches;
+    let mut fwd_done = vec![inf; n * m];
+    let mut grad_sent = vec![inf; n * m];
+    let mut tb = Tables { fwd_done: &mut fwd_done, grad_sent: &mut grad_sent,
+                          m };
+    let mut ranks = make_states(plan, mem);
+    let mut spans: Vec<Vec<Span>> = vec![Vec::new(); n];
+    let mut heap: BinaryHeap<Reverse<Event>> =
+        BinaryHeap::with_capacity(2 * n + 4);
+    let mut gen: Vec<u32> = vec![0; n];
+    let mut flush_buf: Vec<u32> = Vec::new();
+
+    drive_events::<true>(plan, costs, mem, &mut ranks, &mut tb, &mut heap,
+                         &mut gen, &mut spans, &mut flush_buf)?;
+
+    Ok(finish(n, &ranks, spans))
+}
+
+// ---------------------------------------------------------------------------
+// Tier A: the zero-allocation scoring fast path
+// ---------------------------------------------------------------------------
+
+/// Caller-owned workspace for [`score_plan`]: rank states (with their
+/// pending-p2 queues), the flattened completion-time tables, the event
+/// heap, the staleness stamps, and the flush staging buffer.  All
+/// buffers grow monotonically to the largest (ranks × microbatches)
+/// shape ever scored and are reused verbatim afterwards, so a scratch
+/// that has warmed up performs **zero heap allocations per evaluation**.
+///
+/// A scratch is plain mutable state — use one per worker thread (see
+/// `experiments::sweep::run_grid_with`), never share one concurrently.
+/// Results never depend on what was scored before: every call fully
+/// re-initializes the slices it reads (enforced by the differential
+/// proptest below, which reuses a single scratch across all cases).
+#[derive(Default)]
+pub struct Scratch {
+    ranks: Vec<RankState>,
+    fwd_done: Vec<f64>,
+    grad_sent: Vec<f64>,
+    heap: BinaryHeap<Reverse<Event>>,
+    gen: Vec<u32>,
+    flush_buf: Vec<u32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Re-initialize for `plan`: grow (never shrink) every buffer to the
+    /// plan's shape and reset the portions the engine will read.
+    fn reset(&mut self, plan: &Plan, mem: Option<&MemModel>) {
+        let n = plan.n_ranks;
+        let nm = n * plan.n_microbatches;
+        if self.ranks.len() < n {
+            self.ranks.resize_with(n, || RankState::new(0));
+        }
+        for (r, st) in self.ranks[..n].iter_mut().enumerate() {
+            st.reset(mem.map(|mm| mm.static_bytes[r]).unwrap_or(0));
+        }
+        // clear-then-resize refills every slot with INFINITY without
+        // reallocating once capacity has grown to the largest plan seen
+        self.fwd_done.clear();
+        self.fwd_done.resize(nm, f64::INFINITY);
+        self.grad_sent.clear();
+        self.grad_sent.resize(nm, f64::INFINITY);
+        self.heap.clear();
+        if self.gen.len() < n {
+            self.gen.resize(n, 0);
+        }
+        for g in &mut self.gen[..n] {
+            *g = 0;
+        }
+        self.flush_buf.clear();
+    }
+}
+
+/// **Tier A** (scoring): evaluate `plan` through the event-driven
+/// kernel without recording spans and without allocating — every
+/// buffer lives in the caller's [`Scratch`] and is reused across
+/// evaluations.  Returns only what a search ranks on; render the
+/// winner with [`simulate`] when its timeline is actually needed.
+///
+/// Bit-identical to [`simulate`] on makespan, summed busy time, bubble
+/// ratio, and peak bytes (a differential proptest in this file holds
+/// the equality over fuzzed plans, cost/memory models, and a scratch
+/// reused across every case).
+///
+/// The plan must be structurally valid (`schedule::validate`, or the
+/// planner's incremental move revalidation): `score_plan` performs no
+/// validation of its own — that is exactly the per-candidate cost the
+/// two-tier split removes.  Feeding an *unvalidated* plan is a
+/// contract violation: an out-of-range microbatch index is caught by
+/// a debug assertion, but in release builds it can silently read or
+/// write another rank's row of the flattened completion tables and
+/// return wrong numbers.  A valid-but-deadlocked plan returns `Err`
+/// like [`simulate`].
+pub fn score_plan(
+    plan: &Plan,
+    costs: &CostModel,
+    mem: Option<&MemModel>,
+    budget: Option<u64>,
+    scratch: &mut Scratch,
+) -> Result<Score, SimError> {
+    let n = plan.n_ranks;
+    assert_eq!(costs.fwd.len(), n, "cost model rank count mismatch");
+    let m = plan.n_microbatches;
+
+    scratch.reset(plan, mem);
+    let Scratch { ranks, fwd_done, grad_sent, heap, gen, flush_buf } = scratch;
+    let mut tb = Tables {
+        fwd_done: &mut fwd_done[..n * m],
+        grad_sent: &mut grad_sent[..n * m],
+        m,
+    };
+    drive_events::<false>(plan, costs, mem, &mut ranks[..n], &mut tb, heap,
+                          &mut gen[..n], &mut [], flush_buf)?;
+
+    // the same `reduce` call `finish` makes — bit-identical by sharing
+    let ranks = &ranks[..n];
+    let (makespan, total_busy, bubble_ratio) = reduce(n, ranks);
+    let max_peak = ranks.iter().map(|s| s.peak).max().unwrap_or(0);
+    let fits = budget.map(|b| max_peak <= b).unwrap_or(true);
+    Ok(Score { makespan, total_busy, bubble_ratio, max_peak, fits })
 }
 
 // ---------------------------------------------------------------------------
@@ -494,9 +740,13 @@ pub mod reference {
 
         let inf = f64::INFINITY;
         let m = plan.n_microbatches;
-        let mut fwd_done = vec![vec![inf; m]; n];
-        let mut grad_sent = vec![vec![inf; m]; n];
+        let mut fwd_done = vec![inf; n * m];
+        let mut grad_sent = vec![inf; n * m];
+        let mut tb = Tables { fwd_done: &mut fwd_done,
+                              grad_sent: &mut grad_sent, m };
         let mut ranks = make_states(plan, mem);
+        let mut spans: Vec<Vec<Span>> = vec![Vec::new(); n];
+        let mut flush_buf: Vec<u32> = Vec::new();
 
         let total_ops = plan.total_ops();
         let mut done_ops = 0usize;
@@ -505,8 +755,7 @@ pub mod reference {
             // collect candidate actions
             let mut best: Option<(f64, usize, Action)> = None;
             for r in 0..n {
-                let cand =
-                    candidate(r, plan, costs, &ranks, &fwd_done, &grad_sent);
+                let cand = candidate(r, plan, costs, &ranks, &tb);
                 if let Some((start, act)) = cand {
                     let better = match &best {
                         None => true,
@@ -533,13 +782,14 @@ pub mod reference {
                         .pending_p2
                         .pop_front()
                         .expect("fill with empty pending queue");
-                    run_p2(&mut ranks[r], r, &[mb], false, start, costs, mem);
+                    run_p2::<true>(&mut ranks[r], &mut spans, r, &[mb], false,
+                                   start, costs, mem);
                 }
                 Action::Real => {
                     let op = plan.ranks[r][ranks[r].next].clone();
-                    let _ = exec_op(
+                    let _ = exec_op::<true>(
                         &op, r, n, plan, costs, mem, start,
-                        &mut ranks, &mut fwd_done, &mut grad_sent,
+                        &mut ranks, &mut tb, &mut spans, &mut flush_buf,
                     );
                     ranks[r].next += 1;
                     done_ops += 1;
@@ -547,7 +797,7 @@ pub mod reference {
             }
         }
 
-        Ok(finish(n, ranks))
+        Ok(finish(n, &ranks, spans))
     }
 }
 
@@ -906,6 +1156,148 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// The Tier A/B contract: `score_plan` (span-free, scratch-reusing)
+    /// agrees with `simulate` bit-for-bit on makespan, total busy time,
+    /// bubble ratio, and max peak bytes — across fuzzed generator plans
+    /// *and* chains of validated planner mutations (which can deadlock:
+    /// then both paths must reject).  One scratch is reused across every
+    /// case, so the reuse/reset logic is itself under test.
+    #[test]
+    fn prop_score_plan_matches_simulate() {
+        use crate::util::proptest::{check, gen};
+        let mut scratch = Scratch::new();
+        check(
+            "score_plan() == simulate() on (makespan, busy, bubble, peak)",
+            400,
+            |rng| {
+                let kind = *gen::pick(rng, &ScheduleKind::all_variants());
+                let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
+                    true
+                } else {
+                    gen::bool(rng)
+                };
+                let n = gen::usize_in(rng, 1, 8);
+                let m = gen::usize_in(rng, 1, 16);
+                let n_moves = gen::usize_in(rng, 0, 6);
+                let move_seed = rng.next_u64();
+                let costs = (
+                    0.25 + rng.next_f64(),
+                    0.25 + rng.next_f64(),
+                    0.25 + rng.next_f64(),
+                    rng.next_f64() * 0.2,
+                    rng.next_f64() * 0.3,
+                    if gen::bool(rng) { rng.next_f64() * 0.4 } else { 0.0 },
+                    0.8 + rng.next_f64() * 0.4,
+                );
+                let with_mem = gen::bool(rng);
+                let with_budget = gen::bool(rng);
+                let mem_seed = rng.next_u64();
+                (kind, two_bp, n, m, n_moves, move_seed, costs, with_mem,
+                 with_budget, mem_seed)
+            },
+            |&(kind, two_bp, n, m, n_moves, move_seed, costs, with_mem,
+               with_budget, mem_seed)| {
+                let (f, p1, p2, opt, loss, comm, cf) = costs;
+                let mut plan = generate(kind, two_bp, n, m, false);
+                // walk a few validated local moves so the corpus covers
+                // planner-shaped plans, including live-locked ones
+                let mut mrng =
+                    crate::util::prng::SplitMix64::new(move_seed);
+                for _ in 0..n_moves {
+                    if let Some((next, _)) =
+                        crate::planner::moves::mutate(&plan, &mut mrng)
+                    {
+                        plan = next;
+                    }
+                }
+                validate(&plan).map_err(|e| e.to_string())?;
+                let mut cm = CostModel::ratios(n, f, p1, p2);
+                cm.opt = vec![opt; n];
+                cm.loss = loss;
+                cm.comm = comm;
+                cm.concat_factor = cf;
+                let mm = MemModel {
+                    static_bytes: vec![mem_seed % 100; n],
+                    res1: vec![(mem_seed >> 8) % 50; n],
+                    res2: vec![(mem_seed >> 16) % 50; n],
+                    inter: vec![(mem_seed >> 24) % 50; n],
+                };
+                let mem = with_mem.then_some(&mm);
+                let budget =
+                    with_budget.then_some((mem_seed >> 32) % 2000);
+                let full = simulate(&plan, &cm, mem);
+                let fast = score_plan(&plan, &cm, mem, budget, &mut scratch);
+                match (full, fast) {
+                    (Err(_), Err(_)) => Ok(()),
+                    (Err(e), Ok(_)) => {
+                        Err(format!("simulate rejected ({e}), score didn't"))
+                    }
+                    (Ok(_), Err(e)) => {
+                        Err(format!("score rejected ({e}), simulate didn't"))
+                    }
+                    (Ok(a), Ok(s)) => {
+                        let bits = |x: f64| x.to_bits();
+                        if bits(a.makespan) != bits(s.makespan) {
+                            return Err(format!(
+                                "makespan {} != {}", a.makespan, s.makespan
+                            ));
+                        }
+                        let total: f64 = a.busy.iter().sum();
+                        if bits(total) != bits(s.total_busy) {
+                            return Err(format!(
+                                "busy {} != {}", total, s.total_busy
+                            ));
+                        }
+                        if bits(a.bubble_ratio) != bits(s.bubble_ratio) {
+                            return Err(format!(
+                                "bubble {} != {}",
+                                a.bubble_ratio, s.bubble_ratio
+                            ));
+                        }
+                        if a.max_peak() != s.max_peak {
+                            return Err(format!(
+                                "peak {} != {}", a.max_peak(), s.max_peak
+                            ));
+                        }
+                        let want_fits =
+                            budget.map(|b| s.max_peak <= b).unwrap_or(true);
+                        if s.fits != want_fits {
+                            return Err(format!(
+                                "fits {} != {}", s.fits, want_fits
+                            ));
+                        }
+                        Ok(())
+                    }
+                }
+            },
+        );
+    }
+
+    /// Scratch reuse is shape-robust: scoring a large plan then a small
+    /// one (and back) out of the same scratch never leaks state — a
+    /// deterministic sequence hitting the grow/shrink boundary cases
+    /// the fuzzer may miss.
+    #[test]
+    fn scratch_survives_shape_changes() {
+        let mut scratch = Scratch::new();
+        let cases = [
+            (ScheduleKind::OneF1B2, 8usize, 32usize),
+            (ScheduleKind::Naive, 1, 1),
+            (ScheduleKind::GPipe, 4, 8),
+            (ScheduleKind::OneF1B2, 8, 32),
+            (ScheduleKind::OneF1B1, 2, 2),
+        ];
+        for &(kind, n, m) in &cases {
+            let plan = generate(kind, true, n, m, false);
+            let cm = CostModel::ratios(n, 1.0, 1.2, 0.8);
+            let a = simulate(&plan, &cm, None).unwrap();
+            let s = score_plan(&plan, &cm, None, None, &mut scratch).unwrap();
+            assert_eq!(a.makespan.to_bits(), s.makespan.to_bits(),
+                       "{} n={n} m={m}", kind.name());
+            assert_eq!(a.bubble_ratio.to_bits(), s.bubble_ratio.to_bits());
+        }
     }
 
     /// The reference engine also reproduces the Table 1 closed forms

@@ -59,11 +59,42 @@
 //! recording, byte accounting) is one shared code path between the two
 //! engines, so the oracle comparison isolates exactly the scheduling
 //! logic.
+//!
+//! # The two-tier evaluation contract
+//!
+//! Search workloads (the planner's beam, schedule-space sweeps) evaluate
+//! thousands of plans and read only a handful of scalars per plan;
+//! rendering workloads (gantt, winner reports, the span-shape tests)
+//! evaluate one plan and read its full timeline.  The simulator exposes
+//! one entry point per tier:
+//!
+//! * **Tier A — scoring:** [`score_plan`] runs the event-driven kernel
+//!   with span recording compiled out and every buffer (rank states,
+//!   completion tables, event heap, pending-p2 queues) borrowed from a
+//!   caller-owned [`Scratch`], so a warmed-up scratch evaluates a
+//!   candidate with **zero heap allocations**.  It returns a [`Score`]
+//!   — makespan, total busy, bubble ratio, max peak bytes, and a
+//!   budget-fit flag — and nothing else.  `score_plan` does **not**
+//!   validate: callers pass plans that are already known valid (the
+//!   planner validates seeds once and incrementally revalidates local
+//!   moves; `twobp sweep --plans` validates each file after parsing).
+//! * **Tier B — rendering:** [`simulate`] records per-op [`Span`]s and
+//!   returns the full [`SimResult`]; [`eval_plan`] wraps it with a full
+//!   `schedule::validate` pass and the budget check — the one-stop path
+//!   for winners, `gantt --plan`, and anything user-facing.
+//!
+//! The contract between the tiers: on any valid plan, `score_plan` is
+//! **bit-identical** to `simulate` on makespan, summed busy time,
+//! bubble ratio, and per-step max peak bytes, and the two agree on
+//! rejection (deadlock) — enforced by a differential proptest in
+//! `engine.rs` that reuses one scratch across every fuzzed case.
+//! Spans exist only on Tier B: a `Score` carries none, by design —
+//! render the winner with `simulate` when its timeline is needed.
 
 pub mod engine;
 
 pub use engine::reference::simulate_naive;
-pub use engine::{simulate, SimError};
+pub use engine::{score_plan, simulate, Scratch, SimError};
 
 use crate::util::gantt::Span;
 
@@ -163,6 +194,32 @@ impl SimResult {
     }
 }
 
+/// Tier A scoring result — everything a search ranks on, nothing it
+/// doesn't (no spans, no per-rank vectors; see the two-tier evaluation
+/// contract in the module docs).  Bit-identical to the corresponding
+/// [`SimResult`] reductions, enforced by a differential proptest.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Score {
+    pub makespan: f64,
+    /// Sum of per-rank busy time (identical to summing
+    /// [`SimResult::busy`] in rank order).
+    pub total_busy: f64,
+    /// idle / (N * makespan) — the paper's bubble ratio.
+    pub bubble_ratio: f64,
+    /// Max over ranks of peak live bytes (0 without a [`MemModel`]).
+    pub max_peak: u64,
+    /// `max_peak <= budget` (vacuously true without a budget).
+    pub fits: bool,
+}
+
+impl Score {
+    /// Samples/second given samples per microbatch and total microbatches
+    /// (same formula as [`SimResult::throughput`]).
+    pub fn throughput(&self, samples_per_mb: usize, n_mb: usize) -> f64 {
+        (samples_per_mb * n_mb) as f64 / self.makespan
+    }
+}
+
 /// Evaluation of one concrete plan against a cost/memory model and an
 /// optional per-rank byte budget — the planner's unit of work, also
 /// behind `twobp gantt --plan`.
@@ -176,8 +233,12 @@ pub struct PlanEval {
     pub fits: bool,
 }
 
-/// One-stop "how good is this plan" entry point: statically validate,
-/// simulate, and score the peak against an optional per-rank budget.
+/// One-stop "how good is this plan" entry point (Tier B): statically
+/// validate, simulate with spans, and score the peak against an
+/// optional per-rank budget.  For bulk candidate evaluation use
+/// [`score_plan`] instead — it skips validation and span recording and
+/// reuses a caller-owned [`Scratch`] (the two-tier contract in the
+/// module docs).
 ///
 /// Validation failures and simulator deadlocks (possible for custom /
 /// mutated plans whose cross-rank interleave is inconsistent even

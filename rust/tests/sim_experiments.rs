@@ -179,6 +179,52 @@ fn memory_planner_style_prediction_consistency() {
 }
 
 #[test]
+fn plan_space_sweeps_a_directory_of_plan_files() {
+    use twobp::schedule::plan_io;
+
+    let dir = std::env::temp_dir().join(format!(
+        "twobp_plan_space_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // two generator plans of *different* rank counts plus a non-plan
+    // file that must be ignored
+    let a = generate(ScheduleKind::OneF1B1, true, 2, 4, false);
+    let b = generate(ScheduleKind::GPipe, false, 3, 3, false);
+    std::fs::write(dir.join("a.plan"), plan_io::to_text(&a)).unwrap();
+    std::fs::write(dir.join("b.plan"), plan_io::to_text(&b)).unwrap();
+    std::fs::write(dir.join("notes.txt"), "not a plan").unwrap();
+
+    let out = experiments::plan_space(&dir, (1.0, 1.0, 1.0), 0.0, 2).unwrap();
+    assert!(out.contains("a.plan") && out.contains("b.plan"), "{out}");
+    assert!(!out.contains("notes.txt"), "{out}");
+    assert!(out.contains("2 plans"), "{out}");
+
+    // the reported makespan must match a direct Tier B simulation
+    let direct = simulate(&a, &CostModel::unit(2), None).unwrap();
+    assert!(out.contains(&format!("{:.4}", direct.makespan)), "{out}");
+
+    // invalid plan file fails loudly, naming the file
+    std::fs::write(dir.join("bad.plan"), "plan v1\nkind naive\n").unwrap();
+    let err = experiments::plan_space(&dir, (1.0, 1.0, 1.0), 0.0, 1)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("bad.plan"), "{err}");
+
+    // empty dir errors with guidance
+    let empty = dir.join("empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    let err = experiments::plan_space(&empty, (1.0, 1.0, 1.0), 0.0, 1)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no .plan files"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn planner_search_report_covers_the_budget_ladder() {
     let out = experiments::planner_search(2, 0, 0x2B9);
     assert!(out.contains("Planner search"), "missing title:\n{out}");
