@@ -37,6 +37,10 @@ pub struct RunConfig {
     pub data_cycle: usize,
     /// Print per-step losses/timings.
     pub verbose: bool,
+    /// Generate a synthetic stub-backend manifest in-process instead of
+    /// loading AOT artifacts (`twobp train --synthetic`; see
+    /// `models::synthetic`).
+    pub synthetic: bool,
 }
 
 impl Default for RunConfig {
@@ -53,6 +57,7 @@ impl Default for RunConfig {
             seed: 0,
             data_cycle: 0,
             verbose: false,
+            synthetic: false,
         }
     }
 }
@@ -70,6 +75,7 @@ impl RunConfig {
             data_cycle: args.get_usize("data-cycle", 0),
             two_bp: !args.has("no-2bp"),
             verbose: args.has("verbose"),
+            synthetic: args.has("synthetic"),
             ..RunConfig::default()
         };
         if let Some(kind) = args
@@ -127,8 +133,8 @@ mod tests {
     fn from_args_full() {
         let args = Args::parse(
             &sv(&["--preset", "bert-s", "--schedule", "1f1b-2",
-                  "--steps", "7", "--no-2bp", "--concat-p2"]),
-            &["no-2bp", "concat-p2", "verbose"],
+                  "--steps", "7", "--no-2bp", "--concat-p2", "--synthetic"]),
+            &["no-2bp", "concat-p2", "verbose", "synthetic"],
         );
         let cfg = RunConfig::from_args(&args).unwrap();
         assert_eq!(cfg.preset, "bert-s");
@@ -136,6 +142,7 @@ mod tests {
         assert_eq!(cfg.steps, 7);
         assert!(!cfg.two_bp);
         assert_eq!(cfg.p2_mode, P2Mode::Concat);
+        assert!(cfg.synthetic);
     }
 
     #[test]

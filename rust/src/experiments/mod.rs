@@ -6,9 +6,11 @@
 //!
 //! Pure-simulator experiments (`table1`, `fig1`, `schedule_space`, the
 //! checkpoint ablation) always build; the measured ones (`fig3`–`fig5`,
-//! `table3`, `fig6_fig7`) need the real PJRT runtime and sit behind the
-//! `pjrt` feature.  Grid-shaped experiments fan their independent sim
-//! cells out over [`sweep::run_grid`].
+//! `table3`, `fig6_fig7`) and the stub-backend end-to-end smoke
+//! (`synthetic`) need the runtime and sit behind the `pjrt` feature
+//! (which now builds offline against the vendored stub in
+//! `vendor/xla-stub`).  Grid-shaped experiments fan their independent
+//! sim cells out over [`sweep::run_grid`].
 
 pub mod sweep;
 
@@ -17,6 +19,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 #[cfg(feature = "pjrt")]
 use crate::config::{P2Mode, RunConfig, BENCH_PRESETS};
 #[cfg(feature = "pjrt")]
@@ -460,6 +464,78 @@ pub fn planner_search(n_ranks: usize, threads: usize, seed: u64) -> String {
     out
 }
 
+/// End-to-end smoke of the vendored stub backend (`twobp bench
+/// synthetic`): generate a synthetic manifest in-process
+/// (`models::synthetic`), drive the real executor through
+/// (GPipe, 1F1B-1) × (±2BP) against one persistent cluster, verify
+/// every run's executed op order and byte-exact memory accounting
+/// against the simulator, and tabulate throughput + peak memory.
+#[cfg(feature = "pjrt")]
+pub fn synthetic_smoke(steps: usize) -> Result<String> {
+    use crate::models::synthetic::{with_temp_artifacts, SyntheticSpec};
+    use crate::pipeline::verify_report_against_sim;
+
+    let spec = SyntheticSpec::tiny();
+    let (rows, mem_rows) = with_temp_artifacts(
+        "synth-smoke",
+        &spec,
+        |root, manifest| {
+            let base = RunConfig {
+                preset: spec.preset.clone(),
+                artifacts: root.to_path_buf(),
+                steps: steps.max(2),
+                ..RunConfig::default()
+            };
+            let cluster = crate::pipeline::Cluster::new(&base)?;
+            let mut rows = Vec::new();
+            let mut mem_rows = Vec::new();
+            for kind in [ScheduleKind::GPipe, ScheduleKind::OneF1B1] {
+                let cell = |two_bp: bool| -> Result<(f64, u64)> {
+                    let cfg =
+                        RunConfig { schedule: kind, two_bp, ..base.clone() };
+                    let report = cluster.run(&cfg)?;
+                    verify_report_against_sim(&report, manifest, cfg.steps)
+                        .with_context(|| {
+                            format!("verifying {}", report.plan.describe())
+                        })?;
+                    Ok((report.simulated_throughput()?, report.max_peak()))
+                };
+                let (t0, m0) = cell(false)?;
+                let (t1, m1) = cell(true)?;
+                rows.push(ThroughputRow {
+                    model: spec.preset.clone(),
+                    schedule: kind.name().into(),
+                    without_2bp: t0,
+                    with_2bp: t1,
+                });
+                mem_rows.push(MemoryRow {
+                    model: spec.preset.clone(),
+                    schedule: kind.name().into(),
+                    without_2bp: m0,
+                    with_2bp: m1,
+                });
+            }
+            Ok((rows, mem_rows))
+        },
+    )?;
+    let mut out = throughput_table(
+        &rows,
+        "Synthetic stub smoke: throughput (stub op costs replayed through \
+         the simulator; every run verified op-by-op against the sim)",
+    )
+    .render();
+    out.push('\n');
+    out.push_str(
+        &memory_table(
+            &mem_rows,
+            "Synthetic stub smoke: max per-rank peak memory (byte-exact \
+             accountant, replay-verified against Manifest::mem_model)",
+        )
+        .render(),
+    );
+    Ok(out)
+}
+
 /// Per-preset measured run for one (schedule, 2bp) cell against a
 /// persistent cluster: trains for `steps` real steps and returns
 /// (throughput samples/s via calibrated replay, max per-rank peak bytes).
@@ -780,6 +856,8 @@ pub fn run_experiment(name: &str, steps: usize) -> Result<String> {
         "planner" | "planner-search" => Ok(planner_search(4, 0, 0x2B9)),
         "ckpt" | "ablation" => ablation_checkpoint("bert-s", 4),
         #[cfg(feature = "pjrt")]
+        "synthetic" | "stub" => synthetic_smoke(steps),
+        #[cfg(feature = "pjrt")]
         "fig3" | "fig4" => fig3(steps, &BENCH_PRESETS.to_vec()),
         #[cfg(feature = "pjrt")]
         "fig5" => fig5(steps, "bert-s"),
@@ -788,15 +866,18 @@ pub fn run_experiment(name: &str, steps: usize) -> Result<String> {
         #[cfg(feature = "pjrt")]
         "fig6" | "fig7" | "scaling" => fig6_fig7(steps, "bert-scale-fixed"),
         #[cfg(not(feature = "pjrt"))]
-        "fig3" | "fig4" | "fig5" | "table3" | "fig6" | "fig7" | "scaling" => {
+        "synthetic" | "stub" | "fig3" | "fig4" | "fig5" | "table3" | "fig6"
+        | "fig7" | "scaling" => {
             let _ = steps;
             Err(anyhow!(
                 "experiment '{name}' needs the real runtime; rebuild with \
-                 `--features pjrt` (vendored xla crate required)"
+                 `--features pjrt` (built offline against the vendored \
+                 stub backend in vendor/xla-stub)"
             ))
         }
         other => Err(anyhow!("unknown experiment '{other}' \
-            (table1|fig1|fig3|fig4|fig5|table3|fig6|fig7|ckpt|sweep|planner)")),
+            (table1|fig1|synthetic|fig3|fig4|fig5|table3|fig6|fig7|ckpt|\
+             sweep|planner)")),
     }
 }
 

@@ -17,9 +17,17 @@
 //! the PJRT CPU client (`runtime`).
 //!
 //! The real-runtime path (`runtime`, `pipeline`, and the measured
-//! experiments) sits behind the `pjrt` cargo feature so the simulator /
-//! schedule / sweep core builds, tests, and benches with no artifacts
-//! and no vendored `xla` crate present.
+//! experiments) sits behind the `pjrt` cargo feature, which builds
+//! offline against the vendored deterministic stub backend in
+//! `vendor/xla-stub`: executables parse stub-HLO signature files and
+//! produce reproducible seeded outputs of the right shape/dtype, so the
+//! whole executor builds, tests, and smokes end to end (`twobp train
+//! --synthetic`, generating a manifest in-process via
+//! `models::synthetic`) with no Python artifacts and no network.  To
+//! run on real hardware, vendor the actual `xla` PJRT crate in the
+//! stub's place — it mirrors that API surface, so no source changes are
+//! needed.  Without the feature the simulator / schedule / planner core
+//! still builds, tests, and benches with no artifacts present.
 //!
 //! Module map (see DESIGN.md for the full system inventory):
 //!

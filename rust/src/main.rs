@@ -3,6 +3,8 @@
 //! ```text
 //! twobp train    --preset transformer-tiny --schedule 1f1b-1 [--no-2bp]
 //!                [--steps N] [--microbatches M] [--concat-p2] [--verbose]
+//!                [--synthetic]  (in-process stub-backend manifest, no
+//!                                artifacts needed; verified against sim)
 //! twobp gantt    [--ranks N] [--cols W] [--schedule K] [--plan FILE]
 //!                [--real --preset P]
 //! twobp simulate --schedule 1f1b-1 --ranks 8 [--no-2bp] [--comm C]
@@ -11,8 +13,8 @@
 //! twobp tune     [--ranks N] [--budget 4.5G] [--beam K] [--gens G]
 //!                [--seed S] [--fwd F --p1 X --p2 Y --comm C]
 //!                [--out FILE.plan] [--gantt] [--threads K]
-//! twobp bench    <table1|fig1|fig3|fig4|fig5|table3|fig6|fig7|ckpt|sweep
-//!                 |planner> [--steps N]
+//! twobp bench    <table1|fig1|synthetic|fig3|fig4|fig5|table3|fig6|fig7
+//!                 |ckpt|sweep|planner> [--steps N]
 //! twobp config   --list
 //! ```
 //!
@@ -30,7 +32,7 @@ use twobp::util::gantt;
 use twobp::util::stats::{fmt_bytes, parse_bytes};
 
 const FLAGS: &[&str] = &["no-2bp", "concat-p2", "verbose", "list", "real",
-                         "csv", "gantt"];
+                         "csv", "gantt", "synthetic"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -64,9 +66,41 @@ fn main() {
 
 #[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = twobp::config::RunConfig::from_args(args)?;
-    let report = twobp::pipeline::train(&cfg)?;
+    let mut cfg = twobp::config::RunConfig::from_args(args)?;
+    if !cfg.synthetic {
+        let report = twobp::pipeline::train(&cfg)?;
+        print!("{}", twobp::metrics::run_summary(&report));
+        return Ok(());
+    }
+    // --synthetic: generate a stub-backend manifest in-process, train on
+    // it, and cross-check the run against the simulator (op order +
+    // byte-exact memory accounting) before reporting.
+    if args.get("preset").is_some() || args.get("artifacts").is_some() {
+        return Err(anyhow!(
+            "--synthetic generates its own tiny in-process preset; \
+             drop --preset/--artifacts (or drop --synthetic to train \
+             on real artifacts)"
+        ));
+    }
+    let spec = twobp::models::synthetic::SyntheticSpec::tiny();
+    let report = twobp::models::synthetic::with_temp_artifacts(
+        "synth",
+        &spec,
+        |root, manifest| {
+            cfg.artifacts = root.to_path_buf();
+            cfg.preset = spec.preset.clone();
+            let report = twobp::pipeline::train(&cfg)?;
+            twobp::pipeline::verify_report_against_sim(
+                &report, manifest, cfg.steps,
+            )?;
+            Ok(report)
+        },
+    )?;
     print!("{}", twobp::metrics::run_summary(&report));
+    println!(
+        "synthetic stub run verified against the simulator \
+         (op order + byte-exact memory accounting)"
+    );
     Ok(())
 }
 
@@ -74,7 +108,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_train(_args: &Args) -> Result<()> {
     Err(anyhow!(
         "`twobp train` needs the real runtime; rebuild with \
-         `--features pjrt` (vendored xla crate required)"
+         `--features pjrt` (built offline against the vendored stub \
+         backend in vendor/xla-stub)"
     ))
 }
 
@@ -96,7 +131,8 @@ fn cmd_gantt_real(args: &Args, cols: usize) -> Result<()> {
 fn cmd_gantt_real(_args: &Args, _cols: usize) -> Result<()> {
     Err(anyhow!(
         "`twobp gantt --real` needs the real runtime; rebuild with \
-         `--features pjrt` (vendored xla crate required)"
+         `--features pjrt` (built offline against the vendored stub \
+         backend in vendor/xla-stub)"
     ))
 }
 

@@ -5,6 +5,8 @@
 //! paper's §4.2 memory taxonomy: res1 / res2 / inter), and XLA
 //! cost-analysis flops used to calibrate the simulator.
 
+pub mod synthetic;
+
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,414 @@
+//! In-process synthetic manifests for the stub PJRT backend.
+//!
+//! Writes a complete artifact set — `manifest.json` plus one stub-HLO
+//! signature file per executable — describing a tiny transformer-shaped
+//! pipeline, so the real executor (`pipeline/`) can be driven end to
+//! end with no Python AOT step and no network (`twobp train
+//! --synthetic`, `rust/tests/pjrt_stub.rs`, CI).
+//!
+//! The generated model is shape-consistent with every contract
+//! `pipeline::stage` enforces:
+//!
+//! * stage r's `output` equals stage r+1's `input` (activations wire up);
+//! * `gx` has the input's shape (the upstream gradient message);
+//! * `fwd` outputs `[y, res1..., res2...]`, `bwd_p1` outputs
+//!   `[gx, inter...]`, `bwd_p2` accumulates into `grads`, `opt` returns
+//!   `params/m/v`, the last stage's `loss` returns `[scalar, dlogits]`;
+//! * the per-class byte totals match the spec shapes exactly, so the
+//!   byte-exact memory accountant and `Manifest::mem_model` agree.
+//!
+//! The `bwd_p2` file uses the stub's `acc` mode and `bwd_p2_concat`
+//! its `group` mode **with the same seed**, which makes gradient
+//! accumulation commutative and concat-vs-loop bit-identical — the
+//! properties the cross-schedule equivalence tests assert.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{DType, Manifest};
+
+/// Parameters of the generated pipeline (all dimensions tiny: the stub
+/// fills tensors with PRNG output, so size only costs memcpy time).
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    /// Preset name (directory under the artifacts root).
+    pub preset: String,
+    /// Pipeline depth = rank count.
+    pub n_stages: usize,
+    /// Samples per microbatch (leading tensor dimension).
+    pub batch: usize,
+    /// Sequence length.
+    pub seq: usize,
+    /// Hidden width.
+    pub hidden: usize,
+    /// Vocabulary size (last stage's logits width).
+    pub vocab: usize,
+    /// Microbatch count a `bwd_p2_concat` call covers.
+    pub concat_m: usize,
+    /// Base seed every stub executable's seed derives from.
+    pub seed: u64,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        SyntheticSpec {
+            preset: "synthetic".to_string(),
+            n_stages: 4,
+            batch: 2,
+            seq: 4,
+            hidden: 8,
+            vocab: 16,
+            concat_m: 4,
+            seed: 0x2B9_57AB,
+        }
+    }
+}
+
+impl SyntheticSpec {
+    /// The default tiny 4-stage pipeline used by CI and the tests.
+    pub fn tiny() -> SyntheticSpec {
+        SyntheticSpec::default()
+    }
+}
+
+/// Tensor-spec JSON object matching `models::TensorSpec::from_json`.
+fn tensor_json(name: Option<&str>, dtype: DType, shape: &[usize]) -> String {
+    let dims = shape
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    let bytes = shape.iter().product::<usize>() * dtype.itemsize();
+    let dt = match dtype {
+        DType::F32 => "float32",
+        DType::I32 => "int32",
+    };
+    match name {
+        Some(n) => format!(
+            "{{\"name\": \"{n}\", \"shape\": [{dims}], \"dtype\": \"{dt}\", \
+             \"bytes\": {bytes}}}"
+        ),
+        None => format!(
+            "{{\"shape\": [{dims}], \"dtype\": \"{dt}\", \"bytes\": {bytes}}}"
+        ),
+    }
+}
+
+fn spec_list(specs: &[(Option<&str>, DType, Vec<usize>)]) -> String {
+    specs
+        .iter()
+        .map(|(n, dt, sh)| tensor_json(*n, *dt, sh))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+fn bytes_of(specs: &[(Option<&str>, DType, Vec<usize>)]) -> u64 {
+    specs
+        .iter()
+        .map(|(_, dt, sh)| (sh.iter().product::<usize>() * dt.itemsize()) as u64)
+        .sum()
+}
+
+/// Per-file stub seed: a pure function of the base seed, stage, and
+/// role.  `bwd_p2` and `bwd_p2_concat` share a role id on purpose —
+/// identical delta streams are what make concat == loop bit for bit.
+fn file_seed(base: u64, stage: usize, role: u64) -> u64 {
+    base ^ (stage as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ role.wrapping_mul(0xD1B5_4A32_D192_ED03)
+}
+
+fn dtype_tok(dt: DType) -> &'static str {
+    match dt {
+        DType::F32 => "f32",
+        DType::I32 => "s32",
+    }
+}
+
+/// Write one stub-HLO signature file.
+fn write_stub(
+    dir: &Path,
+    file: &str,
+    module: &str,
+    seed: u64,
+    acc: usize,
+    group: usize,
+    outs: &[(DType, Vec<usize>)],
+) -> Result<()> {
+    let mut text = String::from("stub-hlo v1\n");
+    text.push_str(&format!("module {module}\n"));
+    text.push_str(&format!("seed {seed}\n"));
+    if acc > 0 {
+        text.push_str(&format!("acc {acc}\n"));
+    }
+    if group > 0 {
+        text.push_str(&format!("group {group}\n"));
+    }
+    for (dt, shape) in outs {
+        let dims = shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        text.push_str(&format!("out {}[{dims}]\n", dtype_tok(*dt)));
+    }
+    let path = dir.join(file);
+    std::fs::write(&path, text)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Generate `<root>/<preset>/manifest.json` plus every stub-HLO
+/// executable, then load the result back through [`Manifest::load`] (a
+/// built-in self check) and return it.
+pub fn write_artifacts(root: &Path, spec: &SyntheticSpec) -> Result<Manifest> {
+    assert!(spec.n_stages >= 1, "need at least one stage");
+    let dir = root.join(&spec.preset);
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+
+    let (n, b, s, h, v) = (spec.n_stages, spec.batch, spec.seq, spec.hidden,
+                           spec.vocab);
+    let hid = vec![b, s, h];
+    type Spec<'a> = (Option<&'a str>, DType, Vec<usize>);
+
+    let mut stage_objs: Vec<String> = Vec::with_capacity(n);
+    for i in 0..n {
+        let last = i == n - 1;
+        let input: Spec = if i == 0 {
+            (None, DType::I32, vec![b, s])
+        } else {
+            (None, DType::F32, hid.clone())
+        };
+        let output: Spec = if last {
+            (None, DType::F32, vec![b, s, v])
+        } else {
+            (None, DType::F32, hid.clone())
+        };
+        let gx: Spec = (None, DType::F32, input.2.clone());
+        let params: Vec<Spec> = vec![
+            (Some("w"), DType::F32, vec![h, h]),
+            (Some("bias"), DType::F32, vec![h]),
+        ];
+        let res1: Vec<Spec> = vec![(None, DType::F32, hid.clone())];
+        let res2: Vec<Spec> = vec![
+            (None, DType::F32, hid.clone()),
+            (None, DType::I32, vec![b, s]),
+        ];
+        let inter: Vec<Spec> = vec![(None, DType::F32, hid.clone())];
+        let grads: Vec<Spec> = vec![
+            (None, DType::F32, vec![h, h]),
+            (None, DType::F32, vec![h]),
+        ];
+
+        // stub signature files (out lists follow the executor's arity
+        // contract; see the module docs)
+        let param_outs: Vec<(DType, Vec<usize>)> =
+            params.iter().map(|(_, dt, sh)| (*dt, sh.clone())).collect();
+        let grad_outs: Vec<(DType, Vec<usize>)> =
+            grads.iter().map(|(_, dt, sh)| (*dt, sh.clone())).collect();
+        let mut fwd_outs: Vec<(DType, Vec<usize>)> =
+            vec![(output.1, output.2.clone())];
+        fwd_outs.extend(res1.iter().map(|(_, dt, sh)| (*dt, sh.clone())));
+        fwd_outs.extend(res2.iter().map(|(_, dt, sh)| (*dt, sh.clone())));
+        let mut p1_outs: Vec<(DType, Vec<usize>)> = vec![(gx.1, gx.2.clone())];
+        p1_outs.extend(inter.iter().map(|(_, dt, sh)| (*dt, sh.clone())));
+        let mut opt_outs = param_outs.clone();
+        opt_outs.extend(param_outs.clone());
+        opt_outs.extend(param_outs.clone());
+        let group = res2.len() + inter.len();
+
+        let m = |role: &str| format!("{}/s{i}_{role}", spec.preset);
+        write_stub(&dir, &format!("s{i}_init.hlo.txt"), &m("init"),
+                   file_seed(spec.seed, i, 1), 0, 0, &param_outs)?;
+        write_stub(&dir, &format!("s{i}_fwd.hlo.txt"), &m("fwd"),
+                   file_seed(spec.seed, i, 2), 0, 0, &fwd_outs)?;
+        write_stub(&dir, &format!("s{i}_p1.hlo.txt"), &m("p1"),
+                   file_seed(spec.seed, i, 3), 0, 0, &p1_outs)?;
+        write_stub(&dir, &format!("s{i}_p2.hlo.txt"), &m("p2"),
+                   file_seed(spec.seed, i, 4), grad_outs.len(), 0, &grad_outs)?;
+        write_stub(&dir, &format!("s{i}_p2c.hlo.txt"), &m("p2c"),
+                   file_seed(spec.seed, i, 4), 0, group, &grad_outs)?;
+        write_stub(&dir, &format!("s{i}_opt.hlo.txt"), &m("opt"),
+                   file_seed(spec.seed, i, 5), 0, 0, &opt_outs)?;
+
+        // manifest entry (flops vary per stage so the derived cost
+        // model is non-uniform, like a real depth-imbalanced pipeline)
+        let scale = 1.0 + i as f64 * 0.25;
+        let art = |file: &str, flops: f64| -> String {
+            format!("{{\"file\": \"{file}\", \"flops\": {flops:.1}}}")
+        };
+        let out_bytes = bytes_of(std::slice::from_ref(&output));
+        stage_objs.push(format!(
+            "{{\n    \"index\": {i},\n    \"params\": [{}],\n    \
+             \"input\": {},\n    \"output\": {},\n    \"gx\": {},\n    \
+             \"res1\": [{}],\n    \"res2\": [{}],\n    \"inter\": [{}],\n    \
+             \"grads\": [{}],\n    \"bytes\": {{\"params\": {}, \"res1\": {}, \
+             \"res2\": {}, \"inter\": {}, \"grads\": {}, \
+             \"activation\": {}}},\n    \"artifacts\": {{\n      \
+             \"init\": {},\n      \"fwd\": {},\n      \"bwd_p1\": {},\n      \
+             \"bwd_p2\": {},\n      \"bwd_p2_concat\": {},\n      \
+             \"opt\": {}\n    }}\n  }}",
+            spec_list(&params),
+            tensor_json(None, input.1, &input.2),
+            tensor_json(None, output.1, &output.2),
+            tensor_json(None, gx.1, &gx.2),
+            spec_list(&res1),
+            spec_list(&res2),
+            spec_list(&inter),
+            spec_list(&grads),
+            bytes_of(&params),
+            bytes_of(&res1),
+            bytes_of(&res2),
+            bytes_of(&inter),
+            bytes_of(&grads),
+            out_bytes,
+            art(&format!("s{i}_init.hlo.txt"), scale),
+            art(&format!("s{i}_fwd.hlo.txt"), 100.0 * scale),
+            art(&format!("s{i}_p1.hlo.txt"), 110.0 * scale),
+            art(&format!("s{i}_p2.hlo.txt"), 90.0 * scale),
+            art(&format!("s{i}_p2c.hlo.txt"),
+                90.0 * scale * spec.concat_m as f64),
+            art(&format!("s{i}_opt.hlo.txt"), 5.0 * scale),
+        ));
+    }
+
+    // loss executable: [scalar loss, dlogits]
+    let logits = vec![b, s, v];
+    let labels = vec![b, s];
+    write_stub(
+        &dir,
+        "loss.hlo.txt",
+        &format!("{}/loss", spec.preset),
+        file_seed(spec.seed, n, 6),
+        0,
+        0,
+        &[(DType::F32, Vec::new()), (DType::F32, logits.clone())],
+    )?;
+
+    let manifest_json = format!(
+        "{{\n  \"preset\": \"{}\",\n  \"arch\": \"stub\",\n  \
+         \"stages\": {n},\n  \"microbatch\": {b},\n  \
+         \"samples_per_microbatch\": {b},\n  \
+         \"n_microbatches_concat\": {},\n  \"optimizer\": \"adam\",\n  \
+         \"lr\": 0.001,\n  \"stage\": [{}],\n  \
+         \"loss\": {{\"file\": \"loss.hlo.txt\", \"flops\": 7.0,\n    \
+         \"logits\": {},\n    \"labels\": {}}}\n}}\n",
+        spec.preset,
+        spec.concat_m,
+        stage_objs.join(", "),
+        tensor_json(None, DType::F32, &logits),
+        tensor_json(None, DType::I32, &labels),
+    );
+    let path = dir.join("manifest.json");
+    std::fs::write(&path, manifest_json)
+        .with_context(|| format!("writing {}", path.display()))?;
+
+    // self check: the generated manifest must round-trip the parser
+    Manifest::load(root, &spec.preset)
+        .context("reloading the generated synthetic manifest")
+}
+
+/// Write a synthetic artifact set into a fresh per-process temp
+/// directory, run `f` against it, and remove the directory afterwards
+/// (also on error) — the shared plumbing behind `twobp train
+/// --synthetic` and `twobp bench synthetic`.
+pub fn with_temp_artifacts<T>(
+    tag: &str,
+    spec: &SyntheticSpec,
+    f: impl FnOnce(&Path, &Manifest) -> Result<T>,
+) -> Result<T> {
+    // Drop guard: the executor's designed failure mode is a panic
+    // (accountant underflow asserts, step-balance checks), which must
+    // still remove the directory on unwind.
+    struct Cleanup(std::path::PathBuf);
+    impl Drop for Cleanup {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+    let root = std::env::temp_dir()
+        .join(format!("twobp-{tag}-{}", std::process::id()));
+    let _cleanup = Cleanup(root.clone());
+    write_artifacts(&root, spec).and_then(|manifest| f(&root, &manifest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("twobp-synth-unit-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn generated_manifest_round_trips() {
+        let root = tmp("roundtrip");
+        let spec = SyntheticSpec::tiny();
+        let m = write_artifacts(&root, &spec).expect("write");
+        assert_eq!(m.n_stages, spec.n_stages);
+        assert_eq!(m.stages.len(), spec.n_stages);
+        assert_eq!(m.concat_m, spec.concat_m);
+        assert_eq!(m.samples_per_microbatch, spec.batch);
+        assert_eq!(*m.logits.shape.last().unwrap(), spec.vocab);
+        assert_eq!(m.labels.dtype, DType::I32);
+        for (i, st) in m.stages.iter().enumerate() {
+            assert_eq!(st.index, i);
+            assert!(st.fwd.file.exists(), "stage {i} fwd file missing");
+            assert!(st.bwd_p2_concat.file.exists());
+            // byte classes match the spec shapes exactly
+            let sum = |xs: &[crate::models::TensorSpec]| -> u64 {
+                xs.iter().map(|t| t.bytes).sum()
+            };
+            assert_eq!(st.bytes.params, sum(&st.params));
+            assert_eq!(st.bytes.res1, sum(&st.res1));
+            assert_eq!(st.bytes.res2, sum(&st.res2));
+            assert_eq!(st.bytes.inter, sum(&st.inter));
+            assert_eq!(st.bytes.grads, sum(&st.grads));
+        }
+        // stage outputs wire to the next stage's inputs
+        for w in m.stages.windows(2) {
+            assert_eq!(w[0].output.shape, w[1].input.shape);
+            assert_eq!(w[1].gx.shape, w[1].input.shape);
+        }
+        // derived models are well-formed
+        let mm = m.mem_model();
+        assert_eq!(mm.static_bytes.len(), spec.n_stages);
+        let cm = m.cost_model_from_flops(0.0);
+        assert_eq!(cm.fwd.len(), spec.n_stages);
+        assert!(cm.p1[0] > cm.fwd[0], "p1 should cost more than fwd");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Every generated stub file parses, and its declared output arity
+    /// matches the executor's contract for that role.
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn stub_files_parse_with_executor_arity() {
+        let root = tmp("arity");
+        let spec = SyntheticSpec::tiny();
+        let m = write_artifacts(&root, &spec).expect("write");
+        let outs = |p: &std::path::Path| -> usize {
+            let text = std::fs::read_to_string(p).expect("read stub");
+            text.lines().filter(|l| l.trim().starts_with("out ")).count()
+        };
+        for st in &m.stages {
+            assert_eq!(outs(&st.init.file), st.params.len());
+            assert_eq!(outs(&st.fwd.file),
+                       1 + st.res1.len() + st.res2.len());
+            assert_eq!(outs(&st.bwd_p1.file), 1 + st.inter.len());
+            assert_eq!(outs(&st.bwd_p2.file), st.grads.len());
+            assert_eq!(outs(&st.bwd_p2_concat.file), st.grads.len());
+            assert_eq!(outs(&st.opt.file), 3 * st.params.len());
+            // and they compile through the stub client
+            for f in [&st.init.file, &st.fwd.file, &st.bwd_p1.file,
+                      &st.bwd_p2.file, &st.bwd_p2_concat.file, &st.opt.file] {
+                let proto = xla::HloModuleProto::from_text_file(f)
+                    .unwrap_or_else(|e| panic!("{}: {e:?}", f.display()));
+                assert!(!proto.name().is_empty());
+            }
+        }
+        assert_eq!(outs(&m.loss.file), 2);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

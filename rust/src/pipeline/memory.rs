@@ -39,6 +39,7 @@ pub struct MemAccountant {
     live: [u64; NCLASS],
     peak_total: u64,
     peak_by_class: [u64; NCLASS],
+    peak_model: u64,
 }
 
 impl MemAccountant {
@@ -51,6 +52,12 @@ impl MemAccountant {
         let total = self.total();
         if total > self.peak_total {
             self.peak_total = total;
+        }
+        if class != Class::Wire {
+            let model = total - self.live[idx(Class::Wire)];
+            if model > self.peak_model {
+                self.peak_model = model;
+            }
         }
         let i = idx(class);
         if self.live[i] > self.peak_by_class[i] {
@@ -84,6 +91,16 @@ impl MemAccountant {
 
     pub fn peak_of(&self, class: Class) -> u64 {
         self.peak_by_class[idx(class)]
+    }
+
+    /// Peak of the *simulator-modeled* classes — everything except
+    /// `Wire` (the simulator's `MemModel` treats communication as
+    /// latency, not resident bytes).  Directly comparable to the
+    /// per-rank `SimResult::peak_bytes` of the same plan replayed
+    /// through `Manifest::mem_model` (asserted byte-exactly by
+    /// `pipeline::verify_report_against_sim`).
+    pub fn peak_model(&self) -> u64 {
+        self.peak_model
     }
 
     /// All dynamic classes must be zero at a step boundary.
@@ -148,5 +165,93 @@ mod tests {
         m.free(Class::Res1, 30);
         m.alloc(Class::Res1, 20);
         assert_eq!(m.peak_of(Class::Res1), 30);
+    }
+
+    #[test]
+    fn model_peak_excludes_wire() {
+        let mut m = MemAccountant::new();
+        m.alloc(Class::Static, 100);
+        m.alloc(Class::Wire, 1000);
+        m.alloc(Class::Res2, 50);
+        assert_eq!(m.peak(), 1150);
+        assert_eq!(m.peak_model(), 150);
+        m.free(Class::Wire, 1000);
+        m.alloc(Class::Inter, 25);
+        assert_eq!(m.peak_model(), 175);
+    }
+
+    /// The accountant against an independent shadow model: for any
+    /// sequence of allocs and in-budget frees, live counts and every
+    /// peak (total, per-class, model) match exact shadow bookkeeping,
+    /// and no counter ever underflows (the accountant panics if one
+    /// would go negative — surviving the sequence *is* the property).
+    #[test]
+    fn prop_accountant_matches_shadow_model() {
+        use crate::util::prng::SplitMix64;
+        use crate::util::proptest::{check, gen};
+
+        const CLASSES: [Class; 5] = [Class::Static, Class::Res1,
+                                     Class::Res2, Class::Inter, Class::Wire];
+        check(
+            "MemAccountant bookkeeping == shadow model",
+            200,
+            |rng| (gen::usize_in(rng, 1, 60), rng.next_u64()),
+            |&(len, seed)| {
+                let mut rng = SplitMix64::new(seed);
+                let mut m = MemAccountant::new();
+                let mut live = [0u64; 5];
+                let mut peak_total = 0u64;
+                let mut peak_class = [0u64; 5];
+                let mut peak_model = 0u64;
+                for _ in 0..len {
+                    let ci = rng.below(5) as usize;
+                    let class = CLASSES[ci];
+                    let do_free = rng.below(2) == 1 && live[ci] > 0;
+                    if do_free {
+                        let bytes = rng.below(live[ci] + 1);
+                        m.free(class, bytes);
+                        live[ci] -= bytes;
+                    } else {
+                        let bytes = rng.below(1 << 20);
+                        m.alloc(class, bytes);
+                        live[ci] += bytes;
+                        let total: u64 = live.iter().sum();
+                        peak_total = peak_total.max(total);
+                        peak_class[ci] = peak_class[ci].max(live[ci]);
+                        if class != Class::Wire {
+                            peak_model = peak_model.max(total - live[4]);
+                        }
+                    }
+                    let total: u64 = live.iter().sum();
+                    if m.total() != total {
+                        return Err(format!("total {} != {total}", m.total()));
+                    }
+                    for (j, c) in CLASSES.iter().enumerate() {
+                        if m.live(*c) != live[j] {
+                            return Err(format!(
+                                "live[{c:?}] {} != {}", m.live(*c), live[j]
+                            ));
+                        }
+                    }
+                }
+                if m.peak() != peak_total {
+                    return Err(format!("peak {} != {peak_total}", m.peak()));
+                }
+                if m.peak_model() != peak_model {
+                    return Err(format!(
+                        "model peak {} != {peak_model}", m.peak_model()
+                    ));
+                }
+                for (j, c) in CLASSES.iter().enumerate() {
+                    if m.peak_of(*c) != peak_class[j] {
+                        return Err(format!(
+                            "peak_of[{c:?}] {} != {}",
+                            m.peak_of(*c), peak_class[j]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -14,4 +14,4 @@ pub mod memory;
 pub mod stage;
 pub mod training;
 
-pub use training::{train, Cluster, RunReport};
+pub use training::{train, verify_report_against_sim, Cluster, RunReport};

@@ -36,6 +36,10 @@ pub struct WorkerReport {
     pub rank: usize,
     pub timings: Vec<OpTiming>,
     pub peak_bytes: u64,
+    /// Peak of the simulator-modeled classes (everything but `Wire`) —
+    /// comparable to `SimResult::peak_bytes` (see
+    /// [`MemAccountant::peak_model`]).
+    pub peak_model: u64,
     pub peak_static: u64,
     pub peak_res1: u64,
     pub peak_res2: u64,
@@ -46,6 +50,10 @@ pub struct WorkerReport {
     pub losses: Vec<f32>,
     /// Sum of |params| after the run (determinism / equivalence checks).
     pub param_checksum: f64,
+    /// Order-sensitive FNV-1a over the raw bytes of every parameter —
+    /// the *bit-exact* equivalence probe (`param_checksum` is
+    /// magnitude-based and blind to sign flips).
+    pub param_digest: u64,
 }
 
 struct MbStash {
@@ -632,16 +640,22 @@ impl StageWorker {
             mean(SpanKind::Opt),
         );
         let mut checksum = 0.0f64;
+        let mut digest: u64 = 0xcbf2_9ce4_8422_2325;
         for p in &self.params {
             let h = HostTensor::from_literal(p)?;
             if h.dtype == crate::models::DType::F32 {
                 checksum += h.to_f32().iter().map(|v| v.abs() as f64).sum::<f64>();
+            }
+            for &b in &h.data {
+                digest = (digest ^ b as u64)
+                    .wrapping_mul(0x0000_0100_0000_01b3);
             }
         }
         Ok(WorkerReport {
             rank: self.rank,
             timings,
             peak_bytes: self.mem.peak(),
+            peak_model: self.mem.peak_model(),
             peak_static: self.mem.peak_of(Class::Static),
             peak_res1: self.mem.peak_of(Class::Res1),
             peak_res2: self.mem.peak_of(Class::Res2),
@@ -649,6 +663,7 @@ impl StageWorker {
             mean_costs,
             losses: std::mem::take(&mut self.losses),
             param_checksum: checksum,
+            param_digest: digest,
         })
     }
 }

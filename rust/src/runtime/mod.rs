@@ -5,6 +5,14 @@
 //! `xla` crate's client is `Rc`-based and single-threaded by design).
 //! Tensors cross thread boundaries only as [`HostTensor`] byte buffers
 //! (the NCCL-p2p stand-in; see DESIGN.md §3).
+//!
+//! The `xla` dependency is the vendored deterministic stub backend
+//! (`vendor/xla-stub`): executables parse stub-HLO signature files and
+//! produce reproducible seeded outputs of the right shape/dtype, which
+//! is what lets this whole layer build, test, and smoke offline.  The
+//! stub mirrors the real crate's API surface exactly — swap the path
+//! dependency in `Cargo.toml` for the real PJRT bindings to run actual
+//! compute; nothing in this module changes.
 
 use std::path::Path;
 
@@ -61,12 +69,15 @@ impl Executable {
     /// references (`&[Literal]` / `&[&Literal]`).
     ///
     /// Implementation note: this goes through `execute_b` with buffers
-    /// *we* own — the vendored crate's literal-taking `execute` leaks
-    /// every input buffer it uploads (`buffer.release()` with no
-    /// matching free), which shows up as ~10 MB/s of growth in a tiny
-    /// training loop.  Owning the uploads means they drop (and free)
-    /// here.  The borrowed literals outlive the synchronous execution,
-    /// so the host-to-device transfer always completes in time.
+    /// *we* own.  Against the real `xla` crate, its literal-taking
+    /// `execute` leaks every input buffer it uploads
+    /// (`buffer.release()` with no matching free), which shows up as
+    /// ~10 MB/s of growth in a tiny training loop — owning the uploads
+    /// means they drop (and free) here.  The vendored stub has no
+    /// `execute` at all, so `execute_b` is also the only path it
+    /// offers; keep this shape when swapping the real crate back in.
+    /// The borrowed literals outlive the synchronous execution, so the
+    /// host-to-device transfer always completes in time.
     pub fn run<L: std::borrow::Borrow<xla::Literal>>(
         &self,
         args: &[L],

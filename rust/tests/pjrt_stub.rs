@@ -1,0 +1,253 @@
+//! End-to-end tests of the vendored PJRT stub backend
+//! (`vendor/xla-stub`) driving the real pipeline executor on synthetic
+//! manifests generated in-process — no Python AOT step, no network.
+//!
+//! The stub's semantics (deterministic seeded outputs; *integer-valued*
+//! gradient deltas so accumulation is exact and order-independent) give
+//! these tests real teeth:
+//!
+//! * parameters after training are **bit-identical** across every
+//!   schedule, ±2BP, and loop-vs-concat p2 — the paper's
+//!   semantics-preservation claim, checked exactly;
+//! * every run's executed op order and byte-exact memory accounting
+//!   are verified against the simulator
+//!   (`pipeline::verify_report_against_sim`).
+#![cfg(feature = "pjrt")]
+
+use std::path::{Path, PathBuf};
+
+use twobp::config::{P2Mode, RunConfig};
+use twobp::models::synthetic::{write_artifacts, SyntheticSpec};
+use twobp::models::Manifest;
+use twobp::pipeline::{train, verify_report_against_sim, Cluster};
+use twobp::schedule::ScheduleKind;
+
+/// Per-test artifact dir (tests run concurrently in one process).
+fn setup(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir()
+        .join(format!("twobp-stub-test-{tag}-{}", std::process::id()));
+    let manifest = write_artifacts(&dir, &SyntheticSpec::tiny())
+        .expect("write synthetic artifacts");
+    (dir, manifest)
+}
+
+fn cfg(
+    dir: &Path,
+    kind: ScheduleKind,
+    two_bp: bool,
+    steps: usize,
+    m: usize,
+) -> RunConfig {
+    RunConfig {
+        preset: "synthetic".into(),
+        artifacts: dir.to_path_buf(),
+        schedule: kind,
+        two_bp,
+        steps,
+        n_microbatches: m,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn stub_runs_every_schedule_end_to_end() {
+    let (dir, manifest) = setup("smoke");
+    for kind in [ScheduleKind::GPipe, ScheduleKind::OneF1B1,
+                 ScheduleKind::OneF1B2] {
+        for two_bp in [false, true] {
+            let c = cfg(&dir, kind, two_bp, 2, 0);
+            let report = train(&c)
+                .unwrap_or_else(|e| panic!("{} 2bp={two_bp}: {e:#}",
+                                           kind.name()));
+            assert_eq!(report.losses.len(), 2, "{} 2bp={two_bp}",
+                       kind.name());
+            assert!(report.losses.iter().all(|l| l.is_finite()));
+            assert!(report.max_peak() > 0);
+            verify_report_against_sim(&report, &manifest, 2)
+                .unwrap_or_else(|e| panic!("{} 2bp={two_bp}: {e:#}",
+                                           kind.name()));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Non-greedy plans execute in exactly the order the simulator
+/// dispatches, so the accountant's model peak must equal the
+/// simulator's peak bytes per rank — byte for byte.
+#[test]
+fn fused_op_order_and_peak_match_sim_exactly() {
+    let (dir, manifest) = setup("order");
+    for kind in [ScheduleKind::GPipe, ScheduleKind::OneF1B1] {
+        let report = train(&cfg(&dir, kind, false, 1, 0)).expect("train");
+        let costs = manifest.cost_model_from_flops(0.0);
+        let mm = manifest.mem_model();
+        let sim = twobp::sim::simulate(&report.plan, &costs, Some(&mm))
+            .expect("sim");
+        assert_eq!(report.peak_model_bytes(), sim.peak_bytes,
+                   "{}", kind.name());
+        verify_report_against_sim(&report, &manifest, 1)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", kind.name()));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The paper's core claim, checked *exactly* under the stub: the same
+/// data + seed yields bit-identical parameters whether backward is
+/// fused or split/reordered, for every schedule (integer gradient
+/// deltas make f32 accumulation exact, hence order-independent).
+#[test]
+fn param_updates_identical_across_schedules_and_2bp() {
+    let (dir, _) = setup("equiv");
+    // fixed M = 4 for every schedule: equivalence needs identical data
+    // and effective batch size (1F1B-2's default M = 2N differs)
+    let m = 4;
+    let baseline = train(&cfg(&dir, ScheduleKind::GPipe, false, 2, m))
+        .expect("baseline");
+    let base_ck = baseline.param_checksum();
+    let base_digests = baseline.param_digests();
+    for kind in [ScheduleKind::Naive, ScheduleKind::GPipe,
+                 ScheduleKind::OneF1B1, ScheduleKind::OneF1B2] {
+        for two_bp in [false, true] {
+            let r = train(&cfg(&dir, kind, two_bp, 2, m)).expect("train");
+            assert_eq!(
+                r.param_digests(), base_digests,
+                "{} 2bp={two_bp}: param bytes diverged from the fused \
+                 baseline",
+                kind.name()
+            );
+            assert_eq!(
+                r.param_checksum(), base_ck,
+                "{} 2bp={two_bp}: params diverged from the fused baseline",
+                kind.name()
+            );
+            // per-step mean losses: same per-mb values, possibly summed
+            // in a different microbatch order -> tolerance, not bits
+            assert_eq!(r.losses.len(), baseline.losses.len());
+            for (a, b) in r.losses.iter().zip(baseline.losses.iter()) {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "{} 2bp={two_bp}: loss {a} vs baseline {b}",
+                    kind.name()
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Concat-p2 (Fig 2) equals the loop form bit for bit: the stub's
+/// `group` mode replays the same per-microbatch delta streams as its
+/// `acc` mode (same per-stage seed), mirroring real concatenation.
+#[test]
+fn concat_p2_equals_loop_p2_bit_for_bit() {
+    let (dir, _) = setup("concat");
+    let m = SyntheticSpec::tiny().concat_m; // concat engages at exactly M
+    let mut loop_cfg = cfg(&dir, ScheduleKind::GPipe, true, 2, m);
+    loop_cfg.p2_mode = P2Mode::Loop;
+    let mut concat_cfg = loop_cfg.clone();
+    concat_cfg.p2_mode = P2Mode::Concat;
+    let a = train(&loop_cfg).expect("loop");
+    let b = train(&concat_cfg).expect("concat");
+    assert_eq!(a.param_digests(), b.param_digests());
+    assert_eq!(a.param_checksum(), b.param_checksum());
+    assert_eq!(a.losses, b.losses);
+    // Prove the concat path actually executed (greedy fills can make
+    // middle ranks fall back to loop mode, but under GPipe the last
+    // rank never waits in backward — its p1 inputs are local — so its
+    // trailing flush always sees all M fresh pending p2s and concats):
+    // one BwdP2 span per step there, vs M per step in loop mode.
+    let p2_spans = |r: &twobp::pipeline::RunReport| -> usize {
+        r.reports
+            .iter()
+            .find(|w| w.rank == r.plan.n_ranks - 1)
+            .expect("last rank report")
+            .timings
+            .iter()
+            .filter(|t| t.kind == twobp::util::gantt::SpanKind::BwdP2)
+            .count()
+    };
+    assert_eq!(p2_spans(&a), m * 2, "loop mode: one span per microbatch");
+    assert_eq!(p2_spans(&b), 2, "concat mode: one span per step");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Reruns are deterministic even under greedy p2: fill *order* may
+/// differ between runs, but order-independent accumulation makes the
+/// result identical.
+#[test]
+fn greedy_2bp_reruns_are_deterministic() {
+    let (dir, _) = setup("det");
+    let c = cfg(&dir, ScheduleKind::OneF1B1, true, 3, 0);
+    let a = train(&c).expect("first run");
+    let b = train(&c).expect("second run");
+    assert_eq!(a.losses, b.losses);
+    assert_eq!(a.param_digests(), b.param_digests());
+    assert_eq!(a.param_checksum(), b.param_checksum());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Property test (stub-executed runs): across fuzzed (schedule, ±2BP,
+/// microbatch count, steps, seed) cells against one persistent cluster,
+/// the stash accountant never goes negative (it panics on underflow —
+/// surviving the run is the property), every dynamic class drains at
+/// step boundaries (the executor asserts), and its model peak matches
+/// a byte-exact replay of the executed op order through
+/// `Manifest::mem_model`'s byte classes — plus the sim-timeline order
+/// checks in `verify_report_against_sim`.
+#[test]
+fn prop_accountant_never_negative_and_peak_matches_on_stub_runs() {
+    use twobp::util::proptest::{check, gen};
+
+    let (dir, manifest) = setup("prop");
+    let base = RunConfig {
+        preset: "synthetic".into(),
+        artifacts: dir.clone(),
+        ..RunConfig::default()
+    };
+    let cluster = Cluster::new(&base).expect("cluster");
+    check(
+        "stub-run accounting matches a MemModel replay",
+        24,
+        |rng| {
+            let kind = *gen::pick(
+                rng,
+                &[ScheduleKind::Naive, ScheduleKind::GPipe,
+                  ScheduleKind::OneF1B1, ScheduleKind::OneF1B2,
+                  ScheduleKind::OneF1B2EagerP2],
+            );
+            let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
+                true
+            } else {
+                gen::bool(rng)
+            };
+            let m = gen::usize_in(rng, 1, 6);
+            let steps = gen::usize_in(rng, 1, 2);
+            let seed = rng.next_u64() % 1000;
+            (kind, two_bp, m, steps, seed)
+        },
+        |&(kind, two_bp, m, steps, seed)| {
+            let c = RunConfig {
+                schedule: kind,
+                two_bp,
+                n_microbatches: m,
+                steps,
+                seed,
+                ..base.clone()
+            };
+            let report = cluster.run(&c).map_err(|e| format!("{e:#}"))?;
+            verify_report_against_sim(&report, &manifest, steps)
+                .map_err(|e| format!("{e:#}"))?;
+            for (r, peak) in report.peak_model_bytes().iter().enumerate() {
+                let st = &manifest.stages[r];
+                let static_b = st.bytes.params * 3 + st.bytes.grads;
+                if *peak < static_b {
+                    return Err(format!(
+                        "rank {r}: model peak {peak} below static {static_b}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,960 @@
+//! Offline, deterministic stub of the `xla` PJRT crate.
+//!
+//! This workspace builds with no registry access, so the real
+//! `xla`/PJRT bindings cannot be fetched or linked.  This crate
+//! implements exactly the API surface `twobp::runtime` consumes —
+//! [`PjRtClient`], [`Literal`], [`PjRtBuffer`], [`HloModuleProto`],
+//! [`XlaComputation`], [`PjRtLoadedExecutable`], [`ElementType`],
+//! [`PrimitiveType`], [`Shape`] — with shape-correct, reproducible
+//! semantics instead of real compute, so the whole Layer-3 executor
+//! (stage workers, comm, stash accounting, measurement) runs end to
+//! end with no network, no Python artifacts, and no native deps.
+//!
+//! # The stub-HLO text format
+//!
+//! Instead of real HLO text, executables are described by a tiny
+//! signature file (written by `twobp::models::synthetic`):
+//!
+//! ```text
+//! stub-hlo v1
+//! module synthetic/s0_fwd
+//! seed 12345
+//! out f32[2,4,8]
+//! out s32[2,4]
+//! ```
+//!
+//! Optional directives select the execution mode:
+//!
+//! * *(none)* — **plain**: each declared output is filled with values
+//!   from a PRNG seeded by `(file seed, hash of all inputs, output
+//!   index)`.  Outputs are a pure function of the inputs, so reruns and
+//!   cross-schedule comparisons are reproducible.
+//! * `acc N` — **accumulate** (the backward-p2 executable): the last N
+//!   inputs are elementwise accumulators; output j is accumulator j
+//!   plus a *small-integer-valued* f32 delta derived from the non-
+//!   accumulator inputs only.  Integer deltas make f32 accumulation
+//!   exact, hence **order-independent** — exactly the property real
+//!   gradient accumulation has, and what lets the executor's greedy /
+//!   reordered / concatenated p2 schedules produce bit-identical
+//!   parameters.
+//! * `group K` — **grouped sum** (the concatenated-p2 executable):
+//!   inputs arrive as consecutive groups of K; each output sums one
+//!   delta per group, seeded identically to `acc` mode, so a single
+//!   concatenated call equals the per-microbatch loop bit for bit.
+//!
+//! Everything is deliberately `Rc`-based and single-threaded, matching
+//! the real crate's client threading model (one client per worker
+//! thread).
+
+use std::borrow::Borrow;
+use std::path::Path;
+use std::rc::Rc;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Stub error: a single message (the runtime formats errors with
+/// `{:?}` and wraps them in its own context chain).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "xla-stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Element types and shapes
+// ---------------------------------------------------------------------------
+
+/// XLA element types (the stub computes with F32/S32 only; the rest
+/// exist so downstream `match` arms over foreign types stay reachable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+    C64,
+    C128,
+}
+
+impl ElementType {
+    fn size_bytes(self) -> Option<usize> {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => Some(1),
+            ElementType::S16
+            | ElementType::U16
+            | ElementType::F16
+            | ElementType::Bf16 => Some(2),
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => Some(4),
+            ElementType::S64
+            | ElementType::U64
+            | ElementType::F64
+            | ElementType::C64 => Some(8),
+            ElementType::C128 => Some(16),
+        }
+    }
+
+    fn tag(self) -> u8 {
+        match self {
+            ElementType::Pred => 0,
+            ElementType::S8 => 1,
+            ElementType::S16 => 2,
+            ElementType::S32 => 3,
+            ElementType::S64 => 4,
+            ElementType::U8 => 5,
+            ElementType::U16 => 6,
+            ElementType::U32 => 7,
+            ElementType::U64 => 8,
+            ElementType::F16 => 9,
+            ElementType::Bf16 => 10,
+            ElementType::F32 => 11,
+            ElementType::F64 => 12,
+            ElementType::C64 => 13,
+            ElementType::C128 => 14,
+        }
+    }
+}
+
+/// Primitive types accepted by [`Literal::create_from_shape`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+impl PrimitiveType {
+    fn element_type(self) -> ElementType {
+        match self {
+            PrimitiveType::Pred => ElementType::Pred,
+            PrimitiveType::S32 => ElementType::S32,
+            PrimitiveType::S64 => ElementType::S64,
+            PrimitiveType::F32 => ElementType::F32,
+            PrimitiveType::F64 => ElementType::F64,
+        }
+    }
+}
+
+/// Host types a [`Literal`] can be read as / built from.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_le(self) -> [u8; 4];
+    fn from_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+
+    fn from_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+
+    fn from_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+/// Array shape: element type + dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+/// A literal's shape: an array or a tuple of shapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+// ---------------------------------------------------------------------------
+// Literals
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum Repr {
+    Array {
+        ty: ElementType,
+        dims: Vec<usize>,
+        data: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+/// A host-resident tensor value (array or tuple).
+#[derive(Debug, Clone)]
+pub struct Literal(Repr);
+
+impl Literal {
+    /// Rank-0 literal holding one value.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal(Repr::Array {
+            ty: T::TY,
+            dims: Vec::new(),
+            data: v.to_le().to_vec(),
+        })
+    }
+
+    /// Zero-filled literal of the given shape (XLA's `CreateFromShape`
+    /// zero-initializes).
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let ety = ty.element_type();
+        let isz = ety.size_bytes().unwrap_or(4);
+        let n: usize = dims.iter().product();
+        Literal(Repr::Array {
+            ty: ety,
+            dims: dims.to_vec(),
+            data: vec![0u8; n * isz],
+        })
+    }
+
+    /// Literal from raw little-endian bytes; the byte count must match
+    /// the shape exactly.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let isz = ty
+            .size_bytes()
+            .ok_or_else(|| err(format!("unsupported element type {ty:?}")))?;
+        let n: usize = dims.iter().product();
+        if data.len() != n * isz {
+            return Err(err(format!(
+                "data size {} != {} elements x {} bytes for {ty:?}{dims:?}",
+                data.len(),
+                n,
+                isz
+            )));
+        }
+        Ok(Literal(Repr::Array {
+            ty,
+            dims: dims.to_vec(),
+            data: data.to_vec(),
+        }))
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        match &self.0 {
+            Repr::Array { ty, dims, .. } => Ok(Shape::Array(ArrayShape {
+                ty: *ty,
+                dims: dims.iter().map(|&d| d as i64).collect(),
+            })),
+            Repr::Tuple(xs) => Ok(Shape::Tuple(
+                xs.iter()
+                    .map(|x| x.shape())
+                    .collect::<Result<Vec<_>>>()?,
+            )),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.shape()? {
+            Shape::Array(s) => Ok(s),
+            Shape::Tuple(_) => Err(err("array_shape on a tuple literal")),
+        }
+    }
+
+    /// Logical byte size (sum over tuple elements).
+    pub fn size_bytes(&self) -> usize {
+        match &self.0 {
+            Repr::Array { data, .. } => data.len(),
+            Repr::Tuple(xs) => xs.iter().map(|x| x.size_bytes()).sum(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        let (ty, _, data) = self.as_array()?;
+        if ty != T::TY {
+            return Err(err(format!("to_vec: literal is {ty:?}")));
+        }
+        Ok(data.chunks_exact(4).map(T::from_le).collect())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let (ty, _, data) = self.as_array()?;
+        if ty != T::TY {
+            return Err(err(format!("get_first_element: literal is {ty:?}")));
+        }
+        if data.len() < 4 {
+            return Err(err("get_first_element: empty literal"));
+        }
+        Ok(T::from_le(data))
+    }
+
+    /// Split a tuple literal into its elements (leaves this literal as
+    /// an empty tuple).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match &mut self.0 {
+            Repr::Tuple(xs) => Ok(std::mem::take(xs)),
+            Repr::Array { .. } => {
+                Err(err("decompose_tuple on an array literal"))
+            }
+        }
+    }
+
+    fn as_array(&self) -> Result<(ElementType, &[usize], &[u8])> {
+        match &self.0 {
+            Repr::Array { ty, dims, data } => Ok((*ty, dims, data)),
+            Repr::Tuple(_) => Err(err("expected array literal, got tuple")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stub-HLO signatures
+// ---------------------------------------------------------------------------
+
+/// A parsed stub-HLO signature (stands in for a real `HloModuleProto`).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    name: String,
+    seed: u64,
+    acc: usize,
+    group: usize,
+    outs: Vec<(ElementType, Vec<usize>)>,
+}
+
+impl HloModuleProto {
+    /// Parse a stub-HLO signature file (format in the crate docs).
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(format!("reading {}: {e}", path.display())))?;
+        Self::parse(&text)
+            .map_err(|e| err(format!("{}: {}", path.display(), e.0)))
+    }
+
+    /// Parse stub-HLO signature text.
+    pub fn parse(text: &str) -> Result<HloModuleProto> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        match lines.next() {
+            Some("stub-hlo v1") => {}
+            other => {
+                return Err(err(format!(
+                    "expected 'stub-hlo v1' header, got {other:?}"
+                )))
+            }
+        }
+        let mut name = String::new();
+        let mut seed = 0u64;
+        let mut acc = 0usize;
+        let mut group = 0usize;
+        let mut outs = Vec::new();
+        for line in lines {
+            let mut it = line.split_whitespace();
+            let key = it.next().unwrap_or("");
+            let val = it.next().unwrap_or("");
+            if it.next().is_some() {
+                return Err(err(format!("trailing tokens in line '{line}'")));
+            }
+            match key {
+                "module" => name = val.to_string(),
+                "seed" => {
+                    seed = val
+                        .parse()
+                        .map_err(|e| err(format!("bad seed '{val}': {e}")))?
+                }
+                "acc" => {
+                    acc = val
+                        .parse()
+                        .map_err(|e| err(format!("bad acc '{val}': {e}")))?
+                }
+                "group" => {
+                    group = val
+                        .parse()
+                        .map_err(|e| err(format!("bad group '{val}': {e}")))?
+                }
+                "out" => outs.push(parse_out(val)?),
+                other => {
+                    return Err(err(format!("unknown directive '{other}'")))
+                }
+            }
+        }
+        if outs.is_empty() {
+            return Err(err("signature declares no outputs"));
+        }
+        if acc > 0 && group > 0 {
+            return Err(err("acc and group are mutually exclusive"));
+        }
+        if acc > 0 && outs.len() != acc {
+            return Err(err(format!(
+                "acc {} but {} declared outputs",
+                acc,
+                outs.len()
+            )));
+        }
+        Ok(HloModuleProto {
+            name,
+            seed,
+            acc,
+            group,
+            outs,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Parse an `out` operand like `f32[2,8,4]` or `s32[]` (scalar).
+fn parse_out(tok: &str) -> Result<(ElementType, Vec<usize>)> {
+    let open = tok
+        .find('[')
+        .ok_or_else(|| err(format!("missing '[' in out '{tok}'")))?;
+    if !tok.ends_with(']') {
+        return Err(err(format!("missing ']' in out '{tok}'")));
+    }
+    let ty = match &tok[..open] {
+        "f32" => ElementType::F32,
+        "s32" | "i32" => ElementType::S32,
+        other => return Err(err(format!("unsupported out dtype '{other}'"))),
+    };
+    let inner = &tok[open + 1..tok.len() - 1];
+    let dims = if inner.is_empty() {
+        Vec::new()
+    } else {
+        inner
+            .split(',')
+            .map(|d| {
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|e| err(format!("bad dim '{d}': {e}")))
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
+    Ok((ty, dims))
+}
+
+/// A computation built from a signature (mirrors
+/// `XlaComputation::from_proto` in the real crate).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            proto: proto.clone(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        self.proto.name()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client / buffers / executables
+// ---------------------------------------------------------------------------
+
+struct ClientInner {
+    platform: String,
+}
+
+/// One device context (`Rc`-based and single-threaded like the real
+/// crate's client — one per worker thread).
+#[derive(Clone)]
+pub struct PjRtClient {
+    inner: Rc<ClientInner>,
+}
+
+/// Placeholder device handle (`buffer_from_host_literal` takes
+/// `Option<&PjRtDevice>`; the stub has exactly one device).
+pub struct PjRtDevice;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient {
+            inner: Rc::new(ClientInner {
+                platform: "stub-cpu".to_string(),
+            }),
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.inner.platform.clone()
+    }
+
+    /// Upload a host literal to a device buffer (a copy, in the stub).
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer {
+            lit: literal.clone(),
+        })
+    }
+
+    /// "Compile" a computation: capture its signature for execution.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {
+            sig: comp.proto.clone(),
+            client: self.clone(),
+        })
+    }
+}
+
+/// A device-resident buffer (host bytes, in the stub).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// A compiled executable: runs the deterministic stub semantics of its
+/// signature.  Outputs come back as one tuple literal, matching the
+/// `return_tuple=True` convention of the AOT pipeline.
+pub struct PjRtLoadedExecutable {
+    sig: HloModuleProto,
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> PjRtClient {
+        self.client.clone()
+    }
+
+    /// Execute with device-resident inputs; one replica of outputs.
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(
+        &self,
+        args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let inputs: Vec<&Literal> =
+            args.iter().map(|b| &b.borrow().lit).collect();
+        let outs = execute_stub(&self.sig, &inputs)?;
+        Ok(vec![vec![PjRtBuffer {
+            lit: Literal(Repr::Tuple(outs)),
+        }]])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic stub semantics
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_bytes(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h = (*h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+}
+
+fn fnv_u64(h: &mut u64, x: u64) {
+    fnv_bytes(h, &x.to_le_bytes());
+}
+
+fn hash_literal(h: &mut u64, lit: &Literal) {
+    match &lit.0 {
+        Repr::Array { ty, dims, data } => {
+            fnv_bytes(h, &[ty.tag()]);
+            fnv_u64(h, dims.len() as u64);
+            for &d in dims {
+                fnv_u64(h, d as u64);
+            }
+            fnv_bytes(h, data);
+        }
+        Repr::Tuple(xs) => {
+            fnv_bytes(h, &[0xff]);
+            fnv_u64(h, xs.len() as u64);
+            for x in xs {
+                hash_literal(h, x);
+            }
+        }
+    }
+}
+
+fn hash_literals(lits: &[&Literal]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for lit in lits {
+        hash_literal(&mut h, lit);
+    }
+    h
+}
+
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PRNG seed for output `j` of a call whose relevant inputs hash to
+/// `h` — identical for `acc` and `group` modes, which is what makes a
+/// concatenated p2 call equal the per-microbatch loop bit for bit.
+fn out_seed(seed: u64, h: u64, j: usize) -> u64 {
+    let mut s = seed
+        ^ h.rotate_left(17)
+        ^ (j as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03);
+    splitmix(&mut s)
+}
+
+/// Uniform f32 in [-1, 1).
+fn unit_f32(x: u64) -> f32 {
+    ((x >> 40) as f32) / (1u32 << 24) as f32 * 2.0 - 1.0
+}
+
+/// Small integer-valued f32 in {-4, ..., 4}: exact under f32 addition
+/// in any order (the commutative-accumulation property).
+fn delta_f32(state: &mut u64) -> f32 {
+    (splitmix(state) % 9) as f32 - 4.0
+}
+
+fn execute_stub(
+    sig: &HloModuleProto,
+    inputs: &[&Literal],
+) -> Result<Vec<Literal>> {
+    if sig.acc > 0 {
+        execute_acc(sig, inputs)
+    } else if sig.group > 0 {
+        execute_group(sig, inputs)
+    } else {
+        execute_plain(sig, inputs)
+    }
+}
+
+/// Plain mode: fill each declared output from a PRNG seeded by the
+/// file seed, the hash of every input, and the output index.
+fn execute_plain(
+    sig: &HloModuleProto,
+    inputs: &[&Literal],
+) -> Result<Vec<Literal>> {
+    let h = hash_literals(inputs);
+    let mut outs = Vec::with_capacity(sig.outs.len());
+    for (j, (ty, dims)) in sig.outs.iter().enumerate() {
+        let n: usize = dims.iter().product();
+        let mut state = out_seed(sig.seed, h, j);
+        let mut data = Vec::with_capacity(n * 4);
+        match ty {
+            ElementType::F32 => {
+                for _ in 0..n {
+                    data.extend_from_slice(
+                        &unit_f32(splitmix(&mut state)).to_le_bytes(),
+                    );
+                }
+            }
+            ElementType::S32 => {
+                for _ in 0..n {
+                    let v = (splitmix(&mut state) % 16) as i32;
+                    data.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            other => {
+                return Err(err(format!(
+                    "{}: unsupported output dtype {other:?}",
+                    sig.name
+                )))
+            }
+        }
+        outs.push(Literal(Repr::Array {
+            ty: *ty,
+            dims: dims.clone(),
+            data,
+        }));
+    }
+    Ok(outs)
+}
+
+/// Accumulate mode: the last `acc` inputs are f32 accumulators; output
+/// j = accumulator j + integer delta derived from the other inputs.
+fn execute_acc(
+    sig: &HloModuleProto,
+    inputs: &[&Literal],
+) -> Result<Vec<Literal>> {
+    if inputs.len() < sig.acc {
+        return Err(err(format!(
+            "{}: {} inputs < {} accumulators",
+            sig.name,
+            inputs.len(),
+            sig.acc
+        )));
+    }
+    let split = inputs.len() - sig.acc;
+    let h = hash_literals(&inputs[..split]);
+    let mut outs = Vec::with_capacity(sig.acc);
+    for (j, lit) in inputs[split..].iter().enumerate() {
+        let (ty, dims, data) = lit.as_array()?;
+        if ty != ElementType::F32 {
+            return Err(err(format!(
+                "{}: accumulator {j} is {ty:?}, want F32",
+                sig.name
+            )));
+        }
+        if dims != sig.outs[j].1.as_slice() {
+            return Err(err(format!(
+                "{}: accumulator {j} shape {dims:?} != declared {:?}",
+                sig.name, sig.outs[j].1
+            )));
+        }
+        let mut state = out_seed(sig.seed, h, j);
+        let mut out = Vec::with_capacity(data.len());
+        for chunk in data.chunks_exact(4) {
+            let v = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            out.extend_from_slice(&(v + delta_f32(&mut state)).to_le_bytes());
+        }
+        outs.push(Literal(Repr::Array {
+            ty: ElementType::F32,
+            dims: dims.to_vec(),
+            data: out,
+        }));
+    }
+    Ok(outs)
+}
+
+/// Grouped-sum mode: inputs arrive as consecutive groups of `group`
+/// literals; each output sums one delta per group (seeded identically
+/// to `acc` mode on the same group contents).
+fn execute_group(
+    sig: &HloModuleProto,
+    inputs: &[&Literal],
+) -> Result<Vec<Literal>> {
+    if inputs.is_empty() || inputs.len() % sig.group != 0 {
+        return Err(err(format!(
+            "{}: {} inputs not a positive multiple of group {}",
+            sig.name,
+            inputs.len(),
+            sig.group
+        )));
+    }
+    let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(sig.outs.len());
+    for (ty, dims) in &sig.outs {
+        if *ty != ElementType::F32 {
+            return Err(err(format!(
+                "{}: group outputs must be f32, got {ty:?}",
+                sig.name
+            )));
+        }
+        bufs.push(vec![0f32; dims.iter().product()]);
+    }
+    for group in inputs.chunks(sig.group) {
+        let h = hash_literals(group);
+        for (j, buf) in bufs.iter_mut().enumerate() {
+            let mut state = out_seed(sig.seed, h, j);
+            for v in buf.iter_mut() {
+                *v += delta_f32(&mut state);
+            }
+        }
+    }
+    let outs = sig
+        .outs
+        .iter()
+        .zip(bufs)
+        .map(|((_, dims), buf)| {
+            let mut data = Vec::with_capacity(buf.len() * 4);
+            for v in buf {
+                data.extend_from_slice(&v.to_le_bytes());
+            }
+            Literal(Repr::Array {
+                ty: ElementType::F32,
+                dims: dims.clone(),
+                data,
+            })
+        })
+        .collect();
+    Ok(outs)
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(text: &str) -> HloModuleProto {
+        HloModuleProto::parse(text).expect("parse")
+    }
+
+    fn f32_lit(dims: &[usize], vals: &[f32]) -> Literal {
+        let mut data = Vec::new();
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            dims,
+            &data,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_signature() {
+        let s = sig("stub-hlo v1\nmodule t/fwd\nseed 7\nout f32[2,3]\nout s32[]\n");
+        assert_eq!(s.name(), "t/fwd");
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.outs.len(), 2);
+        assert_eq!(s.outs[0], (ElementType::F32, vec![2, 3]));
+        assert_eq!(s.outs[1], (ElementType::S32, vec![]));
+    }
+
+    #[test]
+    fn rejects_bad_signatures() {
+        assert!(HloModuleProto::parse("not a header\n").is_err());
+        assert!(HloModuleProto::parse("stub-hlo v1\n").is_err());
+        assert!(HloModuleProto::parse(
+            "stub-hlo v1\nacc 1\ngroup 2\nout f32[1]\n"
+        )
+        .is_err());
+        assert!(HloModuleProto::parse(
+            "stub-hlo v1\nacc 2\nout f32[1]\n"
+        )
+        .is_err());
+        assert!(HloModuleProto::parse("stub-hlo v1\nout f99[1]\n").is_err());
+    }
+
+    #[test]
+    fn plain_outputs_are_shape_correct_and_deterministic() {
+        let s = sig("stub-hlo v1\nseed 3\nout f32[2,4]\nout s32[3]\n");
+        let x = f32_lit(&[2], &[1.0, 2.0]);
+        let a = execute_stub(&s, &[&x]).unwrap();
+        let b = execute_stub(&s, &[&x]).unwrap();
+        assert_eq!(a[0].to_vec::<f32>().unwrap(), b[0].to_vec::<f32>().unwrap());
+        assert_eq!(a[0].array_shape().unwrap().dims(), &[2, 4]);
+        assert_eq!(a[1].to_vec::<i32>().unwrap().len(), 3);
+        assert!(a[1].to_vec::<i32>().unwrap().iter().all(|v| (0..16).contains(v)));
+        // different input -> different output
+        let y = f32_lit(&[2], &[1.0, 3.0]);
+        let c = execute_stub(&s, &[&y]).unwrap();
+        assert_ne!(a[0].to_vec::<f32>().unwrap(), c[0].to_vec::<f32>().unwrap());
+    }
+
+    #[test]
+    fn acc_mode_is_order_independent() {
+        let s = sig("stub-hlo v1\nseed 11\nacc 1\nout f32[4]\n");
+        let a = f32_lit(&[3], &[1.0, 2.0, 3.0]);
+        let b = f32_lit(&[3], &[4.0, 5.0, 6.0]);
+        let zero = f32_lit(&[4], &[0.0; 4]);
+        let apply = |acc: &Literal, x: &Literal| -> Literal {
+            execute_stub(&s, &[x, acc]).unwrap().remove(0)
+        };
+        let ab = apply(&apply(&zero, &a), &b);
+        let ba = apply(&apply(&zero, &b), &a);
+        assert_eq!(ab.to_vec::<f32>().unwrap(), ba.to_vec::<f32>().unwrap());
+    }
+
+    #[test]
+    fn group_mode_equals_acc_loop() {
+        let loop_sig = sig("stub-hlo v1\nseed 5\nacc 1\nout f32[4]\n");
+        let cat_sig = sig("stub-hlo v1\nseed 5\ngroup 1\nout f32[4]\n");
+        let a = f32_lit(&[3], &[1.0, 2.0, 3.0]);
+        let b = f32_lit(&[3], &[4.0, 5.0, 6.0]);
+        let zero = f32_lit(&[4], &[0.0; 4]);
+        let step1 = execute_stub(&loop_sig, &[&a, &zero]).unwrap().remove(0);
+        let looped = execute_stub(&loop_sig, &[&b, &step1]).unwrap().remove(0);
+        let grouped = execute_stub(&cat_sig, &[&a, &b]).unwrap().remove(0);
+        assert_eq!(
+            looped.to_vec::<f32>().unwrap(),
+            grouped.to_vec::<f32>().unwrap()
+        );
+    }
+
+    #[test]
+    fn client_compile_execute_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("xla-stub-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.hlo.txt");
+        std::fs::write(&path, "stub-hlo v1\nmodule t\nseed 1\nout f32[2,2]\nout s32[2]\n")
+            .unwrap();
+        let proto = HloModuleProto::from_text_file(&path).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-cpu");
+        let exe = client.compile(&comp).unwrap();
+        let input = Literal::scalar(42i32);
+        let buf = client.buffer_from_host_literal(None, &input).unwrap();
+        let mut replicas = exe.execute_b(&[buf]).unwrap();
+        let mut tuple = replicas.remove(0).remove(0).to_literal_sync().unwrap();
+        assert!(matches!(tuple.shape().unwrap(), Shape::Tuple(_)));
+        let parts = tuple.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(parts[0].size_bytes(), 16);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_literals_and_scalars() {
+        let z = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        assert_eq!(z.size_bytes(), 24);
+        assert!(z.to_vec::<f32>().unwrap().iter().all(|&v| v == 0.0));
+        let s = Literal::scalar(1.5f32);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 1.5);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        let i = Literal::scalar(-7i32);
+        assert_eq!(i.get_first_element::<i32>().unwrap(), -7);
+    }
+
+    #[test]
+    fn untyped_data_size_checked() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0u8; 7]
+        )
+        .is_err());
+    }
+}
