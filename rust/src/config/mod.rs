@@ -4,9 +4,9 @@
 //! which owns the model hyperparameters; this side owns the *run*
 //! parameters and resolves artifact locations).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::schedule::ScheduleKind;
 use crate::util::args::Args;
@@ -99,6 +99,75 @@ impl RunConfig {
     }
 }
 
+/// Configuration of the measured-cost calibration loop (`twobp tune
+/// --synthetic` / `--manifest <preset-dir>`): how many executor steps
+/// to calibrate on, and how many to execute the tuned winner for.
+#[derive(Debug, Clone)]
+pub struct CalibConfig {
+    /// Tune on an in-process skewed synthetic preset
+    /// (`models::synthetic::SyntheticSpec::skewed`) — no artifacts
+    /// needed, fully offline against the stub backend.
+    pub synthetic: bool,
+    /// Explicit preset directory (`<artifacts-root>/<preset>`) to
+    /// calibrate against instead.
+    pub manifest_dir: Option<PathBuf>,
+    /// Calibration steps under the contention-free naive schedule
+    /// (clamped to at least 2 so per-op means have >= 2 samples).
+    pub calib_steps: usize,
+    /// Steps to execute the tuned winner for (predicted-vs-executed).
+    pub exec_steps: usize,
+    pub seed: u64,
+}
+
+impl CalibConfig {
+    /// Build from `twobp tune` args; errors unless exactly one of
+    /// `--synthetic` / `--manifest <dir>` selects the cost source.
+    pub fn from_args(args: &Args) -> Result<CalibConfig> {
+        let synthetic = args.has("synthetic");
+        let manifest_dir = args.get("manifest").map(PathBuf::from);
+        if synthetic && manifest_dir.is_some() {
+            bail!(
+                "--synthetic generates its own preset; drop --manifest \
+                 (or drop --synthetic to calibrate on real artifacts)"
+            );
+        }
+        if !synthetic && manifest_dir.is_none() {
+            bail!(
+                "measured-cost tuning needs a cost source: --synthetic \
+                 or --manifest <preset-dir>"
+            );
+        }
+        Ok(CalibConfig {
+            synthetic,
+            manifest_dir,
+            calib_steps: args.get_usize("calib-steps", 2).max(2),
+            exec_steps: args.get_usize("steps", 2).max(1),
+            seed: args.get_usize("seed", 0) as u64,
+        })
+    }
+
+    /// Split a `--manifest <artifacts-root>/<preset>` path into the
+    /// (artifacts root, preset name) pair `Manifest::load` expects.
+    pub fn split_manifest(dir: &Path) -> Result<(PathBuf, String)> {
+        let preset = dir
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| {
+                anyhow!(
+                    "--manifest needs a preset directory path, got {}",
+                    dir.display()
+                )
+            })?
+            .to_string();
+        let root = match dir.parent() {
+            Some(p) if p.as_os_str().is_empty() => PathBuf::from("."),
+            Some(p) => p.to_path_buf(),
+            None => PathBuf::from("."),
+        };
+        Ok((root, preset))
+    }
+}
+
 /// The four benchmark models of the paper's Fig 3/4, in CPU-scale form.
 pub const BENCH_PRESETS: [&str; 4] =
     ["transformer-s", "bert-s", "mamba-s", "resnet-s"];
@@ -149,6 +218,38 @@ mod tests {
     fn rejects_bad_schedule() {
         let args = Args::parse(&sv(&["--schedule", "zigzag"]), &[]);
         assert!(RunConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn calib_config_needs_exactly_one_source() {
+        let flags = ["synthetic"];
+        let none = Args::parse(&sv(&[]), &flags);
+        assert!(CalibConfig::from_args(&none).is_err());
+        let synth = Args::parse(
+            &sv(&["--synthetic", "--calib-steps", "1", "--steps", "3"]),
+            &flags,
+        );
+        let c = CalibConfig::from_args(&synth).unwrap();
+        assert!(c.synthetic);
+        assert_eq!(c.calib_steps, 2, "clamped to >= 2 samples");
+        assert_eq!(c.exec_steps, 3);
+        let both = Args::parse(
+            &sv(&["--synthetic", "--manifest", "artifacts/x"]),
+            &flags,
+        );
+        assert!(CalibConfig::from_args(&both).is_err());
+        let man = Args::parse(&sv(&["--manifest", "artifacts/bert-s"]),
+                              &flags);
+        let c = CalibConfig::from_args(&man).unwrap();
+        assert!(!c.synthetic);
+        let (root, preset) =
+            CalibConfig::split_manifest(c.manifest_dir.as_ref().unwrap())
+                .unwrap();
+        assert_eq!(root, PathBuf::from("artifacts"));
+        assert_eq!(preset, "bert-s");
+        let bare = CalibConfig::split_manifest(Path::new("solo")).unwrap();
+        assert_eq!(bare.0, PathBuf::from("."));
+        assert_eq!(bare.1, "solo");
     }
 
     #[test]

@@ -23,7 +23,12 @@
 //! produce reproducible seeded outputs of the right shape/dtype, so the
 //! whole executor builds, tests, and smokes end to end (`twobp train
 //! --synthetic`, generating a manifest in-process via
-//! `models::synthetic`) with no Python artifacts and no network.  To
+//! `models::synthetic`) with no Python artifacts and no network.  The
+//! stub's `cost` busy-delay directive even makes *measured-cost
+//! calibration* physically meaningful offline: `twobp tune --synthetic`
+//! measures real per-stage op costs on the executor, tunes the planner
+//! against them, and executes the winning schedule back
+//! (executor→planner→executor, predicted-vs-executed makespan).  To
 //! run on real hardware, vendor the actual `xla` PJRT crate in the
 //! stub's place — it mirrors that API surface, so no source changes are
 //! needed.  Without the feature the simulator / schedule / planner core

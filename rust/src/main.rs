@@ -13,8 +13,13 @@
 //! twobp tune     [--ranks N] [--budget 4.5G] [--beam K] [--gens G]
 //!                [--seed S] [--fwd F --p1 X --p2 Y --comm C]
 //!                [--out FILE.plan] [--gantt] [--threads K]
-//! twobp bench    <table1|fig1|synthetic|fig3|fig4|fig5|table3|fig6|fig7
-//!                 |ckpt|sweep|planner> [--steps N]
+//!                [--synthetic | --manifest DIR]  (measured-cost
+//!                 calibration loop: calibrate on the executor, tune
+//!                 against measured costs, execute the winner back and
+//!                 report predicted-vs-executed makespan; pjrt feature.
+//!                 [--calib-steps N] [--steps N] apply there)
+//! twobp bench    <table1|fig1|synthetic|tune-calibrated|fig3|fig4|fig5
+//!                 |table3|fig6|fig7|ckpt|sweep|planner> [--steps N]
 //! twobp config   --list
 //! ```
 //!
@@ -24,7 +29,7 @@
 use anyhow::{anyhow, Result};
 
 use twobp::config::table2;
-use twobp::planner::{tune, BeamConfig, TuneProfile};
+use twobp::planner::{tune, BeamConfig, TuneProfile, TuneReport};
 use twobp::schedule::{generate, plan_io, validate::validate, ScheduleKind};
 use twobp::sim::{simulate, CostModel};
 use twobp::util::args::Args;
@@ -262,32 +267,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Memory-constrained schedule auto-tuning (the `planner/` subsystem):
-/// beam-search the legal-plan space for the best-throughput schedule
-/// whose per-rank peak fits `--budget`.  Profile defaults to the
-/// LLaMa-like one; `--fwd/--p1/--p2/--comm` override the cost shape.
-fn cmd_tune(args: &Args) -> Result<()> {
-    let n = args.get_usize("ranks", 4);
+/// Beam-search hyper-parameters from the shared `twobp tune` flags
+/// (used by both the ratio-profile and calibrated paths).
+fn beam_config_from_args(args: &Args) -> Result<BeamConfig> {
     let budget = match args.get("budget") {
         Some(s) => Some(parse_bytes(s).map_err(|e| anyhow!(e))?),
         None => None,
     };
-    let custom_costs = ["fwd", "p1", "p2", "comm"]
-        .iter()
-        .any(|k| args.get(k).is_some());
-    let profile = if custom_costs {
-        TuneProfile::from_ratios(
-            n,
-            args.get_f64("fwd", 1.0),
-            args.get_f64("p1", 1.05),
-            args.get_f64("p2", 0.95),
-            args.get_f64("comm", 0.05),
-        )
-    } else {
-        TuneProfile::llama_like(n)
-    };
     let defaults = BeamConfig::default();
-    let cfg = BeamConfig {
+    Ok(BeamConfig {
         beam_width: args.get_usize("beam", defaults.beam_width),
         generations: args.get_usize("gens", defaults.generations),
         mutations_per_parent: args
@@ -297,18 +285,32 @@ fn cmd_tune(args: &Args) -> Result<()> {
         threads: args.get_usize("threads", 0),
         budget_bytes: budget,
         patience: args.get_usize("patience", defaults.patience),
-    };
-    let report = tune(&profile, n, &cfg).map_err(|e| anyhow!(e))?;
+    })
+}
 
-    println!(
-        "planner: profile {}, {} ranks, budget {}/rank",
-        report.profile_name,
-        report.n_ranks,
-        report
-            .budget_bytes
-            .map(fmt_bytes)
-            .unwrap_or_else(|| "unconstrained".into()),
-    );
+/// Shared `--out` / `--gantt` tail of both `twobp tune` paths: write
+/// the winner's `.plan` text and/or render its timeline under `costs`.
+fn winner_outputs(
+    args: &Args,
+    text: &str,
+    plan: &twobp::Plan,
+    costs: &CostModel,
+) -> Result<()> {
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, text)
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("wrote winner to {path} (render: twobp gantt --plan {path})");
+    }
+    if args.has("gantt") {
+        let res = simulate(plan, costs, None).map_err(|e| anyhow!("{e}"))?;
+        print!("{}", gantt::render(&res.spans, args.get_usize("cols", 96)));
+    }
+    Ok(())
+}
+
+/// Print the search-effort / winner / named-best block shared by every
+/// `twobp tune` profile source.
+fn print_search_summary(report: &TuneReport, cfg: &BeamConfig) {
     println!(
         "  evaluated {} candidates over {} generations \
          ({} over budget, {} sim-rejected; beam {}, seed {})",
@@ -345,18 +347,174 @@ fn cmd_tune(args: &Args) -> Result<()> {
              (the winner is planner-built)"
         ),
     }
+}
 
-    if let Some(path) = args.get("out") {
-        std::fs::write(path, &best.text)
-            .map_err(|e| anyhow!("writing {path}: {e}"))?;
-        println!("wrote winner to {path} (render: twobp gantt --plan {path})");
+/// Memory-constrained schedule auto-tuning (the `planner/` subsystem):
+/// beam-search the legal-plan space for the best-throughput schedule
+/// whose per-rank peak fits `--budget`.  Profile defaults to the
+/// LLaMa-like one; `--fwd/--p1/--p2/--comm` override the cost shape;
+/// `--synthetic` / `--manifest <preset-dir>` switch to the
+/// measured-cost calibration loop instead (pjrt feature).
+fn cmd_tune(args: &Args) -> Result<()> {
+    if args.has("synthetic") || args.get("manifest").is_some() {
+        // measured-cost mode: rank count and cost shape come from the
+        // manifest + calibration, so the ratio-profile flags would be
+        // silently ignored — reject the conflict instead
+        for k in ["ranks", "fwd", "p1", "p2", "comm"] {
+            if args.get(k).is_some() {
+                return Err(anyhow!(
+                    "--{k} sets the hand-tuned ratio profile, but \
+                     --synthetic/--manifest tune against *measured* \
+                     costs (rank count and cost shape come from the \
+                     manifest); drop --{k}"
+                ));
+            }
+        }
+        return cmd_tune_calibrated(args);
     }
-    if args.has("gantt") {
-        let res = simulate(&best.plan, &profile.costs, None)
-            .map_err(|e| anyhow!("{e}"))?;
-        print!("{}", gantt::render(&res.spans, args.get_usize("cols", 96)));
+    let n = args.get_usize("ranks", 4);
+    let custom_costs = ["fwd", "p1", "p2", "comm"]
+        .iter()
+        .any(|k| args.get(k).is_some());
+    let profile = if custom_costs {
+        TuneProfile::from_ratios(
+            n,
+            args.get_f64("fwd", 1.0),
+            args.get_f64("p1", 1.05),
+            args.get_f64("p2", 0.95),
+            args.get_f64("comm", 0.05),
+        )
+    } else {
+        TuneProfile::llama_like(n)
+    };
+    let cfg = beam_config_from_args(args)?;
+    let report = tune(&profile, n, &cfg).map_err(|e| anyhow!(e))?;
+
+    println!(
+        "planner: profile {}, {} ranks, budget {}/rank",
+        report.profile_name,
+        report.n_ranks,
+        report
+            .budget_bytes
+            .map(fmt_bytes)
+            .unwrap_or_else(|| "unconstrained".into()),
+    );
+    print_search_summary(&report, &cfg);
+    winner_outputs(args, &report.best.text, &report.best.plan,
+                   &profile.costs)
+}
+
+/// The measured-cost calibration loop (`twobp tune --synthetic` /
+/// `--manifest <preset-dir>`): run contention-free calibration steps on
+/// the real executor, derive a measured [`TuneProfile`] from
+/// `RunReport::measured_costs` + the manifest byte classes, beam-search
+/// against it, then execute the winning plan back on the executor
+/// (verified against the simulator) and report predicted-vs-executed
+/// makespan.
+#[cfg(feature = "pjrt")]
+fn cmd_tune_calibrated(args: &Args) -> Result<()> {
+    use twobp::config::{CalibConfig, RunConfig};
+    use twobp::experiments::tune_and_execute;
+    use twobp::models::Manifest;
+    use twobp::pipeline::Cluster;
+    use twobp::util::stats::fmt_duration;
+
+    let calib = CalibConfig::from_args(args)?;
+    let beam_cfg = beam_config_from_args(args)?;
+
+    let run_loop = |root: &std::path::Path,
+                    preset: &str,
+                    manifest: &Manifest|
+     -> Result<()> {
+        let base = RunConfig {
+            preset: preset.to_string(),
+            artifacts: root.to_path_buf(),
+            steps: calib.calib_steps,
+            n_microbatches: manifest.n_stages,
+            seed: calib.seed,
+            ..RunConfig::default()
+        };
+        let cluster = Cluster::new(&base)?;
+        let (costs, _calib_report) = cluster.calibrate(&base)?;
+        println!(
+            "calibration ({} naive steps on {preset}): measured \
+             per-stage costs",
+            base.steps,
+        );
+        for r in 0..costs.fwd.len() {
+            println!(
+                "  stage {r}: fwd {:8.3}ms  p1 {:8.3}ms  p2 {:8.3}ms  \
+                 opt {:8.3}ms",
+                costs.fwd[r] * 1e3,
+                costs.p1[r] * 1e3,
+                costs.p2[r] * 1e3,
+                costs.opt[r] * 1e3,
+            );
+        }
+        println!("  loss (last rank): {:.3}ms", costs.loss * 1e3);
+        let profile = TuneProfile::from_measured(
+            format!("measured:{preset}"),
+            costs,
+            manifest.mem_model(),
+            manifest.samples_per_microbatch,
+        )
+        .map_err(|e| anyhow!(e))?;
+        println!(
+            "planner: profile {}, {} ranks, budget {}/rank",
+            profile.name,
+            manifest.n_stages,
+            beam_cfg
+                .budget_bytes
+                .map(fmt_bytes)
+                .unwrap_or_else(|| "unconstrained".into()),
+        );
+        // the winner executes under the same seed/data stream the
+        // calibration measured; only the step count differs
+        let exec_cfg = RunConfig { steps: calib.exec_steps, ..base.clone() };
+        let ct = tune_and_execute(&cluster, manifest, &profile, &beam_cfg,
+                                  &exec_cfg)?;
+        print_search_summary(&ct.report, &beam_cfg);
+        println!(
+            "winner executed back on the runtime for {} steps, verified \
+             against the simulator (op order + byte-exact memory)",
+            calib.exec_steps,
+        );
+        println!(
+            "  predicted step makespan {} | executed {} | \
+             executed/predicted {:.2}",
+            fmt_duration(ct.predicted_makespan),
+            fmt_duration(ct.executed_makespan),
+            ct.executed_makespan / ct.predicted_makespan.max(1e-12),
+        );
+        winner_outputs(args, &ct.report.best.text, &ct.report.best.plan,
+                       &profile.costs)
+    };
+
+    if calib.synthetic {
+        let spec = twobp::models::synthetic::SyntheticSpec::skewed();
+        twobp::models::synthetic::with_temp_artifacts(
+            "tune-synth",
+            &spec,
+            |root, manifest| run_loop(root, &spec.preset, manifest),
+        )
+    } else {
+        let dir = calib
+            .manifest_dir
+            .clone()
+            .expect("CalibConfig::from_args guarantees a source");
+        let (root, preset) = CalibConfig::split_manifest(&dir)?;
+        let manifest = Manifest::load(&root, &preset)?;
+        run_loop(&root, &preset, &manifest)
     }
-    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_tune_calibrated(_args: &Args) -> Result<()> {
+    Err(anyhow!(
+        "`twobp tune --synthetic/--manifest` calibrates on the real \
+         runtime; rebuild with `--features pjrt` (built offline against \
+         the vendored stub backend in vendor/xla-stub)"
+    ))
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {

@@ -270,13 +270,20 @@ impl Manifest {
     /// Simulator cost model from the manifest's XLA flops estimates,
     /// normalized so the mean fwd cost is 1.0 (relative shape is what
     /// matters; calibrate absolute scale with measured seconds/flop).
+    /// Normalization divides by the **true** mean fwd flops, whatever
+    /// its magnitude — only a degenerate non-positive mean (all flops
+    /// missing or zero) falls back to unit scale.  (Clamping the mean
+    /// up to 1.0, as this once did, silently left every manifest with
+    /// sub-1.0 mean fwd flops — e.g. tiny synthetic presets —
+    /// *unnormalized*.)
     pub fn cost_model_from_flops(&self, comm: f64) -> crate::sim::CostModel {
         let f: Vec<f64> = self
             .stages
             .iter()
             .map(|s| s.fwd.flops.unwrap_or(1.0))
             .collect();
-        let scale = 1.0 / (f.iter().sum::<f64>() / f.len() as f64).max(1.0);
+        let mean = f.iter().sum::<f64>() / f.len() as f64;
+        let scale = if mean > 0.0 { 1.0 / mean } else { 1.0 };
         let get = |sel: fn(&StageInfo) -> &Artifact| -> Vec<f64> {
             self.stages
                 .iter()
@@ -352,6 +359,46 @@ mod tests {
         let cm = m.cost_model_from_flops(0.0);
         assert!((cm.fwd[0] - 1.0).abs() < 1e-12);
         assert!((cm.p1[0] - 1.1).abs() < 1e-12);
+    }
+
+    /// Regression: manifests whose mean fwd flops are below 1.0 used to
+    /// escape normalization entirely (the scale denominator was clamped
+    /// with `.max(1.0)`); the relative cost *shape* must be identical no
+    /// matter the absolute flops magnitude.
+    #[test]
+    fn cost_model_normalizes_sub_unit_flops_manifests() {
+        let tiny = SAMPLE
+            .replace("\"flops\": 100", "\"flops\": 0.100")
+            .replace("\"flops\": 110", "\"flops\": 0.110")
+            .replace("\"flops\": 90", "\"flops\": 0.090")
+            .replace("\"flops\": 360", "\"flops\": 0.360")
+            .replace("\"flops\": 7", "\"flops\": 0.007")
+            .replace("\"flops\": 5", "\"flops\": 0.005");
+        let v = Json::parse(&tiny).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/x")).unwrap();
+        let cm = m.cost_model_from_flops(0.0);
+        // mean fwd == 1.0 even though the raw mean flops are 0.1
+        assert!((cm.fwd[0] - 1.0).abs() < 1e-12, "fwd {}", cm.fwd[0]);
+        assert!((cm.p1[0] - 1.1).abs() < 1e-12, "p1 {}", cm.p1[0]);
+        assert!((cm.p2[0] - 0.9).abs() < 1e-12, "p2 {}", cm.p2[0]);
+        assert!((cm.loss - 0.07).abs() < 1e-12, "loss {}", cm.loss);
+        // and the shape matches the full-size manifest's exactly
+        let big = Manifest::from_json(&Json::parse(SAMPLE).unwrap(),
+                                      Path::new("/tmp/x"))
+            .unwrap()
+            .cost_model_from_flops(0.0);
+        for (a, b) in cm.fwd.iter().zip(&big.fwd) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // degenerate all-zero flops fall back to unit scale, not NaN/inf
+        let zeroed = SAMPLE
+            .replace("\"flops\": 100", "\"flops\": 0")
+            .replace("\"flops\": 110", "\"flops\": 0");
+        let v = Json::parse(&zeroed).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/x")).unwrap();
+        let cm = m.cost_model_from_flops(0.0);
+        assert!(cm.fwd[0].is_finite());
+        assert_eq!(cm.fwd[0], 0.0);
     }
 
     #[test]

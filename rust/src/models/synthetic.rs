@@ -48,6 +48,21 @@ pub struct SyntheticSpec {
     pub concat_m: usize,
     /// Base seed every stub executable's seed derives from.
     pub seed: u64,
+    /// Per-stage hidden widths (non-uniform stage *shapes*): stage `i`
+    /// computes in width `hidden_per_stage[i]`, taking its input at
+    /// stage `i-1`'s width, so the pipeline still wires up.  Empty =
+    /// uniform `hidden` everywhere (the classic tiny spec).
+    pub hidden_per_stage: Vec<usize>,
+    /// Per-stage flops multipliers for the manifest's cost entries.
+    /// Empty = the mild default ramp `1 + i/4`.
+    pub stage_cost_scale: Vec<f64>,
+    /// Nanoseconds of stub busy-delay per declared flop (the stub's
+    /// `cost` directive).  0 = no cost lines: ops run as fast as the
+    /// stub computes, and measured timings reflect only overhead.
+    /// Non-zero makes measured per-op costs *proportional to the
+    /// manifest flops*, which is what gives measured-cost calibration
+    /// (`twobp tune --synthetic`) real per-stage skew to find.
+    pub cost_ns_per_flop: f64,
 }
 
 impl Default for SyntheticSpec {
@@ -61,6 +76,9 @@ impl Default for SyntheticSpec {
             vocab: 16,
             concat_m: 4,
             seed: 0x2B9_57AB,
+            hidden_per_stage: Vec::new(),
+            stage_cost_scale: Vec::new(),
+            cost_ns_per_flop: 0.0,
         }
     }
 }
@@ -69,6 +87,43 @@ impl SyntheticSpec {
     /// The default tiny 4-stage pipeline used by CI and the tests.
     pub fn tiny() -> SyntheticSpec {
         SyntheticSpec::default()
+    }
+
+    /// A deliberately depth-imbalanced pipeline for measured-cost
+    /// calibration: per-stage flops skewed up to 4x (with matching
+    /// non-uniform hidden widths), and every op carrying a stub `cost`
+    /// busy-delay proportional to its flops — so `measured_costs()` on
+    /// a real run recovers the manifest's cost shape from wall time,
+    /// not from metadata.  Op costs sit in the 1–10 ms range: long
+    /// enough to dominate stub compute/dispatch overhead (~tens of µs),
+    /// short enough that calibration + winner replay stay a sub-minute
+    /// CI smoke.
+    pub fn skewed() -> SyntheticSpec {
+        SyntheticSpec {
+            preset: "synthetic-skewed".to_string(),
+            hidden_per_stage: vec![6, 16, 8, 12],
+            stage_cost_scale: vec![1.0, 4.0, 2.0, 3.0],
+            cost_ns_per_flop: 12_000.0,
+            ..SyntheticSpec::default()
+        }
+    }
+
+    /// Stage `i`'s hidden width.
+    fn stage_hidden(&self, i: usize) -> usize {
+        self.hidden_per_stage.get(i).copied().unwrap_or(self.hidden)
+    }
+
+    /// Stage `i`'s flops multiplier.
+    fn cost_scale(&self, i: usize) -> f64 {
+        self.stage_cost_scale
+            .get(i)
+            .copied()
+            .unwrap_or(1.0 + i as f64 * 0.25)
+    }
+
+    /// Stub `cost` directive (ns) for an op of `flops` declared flops.
+    fn cost_ns(&self, flops: f64) -> u64 {
+        (flops * self.cost_ns_per_flop) as u64
     }
 }
 
@@ -126,6 +181,7 @@ fn dtype_tok(dt: DType) -> &'static str {
 }
 
 /// Write one stub-HLO signature file.
+#[allow(clippy::too_many_arguments)]
 fn write_stub(
     dir: &Path,
     file: &str,
@@ -133,6 +189,7 @@ fn write_stub(
     seed: u64,
     acc: usize,
     group: usize,
+    cost_ns: u64,
     outs: &[(DType, Vec<usize>)],
 ) -> Result<()> {
     let mut text = String::from("stub-hlo v1\n");
@@ -143,6 +200,9 @@ fn write_stub(
     }
     if group > 0 {
         text.push_str(&format!("group {group}\n"));
+    }
+    if cost_ns > 0 {
+        text.push_str(&format!("cost {cost_ns}\n"));
     }
     for (dt, shape) in outs {
         let dims = shape
@@ -162,22 +222,34 @@ fn write_stub(
 /// built-in self check) and return it.
 pub fn write_artifacts(root: &Path, spec: &SyntheticSpec) -> Result<Manifest> {
     assert!(spec.n_stages >= 1, "need at least one stage");
+    assert!(
+        spec.hidden_per_stage.is_empty()
+            || spec.hidden_per_stage.len() == spec.n_stages,
+        "hidden_per_stage must be empty or one width per stage"
+    );
+    assert!(
+        spec.stage_cost_scale.is_empty()
+            || spec.stage_cost_scale.len() == spec.n_stages,
+        "stage_cost_scale must be empty or one multiplier per stage"
+    );
     let dir = root.join(&spec.preset);
     std::fs::create_dir_all(&dir)
         .with_context(|| format!("creating {}", dir.display()))?;
 
-    let (n, b, s, h, v) = (spec.n_stages, spec.batch, spec.seq, spec.hidden,
-                           spec.vocab);
-    let hid = vec![b, s, h];
+    let (n, b, s, v) = (spec.n_stages, spec.batch, spec.seq, spec.vocab);
     type Spec<'a> = (Option<&'a str>, DType, Vec<usize>);
 
     let mut stage_objs: Vec<String> = Vec::with_capacity(n);
     for i in 0..n {
         let last = i == n - 1;
+        // stage i computes in its own width; its input arrives at the
+        // upstream stage's width (non-uniform shapes still wire up)
+        let h = spec.stage_hidden(i);
+        let hid = vec![b, s, h];
         let input: Spec = if i == 0 {
             (None, DType::I32, vec![b, s])
         } else {
-            (None, DType::F32, hid.clone())
+            (None, DType::F32, vec![b, s, spec.stage_hidden(i - 1)])
         };
         let output: Spec = if last {
             (None, DType::F32, vec![b, s, v])
@@ -217,23 +289,34 @@ pub fn write_artifacts(root: &Path, spec: &SyntheticSpec) -> Result<Manifest> {
         opt_outs.extend(param_outs.clone());
         let group = res2.len() + inter.len();
 
+        // flops vary per stage so the derived cost model is non-uniform,
+        // like a real depth-imbalanced pipeline; with a non-zero
+        // cost_ns_per_flop the stub files carry matching `cost`
+        // busy-delays, so *measured* costs reflect the same skew
+        let scale = spec.cost_scale(i);
+        let (fwd_fl, p1_fl, p2_fl, opt_fl) =
+            (100.0 * scale, 110.0 * scale, 90.0 * scale, 5.0 * scale);
+        let p2c_fl = p2_fl * spec.concat_m as f64;
+
         let m = |role: &str| format!("{}/s{i}_{role}", spec.preset);
         write_stub(&dir, &format!("s{i}_init.hlo.txt"), &m("init"),
-                   file_seed(spec.seed, i, 1), 0, 0, &param_outs)?;
+                   file_seed(spec.seed, i, 1), 0, 0, 0, &param_outs)?;
         write_stub(&dir, &format!("s{i}_fwd.hlo.txt"), &m("fwd"),
-                   file_seed(spec.seed, i, 2), 0, 0, &fwd_outs)?;
+                   file_seed(spec.seed, i, 2), 0, 0, spec.cost_ns(fwd_fl),
+                   &fwd_outs)?;
         write_stub(&dir, &format!("s{i}_p1.hlo.txt"), &m("p1"),
-                   file_seed(spec.seed, i, 3), 0, 0, &p1_outs)?;
+                   file_seed(spec.seed, i, 3), 0, 0, spec.cost_ns(p1_fl),
+                   &p1_outs)?;
         write_stub(&dir, &format!("s{i}_p2.hlo.txt"), &m("p2"),
-                   file_seed(spec.seed, i, 4), grad_outs.len(), 0, &grad_outs)?;
+                   file_seed(spec.seed, i, 4), grad_outs.len(), 0,
+                   spec.cost_ns(p2_fl), &grad_outs)?;
         write_stub(&dir, &format!("s{i}_p2c.hlo.txt"), &m("p2c"),
-                   file_seed(spec.seed, i, 4), 0, group, &grad_outs)?;
+                   file_seed(spec.seed, i, 4), 0, group,
+                   spec.cost_ns(p2c_fl), &grad_outs)?;
         write_stub(&dir, &format!("s{i}_opt.hlo.txt"), &m("opt"),
-                   file_seed(spec.seed, i, 5), 0, 0, &opt_outs)?;
+                   file_seed(spec.seed, i, 5), 0, 0, spec.cost_ns(opt_fl),
+                   &opt_outs)?;
 
-        // manifest entry (flops vary per stage so the derived cost
-        // model is non-uniform, like a real depth-imbalanced pipeline)
-        let scale = 1.0 + i as f64 * 0.25;
         let art = |file: &str, flops: f64| -> String {
             format!("{{\"file\": \"{file}\", \"flops\": {flops:.1}}}")
         };
@@ -263,12 +346,11 @@ pub fn write_artifacts(root: &Path, spec: &SyntheticSpec) -> Result<Manifest> {
             bytes_of(&grads),
             out_bytes,
             art(&format!("s{i}_init.hlo.txt"), scale),
-            art(&format!("s{i}_fwd.hlo.txt"), 100.0 * scale),
-            art(&format!("s{i}_p1.hlo.txt"), 110.0 * scale),
-            art(&format!("s{i}_p2.hlo.txt"), 90.0 * scale),
-            art(&format!("s{i}_p2c.hlo.txt"),
-                90.0 * scale * spec.concat_m as f64),
-            art(&format!("s{i}_opt.hlo.txt"), 5.0 * scale),
+            art(&format!("s{i}_fwd.hlo.txt"), fwd_fl),
+            art(&format!("s{i}_p1.hlo.txt"), p1_fl),
+            art(&format!("s{i}_p2.hlo.txt"), p2_fl),
+            art(&format!("s{i}_p2c.hlo.txt"), p2c_fl),
+            art(&format!("s{i}_opt.hlo.txt"), opt_fl),
         ));
     }
 
@@ -282,6 +364,7 @@ pub fn write_artifacts(root: &Path, spec: &SyntheticSpec) -> Result<Manifest> {
         file_seed(spec.seed, n, 6),
         0,
         0,
+        spec.cost_ns(7.0),
         &[(DType::F32, Vec::new()), (DType::F32, logits.clone())],
     )?;
 
@@ -378,6 +461,46 @@ mod tests {
         assert_eq!(cm.fwd.len(), spec.n_stages);
         assert!(cm.p1[0] > cm.fwd[0], "p1 should cost more than fwd");
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// The skewed calibration spec: non-uniform widths still wire up,
+    /// the derived cost model carries the declared skew exactly (and is
+    /// mean-normalized), and the stub files carry matching `cost`
+    /// busy-delay directives.
+    #[test]
+    fn skewed_manifest_is_nonuniform_and_wires_up() {
+        let root = tmp("skewed");
+        let spec = SyntheticSpec::skewed();
+        let m = write_artifacts(&root, &spec).expect("write");
+        assert_eq!(m.n_stages, spec.n_stages);
+        for w in m.stages.windows(2) {
+            assert_eq!(w[0].output.shape, w[1].input.shape);
+            assert_eq!(w[1].gx.shape, w[1].input.shape);
+        }
+        // byte classes really differ across stages (non-uniform widths)
+        let mm = m.mem_model();
+        assert!(mm.res1.iter().any(|&x| x != mm.res1[0]));
+        // the flops-derived cost model carries the 4x skew, normalized
+        // so the mean fwd cost is exactly 1.0
+        let cm = m.cost_model_from_flops(0.0);
+        assert!((cm.fwd[1] / cm.fwd[0] - 4.0).abs() < 1e-9);
+        assert!((cm.p2[3] / cm.p2[0] - 3.0).abs() < 1e-9);
+        let mean: f64 = cm.fwd.iter().sum::<f64>() / cm.fwd.len() as f64;
+        assert!((mean - 1.0).abs() < 1e-12, "fwd mean {mean}");
+        // cost directives landed, proportional to the declared flops
+        let text = std::fs::read_to_string(&m.stages[1].fwd.file).unwrap();
+        assert!(text.contains("cost 4800000"), "{text}");
+        let loss_text = std::fs::read_to_string(&m.loss.file).unwrap();
+        assert!(loss_text.contains("cost 84000"), "{loss_text}");
+        // the tiny spec stays cost-free (fast CI fuzz runs)
+        let tiny_root = tmp("skewed-tiny");
+        let tiny = write_artifacts(&tiny_root, &SyntheticSpec::tiny())
+            .expect("write tiny");
+        let tiny_text =
+            std::fs::read_to_string(&tiny.stages[0].fwd.file).unwrap();
+        assert!(!tiny_text.contains("cost "), "{tiny_text}");
+        let _ = std::fs::remove_dir_all(&root);
+        let _ = std::fs::remove_dir_all(&tiny_root);
     }
 
     /// Every generated stub file parses, and its declared output arity

@@ -46,6 +46,13 @@ pub struct WorkerReport {
     pub peak_inter: u64,
     /// Mean measured seconds per op kind: (fwd, p1, p2, opt).
     pub mean_costs: (f64, f64, f64, f64),
+    /// Mean measured seconds of the loss + initial-gradient computation
+    /// (last rank only; 0.0 elsewhere).  Timed as its own
+    /// [`SpanKind::Loss`] span so it never inflates the p1 mean — a
+    /// measured model folds it into [`crate::sim::CostModel::loss`],
+    /// which the simulator already schedules separately (folding it
+    /// into p1 *and* modeling a loss op would double-count it).
+    pub mean_loss: f64,
     /// Losses in microbatch order per step (last rank only).
     pub losses: Vec<f32>,
     /// Sum of |params| after the run (determinism / equivalence checks).
@@ -387,7 +394,11 @@ impl StageWorker {
                 .get_mut(&mb)
                 .and_then(|s| s.logits.take())
                 .ok_or_else(|| anyhow!("no logits stashed for mb {mb}"))?;
-            let start = self.now();
+            // the loss + initial-gradient computation gets its own span:
+            // folding it into the BwdP1 timing would skew any measured
+            // cost model replayed through the simulator, which schedules
+            // loss separately (CostModel::loss)
+            let loss_start = self.now();
             let labels = self
                 .data
                 .labels(&self.labels_spec, self.vocab, self.step, mb)
@@ -401,7 +412,10 @@ impl StageWorker {
             self.losses.push(loss);
             let lb = literal_bytes(&logits);
             self.mem.free(Class::Wire, lb);
-            (outs.into_iter().nth(1).unwrap(), 0u64, start)
+            let gy = outs.into_iter().nth(1).unwrap();
+            self.record(SpanKind::Loss, mb, loss_start);
+            let start = self.now();
+            (gy, 0u64, start)
         } else {
             let t = self.recv_or_fill(true, mb)?;
             let b = t.bytes();
@@ -639,6 +653,7 @@ impl StageWorker {
             mean(SpanKind::BwdP2),
             mean(SpanKind::Opt),
         );
+        let mean_loss = mean(SpanKind::Loss);
         let mut checksum = 0.0f64;
         let mut digest: u64 = 0xcbf2_9ce4_8422_2325;
         for p in &self.params {
@@ -661,6 +676,7 @@ impl StageWorker {
             peak_res2: self.mem.peak_of(Class::Res2),
             peak_inter: self.mem.peak_of(Class::Inter),
             mean_costs,
+            mean_loss,
             losses: std::mem::take(&mut self.losses),
             param_checksum: checksum,
             param_digest: digest,

@@ -39,30 +39,52 @@ pub struct RunReport {
 
 impl RunReport {
     /// Per-rank measured mean op costs, as a simulator CostModel.
-    pub fn measured_costs(&self) -> CostModel {
+    ///
+    /// `loss` comes from the last rank's separately-timed
+    /// [`SpanKind::Loss`] spans (see [`WorkerReport::mean_loss`]) — it
+    /// is **not** folded into p1, because the simulator already
+    /// schedules a loss op on the last rank and would double-count it.
+    /// Errors instead of panicking when a rank report is missing,
+    /// duplicated, or out of range (a worker died mid-run, or a
+    /// hand-built report is malformed) — silently mis-attributing
+    /// per-rank costs would skew every model derived from the run.
+    pub fn measured_costs(&self) -> Result<CostModel> {
         let n = self.reports.len();
-        let pick = |f: fn(&WorkerReport) -> f64| -> Vec<f64> {
-            (0..n)
-                .map(|r| {
-                    f(self
-                        .reports
-                        .iter()
-                        .find(|w| w.rank == r)
-                        .expect("missing rank report"))
+        let mut by_rank: Vec<Option<&WorkerReport>> = vec![None; n];
+        for w in &self.reports {
+            let slot = by_rank.get_mut(w.rank).ok_or_else(|| {
+                anyhow!(
+                    "measured_costs: rank {} out of range ({n} rank reports)",
+                    w.rank
+                )
+            })?;
+            if slot.replace(w).is_some() {
+                bail!("measured_costs: duplicate report for rank {}", w.rank);
+            }
+        }
+        let ranked: Vec<&WorkerReport> = by_rank
+            .into_iter()
+            .enumerate()
+            .map(|(r, w)| {
+                w.ok_or_else(|| {
+                    anyhow!("measured_costs: missing report for rank {r}")
                 })
-                .collect()
+            })
+            .collect::<Result<_>>()?;
+        let pick = |f: fn(&WorkerReport) -> f64| -> Vec<f64> {
+            ranked.iter().map(|&w| f(w)).collect()
         };
-        CostModel {
+        Ok(CostModel {
             fwd: pick(|w| w.mean_costs.0),
             p1: pick(|w| w.mean_costs.1),
             p2: pick(|w| w.mean_costs.2),
             opt: pick(|w| w.mean_costs.3),
-            loss: 0.0, // folded into the last rank's p1 timing
+            loss: ranked.last().map(|w| w.mean_loss).unwrap_or(0.0),
             comm: 0.0,
             comm_inter_node: 0.0,
             ranks_per_node: usize::MAX,
             concat_factor: 1.0,
-        }
+        })
     }
 
     /// Peak bytes per rank (the Fig 4 metric).
@@ -93,7 +115,7 @@ impl RunReport {
     /// Throughput from measured per-op costs replayed through the
     /// simulator (the calibrated pipeline wall-clock; samples/sec).
     pub fn simulated_throughput(&self) -> Result<f64> {
-        let costs = self.measured_costs();
+        let costs = self.measured_costs()?;
         let res = crate::sim::simulate(&self.plan, &costs, None)
             .map_err(|e| anyhow!("{e}"))?;
         Ok(self.samples_per_step as f64 / res.makespan)
@@ -270,7 +292,74 @@ impl Cluster {
         let m = cfg.microbatches(n);
         let plan = generate(cfg.schedule, cfg.two_bp, n, m,
                             cfg.p2_mode == P2Mode::Concat);
-        validate(&plan).map_err(|e| anyhow!("invalid plan: {e}"))?;
+        self.run_plan(&plan, cfg)
+    }
+
+    /// Measured-cost calibration — the first half of the
+    /// executor→planner→executor loop (`twobp tune --synthetic`): run
+    /// `cfg.steps` (at least 2) training steps under the **naive**
+    /// schedule, whose ops never overlap across ranks, so per-op
+    /// timings are contention-free on a shared-core host (the
+    /// DESIGN.md §3 calibration methodology), and return the measured
+    /// per-stage [`CostModel`] together with the calibration report.
+    pub fn calibrate(&self, cfg: &RunConfig) -> Result<(CostModel, RunReport)> {
+        let calib_cfg = RunConfig {
+            schedule: ScheduleKind::Naive,
+            two_bp: false,
+            p2_mode: P2Mode::Loop,
+            steps: cfg.steps.max(2),
+            ..cfg.clone()
+        };
+        let report = self.run(&calib_cfg)?;
+        let costs = report.measured_costs()?;
+        Ok((costs, report))
+    }
+
+    /// Execute an **arbitrary validated plan** — generator-made, a DSL
+    /// `.plan` file, or a planner winner — for `cfg.steps` steps.  This
+    /// is the replay half of the calibration loop: `twobp tune
+    /// --synthetic` executes its tuned winner back through here and
+    /// reports predicted-vs-executed makespan.  The plan *is* the
+    /// schedule: `cfg.schedule` / `two_bp` / `n_microbatches` are
+    /// ignored.  Concat-p2 execution must be expressed *in the plan*
+    /// (`wc(...)` / `flushc` ops): `cfg.p2_mode == Concat` with a plan
+    /// carrying no concat ops is rejected, because the executor would
+    /// then concat flushes the plan (and hence the simulator and
+    /// [`verify_report_against_sim`]) models as loop-mode.
+    pub fn run_plan(&self, plan: &Plan, cfg: &RunConfig) -> Result<RunReport> {
+        let n = self.manifest.n_stages;
+        if plan.n_ranks != n {
+            bail!(
+                "plan is shaped for {} ranks, cluster has {n} stages",
+                plan.n_ranks
+            );
+        }
+        // concat execution must be expressed per-op in the plan: under
+        // `p2_mode == Concat` the worker would also concat-execute
+        // loop-marked flushes (stage.rs `op_flush`), which the
+        // simulator — and verify_report_against_sim — model as
+        // loop-mode.  Generated concat plans mark every p2/flush op,
+        // so `Cluster::run` never trips this.
+        if cfg.p2_mode == P2Mode::Concat {
+            let loop_p2 = plan.ranks.iter().flatten().any(|op| {
+                matches!(
+                    op,
+                    Op::Flush { concat: false, .. }
+                        | Op::BwdP2 { concat: false, .. }
+                )
+            });
+            if loop_p2 {
+                bail!(
+                    "--concat-p2 would concat-execute p2 work this plan \
+                     marks as loop-mode (and the simulator models as \
+                     loop-mode): express concat in the plan itself \
+                     (wc(...)/flushc, see docs/PLAN_FORMAT.md) or drop \
+                     --concat-p2"
+                );
+            }
+        }
+        let m = plan.n_microbatches;
+        validate(plan).map_err(|e| anyhow!("invalid plan: {e}"))?;
 
         for (rank, tx) in self.cmd_txs.iter().enumerate() {
             tx.send(Cmd::Run {
@@ -328,7 +417,7 @@ impl Cluster {
             .collect();
 
         Ok(RunReport {
-            plan,
+            plan: plan.clone(),
             preset: cfg.preset.clone(),
             losses,
             step_times,
@@ -434,8 +523,27 @@ pub fn verify_report_against_sim(
         }
 
         for (si, seg) in segs.iter().enumerate() {
-            let seq: Vec<(SpanKind, u32)> =
-                seg.iter().map(|t| (t.kind, t.mb)).collect();
+            // Loss spans exist only on the executor side (the sim models
+            // loss as a latency on the last rank's p1 readiness, not as
+            // a span): check their count, then compare without them.
+            let n_loss =
+                seg.iter().filter(|t| t.kind == SpanKind::Loss).count();
+            let want_loss = if r == plan.n_ranks - 1 {
+                plan.n_microbatches
+            } else {
+                0
+            };
+            if n_loss != want_loss {
+                bail!(
+                    "rank {r} step {si}: {n_loss} loss spans, expected \
+                     {want_loss}"
+                );
+            }
+            let seq: Vec<(SpanKind, u32)> = seg
+                .iter()
+                .filter(|t| t.kind != SpanKind::Loss)
+                .map(|t| (t.kind, t.mb))
+                .collect();
             if strict {
                 if seq != sim_seq {
                     bail!(
@@ -525,6 +633,67 @@ pub fn verify_report_against_sim(
     Ok(())
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wr(rank: usize) -> WorkerReport {
+        WorkerReport {
+            rank,
+            timings: Vec::new(),
+            peak_bytes: 0,
+            peak_model: 0,
+            peak_static: 0,
+            peak_res1: 0,
+            peak_res2: 0,
+            peak_inter: 0,
+            mean_costs: (1.0 + rank as f64, 2.0, 3.0, 0.5),
+            mean_loss: if rank == 1 { 0.25 } else { 0.0 },
+            losses: Vec::new(),
+            param_checksum: 0.0,
+            param_digest: 0,
+        }
+    }
+
+    fn report_with(reports: Vec<WorkerReport>) -> RunReport {
+        RunReport {
+            plan: generate(ScheduleKind::GPipe, true, 2, 2, false),
+            preset: "t".into(),
+            losses: Vec::new(),
+            step_times: Vec::new(),
+            reports,
+            samples_per_step: 2,
+        }
+    }
+
+    #[test]
+    fn measured_costs_orders_by_rank_and_attributes_loss() {
+        // reports arrive out of rank order; costs must come back ranked
+        let r = report_with(vec![wr(1), wr(0)]);
+        let c = r.measured_costs().unwrap();
+        assert_eq!(c.fwd, vec![1.0, 2.0]);
+        // loss is the last rank's separately-timed mean, NOT folded
+        // into (or zeroing out of) the p1 column
+        assert_eq!(c.loss, 0.25);
+        assert_eq!(c.p1, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn measured_costs_errors_on_missing_rank() {
+        // one report whose rank is out of range == rank 0 missing
+        let r = report_with(vec![wr(1)]);
+        let err = r.measured_costs().unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn measured_costs_errors_on_duplicate_rank() {
+        let r = report_with(vec![wr(0), wr(0)]);
+        let err = r.measured_costs().unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+}
+
 /// Replay a rank's executed (loop-mode) op sequence through the
 /// manifest byte classes, mirroring exactly what `StageWorker` tells
 /// its accountant per op.  Returns (peak, final live) of the modeled
@@ -543,7 +712,8 @@ fn replay_model_bytes(
                 live = live - st.bytes.res1 + st.bytes.inter;
             }
             SpanKind::BwdP2 => live -= st.bytes.res2 + st.bytes.inter,
-            SpanKind::Opt | SpanKind::Comm => {}
+            // loss touches only Wire bytes (logits), not modeled classes
+            SpanKind::Opt | SpanKind::Comm | SpanKind::Loss => {}
         }
         peak = peak.max(live);
     }

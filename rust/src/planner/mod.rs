@@ -32,6 +32,23 @@
 //! Winners serialize through the plan DSL
 //! ([`crate::schedule::plan_io`]), so a found schedule is a `.plan`
 //! file any other subcommand (gantt, simulate, sweep) can replay.
+//!
+//! # The measured-profile path (calibration loop)
+//!
+//! Profiles don't have to be hand-tuned ratios: `twobp tune
+//! --synthetic` (or `--manifest <preset-dir>`, both under the `pjrt`
+//! feature) closes the executor→planner→executor circle.  It runs a
+//! few contention-free calibration steps on the real executor
+//! (`pipeline::Cluster::calibrate`), builds a
+//! [`TuneProfile::from_measured`] out of the measured per-stage costs
+//! (`pipeline::RunReport::measured_costs`) and the manifest's
+//! byte classes (`Manifest::mem_model`), beam-searches against that
+//! measured profile, then **executes the winning plan back on the
+//! executor** (`pipeline::Cluster::run_plan`) — verifying it
+//! against the simulator and reporting predicted-vs-executed makespan
+//! (see `experiments::tune_calibrated`).  BaPipe and PipeDream both
+//! found profiling-driven schedule search beats static heuristics;
+//! this is that loop, testable offline against the stub backend.
 
 pub mod beam;
 pub mod moves;
@@ -90,6 +107,38 @@ impl TuneProfile {
         }
     }
 
+    /// A profile from **measured** per-stage costs and manifest byte
+    /// classes — what the calibration loop tunes against, replacing the
+    /// ratio-only profiles for any preset the executor can run.  Costs
+    /// come from `pipeline::RunReport::measured_costs` (real
+    /// seconds, loss attributed separately), memory from
+    /// `Manifest::mem_model` (byte-exact per-microbatch classes), so
+    /// the search optimizes real samples/sec under the real OOM line.
+    /// Errors if the cost and memory shapes disagree on rank count —
+    /// a mismatched pair would tune one model's schedule under another
+    /// model's memory.
+    pub fn from_measured(
+        name: impl Into<String>,
+        costs: CostModel,
+        mem: MemModel,
+        samples_per_microbatch: usize,
+    ) -> Result<TuneProfile, String> {
+        if costs.fwd.len() != mem.static_bytes.len() {
+            return Err(format!(
+                "measured profile shape mismatch: costs cover {} ranks, \
+                 memory covers {}",
+                costs.fwd.len(),
+                mem.static_bytes.len()
+            ));
+        }
+        Ok(TuneProfile {
+            name: name.into(),
+            costs,
+            mem,
+            samples_per_microbatch,
+        })
+    }
+
     /// A profile from explicit cost ratios with the LLaMa-like byte
     /// classes (the `twobp tune` CLI path when the user overrides the
     /// cost shape but not the memory shape).  Only fwd/p1/p2/comm are
@@ -124,6 +173,35 @@ mod tests {
         assert_eq!(p.mem.res1.len(), 4);
         assert!(p.mem.res1[0] > p.mem.inter[0]);
         assert!(p.mem.inter[0] > p.mem.res2[0]);
+    }
+
+    #[test]
+    fn from_measured_builds_and_rejects_shape_mismatch() {
+        let mut costs = CostModel::ratios(3, 0.002, 0.0021, 0.0019);
+        costs.loss = 0.0003;
+        let mem = MemModel {
+            static_bytes: vec![10; 3],
+            res1: vec![4; 3],
+            res2: vec![2; 3],
+            inter: vec![3; 3],
+        };
+        let p = TuneProfile::from_measured(
+            "measured synthetic", costs.clone(), mem, 2,
+        )
+        .unwrap();
+        assert_eq!(p.name, "measured synthetic");
+        assert_eq!(p.samples_per_microbatch, 2);
+        assert_eq!(p.costs.fwd, vec![0.002; 3]);
+        assert_eq!(p.costs.loss, 0.0003);
+        let bad_mem = MemModel {
+            static_bytes: vec![10; 2],
+            res1: vec![4; 2],
+            res2: vec![2; 2],
+            inter: vec![3; 2],
+        };
+        let err =
+            TuneProfile::from_measured("x", costs, bad_mem, 1).unwrap_err();
+        assert!(err.contains("shape mismatch"), "{err}");
     }
 
     #[test]

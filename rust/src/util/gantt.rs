@@ -17,6 +17,10 @@ pub enum SpanKind {
     BwdP2,
     Opt,
     Comm,
+    /// Loss + initial-gradient computation (last rank only; the real
+    /// executor times it separately from BwdP1 so measured cost models
+    /// can populate `CostModel::loss` instead of inflating p1).
+    Loss,
 }
 
 impl SpanKind {
@@ -27,6 +31,7 @@ impl SpanKind {
             SpanKind::BwdP2 => '2',
             SpanKind::Opt => 'O',
             SpanKind::Comm => '·',
+            SpanKind::Loss => 'L',
         }
     }
 }
@@ -55,7 +60,8 @@ pub fn render(ranks: &[Vec<Span>], cols: usize) -> String {
         out.push_str(&format!("rank {:>2} |{}|\n", ri, line.iter().collect::<String>()));
     }
     out.push_str(&format!(
-        "          makespan = {:.2}  (F=fwd 1=bwd-p1 2=bwd-p2 O=opt .=idle)\n",
+        "          makespan = {:.2}  (F=fwd 1=bwd-p1 2=bwd-p2 O=opt \
+         L=loss .=idle)\n",
         makespan
     ));
     out

@@ -186,6 +186,167 @@ fn greedy_2bp_reruns_are_deterministic() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The calibration round trip (ISSUE 5 acceptance): on the
+/// deliberately depth-imbalanced synthetic preset
+/// (`SyntheticSpec::skewed`, per-stage stub `cost` busy-delays
+/// proportional to the declared flops), measured per-op costs must
+/// recover the manifest's flops *shape* from wall time; tuning against
+/// the measured profile must beat (or match) every named generator
+/// schedule under that model; and the winning plan must execute back
+/// on the cluster, verified against the simulator, with executed
+/// makespan in the same ballpark as predicted.
+#[test]
+fn calibration_round_trip_recovers_skew_and_closes_the_loop() {
+    use twobp::experiments::sweep::combos;
+    use twobp::experiments::tune_and_execute;
+    use twobp::planner::beam::microbatch_grid;
+    use twobp::planner::{BeamConfig, TuneProfile};
+    use twobp::schedule::generate;
+    use twobp::sim::eval_plan;
+
+    let dir = std::env::temp_dir()
+        .join(format!("twobp-stub-test-calib-{}", std::process::id()));
+    let spec = SyntheticSpec::skewed();
+    let manifest = write_artifacts(&dir, &spec).expect("write skewed");
+    let n = manifest.n_stages;
+    let base = RunConfig {
+        preset: spec.preset.clone(),
+        artifacts: dir.clone(),
+        steps: 2,
+        n_microbatches: n,
+        ..RunConfig::default()
+    };
+    let cluster = Cluster::new(&base).expect("cluster");
+    let (costs, calib) = cluster.calibrate(&base).expect("calibrate");
+    assert_eq!(calib.plan.n_ranks, n);
+    assert!(!calib.plan.two_bp, "calibration runs the fused baseline");
+
+    // 1. measured costs within tolerance of the flops model's shape
+    //    (both mean-normalized per kind; the stub busy-delays are
+    //    proportional to the flops, so wall time carries the skew)
+    let flops = manifest.cost_model_from_flops(0.0);
+    let norm = |xs: &[f64]| -> Vec<f64> {
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        xs.iter().map(|x| x / mean).collect()
+    };
+    for (which, meas, model) in [
+        ("fwd", &costs.fwd, &flops.fwd),
+        ("p1", &costs.p1, &flops.p1),
+        ("p2", &costs.p2, &flops.p2),
+    ] {
+        for (r, (m, f)) in
+            norm(meas).iter().zip(norm(model).iter()).enumerate()
+        {
+            let rel = (m - f).abs() / f;
+            assert!(
+                rel < 0.40,
+                "{which} stage {r}: measured {m:.3} vs flops {f:.3} \
+                 (rel {rel:.2}) — calibration lost the skew"
+            );
+        }
+    }
+    // the 4x-flops stage really measures dearest, the 1x cheapest
+    assert!(costs.fwd[1] > costs.fwd[3]);
+    assert!(costs.fwd[3] > costs.fwd[2]);
+    assert!(costs.fwd[2] > costs.fwd[0]);
+    // loss is timed separately on the last rank, never folded into p1
+    assert!(costs.loss > 0.0, "loss span not attributed");
+
+    // 2. tune against the measured profile; the winner must be >= every
+    //    named generator schedule under that model (independent scan)
+    let profile = TuneProfile::from_measured(
+        "measured:skewed",
+        costs.clone(),
+        manifest.mem_model(),
+        manifest.samples_per_microbatch,
+    )
+    .expect("profile shapes agree");
+    let cfg = BeamConfig {
+        beam_width: 6,
+        generations: 4,
+        mutations_per_parent: 4,
+        seed: 0x2B92_0245,
+        ..BeamConfig::default()
+    };
+    let ct = tune_and_execute(&cluster, &manifest, &profile, &cfg, &base)
+        .expect("tune + winner execution");
+    let mut named_best = 0.0f64;
+    for (kind, two_bp) in combos() {
+        for &m in &microbatch_grid(n, 4 * n) {
+            let plan = generate(kind, two_bp, n, m, false);
+            let ev = eval_plan(&plan, &profile.costs, Some(&profile.mem),
+                               None)
+                .expect("named plans simulate");
+            let tput = ev
+                .result
+                .throughput(profile.samples_per_microbatch, m);
+            named_best = named_best.max(tput);
+        }
+    }
+    assert!(
+        ct.report.best.throughput >= named_best - 1e-12,
+        "winner {:.4} below best named {named_best:.4} under the \
+         measured model",
+        ct.report.best.throughput
+    );
+    assert!(ct.report.named_best.is_some());
+
+    // 3. predicted-vs-executed: the stub's sleep-backed costs make the
+    //    executed wall makespan physically meaningful; allow a loose
+    //    band for scheduler noise and cross-step overlap
+    let ratio = ct.executed_makespan / ct.predicted_makespan;
+    assert!(
+        ratio > 0.4 && ratio < 2.5,
+        "executed {:.4}s vs predicted {:.4}s (ratio {ratio:.2})",
+        ct.executed_makespan,
+        ct.predicted_makespan
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Loss spans land only on the last rank (one per microbatch per step),
+/// and the measured p1 mean no longer absorbs them: on the tiny
+/// cost-free spec the loss executable still takes nonzero wall time, so
+/// `measured_costs().loss > 0` while every rank's p1 mean stays the
+/// mean of pure p1 spans.
+#[test]
+fn loss_spans_are_attributed_separately() {
+    let (dir, _) = setup("loss-span");
+    let m = 4;
+    let steps = 2;
+    let report = train(&cfg(&dir, ScheduleKind::GPipe, true, steps, m))
+        .expect("train");
+    let n = report.plan.n_ranks;
+    for w in &report.reports {
+        let losses = w
+            .timings
+            .iter()
+            .filter(|t| t.kind == twobp::util::gantt::SpanKind::Loss)
+            .count();
+        let want = if w.rank == n - 1 { m * steps } else { 0 };
+        assert_eq!(losses, want, "rank {}", w.rank);
+        // loss spans never overlap the rank's p1 spans
+        for l in w
+            .timings
+            .iter()
+            .filter(|t| t.kind == twobp::util::gantt::SpanKind::Loss)
+        {
+            for p in w.timings.iter().filter(|t| {
+                t.kind == twobp::util::gantt::SpanKind::BwdP1
+            }) {
+                assert!(
+                    l.end <= p.start + 1e-9 || p.end <= l.start + 1e-9,
+                    "rank {}: loss span overlaps a p1 span",
+                    w.rank
+                );
+            }
+        }
+    }
+    let costs = report.measured_costs().expect("complete reports");
+    assert!(costs.loss > 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Property test (stub-executed runs): across fuzzed (schedule, ±2BP,
 /// microbatch count, steps, seed) cells against one persistent cluster,
 /// the stash accountant never goes negative (it panics on underflow —

@@ -8,7 +8,7 @@
 use twobp::experiments::sweep::combos;
 use twobp::planner::{tune, BeamConfig, TuneProfile};
 use twobp::schedule::{generate, plan_io, validate::validate};
-use twobp::sim::eval_plan;
+use twobp::sim::{eval_plan, CostModel, MemModel};
 
 const SEED: u64 = 0x2B92_0240;
 
@@ -130,6 +130,61 @@ fn tune_is_reproducible_for_a_fixed_seed() {
     for (x, y) in a.history.iter().zip(&b.history) {
         assert_eq!(x.to_bits(), y.to_bits());
     }
+}
+
+/// The measured-profile path (ISSUE 5): a profile built by
+/// `TuneProfile::from_measured` from "measured-like" absolute-seconds
+/// costs (millisecond scale, per-stage skew like the skewed synthetic
+/// preset — far from the ratio profiles' ~1.0 units) must tune exactly
+/// like any other profile: valid winner, >= every named schedule under
+/// the same model, bit-identical Tier B replay.  Pairs with the
+/// `cost_model_from_flops` normalization fix: nothing downstream may
+/// assume costs live near 1.0.
+#[test]
+fn measured_profile_tune_beats_named_at_absolute_seconds_scale() {
+    let n = 4;
+    let scale = [1.0, 4.0, 2.0, 3.0];
+    let ms = 1e-3;
+    let mut costs = CostModel::unit(n);
+    costs.fwd = scale.iter().map(|s| 1.20 * s * ms).collect();
+    costs.p1 = scale.iter().map(|s| 1.32 * s * ms).collect();
+    costs.p2 = scale.iter().map(|s| 1.08 * s * ms).collect();
+    costs.opt = vec![0.06 * ms; n];
+    costs.loss = 0.084 * ms;
+    let mem = MemModel {
+        static_bytes: vec![4352; n],
+        res1: vec![512; n],
+        res2: vec![544; n],
+        inter: vec![512; n],
+    };
+    let profile =
+        TuneProfile::from_measured("measured-like", costs, mem, 2).unwrap();
+    let report = tune(&profile, n, &cfg_with(None)).unwrap();
+    validate(&report.best.plan).unwrap();
+    let (named_tput, named_desc) =
+        best_named_fitting(&profile, n, None).unwrap();
+    assert!(
+        report.best.throughput >= named_tput - 1e-12,
+        "measured-profile winner {:.6} below named {named_desc} at \
+         {named_tput:.6}",
+        report.best.throughput
+    );
+    // the winner's claimed numbers replay bit-identically through the
+    // Tier B path at this absolute scale too
+    let replay = eval_plan(
+        &report.best.plan,
+        &profile.costs,
+        Some(&profile.mem),
+        None,
+    )
+    .unwrap();
+    assert_eq!(
+        replay.result.makespan.to_bits(),
+        report.best.makespan.to_bits()
+    );
+    // and round-trips through the DSL
+    let back = plan_io::parse(&report.best.text).unwrap();
+    assert_eq!(back, report.best.plan);
 }
 
 #[test]

@@ -41,6 +41,12 @@
 //!   inputs arrive as consecutive groups of K; each output sums one
 //!   delta per group, seeded identically to `acc` mode, so a single
 //!   concatenated call equals the per-microbatch loop bit for bit.
+//! * `cost N` — **busy delay**: every execution of this signature
+//!   sleeps N nanoseconds before computing its outputs.  Values stay
+//!   bit-identical; only wall time changes.  This is how synthetic
+//!   manifests give each stage a *measurable* op cost proportional to
+//!   its declared flops, so measured-cost calibration
+//!   (`twobp tune --synthetic`) has real per-stage skew to find.
 //!
 //! Everything is deliberately `Rc`-based and single-threaded, matching
 //! the real crate's client threading model (one client per worker
@@ -362,6 +368,8 @@ pub struct HloModuleProto {
     seed: u64,
     acc: usize,
     group: usize,
+    /// Busy delay in nanoseconds per execution (0 = none).
+    cost_ns: u64,
     outs: Vec<(ElementType, Vec<usize>)>,
 }
 
@@ -392,6 +400,7 @@ impl HloModuleProto {
         let mut seed = 0u64;
         let mut acc = 0usize;
         let mut group = 0usize;
+        let mut cost_ns = 0u64;
         let mut outs = Vec::new();
         for line in lines {
             let mut it = line.split_whitespace();
@@ -417,6 +426,11 @@ impl HloModuleProto {
                         .parse()
                         .map_err(|e| err(format!("bad group '{val}': {e}")))?
                 }
+                "cost" => {
+                    cost_ns = val
+                        .parse()
+                        .map_err(|e| err(format!("bad cost '{val}': {e}")))?
+                }
                 "out" => outs.push(parse_out(val)?),
                 other => {
                     return Err(err(format!("unknown directive '{other}'")))
@@ -441,6 +455,7 @@ impl HloModuleProto {
             seed,
             acc,
             group,
+            cost_ns,
             outs,
         })
     }
@@ -667,6 +682,11 @@ fn execute_stub(
     sig: &HloModuleProto,
     inputs: &[&Literal],
 ) -> Result<Vec<Literal>> {
+    if sig.cost_ns > 0 {
+        // busy delay: sleeping (not spinning) lets concurrently-running
+        // rank threads overlap, like compute on independent devices
+        std::thread::sleep(std::time::Duration::from_nanos(sig.cost_ns));
+    }
     if sig.acc > 0 {
         execute_acc(sig, inputs)
     } else if sig.group > 0 {
@@ -863,6 +883,32 @@ mod tests {
         )
         .is_err());
         assert!(HloModuleProto::parse("stub-hlo v1\nout f99[1]\n").is_err());
+    }
+
+    #[test]
+    fn cost_directive_delays_but_never_changes_values() {
+        let timed =
+            sig("stub-hlo v1\nseed 3\ncost 20000000\nout f32[2,4]\n");
+        assert_eq!(timed.cost_ns, 20_000_000);
+        let free = sig("stub-hlo v1\nseed 3\nout f32[2,4]\n");
+        let x = f32_lit(&[2], &[1.0, 2.0]);
+        let t0 = std::time::Instant::now();
+        let a = execute_stub(&timed, &[&x]).unwrap();
+        let dt = t0.elapsed();
+        let b = execute_stub(&free, &[&x]).unwrap();
+        // same seed + inputs => bit-identical values, cost or not
+        assert_eq!(
+            a[0].to_vec::<f32>().unwrap(),
+            b[0].to_vec::<f32>().unwrap()
+        );
+        assert!(
+            dt >= std::time::Duration::from_millis(20),
+            "cost 20ms not observed: {dt:?}"
+        );
+        assert!(HloModuleProto::parse(
+            "stub-hlo v1\ncost banana\nout f32[1]\n"
+        )
+        .is_err());
     }
 
     #[test]
