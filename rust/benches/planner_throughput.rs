@@ -31,6 +31,13 @@
 //! `planner_full_cands_per_sec`) and the process exits non-zero on a
 //! >20% regression — the same rule as `sweep_throughput`.
 //! `--write-baseline <file>` refreshes that entry in place.
+//!
+//! The robust Monte-Carlo objective (`sim::score_plan_robust`, ISSUE 6)
+//! is timed the same way over the live corpus: K perturbation draws per
+//! candidate, metric = draws/sec.  A draw is one cost-model copy +
+//! perturbation + `score_plan`, so its throughput should track the
+//! clean scoring path — the gate keys are
+//! `planner_robust_{quick,full}_trials_per_sec`.
 
 use std::collections::BTreeSet;
 use std::path::Path;
@@ -40,7 +47,8 @@ use twobp::experiments::sweep::combos;
 use twobp::planner::beam::microbatch_grid;
 use twobp::planner::{moves, tune, BeamConfig, TuneProfile};
 use twobp::schedule::{generate, validate::validate, Plan};
-use twobp::sim::{eval_plan, score_plan, Scratch};
+use twobp::sim::{eval_plan, score_plan, score_plan_robust, Perturbation,
+                 RobustScratch, Scratch};
 use twobp::util::args::Args;
 use twobp::util::json::{obj, Json};
 use twobp::util::prng::SplitMix64;
@@ -184,6 +192,48 @@ fn main() {
         "\n  speedup: {speedup:.2}x  (acceptance target >= 3x)\n"
     );
 
+    // -- robust scoring: K Monte-Carlo draws per candidate ------------------
+    // timed over the *live* corpus only — a deadlocked plan errors on
+    // its first draw, which would inflate a draws/sec figure
+    let live_plans: Vec<&Plan> = plans
+        .iter()
+        .filter(|p| {
+            score_plan(p, &profile.costs, Some(&profile.mem), budget,
+                       &mut scratch)
+            .is_ok()
+        })
+        .collect();
+    let pert = Perturbation {
+        jitter: 0.05,
+        stragglers: vec![(1, 1.5)],
+        ..Perturbation::default()
+    };
+    let trials = if quick { 8 } else { 16 };
+    let mut rscratch = RobustScratch::new();
+    let run_robust = |rscratch: &mut RobustScratch| {
+        for p in &live_plans {
+            let _ = score_plan_robust(p, &profile.costs, Some(&profile.mem),
+                                      budget, &pert, trials, rscratch);
+        }
+    };
+    run_robust(&mut rscratch); // warmup (and buffer growth)
+    let mut robust_tps = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        run_robust(&mut rscratch);
+        let dt = t0.elapsed().as_secs_f64();
+        robust_tps.push((live_plans.len() * trials) as f64 / dt);
+    }
+    let robust_s = summarize(&robust_tps);
+    println!(
+        "  score_plan_robust  : {:>10.0} draws/s ({} draws/candidate \
+         over {} live plans; per-draw cost {:.2}x a clean score)\n",
+        robust_s.mean,
+        trials,
+        live_plans.len(),
+        fast_s.mean / robust_s.mean.max(1e-9)
+    );
+
     // -- end-to-end: a small tune() ride on the fast path -----------------
     let t0 = Instant::now();
     let report = tune(
@@ -225,12 +275,26 @@ fn main() {
         ("seconds", Json::Num(tune_dt)),
         ("cands_per_sec", Json::Num(report.evaluated as f64 / tune_dt)),
     ]));
+    rec.record("planner_robust", obj(vec![
+        ("live_candidates", Json::Num(live_plans.len() as f64)),
+        ("trials_per_candidate", Json::Num(trials as f64)),
+        ("trials_per_sec", Json::Num(robust_s.mean)),
+        ("per_draw_cost_vs_clean",
+         Json::Num(fast_s.mean / robust_s.mean.max(1e-9))),
+        ("quick", Json::Bool(quick)),
+    ]));
     let mode_key = if quick {
         "planner_quick_cands_per_sec"
     } else {
         "planner_full_cands_per_sec"
     };
+    let robust_key = if quick {
+        "planner_robust_quick_trials_per_sec"
+    } else {
+        "planner_robust_full_trials_per_sec"
+    };
     rec.record_summary(mode_key, &fast_s);
+    rec.record_summary(robust_key, &robust_s);
     match rec.write() {
         Ok(()) => println!("  wrote {}", repo_root
             .join("BENCH_planner.json").display()),
@@ -239,12 +303,19 @@ fn main() {
     }
 
     // -- regression gate vs a committed baseline ---------------------------
+    let gates = [(mode_key, fast_s.mean, "cands/s"),
+                 (robust_key, robust_s.mean, "draws/s")];
     if let Some(path) = args.get("write-baseline") {
         let mut base = BenchRecorder::open(Path::new(path));
-        base.record(mode_key, Json::Num(fast_s.mean));
+        for (key, mean, _) in gates {
+            base.record(key, Json::Num(mean));
+        }
         match base.write() {
-            Ok(()) => println!("  wrote {mode_key} = {:.0} to {path}",
-                               fast_s.mean),
+            Ok(()) => {
+                for (key, mean, _) in gates {
+                    println!("  wrote {key} = {mean:.0} to {path}");
+                }
+            }
             Err(e) => {
                 eprintln!("FAIL: could not write baseline {path}: {e}");
                 std::process::exit(1);
@@ -252,32 +323,35 @@ fn main() {
         }
     }
     if let Some(path) = args.get("baseline") {
-        let committed = std::fs::read_to_string(path)
+        let json = std::fs::read_to_string(path)
             .ok()
-            .and_then(|t| Json::parse(&t).ok())
-            .and_then(|v| v.get(mode_key).and_then(|x| x.as_f64()));
-        match committed {
-            None => {
-                eprintln!(
-                    "FAIL: baseline {path} is missing a numeric \
-                     '{mode_key}' entry"
-                );
-                std::process::exit(1);
-            }
-            Some(committed) => {
-                let ratio = fast_s.mean / committed;
-                println!(
-                    "  regression gate: {:.0} cands/s vs baseline {:.0} \
-                     ({:.2}x, fail below 0.80x)",
-                    fast_s.mean, committed, ratio
-                );
-                if ratio < 0.8 {
+            .and_then(|t| Json::parse(&t).ok());
+        for (key, mean, unit) in gates {
+            let committed = json
+                .as_ref()
+                .and_then(|v| v.get(key).and_then(|x| x.as_f64()));
+            match committed {
+                None => {
                     eprintln!(
-                        "FAIL: planner eval throughput regressed >20% vs \
-                         {path} ({:.0} < 0.8 x {:.0} cands/s)",
-                        fast_s.mean, committed
+                        "FAIL: baseline {path} is missing a numeric \
+                         '{key}' entry"
                     );
                     std::process::exit(1);
+                }
+                Some(committed) => {
+                    let ratio = mean / committed;
+                    println!(
+                        "  regression gate [{key}]: {mean:.0} {unit} vs \
+                         baseline {committed:.0} ({ratio:.2}x, fail \
+                         below 0.80x)"
+                    );
+                    if ratio < 0.8 {
+                        eprintln!(
+                            "FAIL: {key} regressed >20% vs {path} \
+                             ({mean:.0} < 0.8 x {committed:.0} {unit})"
+                        );
+                        std::process::exit(1);
+                    }
                 }
             }
         }

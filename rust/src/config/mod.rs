@@ -117,6 +117,20 @@ pub struct CalibConfig {
     /// Steps to execute the tuned winner for (predicted-vs-executed).
     pub exec_steps: usize,
     pub seed: u64,
+    /// Run the self-healing loop (`--replan`): execute in one-step
+    /// chunks under a drift monitor, re-calibrating + re-tuning when
+    /// measured makespans pull away from the prediction.  The knobs
+    /// below mirror `pipeline::DriftConfig` (kept as raw values here
+    /// so `twobp tune --help` parses without the pjrt feature).
+    pub replan: bool,
+    /// Relative slowdown that counts as a slow step (`--drift-threshold`).
+    pub drift_threshold: f64,
+    /// Consecutive slow steps before replanning (`--drift-window`).
+    pub drift_window: usize,
+    /// Replans allowed per run (`--max-replans`).
+    pub max_replans: usize,
+    /// Post-replan steps ignored by the monitor (`--drift-cooldown`).
+    pub drift_cooldown: usize,
 }
 
 impl CalibConfig {
@@ -137,13 +151,42 @@ impl CalibConfig {
                  or --manifest <preset-dir>"
             );
         }
-        Ok(CalibConfig {
+        let replan = args.has("replan");
+        if replan && !synthetic {
+            bail!(
+                "--replan needs --synthetic: the drift-replan loop runs \
+                 against the self-drifting synthetic preset (real \
+                 manifests don't change cost mid-run offline)"
+            );
+        }
+        let cfg = CalibConfig {
             synthetic,
             manifest_dir,
             calib_steps: args.get_usize("calib-steps", 2).max(2),
             exec_steps: args.get_usize("steps", 2).max(1),
             seed: args.get_usize("seed", 0) as u64,
-        })
+            replan,
+            drift_threshold: args.get_f64("drift-threshold", 0.3),
+            drift_window: args.get_usize("drift-window", 2).max(1),
+            max_replans: args.get_usize("max-replans", 1),
+            drift_cooldown: args.get_usize("drift-cooldown", 1),
+        };
+        if !replan {
+            for (flag, set) in [
+                ("drift-threshold", args.get("drift-threshold").is_some()),
+                ("drift-window", args.get("drift-window").is_some()),
+                ("max-replans", args.get("max-replans").is_some()),
+                ("drift-cooldown", args.get("drift-cooldown").is_some()),
+            ] {
+                if set {
+                    bail!("--{flag} only applies with --replan");
+                }
+            }
+        }
+        if cfg.drift_threshold <= 0.0 {
+            bail!("--drift-threshold must be > 0");
+        }
+        Ok(cfg)
     }
 
     /// Split a `--manifest <artifacts-root>/<preset>` path into the
@@ -250,6 +293,45 @@ mod tests {
         let bare = CalibConfig::split_manifest(Path::new("solo")).unwrap();
         assert_eq!(bare.0, PathBuf::from("."));
         assert_eq!(bare.1, "solo");
+    }
+
+    #[test]
+    fn replan_knobs_parse_and_are_gated() {
+        let flags = ["synthetic", "replan"];
+        let c = CalibConfig::from_args(&Args::parse(
+            &sv(&["--synthetic", "--replan", "--drift-threshold", "0.5",
+                  "--drift-window", "3", "--max-replans", "2",
+                  "--drift-cooldown", "0"]),
+            &flags,
+        ))
+        .unwrap();
+        assert!(c.replan);
+        assert_eq!(c.drift_threshold, 0.5);
+        assert_eq!(c.drift_window, 3);
+        assert_eq!(c.max_replans, 2);
+        assert_eq!(c.drift_cooldown, 0);
+        // defaults mirror pipeline::DriftConfig::default()
+        let d = CalibConfig::from_args(&Args::parse(
+            &sv(&["--synthetic", "--replan"]),
+            &flags,
+        ))
+        .unwrap();
+        assert_eq!(d.drift_threshold, 0.3);
+        assert_eq!(d.drift_window, 2);
+        assert_eq!(d.max_replans, 1);
+        assert_eq!(d.drift_cooldown, 1);
+        // --replan needs --synthetic; drift knobs need --replan
+        for argv in [
+            vec!["--manifest", "artifacts/bert-s", "--replan"],
+            vec!["--synthetic", "--drift-window", "3"],
+            vec!["--synthetic", "--replan", "--drift-threshold", "0"],
+        ] {
+            assert!(
+                CalibConfig::from_args(&Args::parse(&sv(&argv), &flags))
+                    .is_err(),
+                "{argv:?}"
+            );
+        }
     }
 
     #[test]

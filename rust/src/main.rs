@@ -13,13 +13,25 @@
 //! twobp tune     [--ranks N] [--budget 4.5G] [--beam K] [--gens G]
 //!                [--seed S] [--fwd F --p1 X --p2 Y --comm C]
 //!                [--out FILE.plan] [--gantt] [--threads K]
+//!                [--robust [--jitter J] [--straggler R:MULT[,R:MULT]]
+//!                 [--spike-prob P] [--spike-mult X] [--trials K]
+//!                 [--pert-seed S]]  (tail objective: rank candidates
+//!                 by p95 makespan over K seeded perturbation draws
+//!                 instead of the clean makespan)
 //!                [--synthetic | --manifest DIR]  (measured-cost
 //!                 calibration loop: calibrate on the executor, tune
 //!                 against measured costs, execute the winner back and
 //!                 report predicted-vs-executed makespan; pjrt feature.
 //!                 [--calib-steps N] [--steps N] apply there)
-//! twobp bench    <table1|fig1|synthetic|tune-calibrated|fig3|fig4|fig5
-//!                 |table3|fig6|fig7|ckpt|sweep|planner> [--steps N]
+//!                [--replan [--drift-threshold T] [--drift-window W]
+//!                 [--max-replans R] [--drift-cooldown C]]  (with
+//!                 --synthetic: self-healing loop on a preset whose
+//!                 stub costs drift mid-run — detect measured-vs-
+//!                 predicted drift, re-calibrate + re-tune once;
+//!                 beam/out flags use tuned defaults there)
+//! twobp bench    <table1|fig1|synthetic|tune-calibrated|replan
+//!                 |robustness|fig3|fig4|fig5|table3|fig6|fig7|ckpt
+//!                 |sweep|planner> [--steps N]
 //! twobp config   --list
 //! ```
 //!
@@ -29,15 +41,16 @@
 use anyhow::{anyhow, Result};
 
 use twobp::config::table2;
-use twobp::planner::{tune, BeamConfig, TuneProfile, TuneReport};
+use twobp::planner::{tune, BeamConfig, RobustObjective, TuneProfile,
+                     TuneReport};
 use twobp::schedule::{generate, plan_io, validate::validate, ScheduleKind};
-use twobp::sim::{simulate, CostModel};
+use twobp::sim::{simulate, CostModel, Perturbation};
 use twobp::util::args::Args;
 use twobp::util::gantt;
 use twobp::util::stats::{fmt_bytes, parse_bytes};
 
 const FLAGS: &[&str] = &["no-2bp", "concat-p2", "verbose", "list", "real",
-                         "csv", "gantt", "synthetic"];
+                         "csv", "gantt", "synthetic", "robust", "replan"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -267,6 +280,65 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--straggler <rank>:<mult>[,<rank>:<mult>...]` into the
+/// per-rank slowdown pairs of [`Perturbation::stragglers`].
+fn parse_stragglers(s: &str) -> Result<Vec<(usize, f64)>> {
+    s.split(',')
+        .map(|part| {
+            let (r, m) = part.split_once(':').ok_or_else(|| {
+                anyhow!("bad --straggler '{part}': expected <rank>:<mult>")
+            })?;
+            let rank = r
+                .trim()
+                .parse::<usize>()
+                .map_err(|e| anyhow!("bad --straggler rank '{r}': {e}"))?;
+            let mult = m
+                .trim()
+                .parse::<f64>()
+                .map_err(|e| anyhow!("bad --straggler mult '{m}': {e}"))?;
+            if mult <= 0.0 {
+                return Err(anyhow!(
+                    "bad --straggler mult '{m}': must be > 0"
+                ));
+            }
+            Ok((rank, mult))
+        })
+        .collect()
+}
+
+/// The `--robust` tail objective from CLI flags; `None` without the
+/// flag (and rejects orphaned perturbation flags, repo convention).
+fn robust_objective_from_args(args: &Args) -> Result<Option<RobustObjective>> {
+    if !args.has("robust") {
+        for k in ["jitter", "straggler", "spike-prob", "spike-mult",
+                  "pert-seed", "trials"] {
+            if args.get(k).is_some() {
+                return Err(anyhow!("--{k} only applies with --robust"));
+            }
+        }
+        return Ok(None);
+    }
+    let base = Perturbation::default();
+    let pert = Perturbation {
+        jitter: args.get_f64("jitter", 0.05),
+        stragglers: match args.get("straggler") {
+            Some(s) => parse_stragglers(s)?,
+            None => Vec::new(),
+        },
+        comm_spike_prob: args.get_f64("spike-prob", base.comm_spike_prob),
+        comm_spike_mult: args.get_f64("spike-mult", base.comm_spike_mult),
+        seed: args.get_usize("pert-seed", base.seed as usize) as u64,
+    };
+    if !(0.0..=1.0).contains(&pert.comm_spike_prob) {
+        return Err(anyhow!("--spike-prob must be in [0, 1]"));
+    }
+    let defaults = RobustObjective::default();
+    Ok(Some(RobustObjective {
+        pert,
+        trials: args.get_usize("trials", defaults.trials).max(1),
+    }))
+}
+
 /// Beam-search hyper-parameters from the shared `twobp tune` flags
 /// (used by both the ratio-profile and calibrated paths).
 fn beam_config_from_args(args: &Args) -> Result<BeamConfig> {
@@ -285,6 +357,7 @@ fn beam_config_from_args(args: &Args) -> Result<BeamConfig> {
         threads: args.get_usize("threads", 0),
         budget_bytes: budget,
         patience: args.get_usize("patience", defaults.patience),
+        robust: robust_objective_from_args(args)?,
     })
 }
 
@@ -311,6 +384,28 @@ fn winner_outputs(
 /// Print the search-effort / winner / named-best block shared by every
 /// `twobp tune` profile source.
 fn print_search_summary(report: &TuneReport, cfg: &BeamConfig) {
+    if let Some(r) = &cfg.robust {
+        println!(
+            "robust objective: rank by p95 makespan over {} seeded draws \
+             (jitter {:.3}, stragglers {}, comm spike p={:.2} x{:.1}, \
+             pert seed {:#x})",
+            r.trials,
+            r.pert.jitter,
+            if r.pert.stragglers.is_empty() {
+                "none".to_string()
+            } else {
+                r.pert
+                    .stragglers
+                    .iter()
+                    .map(|(rk, m)| format!("r{rk}:x{m}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            },
+            r.pert.comm_spike_prob,
+            r.pert.comm_spike_mult,
+            r.pert.seed,
+        );
+    }
     println!(
         "  evaluated {} candidates over {} generations \
          ({} over budget, {} sim-rejected; beam {}, seed {})",
@@ -421,6 +516,23 @@ fn cmd_tune_calibrated(args: &Args) -> Result<()> {
 
     let calib = CalibConfig::from_args(args)?;
     let beam_cfg = beam_config_from_args(args)?;
+
+    if calib.replan {
+        // self-healing loop: tune_replan owns its cluster, drifting
+        // preset, and (deliberately fixed) beam settings — only the
+        // drift knobs and the step count pass through
+        let drift = twobp::pipeline::DriftConfig {
+            threshold: calib.drift_threshold,
+            window: calib.drift_window,
+            max_replans: calib.max_replans,
+            cooldown: calib.drift_cooldown,
+        };
+        print!(
+            "{}",
+            twobp::experiments::tune_replan(calib.exec_steps, drift)?
+        );
+        return Ok(());
+    }
 
     let run_loop = |root: &std::path::Path,
                     preset: &str,

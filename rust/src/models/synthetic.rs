@@ -63,6 +63,37 @@ pub struct SyntheticSpec {
     /// manifest flops*, which is what gives measured-cost calibration
     /// (`twobp tune --synthetic`) real per-stage skew to find.
     pub cost_ns_per_flop: f64,
+    /// Mid-run cost drift (the stub's `drift` directive): after
+    /// `after_calls` executions of a compiled fwd/p1/p2 executable its
+    /// busy-delay switches to the drifted multiple of its base cost.
+    /// `None` = no drift lines (every other preset).
+    pub drift: Option<DriftSpec>,
+}
+
+/// Cost drift applied to a synthetic manifest's compute executables —
+/// the offline stand-in for a cluster whose per-stage times wander away
+/// from their calibrated profile mid-run (the replan smoke's trigger).
+#[derive(Debug, Clone)]
+pub struct DriftSpec {
+    /// Per-executable execution count after which the drifted cost
+    /// applies (counted independently per compiled executable, i.e.
+    /// per rank per role).
+    pub after_calls: u64,
+    /// Drift call count for the *concat* p2 executable, which loop-mode
+    /// calibration never runs and a concat plan calls only once per
+    /// step — the per-microbatch `after_calls` would never be reached
+    /// there, and a concat-p2 winner would dodge the drift entirely.
+    /// Counted in steps, pick it to land about where the per-microbatch
+    /// executables cross `after_calls` mid-run.
+    pub after_calls_concat: u64,
+    /// Post-drift cost multipliers per backward/forward role.  A
+    /// *role-asymmetric* drift (e.g. p2-heavy) both raises the step
+    /// makespan (detectable) and shifts the deferral economics the
+    /// planner tuned for (re-tunable) — a uniform slowdown would only
+    /// do the former.
+    pub fwd_mult: f64,
+    pub p1_mult: f64,
+    pub p2_mult: f64,
 }
 
 impl Default for SyntheticSpec {
@@ -79,6 +110,7 @@ impl Default for SyntheticSpec {
             hidden_per_stage: Vec::new(),
             stage_cost_scale: Vec::new(),
             cost_ns_per_flop: 0.0,
+            drift: None,
         }
     }
 }
@@ -108,6 +140,29 @@ impl SyntheticSpec {
         }
     }
 
+    /// The skewed spec with a p2-heavy mid-run cost drift — the
+    /// drift-replan smoke's workload (`twobp tune --synthetic
+    /// --replan`).  `after_calls` is tuned so calibration (2 steps × 4
+    /// microbatches = 8 calls per compute executable) and the first
+    /// executed steps run at the calibrated costs, and the drift lands
+    /// while the tuned plan is running — so the monitor sees measured
+    /// step makespans diverge from a prediction that *was* accurate.
+    /// The drifted p2 is ~6× dearer, which moves the plan optimum
+    /// (deferred-p2 packing stops paying) as well as the makespan.
+    pub fn skewed_drifting() -> SyntheticSpec {
+        SyntheticSpec {
+            preset: "synthetic-drift".to_string(),
+            drift: Some(DriftSpec {
+                after_calls: 20,
+                after_calls_concat: 2,
+                fwd_mult: 1.0,
+                p1_mult: 1.0,
+                p2_mult: 6.0,
+            }),
+            ..SyntheticSpec::skewed()
+        }
+    }
+
     /// Stage `i`'s hidden width.
     fn stage_hidden(&self, i: usize) -> usize {
         self.hidden_per_stage.get(i).copied().unwrap_or(self.hidden)
@@ -124,6 +179,20 @@ impl SyntheticSpec {
     /// Stub `cost` directive (ns) for an op of `flops` declared flops.
     fn cost_ns(&self, flops: f64) -> u64 {
         (flops * self.cost_ns_per_flop) as u64
+    }
+
+    /// Stub `drift` directive for an op of `flops` declared flops whose
+    /// role carries post-drift multiplier `mult`, switching after
+    /// `after_calls` executions (None without drift).
+    fn drift_ns(
+        &self,
+        after_calls: u64,
+        flops: f64,
+        mult: f64,
+    ) -> Option<(u64, u64)> {
+        self.drift
+            .as_ref()
+            .map(|_| (after_calls, self.cost_ns(flops * mult)))
     }
 }
 
@@ -190,6 +259,7 @@ fn write_stub(
     acc: usize,
     group: usize,
     cost_ns: u64,
+    drift: Option<(u64, u64)>,
     outs: &[(DType, Vec<usize>)],
 ) -> Result<()> {
     let mut text = String::from("stub-hlo v1\n");
@@ -203,6 +273,9 @@ fn write_stub(
     }
     if cost_ns > 0 {
         text.push_str(&format!("cost {cost_ns}\n"));
+    }
+    if let Some((calls, ns)) = drift {
+        text.push_str(&format!("drift {calls}:{ns}\n"));
     }
     for (dt, shape) in outs {
         let dims = shape
@@ -298,24 +371,37 @@ pub fn write_artifacts(root: &Path, spec: &SyntheticSpec) -> Result<Manifest> {
             (100.0 * scale, 110.0 * scale, 90.0 * scale, 5.0 * scale);
         let p2c_fl = p2_fl * spec.concat_m as f64;
 
+        // drift (if any) hits the compute roles via their per-role
+        // multipliers; init/opt stay steady
+        let d = spec.drift.as_ref();
         let m = |role: &str| format!("{}/s{i}_{role}", spec.preset);
         write_stub(&dir, &format!("s{i}_init.hlo.txt"), &m("init"),
-                   file_seed(spec.seed, i, 1), 0, 0, 0, &param_outs)?;
+                   file_seed(spec.seed, i, 1), 0, 0, 0, None, &param_outs)?;
         write_stub(&dir, &format!("s{i}_fwd.hlo.txt"), &m("fwd"),
                    file_seed(spec.seed, i, 2), 0, 0, spec.cost_ns(fwd_fl),
+                   d.and_then(|d| spec.drift_ns(d.after_calls, fwd_fl,
+                                                d.fwd_mult)),
                    &fwd_outs)?;
         write_stub(&dir, &format!("s{i}_p1.hlo.txt"), &m("p1"),
                    file_seed(spec.seed, i, 3), 0, 0, spec.cost_ns(p1_fl),
+                   d.and_then(|d| spec.drift_ns(d.after_calls, p1_fl,
+                                                d.p1_mult)),
                    &p1_outs)?;
         write_stub(&dir, &format!("s{i}_p2.hlo.txt"), &m("p2"),
                    file_seed(spec.seed, i, 4), grad_outs.len(), 0,
-                   spec.cost_ns(p2_fl), &grad_outs)?;
+                   spec.cost_ns(p2_fl),
+                   d.and_then(|d| spec.drift_ns(d.after_calls, p2_fl,
+                                                d.p2_mult)),
+                   &grad_outs)?;
         write_stub(&dir, &format!("s{i}_p2c.hlo.txt"), &m("p2c"),
                    file_seed(spec.seed, i, 4), 0, group,
-                   spec.cost_ns(p2c_fl), &grad_outs)?;
+                   spec.cost_ns(p2c_fl),
+                   d.and_then(|d| spec.drift_ns(d.after_calls_concat,
+                                                p2c_fl, d.p2_mult)),
+                   &grad_outs)?;
         write_stub(&dir, &format!("s{i}_opt.hlo.txt"), &m("opt"),
                    file_seed(spec.seed, i, 5), 0, 0, spec.cost_ns(opt_fl),
-                   &opt_outs)?;
+                   None, &opt_outs)?;
 
         let art = |file: &str, flops: f64| -> String {
             format!("{{\"file\": \"{file}\", \"flops\": {flops:.1}}}")
@@ -365,6 +451,7 @@ pub fn write_artifacts(root: &Path, spec: &SyntheticSpec) -> Result<Manifest> {
         0,
         0,
         spec.cost_ns(7.0),
+        None,
         &[(DType::F32, Vec::new()), (DType::F32, logits.clone())],
     )?;
 
@@ -501,6 +588,40 @@ mod tests {
         assert!(!tiny_text.contains("cost "), "{tiny_text}");
         let _ = std::fs::remove_dir_all(&root);
         let _ = std::fs::remove_dir_all(&tiny_root);
+    }
+
+    /// The drifting spec emits stub `drift` directives on the compute
+    /// roles with the per-role multipliers applied, and nowhere else.
+    #[test]
+    fn drifting_manifest_carries_role_asymmetric_drift() {
+        let root = tmp("drift");
+        let spec = SyntheticSpec::skewed_drifting();
+        let m = write_artifacts(&root, &spec).expect("write");
+        let read = |p: &std::path::Path| std::fs::read_to_string(p).unwrap();
+        // stage 1 (scale 4): p2 base 90*4 flops * 12000 ns = 4.32 ms,
+        // drifted *6 = 25.92 ms; fwd multiplier 1.0 leaves ns unchanged
+        let p2 = read(&m.stages[1].bwd_p2.file);
+        assert!(p2.contains("cost 4320000"), "{p2}");
+        assert!(p2.contains("drift 20:25920000"), "{p2}");
+        let fwd = read(&m.stages[1].fwd.file);
+        assert!(fwd.contains("drift 20:4800000"), "{fwd}");
+        // concat p2 drifts in proportion (covers concat_m microbatches)
+        // but on its own step-scale call count: calibration never runs
+        // it and a concat plan calls it once per step
+        let p2c = read(&m.stages[1].bwd_p2_concat.file);
+        assert!(p2c.contains("drift 2:103680000"), "{p2c}");
+        // steady roles carry no drift directive
+        for f in [&m.stages[1].init.file, &m.stages[1].opt.file, &m.loss.file]
+        {
+            assert!(!read(f).contains("drift "), "{}", f.display());
+        }
+        // the plain skewed preset stays drift-free
+        let root2 = tmp("drift-skewed");
+        let plain = write_artifacts(&root2, &SyntheticSpec::skewed())
+            .expect("write skewed");
+        assert!(!read(&plain.stages[1].bwd_p2.file).contains("drift "));
+        let _ = std::fs::remove_dir_all(&root);
+        let _ = std::fs::remove_dir_all(&root2);
     }
 
     /// Every generated stub file parses, and its declared output arity

@@ -1,0 +1,206 @@
+//! Mid-run drift detection: is the plan the executor is running still
+//! the plan the planner scored?
+//!
+//! A tuned plan embeds a calibrated cost model; when the cluster's real
+//! per-op costs wander (thermal throttling, a slow neighbor, a changed
+//! kernel — or, offline, the stub's `drift` directive), measured step
+//! makespans pull away from the prediction and the "optimal" plan can
+//! silently stop being one.  [`DriftMonitor`] watches the
+//! measured-vs-predicted ratio with **hysteresis** (one slow step is
+//! noise; N consecutive slow steps are drift) and a **bounded replan
+//! budget with cooldown** (a flapping cluster triggers at most
+//! `max_replans` re-tunes, never a thrash loop).
+//!
+//! The monitor is pure bookkeeping — no executor types — so the
+//! replan loop in `experiments` stays testable without a cluster:
+//! feed it makespans, read back [`Verdict`]s.
+//!
+//! ```text
+//!            measured ≤ predicted·(1+threshold)          streak < window
+//!          ┌──────────────── Ok ◄───────────────┐      ┌── Drifting ──┐
+//!          ▼                                    │      ▼              │
+//!   (streak = 0) ──— slow step ——► (streak += 1)┴──────┴─ streak ≥ window
+//!                                                            │
+//!              replans < max_replans? ── no ──► Exhausted    │
+//!                        │ yes                               │
+//!                        ▼                                   │
+//!                     Replan ──► caller re-tunes, calls rearm(new
+//!                                prediction): streak = 0, cooldown
+//!                                masks the steps run mid-transition
+//! ```
+
+/// Tuning knobs for [`DriftMonitor`].
+#[derive(Debug, Clone)]
+pub struct DriftConfig {
+    /// Relative slowdown that counts as a slow step: measured >
+    /// predicted × (1 + threshold).
+    pub threshold: f64,
+    /// Consecutive slow steps before a replan triggers (hysteresis
+    /// window; ≥ 1).
+    pub window: usize,
+    /// Replans allowed over the monitor's lifetime.
+    pub max_replans: usize,
+    /// Steps ignored right after a [`DriftMonitor::rearm`] — measured
+    /// makespans straddling the plan swap mix old- and new-plan ops.
+    pub cooldown: usize,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            threshold: 0.3,
+            window: 2,
+            max_replans: 1,
+            cooldown: 1,
+        }
+    }
+}
+
+/// What one observed step means for the run (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Measured makespan within tolerance of the prediction.
+    Ok,
+    /// Slow step inside the hysteresis window — keep running.
+    Drifting,
+    /// Drift confirmed: re-calibrate, re-tune, then [`DriftMonitor::rearm`].
+    Replan,
+    /// Drift confirmed but the replan budget is spent — keep the
+    /// current plan (the backoff that stops a flapping cluster from
+    /// thrashing the tuner).
+    Exhausted,
+}
+
+/// Hysteresis comparator between measured and predicted step makespan.
+#[derive(Debug, Clone)]
+pub struct DriftMonitor {
+    cfg: DriftConfig,
+    predicted: f64,
+    streak: usize,
+    cooldown_left: usize,
+    replans: usize,
+}
+
+impl DriftMonitor {
+    /// Monitor a run whose tuned plan predicts `predicted` seconds per
+    /// step.
+    pub fn new(cfg: DriftConfig, predicted: f64) -> DriftMonitor {
+        assert!(cfg.window >= 1, "hysteresis window must be >= 1");
+        DriftMonitor {
+            cfg,
+            predicted,
+            streak: 0,
+            cooldown_left: 0,
+            replans: 0,
+        }
+    }
+
+    /// Feed one measured step makespan; returns what to do about it.
+    pub fn observe(&mut self, measured: f64) -> Verdict {
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return Verdict::Ok;
+        }
+        let slow = measured > self.predicted * (1.0 + self.cfg.threshold);
+        if !slow {
+            self.streak = 0;
+            return Verdict::Ok;
+        }
+        self.streak += 1;
+        if self.streak < self.cfg.window {
+            return Verdict::Drifting;
+        }
+        if self.replans >= self.cfg.max_replans {
+            // stay triggered but don't re-announce every step: a fresh
+            // window must build up before the next Exhausted verdict
+            self.streak = 0;
+            return Verdict::Exhausted;
+        }
+        Verdict::Replan
+    }
+
+    /// The caller replanned: adopt the new prediction, reset the
+    /// hysteresis, start the cooldown, and burn one replan credit.
+    pub fn rearm(&mut self, new_predicted: f64) {
+        self.predicted = new_predicted;
+        self.streak = 0;
+        self.cooldown_left = self.cfg.cooldown;
+        self.replans += 1;
+    }
+
+    /// Replans performed so far (i.e. [`DriftMonitor::rearm`] calls).
+    pub fn replans(&self) -> usize {
+        self.replans
+    }
+
+    /// The prediction currently being compared against.
+    pub fn predicted(&self) -> f64 {
+        self.predicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor(window: usize, max_replans: usize) -> DriftMonitor {
+        DriftMonitor::new(
+            DriftConfig {
+                threshold: 0.5,
+                window,
+                max_replans,
+                cooldown: 1,
+            },
+            1.0,
+        )
+    }
+
+    #[test]
+    fn within_tolerance_stays_ok() {
+        let mut m = monitor(2, 1);
+        for x in [0.9, 1.0, 1.4, 1.5] {
+            assert_eq!(m.observe(x), Verdict::Ok, "{x}");
+        }
+        assert_eq!(m.replans(), 0);
+    }
+
+    #[test]
+    fn one_slow_step_is_noise_two_are_drift() {
+        let mut m = monitor(2, 1);
+        assert_eq!(m.observe(2.0), Verdict::Drifting);
+        // a good step resets the hysteresis
+        assert_eq!(m.observe(1.0), Verdict::Ok);
+        assert_eq!(m.observe(2.0), Verdict::Drifting);
+        assert_eq!(m.observe(2.0), Verdict::Replan);
+    }
+
+    #[test]
+    fn rearm_adopts_prediction_and_cools_down() {
+        let mut m = monitor(1, 2);
+        assert_eq!(m.observe(2.0), Verdict::Replan);
+        m.rearm(2.0);
+        assert_eq!(m.replans(), 1);
+        assert_eq!(m.predicted(), 2.0);
+        // first post-swap step is masked even though it's slow...
+        assert_eq!(m.observe(9.0), Verdict::Ok);
+        // ...then the new prediction is what's compared against
+        assert_eq!(m.observe(2.5), Verdict::Ok);
+        assert_eq!(m.observe(4.0), Verdict::Replan);
+    }
+
+    #[test]
+    fn replan_budget_bounds_thrash() {
+        let mut m = monitor(1, 1);
+        assert_eq!(m.observe(2.0), Verdict::Replan);
+        m.rearm(1.0); // replan didn't help: cluster still slow
+        assert_eq!(m.observe(2.0), Verdict::Ok); // cooldown
+        assert_eq!(m.observe(2.0), Verdict::Exhausted);
+        // exhausted re-announces only after a full fresh window
+        let mut m = monitor(2, 0);
+        assert_eq!(m.observe(2.0), Verdict::Drifting);
+        assert_eq!(m.observe(2.0), Verdict::Exhausted);
+        assert_eq!(m.observe(2.0), Verdict::Drifting);
+        assert_eq!(m.observe(2.0), Verdict::Exhausted);
+        assert_eq!(m.replans(), 0);
+    }
+}

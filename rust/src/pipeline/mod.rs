@@ -10,8 +10,10 @@
 
 pub mod comm;
 pub mod data;
+pub mod drift;
 pub mod memory;
 pub mod stage;
 pub mod training;
 
+pub use drift::{DriftConfig, DriftMonitor, Verdict};
 pub use training::{train, verify_report_against_sim, Cluster, RunReport};

@@ -46,6 +46,14 @@ pub struct WorkerReport {
     pub peak_inter: u64,
     /// Mean measured seconds per op kind: (fwd, p1, p2, opt).
     pub mean_costs: (f64, f64, f64, f64),
+    /// Mean measured seconds per p2p send (serialize + channel write;
+    /// 0.0 if this rank sent nothing).  Sends are timed as part of no
+    /// op span — the producing span ends *before* the send — so this
+    /// is the executor's measured stand-in for [`CostModel::comm`],
+    /// not a slice of fwd/p1 time.
+    ///
+    /// [`CostModel::comm`]: crate::sim::CostModel::comm
+    pub mean_comm: f64,
     /// Mean measured seconds of the loss + initial-gradient computation
     /// (last rank only; 0.0 elsewhere).  Timed as its own
     /// [`SpanKind::Loss`] span so it never inflates the p1 mean — a
@@ -122,6 +130,13 @@ pub struct StageWorker {
     pub mem: MemAccountant,
     pub timings: Vec<OpTiming>,
     pub losses: Vec<f32>,
+    /// Total seconds spent in p2p sends and how many there were —
+    /// the measured-comm accumulator behind [`WorkerReport::mean_comm`]
+    /// (accumulators, not timeline spans: the span-shape verifier
+    /// compares executed timelines against simulator spans 1:1 and
+    /// must not see op kinds the simulator doesn't emit per-plan-op).
+    comm_secs: f64,
+    comm_sends: usize,
     epoch: Instant,
 }
 
@@ -203,6 +218,8 @@ impl StageWorker {
             mem: MemAccountant::new(),
             timings: Vec::new(),
             losses: Vec::new(),
+            comm_secs: 0.0,
+            comm_sends: 0,
             epoch,
         })
         .map(|mut w| {
@@ -245,6 +262,8 @@ impl StageWorker {
                        self.info.bytes.params * 3 + self.info.bytes.grads);
         self.timings.clear();
         self.losses.clear();
+        self.comm_secs = 0.0;
+        self.comm_sends = 0;
         Ok(())
     }
 
@@ -372,17 +391,23 @@ impl StageWorker {
         entry.res2 = Some(res2);
 
         if self.rank + 1 < self.n_ranks {
+            // the compute span ends here; serialize + send is timed as
+            // comm (the measured CostModel::comm), not as fwd time
+            let end = self.now();
             let y_host = HostTensor::from_literal(&y)?;
             self.links
                 .act_out
                 .as_ref()
                 .ok_or_else(|| anyhow!("missing act_out"))?
                 .send(mb, y_host)?;
+            self.comm_secs += self.now() - end;
+            self.comm_sends += 1;
+            self.timings.push(OpTiming { kind: SpanKind::Fwd, mb, start, end });
         } else {
             self.mem.alloc(Class::Wire, literal_bytes(&y));
             entry.logits = Some(y);
+            self.record(SpanKind::Fwd, mb, start);
         }
-        self.record(SpanKind::Fwd, mb, start);
         Ok(())
     }
 
@@ -460,15 +485,26 @@ impl StageWorker {
         self.pending_p2.push(mb);
 
         if self.rank > 0 {
-            let gx_host = HostTensor::from_literal(&gx)?;
             if self.two_bp {
-                // 2BP: the input-grad leaves immediately after p1
+                // 2BP: the input-grad leaves immediately after p1; the
+                // p1 span ends before the timed serialize + send
+                let end = self.now();
+                let gx_host = HostTensor::from_literal(&gx)?;
                 self.links.grad_out.as_ref().unwrap().send(mb, gx_host)?;
-            } else {
-                // fused autograd semantics: hold until the paired p2 ran
-                self.mem.alloc(Class::Wire, gx_host.bytes());
-                entry.gx = Some(gx_host);
+                self.comm_secs += self.now() - end;
+                self.comm_sends += 1;
+                self.timings.push(OpTiming {
+                    kind: SpanKind::BwdP1,
+                    mb,
+                    start,
+                    end,
+                });
+                return Ok(());
             }
+            // fused autograd semantics: hold until the paired p2 ran
+            let gx_host = HostTensor::from_literal(&gx)?;
+            self.mem.alloc(Class::Wire, gx_host.bytes());
+            entry.gx = Some(gx_host);
         }
         self.record(SpanKind::BwdP1, mb, start);
         Ok(())
@@ -502,8 +538,16 @@ impl StageWorker {
             self.mem.free(Class::Res2, self.info.bytes.res2);
             self.mem.free(Class::Inter, self.info.bytes.inter);
             self.pending_p2.retain(|x| *x != mb);
+            // span ends before finish_mb: the fused-mode grad send it
+            // may perform is timed as comm, not p2
+            let end = self.now();
             self.finish_mb(mb)?;
-            self.record(SpanKind::BwdP2, mb, start);
+            self.timings.push(OpTiming {
+                kind: SpanKind::BwdP2,
+                mb,
+                start,
+                end,
+            });
         }
         Ok(())
     }
@@ -535,27 +579,39 @@ impl StageWorker {
         // concat covers the whole step's p2 — valid only on fresh grads
         self.grads = outs;
         self.grads_fresh = false;
+        // span ends before the per-mb cleanup: any fused-mode grad
+        // sends in finish_mb are timed as comm, not p2
+        let end = self.now();
         for &mb in mbs {
             self.mem.free(Class::Res2, self.info.bytes.res2);
             self.mem.free(Class::Inter, self.info.bytes.inter);
             self.pending_p2.retain(|x| *x != mb);
             self.finish_mb(mb)?;
         }
-        self.record(SpanKind::BwdP2, mbs[0], start);
+        self.timings.push(OpTiming {
+            kind: SpanKind::BwdP2,
+            mb: mbs[0],
+            start,
+            end,
+        });
         Ok(())
     }
 
     /// Per-mb cleanup after its p2: fused-mode grad send + stash removal.
     fn finish_mb(&mut self, mb: u32) -> Result<()> {
-        let entry = self.stash.get_mut(&mb).unwrap();
-        if let Some(gx_host) = entry.gx.take() {
+        let held_gx = self.stash.get_mut(&mb).unwrap().gx.take();
+        if let Some(gx_host) = held_gx {
             self.mem.free(Class::Wire, gx_host.bytes());
+            let t0 = self.now();
             self.links
                 .grad_out
                 .as_ref()
                 .ok_or_else(|| anyhow!("missing grad_out"))?
                 .send(mb, gx_host)?;
+            self.comm_secs += self.now() - t0;
+            self.comm_sends += 1;
         }
+        let entry = self.stash.get_mut(&mb).unwrap();
         if entry.res1.is_none()
             && entry.res2.is_none()
             && entry.inter.is_none()
@@ -654,6 +710,14 @@ impl StageWorker {
             mean(SpanKind::Opt),
         );
         let mean_loss = mean(SpanKind::Loss);
+        let mean_comm = if self.comm_sends == 0 {
+            0.0
+        } else {
+            self.comm_secs / self.comm_sends as f64
+        };
+        // consumed like `timings`: a report drains the accumulators
+        self.comm_secs = 0.0;
+        self.comm_sends = 0;
         let mut checksum = 0.0f64;
         let mut digest: u64 = 0xcbf2_9ce4_8422_2325;
         for p in &self.params {
@@ -677,6 +741,7 @@ impl StageWorker {
             peak_inter: self.mem.peak_of(Class::Inter),
             mean_costs,
             mean_loss,
+            mean_comm,
             losses: std::mem::take(&mut self.losses),
             param_checksum: checksum,
             param_digest: digest,

@@ -74,13 +74,29 @@ impl RunReport {
         let pick = |f: fn(&WorkerReport) -> f64| -> Vec<f64> {
             ranked.iter().map(|&w| f(w)).collect()
         };
+        // hop latency: mean of per-rank measured send costs over the
+        // ranks that actually sent (a single-rank pipeline sends
+        // nothing and keeps comm = 0).  In-process channels make this
+        // a µs-scale floor rather than a network figure, but a floor
+        // beats the old hard-coded 0.0: plans that differ only in hop
+        // count stop looking timing-identical to the planner.
+        let senders: Vec<f64> = ranked
+            .iter()
+            .filter(|w| w.mean_comm > 0.0)
+            .map(|w| w.mean_comm)
+            .collect();
+        let comm = if senders.is_empty() {
+            0.0
+        } else {
+            senders.iter().sum::<f64>() / senders.len() as f64
+        };
         Ok(CostModel {
             fwd: pick(|w| w.mean_costs.0),
             p1: pick(|w| w.mean_costs.1),
             p2: pick(|w| w.mean_costs.2),
             opt: pick(|w| w.mean_costs.3),
             loss: ranked.last().map(|w| w.mean_loss).unwrap_or(0.0),
-            comm: 0.0,
+            comm,
             comm_inter_node: 0.0,
             ranks_per_node: usize::MAX,
             concat_factor: 1.0,
@@ -649,6 +665,8 @@ mod tests {
             peak_inter: 0,
             mean_costs: (1.0 + rank as f64, 2.0, 3.0, 0.5),
             mean_loss: if rank == 1 { 0.25 } else { 0.0 },
+            // last rank sends nothing in a 2-rank pipeline's fwd path
+            mean_comm: if rank == 0 { 0.002 } else { 0.0 },
             losses: Vec::new(),
             param_checksum: 0.0,
             param_digest: 0,
@@ -676,6 +694,28 @@ mod tests {
         // into (or zeroing out of) the p1 column
         assert_eq!(c.loss, 0.25);
         assert_eq!(c.p1, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn measured_costs_averages_comm_over_sending_ranks_only() {
+        // rank 0 sent (mean 2 ms), rank 1 sent nothing: the comm floor
+        // is the senders' mean, not dragged down by non-senders
+        let r = report_with(vec![wr(0), wr(1)]);
+        let c = r.measured_costs().unwrap();
+        assert_eq!(c.comm, 0.002);
+        // both ranks sent: plain mean
+        let mut a = wr(0);
+        a.mean_comm = 0.002;
+        let mut b = wr(1);
+        b.mean_comm = 0.004;
+        let c = report_with(vec![a, b]).measured_costs().unwrap();
+        assert!((c.comm - 0.003).abs() < 1e-12, "{}", c.comm);
+        // nobody sent (single rank): comm stays 0
+        let mut solo = wr(0);
+        solo.mean_comm = 0.0;
+        let c = report_with(vec![solo]).measured_costs();
+        // 1-rank report against the 2-rank plan is fine for costs
+        assert_eq!(c.unwrap().comm, 0.0);
     }
 
     #[test]

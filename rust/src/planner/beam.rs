@@ -13,6 +13,11 @@
 //! zero allocations — candidates whose `max_peak` exceeds the budget
 //! are rejected outright, as are plans the simulator reports as
 //! deadlocked (see [`super::moves`] on validity vs liveness).
+//! **Objectives**: by default candidates rank on clean-world
+//! throughput; with [`BeamConfig::robust`] set they rank on tail
+//! throughput — samples/sec at the p95 makespan over K seeded
+//! Monte-Carlo perturbation draws ([`crate::sim::score_plan_robust`]),
+//! with budget fit required in every draw.
 //! **Search** keeps the `beam_width` best by throughput and expands
 //! each survivor with validated local moves for up to `generations`
 //! rounds, stopping early after `patience` rounds without improvement.
@@ -32,10 +37,29 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use crate::experiments::sweep::{combos, default_threads, run_grid_with};
 use crate::schedule::{generate, plan_io, validate::validate, Plan};
-use crate::sim::{score_plan, Scratch};
+use crate::sim::{score_plan, score_plan_robust, Perturbation, RobustScratch};
 use crate::util::prng::SplitMix64;
 
 use super::{moves, TuneProfile};
+
+/// Tail-makespan objective for robust tuning: rank candidates by their
+/// p95 makespan over `trials` Monte-Carlo draws of `pert` instead of
+/// the clean-world makespan.  Draw seeds are a pure function of
+/// `(pert.seed, draw)` (see [`crate::sim::perturb`]), so every
+/// candidate is scored against the *same* perturbed worlds and the
+/// search stays deterministic per seed and thread count.
+#[derive(Debug, Clone)]
+pub struct RobustObjective {
+    pub pert: Perturbation,
+    /// Monte-Carlo draws per candidate (clamped to ≥ 1).
+    pub trials: usize,
+}
+
+impl Default for RobustObjective {
+    fn default() -> Self {
+        RobustObjective { pert: Perturbation::default(), trials: 32 }
+    }
+}
 
 /// Search hyper-parameters.  The defaults finish in well under a second
 /// on the event-driven engine at paper scales (N ≤ 16).
@@ -53,6 +77,11 @@ pub struct BeamConfig {
     pub budget_bytes: Option<u64>,
     /// Stop after this many generations without a throughput gain.
     pub patience: usize,
+    /// `Some` switches scoring to the tail objective: candidates rank
+    /// on p95 makespan under the perturbation, a candidate must fit
+    /// the budget in **every** draw, and the reported
+    /// [`Candidate::makespan`] carries the p95 (throughput follows).
+    pub robust: Option<RobustObjective>,
 }
 
 impl Default for BeamConfig {
@@ -66,6 +95,7 @@ impl Default for BeamConfig {
             threads: 0,
             budget_bytes: None,
             patience: 4,
+            robust: None,
         }
     }
 }
@@ -222,9 +252,11 @@ fn absorb(
 }
 
 /// Score one batch of already-validated candidates on the Tier A fast
-/// path: each worker owns a [`Scratch`] and reuses it across every
-/// candidate it pulls, so the per-candidate cost is one span-free
-/// simulation — no validate pass, no span vectors, no allocations.
+/// path: each worker owns a [`RobustScratch`] (whose inner `Scratch`
+/// serves the plain objective) and reuses it across every candidate it
+/// pulls, so the per-candidate cost is one span-free simulation (or K
+/// of them under [`BeamConfig::robust`]) — no validate pass, no span
+/// vectors, no allocations.
 fn evaluate(
     pending: &[Pending],
     profile: &TuneProfile,
@@ -234,30 +266,60 @@ fn evaluate(
     run_grid_with(
         pending,
         threads,
-        Scratch::new,
+        RobustScratch::new,
         |scratch, _, (plan, fp, seed, origin)| {
-            match score_plan(
-                plan,
-                &profile.costs,
-                Some(&profile.mem),
-                cfg.budget_bytes,
-                scratch,
-            ) {
-                Err(_) => EvalOut::SimFail,
-                Ok(score) if !score.fits => EvalOut::OverBudget,
-                Ok(score) => EvalOut::Fit(Box::new(SearchCand {
+            let cand = |makespan: f64, throughput: f64, max_peak: u64| {
+                EvalOut::Fit(Box::new(SearchCand {
                     plan: plan.clone(),
                     fp: *fp,
-                    makespan: score.makespan,
-                    throughput: score.throughput(
-                        profile.samples_per_microbatch,
-                        plan.n_microbatches,
-                    ),
-                    max_peak: score.max_peak,
+                    makespan,
+                    throughput,
+                    max_peak,
                     seed: seed.clone(),
                     origin: origin.clone(),
                     text_cache: std::cell::OnceCell::new(),
-                })),
+                }))
+            };
+            match &cfg.robust {
+                None => match score_plan(
+                    plan,
+                    &profile.costs,
+                    Some(&profile.mem),
+                    cfg.budget_bytes,
+                    scratch.sim_mut(),
+                ) {
+                    Err(_) => EvalOut::SimFail,
+                    Ok(score) if !score.fits => EvalOut::OverBudget,
+                    Ok(score) => cand(
+                        score.makespan,
+                        score.throughput(
+                            profile.samples_per_microbatch,
+                            plan.n_microbatches,
+                        ),
+                        score.max_peak,
+                    ),
+                },
+                Some(ro) => match score_plan_robust(
+                    plan,
+                    &profile.costs,
+                    Some(&profile.mem),
+                    cfg.budget_bytes,
+                    &ro.pert,
+                    ro.trials,
+                    scratch,
+                ) {
+                    Err(_) => EvalOut::SimFail,
+                    // a robust plan must fit in every perturbed world
+                    Ok(rs) if rs.fit_fraction < 1.0 => EvalOut::OverBudget,
+                    Ok(rs) => cand(
+                        rs.p95,
+                        rs.throughput_p95(
+                            profile.samples_per_microbatch,
+                            plan.n_microbatches,
+                        ),
+                        rs.max_peak,
+                    ),
+                },
             }
         },
     )
@@ -559,6 +621,76 @@ mod tests {
             report.best.plan.n_microbatches,
         );
         assert_eq!(tput.to_bits(), report.best.throughput.to_bits());
+    }
+
+    /// Robust tuning must be deterministic per seed across `--threads`
+    /// values (per-draw seeds are pure functions of the perturbation
+    /// seed and draw index, evaluation order never feeds the PRNG).
+    #[test]
+    fn robust_tune_is_deterministic_across_threads() {
+        let profile = TuneProfile::llama_like(2);
+        let robust = Some(RobustObjective {
+            pert: Perturbation {
+                jitter: 0.08,
+                stragglers: vec![(1, 1.4)],
+                comm_spike_prob: 0.25,
+                comm_spike_mult: 6.0,
+                seed: 42,
+            },
+            trials: 12,
+        });
+        let a = tune(
+            &profile,
+            2,
+            &BeamConfig { threads: 1, robust: robust.clone(), ..quick_cfg() },
+        )
+        .unwrap();
+        let b = tune(
+            &profile,
+            2,
+            &BeamConfig { threads: 4, robust, ..quick_cfg() },
+        )
+        .unwrap();
+        assert_eq!(a.best.text, b.best.text, "thread count changed result");
+        assert_eq!(a.best.makespan.to_bits(), b.best.makespan.to_bits());
+        assert_eq!(a.best.throughput.to_bits(), b.best.throughput.to_bits());
+        assert_eq!(a.history.len(), b.history.len());
+    }
+
+    /// Under the robust objective the winner's reported makespan is
+    /// the p95 over the draws — never better than its own clean-world
+    /// makespan — and the winner is still a valid plan.
+    #[test]
+    fn robust_winner_is_valid_and_reports_tail_makespan() {
+        let profile = TuneProfile::llama_like(4);
+        let robust = Some(RobustObjective {
+            pert: Perturbation {
+                jitter: 0.1,
+                stragglers: vec![(2, 1.5)],
+                ..Perturbation::default()
+            },
+            trials: 16,
+        });
+        let report = tune(
+            &profile,
+            4,
+            &BeamConfig { robust, ..quick_cfg() },
+        )
+        .unwrap();
+        validate(&report.best.plan).unwrap();
+        let clean = crate::sim::eval_plan(
+            &report.best.plan,
+            &profile.costs,
+            Some(&profile.mem),
+            None,
+        )
+        .unwrap();
+        assert!(
+            report.best.makespan >= clean.result.makespan,
+            "p95 {} below the clean makespan {}",
+            report.best.makespan,
+            clean.result.makespan
+        );
     }
 
     #[test]

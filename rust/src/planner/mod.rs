@@ -53,7 +53,7 @@
 pub mod beam;
 pub mod moves;
 
-pub use beam::{tune, BeamConfig, Candidate, TuneReport};
+pub use beam::{tune, BeamConfig, Candidate, RobustObjective, TuneReport};
 
 use crate::sim::{CostModel, MemModel};
 

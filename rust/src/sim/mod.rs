@@ -92,9 +92,11 @@
 //! render the winner with `simulate` when its timeline is needed.
 
 pub mod engine;
+pub mod perturb;
 
 pub use engine::reference::simulate_naive;
 pub use engine::{score_plan, simulate, Scratch, SimError};
+pub use perturb::{score_plan_robust, Perturbation, RobustScore, RobustScratch};
 
 use crate::util::gantt::Span;
 
@@ -118,6 +120,14 @@ pub struct CostModel {
     /// relative to k separate calls (Table 3 found ≈ 1.0: concat saves
     /// dispatch but pays the copy).
     pub concat_factor: f64,
+}
+
+impl Default for CostModel {
+    /// Empty (0-rank) model — the pre-warmup state of a
+    /// [`perturb::RobustScratch`] working copy.
+    fn default() -> Self {
+        CostModel::unit(0)
+    }
 }
 
 impl CostModel {

@@ -1,0 +1,448 @@
+//! Stochastic cost perturbation and tail-makespan (robust) scoring.
+//!
+//! The simulator's clean world scores every plan at its *expected*
+//! makespan, but tightly packed schedules — exactly the ones 2BP's
+//! deferral produces — are the ones a single straggler rank or a comm
+//! spike unravels.  This module adds a seeded [`Perturbation`] model
+//! and [`score_plan_robust`]: K Monte-Carlo draws of a perturbed
+//! [`CostModel`] scored through the Tier A fast path
+//! ([`score_plan`]), reusing one workspace ([`RobustScratch`]) so the
+//! zero-allocation discipline of the scoring tier carries over —
+//! a warmed-up scratch evaluates all K draws without heap allocation.
+//!
+//! # The perturbation model
+//!
+//! Draw `d` derives its own PRNG from `(seed, d)` — a pure function,
+//! so results are independent of evaluation order and thread count,
+//! and every candidate plan sees the *same* K perturbed worlds
+//! (common random numbers: candidate comparisons are paired, which
+//! cuts the variance of "A beats B" decisions).  Within a draw,
+//! factors apply in a fixed order:
+//!
+//! 1. **Per-op jitter** — every per-rank cost entry (fwd, p1, p2, opt;
+//!    then loss, then comm) is multiplied by `exp(jitter * z)`,
+//!    `z ~ N(0,1)`: lognormal noise, always positive, median 1.
+//! 2. **Stragglers** — deterministic per-rank multipliers applied to
+//!    every draw (the "rank 2 is on a slow host" scenario).
+//! 3. **Comm spike** — one Bernoulli per draw; on success all hop
+//!    latencies multiply by `comm_spike_mult` (a congested fabric).
+//!
+//! # The identity contract
+//!
+//! With `jitter = 0`, straggler multipliers of `1.0`, and
+//! `comm_spike_prob = 0`, every factor is *exactly* `1.0`, and
+//! multiplying a finite positive f64 by `1.0` is bit-exact — so each
+//! draw's [`Score`] is bit-identical to [`score_plan`]'s, with **no
+//! special-casing** on the identity path (the normal draws are still
+//! consumed, keeping the PRNG stream position independent of the knob
+//! values).  The only subtlety is the mean: summing K copies of x and
+//! dividing by K can round when K is not a power of two, so the
+//! all-identical case short-circuits to the common value.  A
+//! differential proptest below holds every [`RobustScore`] field
+//! bit-equal to the corresponding [`score_plan`] field under the
+//! identity perturbation.
+
+use super::{score_plan, CostModel, MemModel, Scratch, SimError};
+use crate::schedule::Plan;
+use crate::util::prng::SplitMix64;
+
+/// Seeded stochastic perturbation of a [`CostModel`] (see the module
+/// docs for the model and the identity contract).
+#[derive(Debug, Clone)]
+pub struct Perturbation {
+    /// Lognormal sigma of the per-op multiplicative jitter: each cost
+    /// entry multiplies by `exp(jitter * z)`, `z ~ N(0,1)`.  0 = none.
+    pub jitter: f64,
+    /// Deterministic `(rank, multiplier)` straggler factors applied to
+    /// that rank's fwd/p1/p2/opt in every draw.  `1.0` is a no-op;
+    /// out-of-range ranks are ignored (the CLI validates them).
+    pub stragglers: Vec<(usize, f64)>,
+    /// Per-draw probability that all hop latencies spike.
+    pub comm_spike_prob: f64,
+    /// Comm multiplier when a spike fires.
+    pub comm_spike_mult: f64,
+    /// Base seed; draw `d` uses a pure function of `(seed, d)`.
+    pub seed: u64,
+}
+
+impl Default for Perturbation {
+    fn default() -> Self {
+        Perturbation {
+            jitter: 0.0,
+            stragglers: Vec::new(),
+            comm_spike_prob: 0.0,
+            comm_spike_mult: 4.0,
+            seed: 0x2B9_7E57,
+        }
+    }
+}
+
+impl Perturbation {
+    /// True when every factor this model can produce is exactly 1.0
+    /// (the bit-identity regime of the module docs).
+    pub fn is_identity(&self) -> bool {
+        self.jitter == 0.0
+            && self.comm_spike_prob <= 0.0
+            && self.stragglers.iter().all(|&(_, m)| m == 1.0)
+    }
+
+    /// The PRNG for draw `d` — a pure function of `(seed, d)`, so draws
+    /// are identical regardless of evaluation order or thread count.
+    fn draw_rng(&self, d: usize) -> SplitMix64 {
+        SplitMix64::new(
+            self.seed
+                ^ (d as u64 + 1).wrapping_mul(0xA24B_AED4_963E_E407),
+        )
+    }
+
+    /// Apply draw `d` in place to `dst` (already a copy of the base
+    /// costs).  Factor order is fixed — see the module docs.
+    fn apply(&self, d: usize, dst: &mut CostModel) {
+        let mut rng = self.draw_rng(d);
+        let n = dst.fwd.len();
+        for r in 0..n {
+            dst.fwd[r] *= jitter_factor(self.jitter, &mut rng);
+            dst.p1[r] *= jitter_factor(self.jitter, &mut rng);
+            dst.p2[r] *= jitter_factor(self.jitter, &mut rng);
+            dst.opt[r] *= jitter_factor(self.jitter, &mut rng);
+        }
+        dst.loss *= jitter_factor(self.jitter, &mut rng);
+        dst.comm *= jitter_factor(self.jitter, &mut rng);
+        for &(rank, mult) in &self.stragglers {
+            if rank < n {
+                dst.fwd[rank] *= mult;
+                dst.p1[rank] *= mult;
+                dst.p2[rank] *= mult;
+                dst.opt[rank] *= mult;
+            }
+        }
+        // the Bernoulli draw is consumed unconditionally so the stream
+        // position never depends on the probability knob
+        let spike = rng.next_f64() < self.comm_spike_prob;
+        if spike {
+            dst.comm *= self.comm_spike_mult;
+            dst.comm_inter_node *= self.comm_spike_mult;
+        }
+    }
+}
+
+/// One lognormal factor.  The normal draw is consumed even at
+/// `sigma = 0` (stream position must not depend on the knob), where
+/// `0.0 * z = ±0.0` and `exp(±0.0) = 1.0` exactly — the identity
+/// contract needs no branch here.
+fn jitter_factor(sigma: f64, rng: &mut SplitMix64) -> f64 {
+    (sigma * rng.normal()).exp()
+}
+
+/// Tail statistics over K perturbed draws of one plan.  Percentiles
+/// use the deterministic nearest-rank rule on the sorted makespans.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RobustScore {
+    /// Median makespan over the draws.
+    pub p50: f64,
+    /// 95th-percentile makespan — the tail objective robust tuning
+    /// ranks on.
+    pub p95: f64,
+    /// Worst-case (max) makespan over the draws.
+    pub worst: f64,
+    /// Mean makespan (exact when every draw agrees — see module docs).
+    pub mean: f64,
+    /// Fraction of draws whose peak bytes fit the budget (1.0 when all
+    /// fit, or when no budget was given).
+    pub fit_fraction: f64,
+    /// Max over draws of the per-draw max peak bytes.
+    pub max_peak: u64,
+}
+
+impl RobustScore {
+    /// Tail throughput: samples/sec at the p95 makespan (the robust
+    /// analogue of [`super::Score::throughput`]).
+    pub fn throughput_p95(&self, samples_per_mb: usize, n_mb: usize) -> f64 {
+        (samples_per_mb * n_mb) as f64 / self.p95
+    }
+}
+
+/// Caller-owned workspace for [`score_plan_robust`]: the inner Tier A
+/// [`Scratch`], a reusable perturbed-cost working copy, and the
+/// makespan sample buffer.  Like `Scratch`, buffers grow monotonically
+/// and are reused verbatim — one per worker thread, never shared.
+#[derive(Default)]
+pub struct RobustScratch {
+    sim: Scratch,
+    costs: CostModel,
+    makespans: Vec<f64>,
+}
+
+impl RobustScratch {
+    pub fn new() -> RobustScratch {
+        RobustScratch::default()
+    }
+
+    /// The inner Tier A scratch, for callers that interleave plain
+    /// [`score_plan`] calls with robust ones (the planner's evaluate
+    /// loop) without carrying two workspaces.
+    pub fn sim_mut(&mut self) -> &mut Scratch {
+        &mut self.sim
+    }
+}
+
+/// Overwrite `dst` with `src` reusing `dst`'s allocations (derived
+/// `clone_from` would reallocate the vectors).
+fn copy_costs(dst: &mut CostModel, src: &CostModel) {
+    dst.fwd.clear();
+    dst.fwd.extend_from_slice(&src.fwd);
+    dst.p1.clear();
+    dst.p1.extend_from_slice(&src.p1);
+    dst.p2.clear();
+    dst.p2.extend_from_slice(&src.p2);
+    dst.opt.clear();
+    dst.opt.extend_from_slice(&src.opt);
+    dst.loss = src.loss;
+    dst.comm = src.comm;
+    dst.comm_inter_node = src.comm_inter_node;
+    dst.ranks_per_node = src.ranks_per_node;
+    dst.concat_factor = src.concat_factor;
+}
+
+/// Score `plan` under `trials` Monte-Carlo draws of `pert` applied to
+/// `costs`, reusing `scratch` across draws (and across calls) — the
+/// robust counterpart of [`score_plan`], same caller contract: the
+/// plan must already be valid, and a deadlocked plan returns `Err`
+/// (cost scaling never changes *whether* a plan deadlocks, only when
+/// ops run, so any draw failing means the base plan fails).
+///
+/// `trials` is clamped to at least 1.  Under the identity perturbation
+/// every field is bit-identical to the corresponding [`score_plan`]
+/// field (differential proptest below).
+pub fn score_plan_robust(
+    plan: &Plan,
+    costs: &CostModel,
+    mem: Option<&MemModel>,
+    budget: Option<u64>,
+    pert: &Perturbation,
+    trials: usize,
+    scratch: &mut RobustScratch,
+) -> Result<RobustScore, SimError> {
+    let k = trials.max(1);
+    let RobustScratch { sim, costs: work, makespans } = scratch;
+    makespans.clear();
+    let mut fit_count = 0usize;
+    let mut max_peak = 0u64;
+    for d in 0..k {
+        copy_costs(work, costs);
+        pert.apply(d, work);
+        let s = score_plan(plan, work, mem, budget, sim)?;
+        makespans.push(s.makespan);
+        if s.fits {
+            fit_count += 1;
+        }
+        max_peak = max_peak.max(s.max_peak);
+    }
+    makespans.sort_unstable_by(f64::total_cmp);
+    // nearest-rank percentile: index ceil(q*K) - 1 (1-based rank)
+    let pct = |q: f64| makespans[((q * k as f64).ceil() as usize).clamp(1, k) - 1];
+    let p50 = pct(0.50);
+    let p95 = pct(0.95);
+    let worst = makespans[k - 1];
+    // sum/K of K identical values can round when K is not a power of
+    // two; the all-identical case (incl. the identity perturbation)
+    // short-circuits to the exact common value
+    let mean = if makespans[0].to_bits() == makespans[k - 1].to_bits() {
+        makespans[0]
+    } else {
+        makespans.iter().sum::<f64>() / k as f64
+    };
+    Ok(RobustScore {
+        p50,
+        p95,
+        worst,
+        mean,
+        fit_fraction: fit_count as f64 / k as f64,
+        max_peak,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{generate, validate::validate, ScheduleKind};
+
+    fn pert(jitter: f64, stragglers: &[(usize, f64)]) -> Perturbation {
+        Perturbation {
+            jitter,
+            stragglers: stragglers.to_vec(),
+            ..Perturbation::default()
+        }
+    }
+
+    /// The identity contract: jitter = 0, straggler = 1.0, spike
+    /// prob = 0 must reproduce `score_plan` bit-for-bit on every
+    /// field, across fuzzed plans / cost models / budgets / trial
+    /// counts (odd K exercises the exact-mean short circuit), with
+    /// one scratch reused across all cases.
+    #[test]
+    fn prop_identity_perturbation_matches_score_plan() {
+        use crate::util::proptest::{check, gen};
+        let mut rs = RobustScratch::new();
+        let mut plain = Scratch::new();
+        check(
+            "score_plan_robust(identity) == score_plan, bit for bit",
+            200,
+            |rng| {
+                let kind = *gen::pick(rng, &ScheduleKind::all_variants());
+                let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
+                    true
+                } else {
+                    gen::bool(rng)
+                };
+                let n = gen::usize_in(rng, 1, 6);
+                let m = gen::usize_in(rng, 1, 12);
+                let trials = gen::usize_in(rng, 1, 9);
+                let costs = (
+                    0.25 + rng.next_f64(),
+                    0.25 + rng.next_f64(),
+                    0.25 + rng.next_f64(),
+                    rng.next_f64() * 0.2,
+                    rng.next_f64() * 0.3,
+                    rng.next_f64() * 0.3,
+                );
+                let with_budget = gen::bool(rng);
+                let mem_seed = rng.next_u64();
+                let pert_seed = rng.next_u64();
+                (kind, two_bp, n, m, trials, costs, with_budget, mem_seed,
+                 pert_seed)
+            },
+            |&(kind, two_bp, n, m, trials, costs, with_budget, mem_seed,
+               pert_seed)| {
+                let (f, p1, p2, opt, loss, comm) = costs;
+                let plan = generate(kind, two_bp, n, m, false);
+                validate(&plan).map_err(|e| e.to_string())?;
+                let mut cm = CostModel::ratios(n, f, p1, p2);
+                cm.opt = vec![opt; n];
+                cm.loss = loss;
+                cm.comm = comm;
+                let mm = MemModel {
+                    static_bytes: vec![mem_seed % 100; n],
+                    res1: vec![(mem_seed >> 8) % 50; n],
+                    res2: vec![(mem_seed >> 16) % 50; n],
+                    inter: vec![(mem_seed >> 24) % 50; n],
+                };
+                let budget = with_budget.then_some((mem_seed >> 32) % 2000);
+                let ident = Perturbation {
+                    jitter: 0.0,
+                    stragglers: vec![(0, 1.0), (n - 1, 1.0), (n + 7, 1.0)],
+                    comm_spike_prob: 0.0,
+                    comm_spike_mult: 10.0,
+                    seed: pert_seed,
+                };
+                assert!(ident.is_identity());
+                let base = score_plan(&plan, &cm, Some(&mm), budget,
+                                      &mut plain)
+                    .map_err(|e| e.to_string())?;
+                let rob = score_plan_robust(&plan, &cm, Some(&mm), budget,
+                                            &ident, trials, &mut rs)
+                    .map_err(|e| e.to_string())?;
+                let bits = |x: f64| x.to_bits();
+                for (name, got) in [
+                    ("p50", rob.p50),
+                    ("p95", rob.p95),
+                    ("worst", rob.worst),
+                    ("mean", rob.mean),
+                ] {
+                    if bits(got) != bits(base.makespan) {
+                        return Err(format!(
+                            "{name} {} != makespan {}", got, base.makespan
+                        ));
+                    }
+                }
+                let want_fit = if base.fits { 1.0 } else { 0.0 };
+                if bits(rob.fit_fraction) != bits(want_fit) {
+                    return Err(format!(
+                        "fit_fraction {} != {}", rob.fit_fraction, want_fit
+                    ));
+                }
+                if rob.max_peak != base.max_peak {
+                    return Err(format!(
+                        "max_peak {} != {}", rob.max_peak, base.max_peak
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn jitter_orders_the_tail_statistics() {
+        let plan = generate(ScheduleKind::OneF1B1, true, 4, 8, false);
+        let cm = CostModel::ratios(4, 1.0, 1.05, 0.95);
+        let mut rs = RobustScratch::new();
+        let rob = score_plan_robust(
+            &plan, &cm, None, None, &pert(0.1, &[]), 64, &mut rs,
+        )
+        .unwrap();
+        assert!(rob.p50 > 0.0);
+        assert!(rob.p95 >= rob.p50, "p95 {} < p50 {}", rob.p95, rob.p50);
+        assert!(rob.worst >= rob.p95);
+        assert!(rob.worst > rob.p50, "64 jittered draws never spread");
+        assert!((rob.fit_fraction - 1.0).abs() < 1e-12, "no budget given");
+    }
+
+    #[test]
+    fn straggler_and_spike_slow_the_median() {
+        let plan = generate(ScheduleKind::OneF1B1, true, 4, 8, false);
+        let mut cm = CostModel::ratios(4, 1.0, 1.05, 0.95);
+        cm.comm = 0.05;
+        let mut rs = RobustScratch::new();
+        let mut plain = Scratch::new();
+        let base = score_plan(&plan, &cm, None, None, &mut plain).unwrap();
+        let straggled = score_plan_robust(
+            &plan, &cm, None, None, &pert(0.0, &[(1, 2.0)]), 8, &mut rs,
+        )
+        .unwrap();
+        assert!(
+            straggled.p50 > base.makespan,
+            "2x straggler on rank 1 did not slow the pipeline \
+             ({} <= {})",
+            straggled.p50,
+            base.makespan
+        );
+        let spiked = score_plan_robust(
+            &plan, &cm, None, None,
+            &Perturbation {
+                comm_spike_prob: 1.0,
+                comm_spike_mult: 20.0,
+                ..Perturbation::default()
+            },
+            4, &mut rs,
+        )
+        .unwrap();
+        assert!(
+            spiked.p50 > base.makespan,
+            "a certain 20x comm spike did not slow the pipeline"
+        );
+    }
+
+    #[test]
+    fn draws_are_seed_deterministic_and_trials_clamp() {
+        let plan = generate(ScheduleKind::GPipe, true, 2, 4, false);
+        let cm = CostModel::unit(2);
+        let p = pert(0.2, &[]);
+        let mut a_s = RobustScratch::new();
+        let mut b_s = RobustScratch::new();
+        let a = score_plan_robust(&plan, &cm, None, None, &p, 16, &mut a_s)
+            .unwrap();
+        let b = score_plan_robust(&plan, &cm, None, None, &p, 16, &mut b_s)
+            .unwrap();
+        assert_eq!(a, b, "same seed, same draws, same score");
+        let other = Perturbation { seed: 999, ..p.clone() };
+        let c = score_plan_robust(&plan, &cm, None, None, &other, 16,
+                                  &mut a_s)
+            .unwrap();
+        assert_ne!(a.mean.to_bits(), c.mean.to_bits(),
+                   "different seed should perturb differently");
+        // trials = 0 clamps to one draw
+        let one = score_plan_robust(&plan, &cm, None, None, &p, 0, &mut a_s)
+            .unwrap();
+        assert_eq!(one.p50.to_bits(), one.worst.to_bits());
+    }
+}

@@ -47,12 +47,21 @@
 //!   manifests give each stage a *measurable* op cost proportional to
 //!   its declared flops, so measured-cost calibration
 //!   (`twobp tune --synthetic`) has real per-stage skew to find.
+//! * `drift C:N` — **cost drift**: the first C executions of a
+//!   compiled executable sleep `cost` nanoseconds as usual; from call
+//!   C onward the delay switches to N nanoseconds.  Values never
+//!   change — only timing does — so a synthetic run can *provably*
+//!   diverge from its calibrated cost model mid-run (the drift-replan
+//!   smoke: `twobp tune --synthetic --replan`).  The call counter
+//!   lives on the executable, so each worker's compiled stage drifts
+//!   independently of its siblings.
 //!
 //! Everything is deliberately `Rc`-based and single-threaded, matching
 //! the real crate's client threading model (one client per worker
 //! thread).
 
 use std::borrow::Borrow;
+use std::cell::Cell;
 use std::path::Path;
 use std::rc::Rc;
 
@@ -370,6 +379,10 @@ pub struct HloModuleProto {
     group: usize,
     /// Busy delay in nanoseconds per execution (0 = none).
     cost_ns: u64,
+    /// Cost drift: `Some((after_calls, drifted_ns))` switches the busy
+    /// delay to `drifted_ns` from execution number `after_calls`
+    /// (0-based) onward.  Values are unaffected.
+    drift: Option<(u64, u64)>,
     outs: Vec<(ElementType, Vec<usize>)>,
 }
 
@@ -401,6 +414,7 @@ impl HloModuleProto {
         let mut acc = 0usize;
         let mut group = 0usize;
         let mut cost_ns = 0u64;
+        let mut drift = None;
         let mut outs = Vec::new();
         for line in lines {
             let mut it = line.split_whitespace();
@@ -431,6 +445,20 @@ impl HloModuleProto {
                         .parse()
                         .map_err(|e| err(format!("bad cost '{val}': {e}")))?
                 }
+                "drift" => {
+                    let (calls, ns) = val.split_once(':').ok_or_else(|| {
+                        err(format!(
+                            "bad drift '{val}': expected <calls>:<ns>"
+                        ))
+                    })?;
+                    let calls = calls.parse().map_err(|e| {
+                        err(format!("bad drift calls '{calls}': {e}"))
+                    })?;
+                    let ns = ns.parse().map_err(|e| {
+                        err(format!("bad drift ns '{ns}': {e}"))
+                    })?;
+                    drift = Some((calls, ns));
+                }
                 "out" => outs.push(parse_out(val)?),
                 other => {
                     return Err(err(format!("unknown directive '{other}'")))
@@ -456,12 +484,22 @@ impl HloModuleProto {
             acc,
             group,
             cost_ns,
+            drift,
             outs,
         })
     }
 
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// Busy delay for execution number `call` (0-based): the base
+    /// `cost` until the drift point, the drifted cost after it.
+    fn cost_at(&self, call: u64) -> u64 {
+        match self.drift {
+            Some((after, ns)) if call >= after => ns,
+            _ => self.cost_ns,
+        }
     }
 }
 
@@ -561,6 +599,7 @@ impl PjRtClient {
         Ok(PjRtLoadedExecutable {
             sig: comp.proto.clone(),
             client: self.clone(),
+            calls: Cell::new(0),
         })
     }
 }
@@ -583,6 +622,9 @@ impl PjRtBuffer {
 pub struct PjRtLoadedExecutable {
     sig: HloModuleProto,
     client: PjRtClient,
+    /// Executions so far — drives the `drift` directive.  A `Cell`
+    /// suffices: the crate is single-threaded per worker (see above).
+    calls: Cell<u64>,
 }
 
 impl PjRtLoadedExecutable {
@@ -595,9 +637,11 @@ impl PjRtLoadedExecutable {
         &self,
         args: &[B],
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let call = self.calls.get();
+        self.calls.set(call + 1);
         let inputs: Vec<&Literal> =
             args.iter().map(|b| &b.borrow().lit).collect();
-        let outs = execute_stub(&self.sig, &inputs)?;
+        let outs = execute_stub_at(&self.sig, call, &inputs)?;
         Ok(vec![vec![PjRtBuffer {
             lit: Literal(Repr::Tuple(outs)),
         }]])
@@ -682,10 +726,21 @@ fn execute_stub(
     sig: &HloModuleProto,
     inputs: &[&Literal],
 ) -> Result<Vec<Literal>> {
-    if sig.cost_ns > 0 {
+    execute_stub_at(sig, 0, inputs)
+}
+
+/// [`execute_stub`] at a specific call index — the drift directive
+/// selects the busy delay from the index; values never depend on it.
+fn execute_stub_at(
+    sig: &HloModuleProto,
+    call: u64,
+    inputs: &[&Literal],
+) -> Result<Vec<Literal>> {
+    let cost_ns = sig.cost_at(call);
+    if cost_ns > 0 {
         // busy delay: sleeping (not spinning) lets concurrently-running
         // rank threads overlap, like compute on independent devices
-        std::thread::sleep(std::time::Duration::from_nanos(sig.cost_ns));
+        std::thread::sleep(std::time::Duration::from_nanos(cost_ns));
     }
     if sig.acc > 0 {
         execute_acc(sig, inputs)
@@ -909,6 +964,85 @@ mod tests {
             "stub-hlo v1\ncost banana\nout f32[1]\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn drift_directive_switches_timing_after_n_calls_never_values() {
+        let drifting = sig(
+            "stub-hlo v1\nseed 3\ndrift 2:20000000\nout f32[2,4]\n",
+        );
+        assert_eq!(drifting.cost_ns, 0);
+        assert_eq!(drifting.drift, Some((2, 20_000_000)));
+        assert_eq!(drifting.cost_at(0), 0);
+        assert_eq!(drifting.cost_at(1), 0);
+        assert_eq!(drifting.cost_at(2), 20_000_000);
+        assert_eq!(drifting.cost_at(99), 20_000_000);
+        let free = sig("stub-hlo v1\nseed 3\nout f32[2,4]\n");
+        let x = f32_lit(&[2], &[1.0, 2.0]);
+        let pre = execute_stub_at(&drifting, 0, &[&x]).unwrap();
+        let t0 = std::time::Instant::now();
+        let post = execute_stub_at(&drifting, 2, &[&x]).unwrap();
+        let dt = t0.elapsed();
+        let base = execute_stub(&free, &[&x]).unwrap();
+        // drift changes timing only — values stay bit-identical
+        // across the drift point and match the cost-free signature
+        assert_eq!(
+            pre[0].to_vec::<f32>().unwrap(),
+            post[0].to_vec::<f32>().unwrap()
+        );
+        assert_eq!(
+            pre[0].to_vec::<f32>().unwrap(),
+            base[0].to_vec::<f32>().unwrap()
+        );
+        assert!(
+            dt >= std::time::Duration::from_millis(20),
+            "drifted cost 20ms not observed: {dt:?}"
+        );
+    }
+
+    #[test]
+    fn drift_counter_lives_on_the_compiled_executable() {
+        let proto = sig(
+            "stub-hlo v1\nmodule d\nseed 9\ndrift 1:30000000\nout f32[2]\n",
+        );
+        let comp = XlaComputation::from_proto(&proto);
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let buf = client
+            .buffer_from_host_literal(None, &Literal::scalar(1.0f32))
+            .unwrap();
+        let run = |exe: &PjRtLoadedExecutable| {
+            let t0 = std::time::Instant::now();
+            exe.execute_b(&[&buf]).unwrap();
+            t0.elapsed()
+        };
+        let first = run(&exe);
+        let second = run(&exe);
+        assert!(
+            second >= std::time::Duration::from_millis(30),
+            "call 1 should be past the drift point: {second:?}"
+        );
+        assert!(
+            first < second,
+            "call 0 ({first:?}) should be cheaper than drifted \
+             call 1 ({second:?})"
+        );
+        // a freshly compiled executable starts un-drifted
+        let fresh = client.compile(&comp).unwrap();
+        assert!(run(&fresh) < std::time::Duration::from_millis(30));
+    }
+
+    #[test]
+    fn rejects_malformed_drift() {
+        for bad in [
+            "stub-hlo v1\ndrift 3\nout f32[1]\n",
+            "stub-hlo v1\ndrift a:5\nout f32[1]\n",
+            "stub-hlo v1\ndrift 3:b\nout f32[1]\n",
+            "stub-hlo v1\ndrift 3:4:5\nout f32[1]\n",
+            "stub-hlo v1\ndrift 3 5\nout f32[1]\n",
+        ] {
+            assert!(HloModuleProto::parse(bad).is_err(), "{bad:?}");
+        }
     }
 
     #[test]
