@@ -1,0 +1,199 @@
+#!/usr/bin/env python3
+"""CI validator for the observability artifacts (docs/OBSERVABILITY.md).
+
+Modes:
+
+  check_obs.py trace FILE [--expect-executed]
+      FILE is a valid Chrome Trace Event document: a JSON object with
+      "displayTimeUnit" and a "traceEvents" list whose "X" events carry
+      name/cat/ph/ts/dur/pid/tid and whose processes are named by "M"
+      metadata.  --expect-executed additionally requires BOTH timeline
+      groups (predicted pids start at 1, executed at 1001).
+
+  check_obs.py metrics FILE [--require PREFIX ...]
+      FILE is a JSONL run log: every line a JSON object with "kind" and
+      "name", counter/gauge values non-negative, event "seq" dense from
+      0.  Each --require PREFIX must match at least one line's name.
+
+  check_obs.py diff-metrics A B
+      The two run logs must be identical after stripping every nested
+      "wall" object (the only place wall-clock-derived values may live).
+
+  check_obs.py diff-trace A B
+      The two traces must be identical after dropping "ts"/"dur" from
+      events (executed timelines carry measured timings; everything
+      else — event order, names, pids, tids, metadata — must agree).
+
+Exit 0 on success; prints the first violation and exits 1 otherwise.
+"""
+
+import json
+import sys
+
+EXECUTED_PID_BASE = 1001
+
+
+def fail(msg):
+    print(f"check_obs: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def strip_wall(node):
+    """Recursively remove every "wall" key (the quarantine contract)."""
+    if isinstance(node, dict):
+        return {
+            k: strip_wall(v) for k, v in node.items() if k != "wall"
+        }
+    if isinstance(node, list):
+        return [strip_wall(v) for v in node]
+    return node
+
+
+def load_trace(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        fail(f"{path}: top level is not a JSON object")
+    if doc.get("displayTimeUnit") != "ms":
+        fail(f"{path}: missing displayTimeUnit")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+    return doc, events
+
+
+def check_trace(path, expect_executed):
+    _, events = load_trace(path)
+    xs = [e for e in events if e.get("ph") == "X"]
+    if not xs:
+        fail(f"{path}: no complete ('X') span events")
+    for i, e in enumerate(xs):
+        for key in ("name", "cat", "ph", "ts", "dur", "pid", "tid"):
+            if key not in e:
+                fail(f"{path}: X event {i} missing '{key}': {e}")
+        if e["dur"] < 0:
+            fail(f"{path}: X event {i} has negative dur: {e}")
+    named = {
+        e.get("pid")
+        for e in events
+        if e.get("ph") == "M" and e.get("name") == "process_name"
+    }
+    span_pids = {e["pid"] for e in xs}
+    if not span_pids <= named:
+        fail(f"{path}: spans on unnamed pids {sorted(span_pids - named)}")
+    predicted = [p for p in span_pids if p < EXECUTED_PID_BASE]
+    executed = [p for p in span_pids if p >= EXECUTED_PID_BASE]
+    if not predicted:
+        fail(f"{path}: no predicted-timeline spans (pid < 1001)")
+    if expect_executed and not executed:
+        fail(f"{path}: --expect-executed but no executed spans (pid >= 1001)")
+    print(
+        f"check_obs: {path} OK — {len(xs)} spans, "
+        f"{len(predicted)} predicted / {len(executed)} executed ranks"
+    )
+
+
+def load_metrics(path):
+    lines = []
+    with open(path, encoding="utf-8") as f:
+        for i, raw in enumerate(f):
+            raw = raw.strip()
+            if not raw:
+                fail(f"{path}:{i + 1}: blank line in JSONL")
+            try:
+                lines.append(json.loads(raw))
+            except json.JSONDecodeError as e:
+                fail(f"{path}:{i + 1}: bad JSON ({e})")
+    if not lines:
+        fail(f"{path}: empty run log")
+    return lines
+
+
+def check_metrics(path, require):
+    lines = load_metrics(path)
+    kinds = {"event", "counter", "gauge", "histogram"}
+    seq = 0
+    for i, line in enumerate(lines):
+        if line.get("kind") not in kinds:
+            fail(f"{path}:{i + 1}: bad kind {line.get('kind')!r}")
+        if not isinstance(line.get("name"), str) or not line["name"]:
+            fail(f"{path}:{i + 1}: missing name")
+        if line["kind"] == "event":
+            if line.get("seq") != seq:
+                fail(f"{path}:{i + 1}: seq {line.get('seq')} != {seq}")
+            seq += 1
+        if line["kind"] == "counter" and line.get("value", 0) < 0:
+            fail(f"{path}:{i + 1}: negative counter")
+    names = [line["name"] for line in lines]
+    for prefix in require:
+        if not any(n.startswith(prefix) for n in names):
+            fail(f"{path}: no metric named '{prefix}*' (have: {names})")
+    print(
+        f"check_obs: {path} OK — {seq} events, "
+        f"{len(lines) - seq} aggregate lines"
+    )
+
+
+def diff_metrics(a, b):
+    sa = [strip_wall(line) for line in load_metrics(a)]
+    sb = [strip_wall(line) for line in load_metrics(b)]
+    if len(sa) != len(sb):
+        fail(f"line counts differ: {a}={len(sa)} {b}={len(sb)}")
+    for i, (la, lb) in enumerate(zip(sa, sb)):
+        if la != lb:
+            fail(
+                f"line {i + 1} differs after stripping wall:\n"
+                f"  {a}: {json.dumps(la, sort_keys=True)}\n"
+                f"  {b}: {json.dumps(lb, sort_keys=True)}"
+            )
+    print(f"check_obs: {a} == {b} modulo wall ({len(sa)} lines)")
+
+
+def diff_trace(a, b):
+    def normalize(path):
+        _, events = load_trace(path)
+        return [
+            {k: v for k, v in e.items() if k not in ("ts", "dur")}
+            for e in events
+        ]
+
+    na, nb = normalize(a), normalize(b)
+    if len(na) != len(nb):
+        fail(f"event counts differ: {a}={len(na)} {b}={len(nb)}")
+    for i, (ea, eb) in enumerate(zip(na, nb)):
+        if ea != eb:
+            fail(
+                f"event {i} differs after dropping ts/dur:\n"
+                f"  {a}: {json.dumps(ea, sort_keys=True)}\n"
+                f"  {b}: {json.dumps(eb, sort_keys=True)}"
+            )
+    print(f"check_obs: {a} == {b} modulo ts/dur ({len(na)} events)")
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    mode, args = argv[1], argv[2:]
+    if mode == "trace":
+        expect = "--expect-executed" in args
+        paths = [a for a in args if not a.startswith("--")]
+        check_trace(paths[0], expect)
+    elif mode == "metrics":
+        require = []
+        if "--require" in args:
+            i = args.index("--require")
+            require = args[i + 1:]
+            args = args[:i]
+        check_metrics(args[0], require)
+    elif mode == "diff-metrics":
+        diff_metrics(args[0], args[1])
+    elif mode == "diff-trace":
+        diff_trace(args[0], args[1])
+    else:
+        fail(f"unknown mode '{mode}'")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -24,6 +24,8 @@ use anyhow::Context;
 #[cfg(feature = "pjrt")]
 use crate::config::{P2Mode, RunConfig, BENCH_PRESETS};
 #[cfg(feature = "pjrt")]
+use crate::metrics::registry::MetricsRegistry;
+#[cfg(feature = "pjrt")]
 use crate::metrics::{memory_table, throughput_table, MemoryRow, ThroughputRow};
 use crate::models::Manifest;
 #[cfg(feature = "pjrt")]
@@ -669,6 +671,100 @@ pub struct CalibratedTune {
     /// its recorded spans (max span end − min span start across ranks,
     /// divided by the step count).
     pub executed_makespan: f64,
+    /// The verified winner run itself — kept so callers can export its
+    /// executed timeline (`RunReport::trace_spans`) next to the
+    /// predicted one (`twobp tune --trace-out`).
+    pub executed: crate::pipeline::RunReport,
+}
+
+/// Record one calibration pass into a metrics registry: per-stage
+/// measured costs as `calib.stage` events, the loss/comm floors as
+/// gauges, and run/step counters.  Every measured second hides under
+/// `"wall"` (see [`crate::metrics::registry`]); the rank set, event
+/// order, and counters are pure functions of the run shape.
+#[cfg(feature = "pjrt")]
+pub fn record_calibration(
+    m: &mut MetricsRegistry,
+    costs: &CostModel,
+    steps: usize,
+) {
+    m.counter_add("calib.runs", 1);
+    m.counter_add("calib.steps", steps as u64);
+    for rank in 0..costs.fwd.len() {
+        m.event_mixed(
+            "calib.stage",
+            vec![("rank", rank.into())],
+            vec![
+                ("fwd_s", costs.fwd[rank]),
+                ("p1_s", costs.p1[rank]),
+                ("p2_s", costs.p2[rank]),
+                ("opt_s", costs.opt[rank]),
+            ],
+        );
+    }
+    m.gauge_set_wall("calib.loss_s", costs.loss);
+    m.gauge_set_wall("calib.comm_floor_s", costs.comm);
+}
+
+#[cfg(feature = "pjrt")]
+fn verdict_slug(v: crate::pipeline::Verdict) -> &'static str {
+    use crate::pipeline::Verdict;
+    match v {
+        Verdict::Ok => "ok",
+        Verdict::Drifting => "drifting",
+        Verdict::Replan => "replan",
+        Verdict::Exhausted => "exhausted",
+    }
+}
+
+/// Record one drift observation (a measured step makespan judged
+/// against the active plan's prediction) as a `drift.step` event plus
+/// a `drift.verdict.*` counter bump.  Shared by the live replan loop
+/// ([`tune_replan`]) and the passive path ([`record_passive_drift`]).
+#[cfg(feature = "pjrt")]
+fn record_drift_step(
+    m: &mut MetricsRegistry,
+    step: usize,
+    measured: f64,
+    predicted: f64,
+    verdict: crate::pipeline::Verdict,
+) {
+    m.counter_add(&format!("drift.verdict.{}", verdict_slug(verdict)), 1);
+    m.event_mixed(
+        "drift.step",
+        vec![
+            ("step", step.into()),
+            ("verdict", format!("{verdict:?}").into()),
+        ],
+        vec![
+            ("measured_s", measured),
+            ("predicted_s", predicted),
+            ("ratio", measured / predicted.max(1e-12)),
+        ],
+    );
+}
+
+/// Passive drift telemetry for an already-executed run (the non-replan
+/// calibrated path): replay its per-step makespans
+/// ([`crate::pipeline::RunReport::step_makespans`]) through a
+/// [`DriftMonitor`](crate::pipeline::DriftMonitor) against the
+/// planner's predicted makespan, emitting the same `drift.step` events
+/// and verdict counters the live loop does — without acting on any
+/// verdict.  `drift.replan_events` is seeded at 0 so the key exists in
+/// every run log that watched for drift.
+#[cfg(feature = "pjrt")]
+pub fn record_passive_drift(
+    m: &mut MetricsRegistry,
+    report: &crate::pipeline::RunReport,
+    predicted: f64,
+    cfg: crate::pipeline::DriftConfig,
+) {
+    let mut monitor = crate::pipeline::DriftMonitor::new(cfg, predicted);
+    m.counter_add("drift.replan_events", 0);
+    for (step, measured) in report.step_makespans().into_iter().enumerate() {
+        let verdict = monitor.observe(measured);
+        record_drift_step(m, step, measured, monitor.predicted(), verdict);
+    }
 }
 
 /// Tune against an already-measured [`crate::planner::TuneProfile`]
@@ -689,11 +785,13 @@ pub fn tune_and_execute(
     profile: &crate::planner::TuneProfile,
     cfg: &crate::planner::BeamConfig,
     exec_cfg: &RunConfig,
+    obs: Option<&mut MetricsRegistry>,
 ) -> Result<CalibratedTune> {
     use crate::pipeline::verify_report_against_sim;
 
-    let report = crate::planner::tune(profile, manifest.n_stages, cfg)
-        .map_err(|e| anyhow!("planner: {e}"))?;
+    let report =
+        crate::planner::tune_with(profile, manifest.n_stages, cfg, obs)
+            .map_err(|e| anyhow!("planner: {e}"))?;
     let exec_steps = exec_cfg.steps.max(1);
     let exec_cfg = RunConfig { steps: exec_steps, ..exec_cfg.clone() };
     let exec = cluster.run_plan(&report.best.plan, &exec_cfg)?;
@@ -702,6 +800,7 @@ pub fn tune_and_execute(
     Ok(CalibratedTune {
         predicted_makespan: report.best.makespan,
         executed_makespan: step_makespan(&exec, exec_steps),
+        executed: exec,
         report,
     })
 }
@@ -766,12 +865,12 @@ pub fn tune_calibrated(steps: usize) -> Result<String> {
 
         let mut rows: Vec<(Option<u64>, CalibratedTune)> = Vec::new();
         let un = tune_and_execute(&cluster, manifest, &profile,
-                                  &beam(None), &base)?;
+                                  &beam(None), &base, None)?;
         let full_peak = un.report.best.max_peak;
         rows.push((None, un));
         let budget = full_peak * 85 / 100;
         let bounded = tune_and_execute(&cluster, manifest, &profile,
-                                       &beam(Some(budget)), &base)?;
+                                       &beam(Some(budget)), &base, None)?;
         rows.push((Some(budget), bounded));
 
         let mut t = Table::new(&[
@@ -844,6 +943,7 @@ pub fn tune_calibrated(steps: usize) -> Result<String> {
 pub fn tune_replan(
     steps: usize,
     drift_cfg: crate::pipeline::DriftConfig,
+    mut obs: Option<&mut MetricsRegistry>,
 ) -> Result<String> {
     use crate::models::synthetic::{with_temp_artifacts, SyntheticSpec};
     use crate::pipeline::{verify_report_against_sim, DriftMonitor, Verdict};
@@ -852,7 +952,7 @@ pub fn tune_replan(
 
     let spec = SyntheticSpec::skewed_drifting();
     let exec_steps = steps.max(8);
-    with_temp_artifacts("tune-replan", &spec, |root, manifest| {
+    with_temp_artifacts("tune-replan", &spec, move |root, manifest| {
         let base = RunConfig {
             preset: spec.preset.clone(),
             artifacts: root.to_path_buf(),
@@ -870,8 +970,13 @@ pub fn tune_replan(
             max_microbatches: 2 * manifest.n_stages,
             ..BeamConfig::default()
         };
-        let retune = |label: &str| -> Result<crate::planner::TuneReport> {
+        let retune = |label: &str,
+                      mut obs: Option<&mut MetricsRegistry>|
+         -> Result<crate::planner::TuneReport> {
             let (costs, _) = cluster.calibrate(&base)?;
+            if let Some(m) = obs.as_deref_mut() {
+                record_calibration(m, &costs, base.steps);
+            }
             let profile = TuneProfile::from_measured(
                 format!("measured:{}:{label}", manifest.preset),
                 costs,
@@ -879,11 +984,11 @@ pub fn tune_replan(
                 manifest.samples_per_microbatch,
             )
             .map_err(|e| anyhow!(e))?;
-            crate::planner::tune(&profile, manifest.n_stages, &beam)
+            crate::planner::tune_with(&profile, manifest.n_stages, &beam, obs)
                 .map_err(|e| anyhow!("planner: {e}"))
         };
 
-        let initial = retune("t0")?;
+        let initial = retune("t0", obs.as_deref_mut())?;
         let stale_plan = initial.best.plan.clone();
         let mut plan = initial.best.plan.clone();
         let mut monitor = DriftMonitor::new(drift_cfg.clone(),
@@ -918,6 +1023,15 @@ pub fn tune_replan(
             }
             let measured = step_makespan(&rep, 1);
             let verdict = monitor.observe(measured);
+            if let Some(m) = obs.as_deref_mut() {
+                m.counter_add("drift.replan_events", 0);
+                record_drift_step(
+                    m, step, measured, monitor.predicted(), verdict,
+                );
+                if verdict == Verdict::Replan {
+                    m.counter_add("drift.replan_events", 1);
+                }
+            }
             t.row(vec![
                 step.to_string(),
                 plan.describe(),
@@ -931,7 +1045,8 @@ pub fn tune_replan(
                 post.push(measured);
             }
             if verdict == Verdict::Replan {
-                let report = retune(&format!("t{}", step + 1))?;
+                let report =
+                    retune(&format!("t{}", step + 1), obs.as_deref_mut())?;
                 plan = report.best.plan.clone();
                 monitor.rearm(report.best.makespan);
                 retuned = Some(report);
@@ -1314,7 +1429,7 @@ pub fn run_experiment(name: &str, steps: usize) -> Result<String> {
         "tune-calibrated" | "tune_calibrated" => tune_calibrated(steps),
         #[cfg(feature = "pjrt")]
         "replan" | "drift" => {
-            tune_replan(steps, crate::pipeline::DriftConfig::default())
+            tune_replan(steps, crate::pipeline::DriftConfig::default(), None)
         }
         #[cfg(feature = "pjrt")]
         "fig3" | "fig4" => fig3(steps, &BENCH_PRESETS.to_vec()),

@@ -45,8 +45,12 @@
 //! * [`models`]   — artifact manifest parsing (shapes, byte classes, flops)
 //! * [`pipeline`] — the real distributed executor + memory accountant
 //! * [`config`]   — run configuration and Table-2 presets
-//! * [`metrics`]  — throughput/bubble/memory reporting
-//! * [`util`]     — substrates: mini-JSON, PRNG, stats, tables, CLI args
+//! * [`metrics`]  — throughput/bubble/memory reporting + the
+//!   deterministic metrics registry behind `--metrics-out`
+//!   ([`metrics::registry`]; `docs/OBSERVABILITY.md`)
+//! * [`util`]     — substrates: mini-JSON, PRNG, stats, tables, CLI
+//!   args, Chrome-trace export ([`util::trace`], behind `--trace-out`
+//!   and `twobp trace`)
 
 pub mod config;
 pub mod experiments;

@@ -3,16 +3,28 @@
 //! ```text
 //! twobp train    --preset transformer-tiny --schedule 1f1b-1 [--no-2bp]
 //!                [--steps N] [--microbatches M] [--concat-p2] [--verbose]
+//!                [--trace-out FILE.json]
 //!                [--synthetic]  (in-process stub-backend manifest, no
 //!                                artifacts needed; verified against sim)
 //! twobp gantt    [--ranks N] [--cols W] [--schedule K] [--plan FILE]
 //!                [--real --preset P]
+//! twobp trace    --plan FILE [--out FILE.json]
+//!                [--fwd F --p1 X --p2 Y --comm C]  (Chrome Trace Event
+//!                 export of the plan's predicted timeline — load in
+//!                 chrome://tracing or https://ui.perfetto.dev; see
+//!                 docs/OBSERVABILITY.md)
 //! twobp simulate --schedule 1f1b-1 --ranks 8 [--no-2bp] [--comm C]
+//!                [--trace-out FILE.json]
 //! twobp sweep    [--ranks 2,4,8,16,32] [--mults 1,2] [--threads K]
 //!                [--plans DIR [--fwd F --p1 X --p2 Y --comm C]]
 //! twobp tune     [--ranks N] [--budget 4.5G] [--beam K] [--gens G]
 //!                [--seed S] [--fwd F --p1 X --p2 Y --comm C]
 //!                [--out FILE.plan] [--gantt] [--threads K]
+//!                [--trace-out FILE.json] [--metrics-out FILE.jsonl]
+//!                 (observability: Chrome trace of the winner —
+//!                 predicted timeline, plus the executed one in the
+//!                 calibrated modes — and a deterministic JSONL run log
+//!                 of search/calibration/drift metrics)
 //!                [--robust [--jitter J] [--straggler R:MULT[,R:MULT]]
 //!                 [--spike-prob P] [--spike-mult X] [--trials K]
 //!                 [--pert-seed S]]  (tail objective: rank candidates
@@ -41,13 +53,15 @@
 use anyhow::{anyhow, Result};
 
 use twobp::config::table2;
-use twobp::planner::{tune, BeamConfig, RobustObjective, TuneProfile,
+use twobp::metrics::registry::MetricsRegistry;
+use twobp::planner::{tune_with, BeamConfig, RobustObjective, TuneProfile,
                      TuneReport};
 use twobp::schedule::{generate, plan_io, validate::validate, ScheduleKind};
 use twobp::sim::{simulate, CostModel, Perturbation};
 use twobp::util::args::Args;
 use twobp::util::gantt;
 use twobp::util::stats::{fmt_bytes, parse_bytes};
+use twobp::util::trace;
 
 const FLAGS: &[&str] = &["no-2bp", "concat-p2", "verbose", "list", "real",
                          "csv", "gantt", "synthetic", "robust", "replan"];
@@ -62,6 +76,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
         "tune" => cmd_tune(&args),
+        "trace" => cmd_trace(&args),
         "bench" => cmd_bench(&args),
         "config" => {
             println!("{}", table2().render());
@@ -69,8 +84,8 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: twobp <train|gantt|simulate|sweep|tune|bench|config> \
-                 [options]\n\
+                "usage: twobp <train|gantt|simulate|sweep|tune|trace|bench\
+                 |config> [options]\n\
                  see `cargo doc` or README.md for details"
             );
             std::process::exit(2);
@@ -82,13 +97,39 @@ fn main() {
     }
 }
 
+/// `--trace-out` tail of `twobp train`: the executed timeline (per-rank
+/// worker spans plus the comm lane) stacked against a predicted one —
+/// the plan re-simulated under the run's own measured per-op costs.
+/// The prediction covers one step; diff it against the first executed
+/// step in Perfetto.
+#[cfg(feature = "pjrt")]
+fn train_trace_out(
+    args: &Args,
+    report: &twobp::pipeline::RunReport,
+) -> Result<()> {
+    let Some(path) = args.get("trace-out") else {
+        return Ok(());
+    };
+    let costs = report.measured_costs()?;
+    let sim =
+        simulate(&report.plan, &costs, None).map_err(|e| anyhow!("{e}"))?;
+    let mut tb = trace::TraceBuilder::new();
+    tb.add_timeline("predicted", trace::PREDICTED_PID_BASE, &sim.spans);
+    tb.add_timeline(
+        "executed",
+        trace::EXECUTED_PID_BASE,
+        &report.trace_spans(),
+    );
+    write_trace(&tb, path)
+}
+
 #[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = twobp::config::RunConfig::from_args(args)?;
     if !cfg.synthetic {
         let report = twobp::pipeline::train(&cfg)?;
         print!("{}", twobp::metrics::run_summary(&report));
-        return Ok(());
+        return train_trace_out(args, &report);
     }
     // --synthetic: generate a stub-backend manifest in-process, train on
     // it, and cross-check the run against the simulator (op order +
@@ -119,7 +160,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         "synthetic stub run verified against the simulator \
          (op order + byte-exact memory accounting)"
     );
-    Ok(())
+    train_trace_out(args, &report)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -214,6 +255,61 @@ fn cmd_gantt(args: &Args) -> Result<()> {
     }
 }
 
+/// Write a finished Chrome trace to `path` with a pointer line (the
+/// shared `--trace-out` tail; format in docs/OBSERVABILITY.md).
+fn write_trace(tb: &trace::TraceBuilder, path: &str) -> Result<()> {
+    tb.write(std::path::Path::new(path))
+        .map_err(|e| anyhow!("writing {path}: {e}"))?;
+    println!(
+        "wrote Chrome trace to {path} ({} events; load in chrome://tracing \
+         or https://ui.perfetto.dev)",
+        tb.len(),
+    );
+    Ok(())
+}
+
+/// Write a metrics-registry run log to `path` with a pointer line (the
+/// shared `--metrics-out` tail; schema in docs/OBSERVABILITY.md).
+fn write_metrics(m: &MetricsRegistry, path: &str) -> Result<()> {
+    m.write(std::path::Path::new(path))
+        .map_err(|e| anyhow!("writing {path}: {e}"))?;
+    println!(
+        "wrote metrics log to {path} ({} events + aggregates, JSONL)",
+        m.n_events(),
+    );
+    Ok(())
+}
+
+/// `twobp trace`: export a `.plan` file's **predicted** timeline (Tier B
+/// sim under the `--fwd/--p1/--p2/--comm` cost shape) as a Chrome Trace
+/// Event file.  The executed counterpart comes from `--trace-out` on
+/// `train`/`tune --synthetic`, which stack the real run's spans next to
+/// the prediction under a separate process group.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args.get("plan").ok_or_else(|| {
+        anyhow!(
+            "trace needs --plan FILE (write one with `twobp tune --out`, \
+             grammar in docs/PLAN_FORMAT.md)"
+        )
+    })?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {path}: {e}"))?;
+    let plan = plan_io::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    let cm = cost_model_from_args(args, plan.n_ranks);
+    let res = twobp::sim::eval_plan(&plan, &cm, None, None)
+        .map_err(|e| anyhow!("{path}: {e}"))?
+        .result;
+    let mut tb = trace::TraceBuilder::new();
+    tb.add_timeline("predicted", trace::PREDICTED_PID_BASE, &res.spans);
+    match args.get("out") {
+        Some(out) => write_trace(&tb, out),
+        None => {
+            println!("{}", tb.render());
+            Ok(())
+        }
+    }
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let n = args.get_usize("ranks", 4);
     let kind = args
@@ -229,6 +325,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("{}", plan.describe());
     println!("makespan       : {:.4}", res.makespan);
     println!("bubble ratio   : {:.4}", res.bubble_ratio);
+    if let Some(path) = args.get("trace-out") {
+        let mut tb = trace::TraceBuilder::new();
+        tb.add_timeline("predicted", trace::PREDICTED_PID_BASE, &res.spans);
+        write_trace(&tb, path)?;
+    }
     println!("throughput gain vs no-2BP:");
     let base = generate(kind, false, n, m, false);
     let bres = simulate(&base, &cm, None).map_err(|e| anyhow!("{e}"))?;
@@ -483,7 +584,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
         TuneProfile::llama_like(n)
     };
     let cfg = beam_config_from_args(args)?;
-    let report = tune(&profile, n, &cfg).map_err(|e| anyhow!(e))?;
+    let mut obs = args.get("metrics-out").map(|_| MetricsRegistry::new());
+    let report = tune_with(&profile, n, &cfg, obs.as_mut())
+        .map_err(|e| anyhow!(e))?;
 
     println!(
         "planner: profile {}, {} ranks, budget {}/rank",
@@ -496,7 +599,20 @@ fn cmd_tune(args: &Args) -> Result<()> {
     );
     print_search_summary(&report, &cfg);
     winner_outputs(args, &report.best.text, &report.best.plan,
-                   &profile.costs)
+                   &profile.costs)?;
+    if let Some(path) = args.get("trace-out") {
+        // ratio-profile mode has no executor run: the trace carries the
+        // winner's predicted timeline only
+        let res = simulate(&report.best.plan, &profile.costs, None)
+            .map_err(|e| anyhow!("{e}"))?;
+        let mut tb = trace::TraceBuilder::new();
+        tb.add_timeline("predicted", trace::PREDICTED_PID_BASE, &res.spans);
+        write_trace(&tb, path)?;
+    }
+    if let (Some(path), Some(m)) = (args.get("metrics-out"), obs.as_ref()) {
+        write_metrics(m, path)?;
+    }
+    Ok(())
 }
 
 /// The measured-cost calibration loop (`twobp tune --synthetic` /
@@ -516,11 +632,20 @@ fn cmd_tune_calibrated(args: &Args) -> Result<()> {
 
     let calib = CalibConfig::from_args(args)?;
     let beam_cfg = beam_config_from_args(args)?;
+    let mut obs = args.get("metrics-out").map(|_| MetricsRegistry::new());
 
     if calib.replan {
+        if args.get("trace-out").is_some() {
+            return Err(anyhow!(
+                "--trace-out only applies to single-run modes (the replan \
+                 loop executes many one-step chunks); drop it, or drop \
+                 --replan"
+            ));
+        }
         // self-healing loop: tune_replan owns its cluster, drifting
         // preset, and (deliberately fixed) beam settings — only the
-        // drift knobs and the step count pass through
+        // drift knobs, the step count, and the metrics observer pass
+        // through
         let drift = twobp::pipeline::DriftConfig {
             threshold: calib.drift_threshold,
             window: calib.drift_window,
@@ -529,14 +654,22 @@ fn cmd_tune_calibrated(args: &Args) -> Result<()> {
         };
         print!(
             "{}",
-            twobp::experiments::tune_replan(calib.exec_steps, drift)?
+            twobp::experiments::tune_replan(
+                calib.exec_steps,
+                drift,
+                obs.as_mut(),
+            )?
         );
+        if let (Some(path), Some(m)) = (args.get("metrics-out"), obs.as_ref())
+        {
+            write_metrics(m, path)?;
+        }
         return Ok(());
     }
 
-    let run_loop = |root: &std::path::Path,
-                    preset: &str,
-                    manifest: &Manifest|
+    let mut run_loop = |root: &std::path::Path,
+                        preset: &str,
+                        manifest: &Manifest|
      -> Result<()> {
         let base = RunConfig {
             preset: preset.to_string(),
@@ -564,6 +697,9 @@ fn cmd_tune_calibrated(args: &Args) -> Result<()> {
             );
         }
         println!("  loss (last rank): {:.3}ms", costs.loss * 1e3);
+        if let Some(m) = obs.as_mut() {
+            twobp::experiments::record_calibration(m, &costs, base.steps);
+        }
         let profile = TuneProfile::from_measured(
             format!("measured:{preset}"),
             costs,
@@ -584,7 +720,7 @@ fn cmd_tune_calibrated(args: &Args) -> Result<()> {
         // calibration measured; only the step count differs
         let exec_cfg = RunConfig { steps: calib.exec_steps, ..base.clone() };
         let ct = tune_and_execute(&cluster, manifest, &profile, &beam_cfg,
-                                  &exec_cfg)?;
+                                  &exec_cfg, obs.as_mut())?;
         print_search_summary(&ct.report, &beam_cfg);
         println!(
             "winner executed back on the runtime for {} steps, verified \
@@ -598,8 +734,43 @@ fn cmd_tune_calibrated(args: &Args) -> Result<()> {
             fmt_duration(ct.executed_makespan),
             ct.executed_makespan / ct.predicted_makespan.max(1e-12),
         );
+        if let Some(m) = obs.as_mut() {
+            // passive drift watch: judge the executed steps against the
+            // planner's prediction with a default monitor, so the run
+            // log carries drift verdicts even without --replan
+            twobp::experiments::record_passive_drift(
+                m,
+                &ct.executed,
+                ct.predicted_makespan,
+                twobp::pipeline::DriftConfig::default(),
+            );
+        }
         winner_outputs(args, &ct.report.best.text, &ct.report.best.plan,
-                       &profile.costs)
+                       &profile.costs)?;
+        if let Some(path) = args.get("trace-out") {
+            // predicted: the winner under the measured (calibration)
+            // cost model; executed: the verified winner run itself
+            let res = simulate(&ct.report.best.plan, &profile.costs, None)
+                .map_err(|e| anyhow!("{e}"))?;
+            let mut tb = trace::TraceBuilder::new();
+            tb.add_timeline(
+                "predicted",
+                trace::PREDICTED_PID_BASE,
+                &res.spans,
+            );
+            tb.add_timeline(
+                "executed",
+                trace::EXECUTED_PID_BASE,
+                &ct.executed.trace_spans(),
+            );
+            write_trace(&tb, path)?;
+        }
+        if let (Some(path), Some(m)) =
+            (args.get("metrics-out"), obs.as_ref())
+        {
+            write_metrics(m, path)?;
+        }
+        Ok(())
     };
 
     if calib.synthetic {

@@ -1,4 +1,7 @@
-//! Reporting: turn run reports / sim results into the paper's tables.
+//! Reporting: turn run reports / sim results into the paper's tables,
+//! plus the deterministic metrics [`registry`] behind `--metrics-out`.
+
+pub mod registry;
 
 #[cfg(feature = "pjrt")]
 use crate::pipeline::RunReport;
@@ -71,6 +74,31 @@ pub fn memory_table(rows: &[MemoryRow], title: &str) -> Table {
     t
 }
 
+/// Deterministic evenly-spaced index sampler: which indices of a
+/// `len`-long series to show when at most `max_shown` fit.  Always
+/// includes the first and last index, spacing the rest uniformly
+/// (`round(k·(len-1)/(max_shown-1))`), and returns strictly increasing
+/// indices — unlike the old `i % (len/6)` filter, which could bunch
+/// duplicated gaps around the ends.
+pub fn sample_indices(len: usize, max_shown: usize) -> Vec<usize> {
+    if len == 0 || max_shown == 0 {
+        return Vec::new();
+    }
+    if len <= max_shown {
+        return (0..len).collect();
+    }
+    if max_shown == 1 {
+        // the spacing formula divides by max_shown - 1
+        return vec![0];
+    }
+    let mut out = Vec::with_capacity(max_shown);
+    for k in 0..max_shown {
+        out.push((k * (len - 1) + (max_shown - 1) / 2) / (max_shown - 1));
+    }
+    out.dedup();
+    out
+}
+
 /// Per-run summary printed after `twobp train`.
 #[cfg(feature = "pjrt")]
 pub fn run_summary(report: &RunReport) -> String {
@@ -103,17 +131,10 @@ pub fn run_summary(report: &RunReport) -> String {
     out.push('\n');
     if !report.losses.is_empty() {
         out.push_str("loss: ");
-        let show: Vec<String> = report
-            .losses
+        let shown = sample_indices(report.losses.len(), 12);
+        let show: Vec<String> = shown
             .iter()
-            .enumerate()
-            .filter(|(i, _)| {
-                report.losses.len() <= 12
-                    || *i < 3
-                    || *i >= report.losses.len() - 3
-                    || i % (report.losses.len() / 6).max(1) == 0
-            })
-            .map(|(i, l)| format!("[{i}] {l:.4}"))
+            .map(|&i| format!("[{i}] {:.4}", report.losses[i]))
             .collect();
         out.push_str(&show.join("  "));
         out.push('\n');
@@ -137,6 +158,31 @@ mod tests {
             without_2bp: 100, with_2bp: 267,
         };
         assert!((m.increase() - 2.67).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_indices_are_even_and_unique() {
+        // short series show every index
+        assert_eq!(sample_indices(1, 12), vec![0]);
+        assert_eq!(
+            sample_indices(12, 12),
+            (0..12).collect::<Vec<usize>>()
+        );
+        // just past the cap: 12 distinct, strictly increasing, 0..=12
+        let s13 = sample_indices(13, 12);
+        assert_eq!(s13.len(), 12);
+        assert_eq!(*s13.first().unwrap(), 0);
+        assert_eq!(*s13.last().unwrap(), 12);
+        assert!(s13.windows(2).all(|w| w[0] < w[1]), "{s13:?}");
+        // long series: exact uniform spacing (99/11 = 9)
+        assert_eq!(
+            sample_indices(100, 12),
+            vec![0, 9, 18, 27, 36, 45, 54, 63, 72, 81, 90, 99]
+        );
+        // degenerate requests
+        assert!(sample_indices(0, 12).is_empty());
+        assert!(sample_indices(5, 0).is_empty());
+        assert_eq!(sample_indices(5, 1), vec![0]);
     }
 
     #[test]

@@ -1,0 +1,392 @@
+//! Deterministic, insertion-ordered metrics registry.
+//!
+//! The observability substrate for search/calibration/drift telemetry
+//! (`--metrics-out`): named **counters**, **gauges**, **histograms**,
+//! and free-form **events**, dumped as a JSONL run log.  Two rules make
+//! the log diffable in CI:
+//!
+//! 1. **Insertion order is serialization order.**  Events stream first,
+//!    in the order they were recorded; aggregates (counters, gauges,
+//!    histogram summaries) follow in first-touch order.  No HashMap
+//!    iteration anywhere.
+//! 2. **Wall-clock values are quarantined.**  Any number derived from
+//!    real elapsed time (measured seconds, ratios of them, scores
+//!    against a measured profile) lives under a nested `"wall"` object
+//!    — the *only* key a determinism check needs to strip.  Everything
+//!    outside `"wall"` is a pure function of the run's inputs and seed,
+//!    so two identical-seed runs must agree byte-for-byte on it
+//!    (CI-gated; see ci/check_obs.py and docs/OBSERVABILITY.md).
+//!
+//! The registry is plain bookkeeping — no I/O until
+//! [`MetricsRegistry::write`], no clocks, no threads — so it can thread
+//! through the beam search and executor loops without touching the
+//! Tier-A scoring path (which stays telemetry-free by contract).
+
+use std::io;
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+/// A deterministic field value on an [`MetricsRegistry::event`] line.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Value {
+    fn to_json(&self) -> Json {
+        match self {
+            Value::Int(v) => Json::Num(*v as f64),
+            Value::Float(v) => Json::Num(*v),
+            Value::Str(s) => Json::Str(s.clone()),
+            Value::Bool(b) => Json::Bool(*b),
+        }
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Value {
+        Value::Int(v)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::Int(v as i64)
+    }
+}
+impl From<u64> for Value {
+    fn from(v: u64) -> Value {
+        Value::Int(v as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::Float(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Value {
+        Value::Str(v.into())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Value {
+        Value::Str(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Value {
+        Value::Bool(v)
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Hist {
+    name: String,
+    samples: Vec<f64>,
+    wall: bool,
+}
+
+/// Insertion-ordered counters/gauges/histograms + an event stream; see
+/// the module docs for the determinism contract.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    events: Vec<Json>,
+    counters: Vec<(String, u64)>,
+    gauges: Vec<(String, f64, bool)>,
+    hists: Vec<Hist>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `delta` to a (first-touch-ordered) named counter.
+    pub fn counter_add(&mut self, name: &str, delta: u64) {
+        match self.counters.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v += delta,
+            None => self.counters.push((name.into(), delta)),
+        }
+    }
+
+    /// Current value of a counter (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Set a deterministic gauge (last write wins).
+    pub fn gauge_set(&mut self, name: &str, value: f64) {
+        self.gauge_impl(name, value, false);
+    }
+
+    /// Set a gauge whose value derives from wall-clock measurement —
+    /// serialized under `"wall"` so determinism checks strip it.
+    pub fn gauge_set_wall(&mut self, name: &str, value: f64) {
+        self.gauge_impl(name, value, true);
+    }
+
+    fn gauge_impl(&mut self, name: &str, value: f64, wall: bool) {
+        match self.gauges.iter_mut().find(|(n, _, _)| n == name) {
+            Some((_, v, w)) => {
+                *v = value;
+                *w = wall;
+            }
+            None => self.gauges.push((name.into(), value, wall)),
+        }
+    }
+
+    /// Record one sample into a deterministic histogram.
+    pub fn hist_record(&mut self, name: &str, value: f64) {
+        self.hist_impl(name, value, false);
+    }
+
+    /// Record one wall-clock-derived sample (summary goes under
+    /// `"wall"`; the sample *count* stays outside — it is deterministic
+    /// even when the values are not).
+    pub fn hist_record_wall(&mut self, name: &str, value: f64) {
+        self.hist_impl(name, value, true);
+    }
+
+    fn hist_impl(&mut self, name: &str, value: f64, wall: bool) {
+        match self.hists.iter_mut().find(|h| h.name == name) {
+            Some(h) => h.samples.push(value),
+            None => self.hists.push(Hist {
+                name: name.into(),
+                samples: vec![value],
+                wall,
+            }),
+        }
+    }
+
+    /// Record a free-form event with deterministic fields only.
+    pub fn event(&mut self, name: &str, fields: Vec<(&str, Value)>) {
+        self.event_mixed(name, fields, Vec::new());
+    }
+
+    /// Record an event with both deterministic fields and wall-clock
+    /// fields (the latter nested under `"wall"`).
+    pub fn event_mixed(
+        &mut self,
+        name: &str,
+        fields: Vec<(&str, Value)>,
+        wall_fields: Vec<(&str, f64)>,
+    ) {
+        let seq = self.events.len();
+        let mut pairs = vec![
+            ("kind", Json::Str("event".into())),
+            ("name", Json::Str(name.into())),
+            ("seq", Json::Num(seq as f64)),
+        ];
+        for (k, v) in &fields {
+            pairs.push((*k, v.to_json()));
+        }
+        if !wall_fields.is_empty() {
+            pairs.push((
+                "wall",
+                obj(wall_fields
+                    .iter()
+                    .map(|(k, v)| (*k, Json::Num(*v)))
+                    .collect()),
+            ));
+        }
+        self.events.push(obj(pairs));
+    }
+
+    /// Events recorded so far.
+    pub fn n_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The JSONL run log: one JSON object per line — events first (in
+    /// record order), then counters, gauges, and histogram summaries
+    /// (each in first-touch order).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&e.to_string());
+            out.push('\n');
+        }
+        for (name, v) in &self.counters {
+            out.push_str(
+                &obj(vec![
+                    ("kind", Json::Str("counter".into())),
+                    ("name", Json::Str(name.clone())),
+                    ("value", Json::Num(*v as f64)),
+                ])
+                .to_string(),
+            );
+            out.push('\n');
+        }
+        for (name, v, wall) in &self.gauges {
+            let mut pairs = vec![
+                ("kind", Json::Str("gauge".into())),
+                ("name", Json::Str(name.clone())),
+            ];
+            if *wall {
+                pairs.push(("wall", obj(vec![("value", Json::Num(*v))])));
+            } else {
+                pairs.push(("value", Json::Num(*v)));
+            }
+            out.push_str(&obj(pairs).to_string());
+            out.push('\n');
+        }
+        for h in &self.hists {
+            let stats = summarize(&h.samples);
+            let mut pairs = vec![
+                ("kind", Json::Str("histogram".into())),
+                ("name", Json::Str(h.name.clone())),
+                ("count", Json::Num(h.samples.len() as f64)),
+            ];
+            if h.wall {
+                pairs.push(("wall", stats));
+            } else {
+                pairs.push(("stats", stats));
+            }
+            out.push_str(&obj(pairs).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the JSONL log to `path` (overwrites).
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+}
+
+/// min/max/mean/p50/p95 of a sample set (nearest-rank percentiles on a
+/// sorted copy — deterministic, no interpolation).
+fn summarize(samples: &[f64]) -> Json {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| -> f64 {
+        let i = (p * (sorted.len() - 1) as f64).round() as usize;
+        sorted[i]
+    };
+    let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+    obj(vec![
+        ("min", Json::Num(sorted[0])),
+        ("max", Json::Num(sorted[sorted.len() - 1])),
+        ("mean", Json::Num(mean)),
+        ("p50", Json::Num(pct(0.50))),
+        ("p95", Json::Num(pct(0.95))),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_in_first_touch_order() {
+        let mut m = MetricsRegistry::new();
+        m.counter_add("b", 2);
+        m.counter_add("a", 1);
+        m.counter_add("b", 3);
+        assert_eq!(m.counter("b"), 5);
+        assert_eq!(m.counter("a"), 1);
+        assert_eq!(m.counter("missing"), 0);
+        let lines: Vec<&str> = m.to_jsonl().lines().collect();
+        // "b" was touched first, so it serializes first despite "a" < "b"
+        assert!(lines[0].contains("\"name\":\"b\""), "{}", lines[0]);
+        assert!(lines[1].contains("\"name\":\"a\""), "{}", lines[1]);
+    }
+
+    #[test]
+    fn wall_values_nest_under_wall_key() {
+        let mut m = MetricsRegistry::new();
+        m.gauge_set("det", 4.0);
+        m.gauge_set_wall("measured", 0.123);
+        m.event_mixed(
+            "drift.step",
+            vec![("step", Value::from(3usize)), ("verdict", "Ok".into())],
+            vec![("measured_s", 0.5), ("ratio", 1.01)],
+        );
+        let log = m.to_jsonl();
+        let lines: Vec<Json> =
+            log.lines().map(|l| Json::parse(l).unwrap()).collect();
+        let ev = &lines[0];
+        assert_eq!(ev.get("name").and_then(Json::as_str), Some("drift.step"));
+        assert_eq!(ev.get("seq").and_then(Json::as_u64), Some(0));
+        assert_eq!(ev.get("step").and_then(Json::as_u64), Some(3));
+        assert_eq!(
+            ev.get("wall")
+                .and_then(|w| w.get("ratio"))
+                .and_then(Json::as_f64),
+            Some(1.01)
+        );
+        // deterministic gauge keeps its value at top level...
+        let det = lines
+            .iter()
+            .find(|l| l.get("name").and_then(Json::as_str) == Some("det"))
+            .unwrap();
+        assert_eq!(det.get("value").and_then(Json::as_f64), Some(4.0));
+        assert!(det.get("wall").is_none());
+        // ...the measured one hides it under "wall"
+        let wall = lines
+            .iter()
+            .find(|l| {
+                l.get("name").and_then(Json::as_str) == Some("measured")
+            })
+            .unwrap();
+        assert!(wall.get("value").is_none());
+        assert_eq!(
+            wall.get("wall")
+                .and_then(|w| w.get("value"))
+                .and_then(Json::as_f64),
+            Some(0.123)
+        );
+    }
+
+    #[test]
+    fn histogram_summary_is_deterministic() {
+        let mut m = MetricsRegistry::new();
+        for v in [3.0, 1.0, 2.0, 4.0] {
+            m.hist_record("h", v);
+        }
+        m.hist_record_wall("w", 9.0);
+        let lines: Vec<Json> = m
+            .to_jsonl()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        let h = lines
+            .iter()
+            .find(|l| l.get("name").and_then(Json::as_str) == Some("h"))
+            .unwrap();
+        assert_eq!(h.get("count").and_then(Json::as_u64), Some(4));
+        let stats = h.get("stats").unwrap();
+        assert_eq!(stats.get("min").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(stats.get("max").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(stats.get("mean").and_then(Json::as_f64), Some(2.5));
+        assert_eq!(stats.get("p50").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(stats.get("p95").and_then(Json::as_f64), Some(4.0));
+        let w = lines
+            .iter()
+            .find(|l| l.get("name").and_then(Json::as_str) == Some("w"))
+            .unwrap();
+        assert_eq!(w.get("count").and_then(Json::as_u64), Some(1));
+        assert!(w.get("stats").is_none());
+        assert!(w.get("wall").is_some());
+    }
+
+    #[test]
+    fn identical_recordings_serialize_identically() {
+        let build = || {
+            let mut m = MetricsRegistry::new();
+            m.event("beam.generation", vec![("gen", 1usize.into())]);
+            m.counter_add("beam.evaluated", 7);
+            m.gauge_set("best", 2.0);
+            m.to_jsonl()
+        };
+        assert_eq!(build(), build());
+    }
+}

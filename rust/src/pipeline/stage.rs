@@ -35,6 +35,11 @@ pub struct OpTiming {
 pub struct WorkerReport {
     pub rank: usize,
     pub timings: Vec<OpTiming>,
+    /// Timed p2p sends as [`SpanKind::Comm`] spans, kept in a lane of
+    /// their own: `timings` must stay 1:1 with the simulator's per-op
+    /// spans (the span-shape verifier compares them directly), but the
+    /// trace export wants the comm activity on the timeline too.
+    pub comm_timings: Vec<OpTiming>,
     pub peak_bytes: u64,
     /// Peak of the simulator-modeled classes (everything but `Wire`) —
     /// comparable to `SimResult::peak_bytes` (see
@@ -137,6 +142,10 @@ pub struct StageWorker {
     /// must not see op kinds the simulator doesn't emit per-plan-op).
     comm_secs: f64,
     comm_sends: usize,
+    /// The same sends as [`SpanKind::Comm`] timeline spans (one per
+    /// send) — the trace export's comm lane.  Kept separate from
+    /// `timings` for the reason documented on `comm_secs`.
+    comm_timings: Vec<OpTiming>,
     epoch: Instant,
 }
 
@@ -220,6 +229,7 @@ impl StageWorker {
             losses: Vec::new(),
             comm_secs: 0.0,
             comm_sends: 0,
+            comm_timings: Vec::new(),
             epoch,
         })
         .map(|mut w| {
@@ -264,6 +274,7 @@ impl StageWorker {
         self.losses.clear();
         self.comm_secs = 0.0;
         self.comm_sends = 0;
+        self.comm_timings.clear();
         Ok(())
     }
 
@@ -284,6 +295,20 @@ impl StageWorker {
 
     fn record(&mut self, kind: SpanKind, mb: u32, start: f64) {
         self.timings.push(OpTiming { kind, mb, start, end: self.now() });
+    }
+
+    /// Account one just-completed p2p send that began at `start`: feeds
+    /// both the mean-comm accumulators and the comm span lane.
+    fn record_comm(&mut self, mb: u32, start: f64) {
+        let end = self.now();
+        self.comm_secs += end - start;
+        self.comm_sends += 1;
+        self.comm_timings.push(OpTiming {
+            kind: SpanKind::Comm,
+            mb,
+            start,
+            end,
+        });
     }
 
     // -- greedy-aware receive ------------------------------------------------
@@ -400,8 +425,7 @@ impl StageWorker {
                 .as_ref()
                 .ok_or_else(|| anyhow!("missing act_out"))?
                 .send(mb, y_host)?;
-            self.comm_secs += self.now() - end;
-            self.comm_sends += 1;
+            self.record_comm(mb, end);
             self.timings.push(OpTiming { kind: SpanKind::Fwd, mb, start, end });
         } else {
             self.mem.alloc(Class::Wire, literal_bytes(&y));
@@ -491,8 +515,7 @@ impl StageWorker {
                 let end = self.now();
                 let gx_host = HostTensor::from_literal(&gx)?;
                 self.links.grad_out.as_ref().unwrap().send(mb, gx_host)?;
-                self.comm_secs += self.now() - end;
-                self.comm_sends += 1;
+                self.record_comm(mb, end);
                 self.timings.push(OpTiming {
                     kind: SpanKind::BwdP1,
                     mb,
@@ -608,8 +631,7 @@ impl StageWorker {
                 .as_ref()
                 .ok_or_else(|| anyhow!("missing grad_out"))?
                 .send(mb, gx_host)?;
-            self.comm_secs += self.now() - t0;
-            self.comm_sends += 1;
+            self.record_comm(mb, t0);
         }
         let entry = self.stash.get_mut(&mb).unwrap();
         if entry.res1.is_none()
@@ -718,6 +740,7 @@ impl StageWorker {
         // consumed like `timings`: a report drains the accumulators
         self.comm_secs = 0.0;
         self.comm_sends = 0;
+        let comm_timings = std::mem::take(&mut self.comm_timings);
         let mut checksum = 0.0f64;
         let mut digest: u64 = 0xcbf2_9ce4_8422_2325;
         for p in &self.params {
@@ -733,6 +756,7 @@ impl StageWorker {
         Ok(WorkerReport {
             rank: self.rank,
             timings,
+            comm_timings,
             peak_bytes: self.mem.peak(),
             peak_model: self.mem.peak_model(),
             peak_static: self.mem.peak_of(Class::Static),

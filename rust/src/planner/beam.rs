@@ -36,6 +36,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::experiments::sweep::{combos, default_threads, run_grid_with};
+use crate::metrics::registry::MetricsRegistry;
 use crate::schedule::{generate, plan_io, validate::validate, Plan};
 use crate::sim::{score_plan, score_plan_robust, Perturbation, RobustScratch};
 use crate::util::prng::SplitMix64;
@@ -342,12 +343,84 @@ pub fn microbatch_grid(n: usize, max_m: usize) -> Vec<usize> {
     ms
 }
 
+/// Per-move-kind accept/reject bookkeeping for one evaluation batch.
+/// Runs *outside* the parallel Tier-A evaluation (over its results),
+/// so telemetry costs nothing on the scoring fast path and nothing at
+/// all when no registry is attached.
+fn record_batch(obs: &mut MetricsRegistry, outs: &[EvalOut], batch: &[Pending]) {
+    for (out, (_, _, _, origin)) in outs.iter().zip(batch) {
+        // origin is "seed" or "g<generation>:<move kind>"
+        let mv = origin
+            .split_once(':')
+            .map(|(_, mv)| mv)
+            .unwrap_or(origin.as_str());
+        let bucket = match out {
+            EvalOut::Fit(_) => "accept",
+            EvalOut::OverBudget => "reject_budget",
+            EvalOut::SimFail => "reject_sim",
+        };
+        obs.counter_add(&format!("beam.{bucket}.{mv}"), 1);
+    }
+}
+
+/// One `beam.generation` event: generation index (0 = seeding), batch
+/// size, pool size, and the incumbent best.  The best's peak bytes are
+/// byte-exact model arithmetic — deterministic even for measured
+/// profiles — but its makespan/throughput derive from the profile's
+/// costs, so for a measured profile they are wall-clock-tainted and go
+/// under `"wall"`.
+fn record_generation(
+    obs: &mut MetricsRegistry,
+    gen: usize,
+    batch: usize,
+    pool_size: usize,
+    best: &SearchCand,
+    profile: &TuneProfile,
+) {
+    use crate::metrics::registry::Value;
+    let fields = vec![
+        ("gen", Value::from(gen)),
+        ("batch", Value::from(batch)),
+        ("pool_size", Value::from(pool_size)),
+        ("best_peak", Value::from(best.max_peak)),
+        ("best_origin", Value::from(best.origin.as_str())),
+    ];
+    let scores = [
+        ("best_throughput", best.throughput),
+        ("best_makespan", best.makespan),
+    ];
+    if profile.measured {
+        obs.event_mixed("beam.generation", fields, scores.to_vec());
+    } else {
+        let mut fields = fields;
+        for (k, v) in scores {
+            fields.push((k, Value::from(v)));
+        }
+        obs.event("beam.generation", fields);
+    }
+}
+
 /// Run the search.  `Err` when the profile shape mismatches `n_ranks`
 /// or when *no* candidate fits the budget.
 pub fn tune(
     profile: &TuneProfile,
     n_ranks: usize,
     cfg: &BeamConfig,
+) -> Result<TuneReport, String> {
+    tune_with(profile, n_ranks, cfg, None)
+}
+
+/// [`tune`] with an optional metrics registry attached: records
+/// seeding/candidate/dedup counters, per-move-kind accept/reject
+/// tallies, and one `beam.generation` event per round (best score under
+/// `"wall"` when the profile is measured — see `metrics::registry`).
+/// The Tier A scoring path itself stays telemetry-free by contract:
+/// every hook sits in the sequential search loop.
+pub fn tune_with(
+    profile: &TuneProfile,
+    n_ranks: usize,
+    cfg: &BeamConfig,
+    mut obs: Option<&mut MetricsRegistry>,
 ) -> Result<TuneReport, String> {
     if profile.costs.fwd.len() != n_ranks
         || profile.mem.static_bytes.len() != n_ranks
@@ -428,7 +501,14 @@ pub fn tune(
     let mut pool: BTreeMap<u64, SearchCand> = BTreeMap::new();
     let mut named_best: Option<SearchCand> = None;
 
+    if let Some(m) = obs.as_deref_mut() {
+        m.counter_add("beam.seeds", pending.len() as u64);
+        m.counter_add("beam.candidates_proposed", pending.len() as u64);
+    }
     let outs = evaluate(&pending, profile, cfg, threads);
+    if let Some(m) = obs.as_deref_mut() {
+        record_batch(m, &outs, &pending);
+    }
     absorb(outs, &named_fps, &mut pool, &mut named_best, &mut tally);
 
     if pool.is_empty() {
@@ -449,6 +529,9 @@ pub fn tune(
     // -- beam loop ---------------------------------------------------------
     let mut beam = select(&pool);
     let mut history = vec![beam[0].throughput];
+    if let Some(m) = obs.as_deref_mut() {
+        record_generation(m, 0, pending.len(), pool.len(), &beam[0], profile);
+    }
     let mut best_tput = beam[0].throughput;
     let mut rng = SplitMix64::new(cfg.seed ^ 0x2B97_C4E5);
     let mut stale = 0usize;
@@ -467,6 +550,9 @@ pub fn tune(
                             // duplicate of an already-tried plan: retry
                             // with fresh randomness rather than forfeit
                             // this mutation slot
+                            if let Some(m) = obs.as_deref_mut() {
+                                m.counter_add("beam.dedup_hits", 1);
+                            }
                             continue;
                         }
                         seen.insert(fp);
@@ -481,11 +567,20 @@ pub fn tune(
                 }
             }
         }
+        if let Some(m) = obs.as_deref_mut() {
+            m.counter_add("beam.candidates_proposed", children.len() as u64);
+        }
         let outs = evaluate(&children, profile, cfg, threads);
+        if let Some(m) = obs.as_deref_mut() {
+            record_batch(m, &outs, &children);
+        }
         absorb(outs, &named_fps, &mut pool, &mut named_best, &mut tally);
 
         beam = select(&pool);
         history.push(beam[0].throughput);
+        if let Some(m) = obs.as_deref_mut() {
+            record_generation(m, g, children.len(), pool.len(), &beam[0], profile);
+        }
         generations_run = g;
         if beam[0].throughput > best_tput * (1.0 + 1e-12) {
             best_tput = beam[0].throughput;
@@ -498,6 +593,12 @@ pub fn tune(
         }
     }
 
+    if let Some(m) = obs.as_deref_mut() {
+        m.counter_add("beam.evaluated", tally.evaluated as u64);
+        m.counter_add("beam.rejected_budget", tally.rejected_budget as u64);
+        m.counter_add("beam.rejected_sim", tally.rejected_sim as u64);
+        m.counter_add("beam.generations_run", generations_run as u64);
+    }
     Ok(TuneReport {
         profile_name: profile.name.clone(),
         n_ranks,
@@ -691,6 +792,50 @@ mod tests {
             report.best.makespan,
             clean.result.makespan
         );
+    }
+
+    /// Telemetry is an observer: attaching a registry must not change
+    /// the search result, and the counters must agree with the report's
+    /// own tallies (same numbers, independently accumulated).
+    #[test]
+    fn telemetry_observes_without_perturbing() {
+        let profile = TuneProfile::llama_like(4);
+        let plain = tune(&profile, 4, &quick_cfg()).unwrap();
+        let mut obs = crate::metrics::registry::MetricsRegistry::new();
+        let observed =
+            tune_with(&profile, 4, &quick_cfg(), Some(&mut obs)).unwrap();
+        assert_eq!(plain.best.text, observed.best.text);
+        assert_eq!(
+            plain.best.makespan.to_bits(),
+            observed.best.makespan.to_bits()
+        );
+        assert_eq!(plain.history, observed.history);
+        assert_eq!(obs.counter("beam.evaluated"), observed.evaluated as u64);
+        assert_eq!(
+            obs.counter("beam.rejected_budget"),
+            observed.rejected_budget as u64
+        );
+        assert_eq!(
+            obs.counter("beam.rejected_sim"),
+            observed.rejected_sim as u64
+        );
+        assert_eq!(
+            obs.counter("beam.generations_run"),
+            observed.generations_run as u64
+        );
+        assert!(obs.counter("beam.seeds") > 0);
+        assert!(
+            obs.counter("beam.candidates_proposed")
+                >= obs.counter("beam.seeds")
+        );
+        // one generation event per history entry (index 0 = seeding)
+        assert_eq!(obs.n_events(), observed.history.len());
+        // ratio profiles are deterministic, so the whole log must be
+        // reproducible byte-for-byte
+        let mut obs2 = crate::metrics::registry::MetricsRegistry::new();
+        tune_with(&profile, 4, &quick_cfg(), Some(&mut obs2)).unwrap();
+        assert_eq!(obs.to_jsonl(), obs2.to_jsonl());
+        assert!(!obs.to_jsonl().contains("\"wall\""));
     }
 
     #[test]

@@ -53,7 +53,9 @@
 pub mod beam;
 pub mod moves;
 
-pub use beam::{tune, BeamConfig, Candidate, RobustObjective, TuneReport};
+pub use beam::{
+    tune, tune_with, BeamConfig, Candidate, RobustObjective, TuneReport,
+};
 
 use crate::sim::{CostModel, MemModel};
 
@@ -69,6 +71,12 @@ pub struct TuneProfile {
     pub mem: MemModel,
     /// Samples per microbatch (throughput = samples/sec).
     pub samples_per_microbatch: usize,
+    /// Costs come from wall-clock measurement
+    /// ([`TuneProfile::from_measured`]) rather than abstract ratios.
+    /// Telemetry uses this to decide whether score-derived metrics are
+    /// deterministic or must be quarantined under `"wall"` in the run
+    /// log (see `metrics::registry`).
+    pub measured: bool,
 }
 
 impl TuneProfile {
@@ -104,6 +112,7 @@ impl TuneProfile {
             costs,
             mem,
             samples_per_microbatch: 1,
+            measured: false,
         }
     }
 
@@ -136,6 +145,7 @@ impl TuneProfile {
             costs,
             mem,
             samples_per_microbatch,
+            measured: true,
         })
     }
 
@@ -191,6 +201,7 @@ mod tests {
         .unwrap();
         assert_eq!(p.name, "measured synthetic");
         assert_eq!(p.samples_per_microbatch, 2);
+        assert!(p.measured, "measured profiles must self-identify");
         assert_eq!(p.costs.fwd, vec![0.002; 3]);
         assert_eq!(p.costs.loss, 0.0003);
         let bad_mem = MemModel {
@@ -207,6 +218,7 @@ mod tests {
     #[test]
     fn from_ratios_overrides_costs_only() {
         let p = TuneProfile::from_ratios(2, 1.0, 0.5, 1.5, 0.1);
+        assert!(!p.measured, "ratio profiles are deterministic");
         assert_eq!(p.costs.p2[0], 1.5);
         assert_eq!(p.costs.comm, 0.1);
         assert_eq!(p.mem.static_bytes.len(), 2);

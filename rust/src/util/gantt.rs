@@ -51,8 +51,16 @@ pub fn render(ranks: &[Vec<Span>], cols: usize) -> String {
     for (ri, spans) in ranks.iter().enumerate() {
         let mut line = vec!['.'; cols];
         for s in spans {
-            let a = (s.start * scale).floor() as usize;
-            let b = ((s.end * scale).ceil() as usize).min(cols);
+            let mut a = (s.start * scale).floor() as usize;
+            let mut b = ((s.end * scale).ceil() as usize).min(cols);
+            // a sub-cell span whose floor(start) == ceil(end) after the
+            // clamp would paint zero cells and vanish from the chart;
+            // guarantee every span occupies at least one cell (shifted
+            // left when it sits exactly on the right edge)
+            if b <= a {
+                b = (a + 1).min(cols);
+                a = b - 1;
+            }
             for cell in line.iter_mut().take(b).skip(a) {
                 *cell = s.label.ch();
             }
@@ -99,6 +107,26 @@ mod tests {
         assert!(s.contains('F'));
         assert!(s.contains('1'));
         assert!(s.contains("makespan = 4.00"));
+    }
+
+    #[test]
+    fn sub_pixel_span_still_paints_a_cell() {
+        // cols == makespan, so scale = 1 and a zero-duration span at an
+        // integer boundary hits floor(start) == ceil(end) — the old
+        // renderer painted it zero cells wide and it vanished
+        let ranks = vec![vec![
+            Span { start: 0.0, end: 4.0, label: SpanKind::Fwd, mb: 0 },
+            Span { start: 2.0, end: 2.0, label: SpanKind::Opt, mb: 0 },
+        ]];
+        let s = render(&ranks, 4);
+        assert!(s.contains('O'), "sub-pixel span vanished:\n{s}");
+        // same at the right edge: the clamp must shift left, not drop
+        let ranks = vec![vec![
+            Span { start: 0.0, end: 4.0, label: SpanKind::Fwd, mb: 0 },
+            Span { start: 4.0, end: 4.0, label: SpanKind::Opt, mb: 0 },
+        ]];
+        let s = render(&ranks, 4);
+        assert!(s.contains('O'), "right-edge span vanished:\n{s}");
     }
 
     #[test]

@@ -9,3 +9,4 @@ pub mod prng;
 pub mod proptest;
 pub mod stats;
 pub mod table;
+pub mod trace;

@@ -1,0 +1,327 @@
+//! Chrome Trace Event Format export for pipeline timelines.
+//!
+//! Converts per-rank [`Span`] timelines — Tier-B simulator output
+//! (`sim::SimResult::spans`) and executed runs
+//! (`pipeline::RunReport::spans` + the comm lane) — into the JSON
+//! format that Perfetto (<https://ui.perfetto.dev>) and
+//! `chrome://tracing` open directly: a `{"traceEvents": [...]}` object
+//! of `"X"` (complete) events plus `"M"` (metadata) naming events.
+//!
+//! Layout convention (see docs/OBSERVABILITY.md):
+//!
+//! * one **process per (timeline group, rank)** — predicted rank r is
+//!   pid [`PREDICTED_PID_BASE`]` + r`, executed rank r is
+//!   [`EXECUTED_PID_BASE`]` + r`, so the two timelines stack as
+//!   separate process groups for visual diffing;
+//! * two **threads per process** — tid [`TID_COMPUTE`] carries
+//!   fwd/p1/p2/opt/loss spans, tid [`TID_COMM`] carries [`SpanKind::Comm`]
+//!   send spans (the executor's comm lane; the simulator emits none);
+//! * timestamps are **microseconds** (`ts`/`dur = seconds × 1e6`), the
+//!   Trace Event spec's native unit.
+//!
+//! Determinism: the builder writes no wall-clock, hostnames, or ids —
+//! the output is a pure function of the span lists, so identical runs
+//! produce byte-identical traces (a CI-gated property; see ci.yml).
+
+use std::io;
+use std::path::Path;
+
+use crate::util::gantt::{Span, SpanKind};
+use crate::util::json::{obj, Json};
+
+/// pid of predicted (simulator) rank 0; rank r is `base + r`.
+pub const PREDICTED_PID_BASE: usize = 1;
+/// pid of executed (real run) rank 0 — offset far enough that no
+/// plausible rank count collides with the predicted group.
+pub const EXECUTED_PID_BASE: usize = 1001;
+/// tid carrying compute spans (fwd / bwd-p1 / bwd-p2 / opt / loss).
+pub const TID_COMPUTE: usize = 0;
+/// tid carrying communication (send) spans.
+pub const TID_COMM: usize = 1;
+
+/// Short machine-readable name for a span kind (event `name`/`cat`).
+pub fn kind_name(kind: SpanKind) -> &'static str {
+    match kind {
+        SpanKind::Fwd => "fwd",
+        SpanKind::BwdP1 => "bwd_p1",
+        SpanKind::BwdP2 => "bwd_p2",
+        SpanKind::Opt => "opt",
+        SpanKind::Comm => "comm",
+        SpanKind::Loss => "loss",
+    }
+}
+
+/// Accumulates trace events; serialize with [`TraceBuilder::render`] or
+/// [`TraceBuilder::write`].
+#[derive(Debug, Default)]
+pub struct TraceBuilder {
+    events: Vec<Json>,
+}
+
+impl TraceBuilder {
+    pub fn new() -> TraceBuilder {
+        TraceBuilder::default()
+    }
+
+    /// Number of events accumulated so far (metadata + spans).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Add one timeline group (e.g. `"predicted"` / `"executed"`): one
+    /// process per rank at `pid_base + rank`, spans routed to the
+    /// compute or comm thread by [`SpanKind`].  Ranks with no spans
+    /// still get their process metadata, so predicted and executed
+    /// groups always show the same rank set.
+    pub fn add_timeline(
+        &mut self,
+        group: &str,
+        pid_base: usize,
+        ranks: &[Vec<Span>],
+    ) {
+        for (rank, spans) in ranks.iter().enumerate() {
+            let pid = pid_base + rank;
+            self.meta(pid, None, "process_name", |a| {
+                a.push((
+                    "name",
+                    Json::Str(format!("{group} rank {rank}")),
+                ));
+            });
+            self.meta(pid, None, "process_sort_index", |a| {
+                a.push(("sort_index", Json::Num(pid as f64)));
+            });
+            self.meta(pid, Some(TID_COMPUTE), "thread_name", |a| {
+                a.push(("name", Json::Str("compute".into())));
+            });
+            if spans.iter().any(|s| s.label == SpanKind::Comm) {
+                self.meta(pid, Some(TID_COMM), "thread_name", |a| {
+                    a.push(("name", Json::Str("comm".into())));
+                });
+            }
+            for s in spans {
+                let tid = if s.label == SpanKind::Comm {
+                    TID_COMM
+                } else {
+                    TID_COMPUTE
+                };
+                self.events.push(obj(vec![
+                    (
+                        "name",
+                        Json::Str(format!(
+                            "{} mb{}",
+                            kind_name(s.label),
+                            s.mb
+                        )),
+                    ),
+                    ("cat", Json::Str(kind_name(s.label).into())),
+                    ("ph", Json::Str("X".into())),
+                    ("ts", Json::Num(s.start * 1e6)),
+                    ("dur", Json::Num((s.end - s.start) * 1e6)),
+                    ("pid", Json::Num(pid as f64)),
+                    ("tid", Json::Num(tid as f64)),
+                    (
+                        "args",
+                        obj(vec![("mb", Json::Num(s.mb as f64))]),
+                    ),
+                ]));
+            }
+        }
+    }
+
+    fn meta(
+        &mut self,
+        pid: usize,
+        tid: Option<usize>,
+        name: &str,
+        fill_args: impl FnOnce(&mut Vec<(&'static str, Json)>),
+    ) {
+        let mut args = Vec::new();
+        fill_args(&mut args);
+        let mut fields = vec![
+            ("name", Json::Str(name.into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(pid as f64)),
+            ("args", obj(args)),
+        ];
+        if let Some(tid) = tid {
+            fields.push(("tid", Json::Num(tid as f64)));
+        }
+        self.events.push(obj(fields));
+    }
+
+    /// The complete trace document.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("displayTimeUnit", Json::Str("ms".into())),
+            ("traceEvents", Json::Arr(self.events.clone())),
+        ])
+    }
+
+    /// Compact JSON text of the trace document.
+    pub fn render(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Write the trace to `path` (overwrites).
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{generate, ScheduleKind};
+    use crate::sim::{simulate, CostModel};
+
+    fn x_events(doc: &Json) -> Vec<&Json> {
+        doc.get("traceEvents")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("X")
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_trips_a_sim_result() {
+        let plan = generate(ScheduleKind::OneF1B1, true, 4, 0, false);
+        let costs = CostModel::ratios(4, 1.0, 1.05, 0.95);
+        let res = simulate(&plan, &costs, None).unwrap();
+        let n_spans: usize = res.spans.iter().map(Vec::len).sum();
+
+        let mut tb = TraceBuilder::new();
+        tb.add_timeline("predicted", PREDICTED_PID_BASE, &res.spans);
+        let doc = Json::parse(&tb.render()).unwrap();
+
+        assert_eq!(
+            doc.get("displayTimeUnit").and_then(Json::as_str),
+            Some("ms")
+        );
+        let xs = x_events(&doc);
+        assert_eq!(xs.len(), n_spans, "one X event per sim span");
+
+        // per-rank pid mapping: rank r's spans all land on pid base+r
+        for (rank, spans) in res.spans.iter().enumerate() {
+            let pid = (PREDICTED_PID_BASE + rank) as f64;
+            let on_pid = xs
+                .iter()
+                .filter(|e| e.get("pid").and_then(Json::as_f64) == Some(pid))
+                .count();
+            assert_eq!(on_pid, spans.len(), "rank {rank}");
+        }
+
+        // per (pid, tid): ts monotone, spans non-overlapping
+        let mut keys: Vec<(u64, u64)> = xs
+            .iter()
+            .map(|e| {
+                (
+                    e.get("pid").and_then(Json::as_u64).unwrap(),
+                    e.get("tid").and_then(Json::as_u64).unwrap(),
+                )
+            })
+            .collect();
+        keys.sort_unstable();
+        keys.dedup();
+        for (pid, tid) in keys {
+            let mut prev_end = f64::NEG_INFINITY;
+            for e in xs.iter().filter(|e| {
+                e.get("pid").and_then(Json::as_u64) == Some(pid)
+                    && e.get("tid").and_then(Json::as_u64) == Some(tid)
+            }) {
+                let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+                let dur = e.get("dur").and_then(Json::as_f64).unwrap();
+                assert!(
+                    ts >= prev_end - 1e-6,
+                    "overlap on pid {pid} tid {tid}: \
+                     ts {ts} < prev end {prev_end}"
+                );
+                prev_end = ts + dur;
+            }
+        }
+    }
+
+    #[test]
+    fn groups_get_distinct_pids_and_comm_goes_to_tid_1() {
+        let predicted = vec![vec![Span {
+            start: 0.0,
+            end: 1.0,
+            label: SpanKind::Fwd,
+            mb: 0,
+        }]];
+        let executed = vec![vec![
+            Span { start: 0.0, end: 0.9, label: SpanKind::Fwd, mb: 0 },
+            Span { start: 0.9, end: 1.0, label: SpanKind::Comm, mb: 0 },
+        ]];
+        let mut tb = TraceBuilder::new();
+        tb.add_timeline("predicted", PREDICTED_PID_BASE, &predicted);
+        tb.add_timeline("executed", EXECUTED_PID_BASE, &executed);
+        let doc = Json::parse(&tb.render()).unwrap();
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| {
+                e.get("name").and_then(Json::as_str)
+                    == Some("process_name")
+            })
+            .filter_map(|e| {
+                e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(Json::as_str)
+            })
+            .collect();
+        assert_eq!(names, vec!["predicted rank 0", "executed rank 0"]);
+
+        let xs = x_events(&doc);
+        let comm: Vec<&&Json> = xs
+            .iter()
+            .filter(|e| {
+                e.get("cat").and_then(Json::as_str) == Some("comm")
+            })
+            .collect();
+        assert_eq!(comm.len(), 1);
+        assert_eq!(
+            comm[0].get("tid").and_then(Json::as_u64),
+            Some(TID_COMM as u64)
+        );
+        assert_eq!(
+            comm[0].get("pid").and_then(Json::as_u64),
+            Some(EXECUTED_PID_BASE as u64)
+        );
+
+        // µs scaling: the 0.9s fwd span is 900000 µs long
+        let fwd_exec = xs
+            .iter()
+            .find(|e| {
+                e.get("pid").and_then(Json::as_u64)
+                    == Some(EXECUTED_PID_BASE as u64)
+                    && e.get("cat").and_then(Json::as_str) == Some("fwd")
+            })
+            .unwrap();
+        assert_eq!(fwd_exec.get("dur").and_then(Json::as_f64), Some(9e5));
+    }
+
+    #[test]
+    fn identical_inputs_render_identically() {
+        let spans = vec![vec![Span {
+            start: 0.25,
+            end: 0.75,
+            label: SpanKind::BwdP2,
+            mb: 3,
+        }]];
+        let mut a = TraceBuilder::new();
+        a.add_timeline("predicted", PREDICTED_PID_BASE, &spans);
+        let mut b = TraceBuilder::new();
+        b.add_timeline("predicted", PREDICTED_PID_BASE, &spans);
+        assert_eq!(a.render(), b.render());
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), 3 + 1); // 3 metadata + 1 span
+    }
+}
