@@ -19,6 +19,15 @@ Modes:
       The two run logs must be identical after stripping every nested
       "wall" object (the only place wall-clock-derived values may live).
 
+  check_obs.py fault FILE
+      FILE is a `twobp bench faults --metrics-out` run log: every
+      "fault.cell" event carries the injected rank/step, an "injected"
+      kind (fail|stall) consistent with how it was detected
+      (rank_failed|comm_timeout), a salvaged-step count, recovered=true,
+      and wall-only latencies; the fault.* counters must agree with the
+      cell count.  The detecting rank must NOT appear (it is racy for
+      stalls); two same-seed logs stay diff-metrics-clean.
+
   check_obs.py diff-trace A B
       The two traces must be identical after dropping "ts"/"dur" from
       events (executed timelines carry measured timings; everything
@@ -134,6 +143,68 @@ def check_metrics(path, require):
     )
 
 
+def check_fault(path):
+    lines = load_metrics(path)
+    cells = [
+        line
+        for line in lines
+        if line.get("kind") == "event" and line.get("name") == "fault.cell"
+    ]
+    if not cells:
+        fail(f"{path}: no fault.cell events")
+    pairing = {"fail": "rank_failed", "stall": "comm_timeout"}
+    for e in cells:
+        where = f"{path}: fault.cell seq {e.get('seq')}"
+        for key in ("cell", "rank", "step", "injected", "detected_as",
+                    "steps_before", "recovered"):
+            if key not in e:
+                fail(f"{where}: missing '{key}': {e}")
+        for key in ("cell", "rank", "step", "steps_before"):
+            if not isinstance(e[key], (int, float)) or e[key] < 0:
+                fail(f"{where}: bad {key}={e[key]!r}")
+        if e["injected"] not in pairing:
+            fail(f"{where}: bad injected kind {e['injected']!r}")
+        if e["detected_as"] != pairing[e["injected"]]:
+            fail(
+                f"{where}: injected {e['injected']!r} detected as "
+                f"{e['detected_as']!r} (want {pairing[e['injected']]!r})"
+            )
+        if e["recovered"] is not True:
+            fail(f"{where}: recovered={e['recovered']!r}")
+        wall = e.get("wall")
+        if not isinstance(wall, dict):
+            fail(f"{where}: missing wall object")
+        for key in ("detect_s", "recovery_s", "goodput_steps_per_s"):
+            v = wall.get(key)
+            if not isinstance(v, (int, float)) or v < 0:
+                fail(f"{where}: bad wall.{key}={v!r}")
+    counters = {
+        line["name"]: line.get("value")
+        for line in lines
+        if line.get("kind") == "counter"
+    }
+    n = len(cells)
+    if counters.get("fault.cells") != n:
+        fail(f"{path}: fault.cells={counters.get('fault.cells')} != {n}")
+    injected = sum(
+        counters.get(f"fault.injected.{k}", 0) for k in ("fail", "stall")
+    )
+    if injected != n:
+        fail(f"{path}: fault.injected.* sums to {injected} != {n}")
+    detected = sum(
+        counters.get(f"fault.detected.{k}", 0)
+        for k in ("rank_failed", "comm_timeout")
+    )
+    if detected != n:
+        fail(f"{path}: fault.detected.* sums to {detected} != {n}")
+    if counters.get("fault.recovered") != n:
+        fail(
+            f"{path}: fault.recovered={counters.get('fault.recovered')} "
+            f"!= {n}"
+        )
+    print(f"check_obs: {path} OK — {n} fault cells, all recovered")
+
+
 def diff_metrics(a, b):
     sa = [strip_wall(line) for line in load_metrics(a)]
     sb = [strip_wall(line) for line in load_metrics(b)]
@@ -186,6 +257,8 @@ def main(argv):
             require = args[i + 1:]
             args = args[:i]
         check_metrics(args[0], require)
+    elif mode == "fault":
+        check_fault(args[0])
     elif mode == "diff-metrics":
         diff_metrics(args[0], args[1])
     elif mode == "diff-trace":

@@ -41,6 +41,32 @@ pub struct RunConfig {
     /// loading AOT artifacts (`twobp train --synthetic`; see
     /// `models::synthetic`).
     pub synthetic: bool,
+    /// Snapshot per-rank state (params + Adam slots + step counters)
+    /// every N steps into `checkpoint_dir` (0 = never).
+    pub checkpoint_every: usize,
+    /// Where `--checkpoint-every` writes its `step-{N}` directories.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from a checkpoint directory before running: either a
+    /// `step-{N}` dir itself or a base dir, whose latest step is used.
+    pub resume: Option<PathBuf>,
+    /// How long a rank may wait *idle* for a peer tensor before
+    /// declaring the peer stalled (`RunError::CommTimeout`).
+    pub comm_timeout_ms: u64,
+    /// Receive poll tick: the latency with which a rank observes a
+    /// failure elsewhere in the cluster.
+    pub comm_backoff_ms: u64,
+    /// Deterministic stub fault injection, `<rank>:<kind>@<call>` with
+    /// kind `fail` or `stall-<ns>` (synthetic runs only; the directive
+    /// lands on that rank's fwd executable — see docs/ROBUSTNESS.md §6).
+    pub fault: Option<String>,
+    /// Seeded comm-layer injection: probability each p2p send is
+    /// silently dropped (0 disables).
+    pub comm_drop_prob: f64,
+    /// Seeded comm-layer injection: fixed delay per delivered send.
+    pub comm_delay_ns: u64,
+    /// Seed for the comm-layer injector (drops/delays are a pure
+    /// function of this seed, the link, and the send index).
+    pub comm_fault_seed: u64,
 }
 
 impl Default for RunConfig {
@@ -58,6 +84,15 @@ impl Default for RunConfig {
             data_cycle: 0,
             verbose: false,
             synthetic: false,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: None,
+            comm_timeout_ms: 5000,
+            comm_backoff_ms: 10,
+            fault: None,
+            comm_drop_prob: 0.0,
+            comm_delay_ns: 0,
+            comm_fault_seed: 0,
         }
     }
 }
@@ -76,6 +111,15 @@ impl RunConfig {
             two_bp: !args.has("no-2bp"),
             verbose: args.has("verbose"),
             synthetic: args.has("synthetic"),
+            checkpoint_every: args.get_usize("checkpoint-every", 0),
+            checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
+            resume: args.get("resume").map(PathBuf::from),
+            comm_timeout_ms: args.get_usize("comm-timeout-ms", 5000) as u64,
+            comm_backoff_ms: args.get_usize("comm-backoff-ms", 10) as u64,
+            fault: args.get("fault").map(String::from),
+            comm_drop_prob: args.get_f64("comm-drop-prob", 0.0),
+            comm_delay_ns: args.get_usize("comm-delay-ns", 0) as u64,
+            comm_fault_seed: args.get_usize("comm-fault-seed", 0) as u64,
             ..RunConfig::default()
         };
         if let Some(kind) = args
@@ -86,6 +130,30 @@ impl RunConfig {
         }
         if args.has("concat-p2") {
             cfg.p2_mode = P2Mode::Concat;
+        }
+        if cfg.checkpoint_every > 0 && cfg.checkpoint_dir.is_none() {
+            bail!("--checkpoint-every requires --checkpoint-dir <dir>");
+        }
+        if cfg.checkpoint_every == 0 && cfg.checkpoint_dir.is_some() {
+            bail!("--checkpoint-dir only applies with --checkpoint-every");
+        }
+        if cfg.fault.is_some() && !cfg.synthetic {
+            bail!(
+                "--fault injects into the in-process synthetic preset; \
+                 it needs --synthetic"
+            );
+        }
+        if !(0.0..=1.0).contains(&cfg.comm_drop_prob) {
+            bail!("--comm-drop-prob must be in [0, 1]");
+        }
+        if args.get("comm-fault-seed").is_some()
+            && cfg.comm_drop_prob == 0.0
+            && cfg.comm_delay_ns == 0
+        {
+            bail!(
+                "--comm-fault-seed only applies with --comm-drop-prob \
+                 or --comm-delay-ns"
+            );
         }
         Ok(cfg)
     }
@@ -255,6 +323,51 @@ mod tests {
         assert!(!cfg.two_bp);
         assert_eq!(cfg.p2_mode, P2Mode::Concat);
         assert!(cfg.synthetic);
+    }
+
+    #[test]
+    fn fault_and_checkpoint_flags_parse_and_are_gated() {
+        let flags = ["synthetic"];
+        let cfg = RunConfig::from_args(&Args::parse(
+            &sv(&["--synthetic", "--checkpoint-every", "2",
+                  "--checkpoint-dir", "/tmp/ck", "--resume", "/tmp/ck",
+                  "--fault", "1:fail@3", "--comm-timeout-ms", "250",
+                  "--comm-backoff-ms", "5", "--comm-drop-prob", "0.25",
+                  "--comm-delay-ns", "1000", "--comm-fault-seed", "7"]),
+            &flags,
+        ))
+        .unwrap();
+        assert_eq!(cfg.checkpoint_every, 2);
+        assert_eq!(cfg.checkpoint_dir, Some(PathBuf::from("/tmp/ck")));
+        assert_eq!(cfg.resume, Some(PathBuf::from("/tmp/ck")));
+        assert_eq!(cfg.fault.as_deref(), Some("1:fail@3"));
+        assert_eq!(cfg.comm_timeout_ms, 250);
+        assert_eq!(cfg.comm_backoff_ms, 5);
+        assert_eq!(cfg.comm_drop_prob, 0.25);
+        assert_eq!(cfg.comm_delay_ns, 1000);
+        assert_eq!(cfg.comm_fault_seed, 7);
+        // defaults: supervision on, injection off
+        let d = RunConfig::from_args(&Args::parse(&sv(&[]), &flags)).unwrap();
+        assert_eq!(d.checkpoint_every, 0);
+        assert_eq!(d.comm_timeout_ms, 5000);
+        assert_eq!(d.comm_drop_prob, 0.0);
+        for argv in [
+            // checkpointing needs both halves
+            vec!["--checkpoint-every", "2"],
+            vec!["--checkpoint-dir", "/tmp/ck"],
+            // stub faults only exist on the synthetic preset
+            vec!["--fault", "1:fail@3"],
+            // probability out of range
+            vec!["--synthetic", "--comm-drop-prob", "1.5"],
+            // a seed with nothing to seed is a typo'd run
+            vec!["--comm-fault-seed", "7"],
+        ] {
+            assert!(
+                RunConfig::from_args(&Args::parse(&sv(&argv), &flags))
+                    .is_err(),
+                "{argv:?}"
+            );
+        }
     }
 
     #[test]

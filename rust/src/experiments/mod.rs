@@ -1103,6 +1103,209 @@ pub fn tune_replan(
     })
 }
 
+/// The fault-recovery harness (`twobp bench faults`): for every
+/// (rank × kind) cell, inject a deterministic fault into one rank's
+/// forward stage at step 1 via the stub's `fault` directive, assert the
+/// cluster fails **fast** with the typed [`RunError`] the supervision
+/// layer promises, salvage the last complete per-rank checkpoint set
+/// from the wreck, resume on clean artifacts, and prove the recovered
+/// parameters are bit-identical to an uninterrupted reference run
+/// (`RunReport::param_digests`).
+///
+/// Determinism contract for the metrics log (CI diffs two same-seed
+/// runs): `fault.cell` events carry only the **injected** rank/step and
+/// the detected failure *kind* — never the detecting rank, because for
+/// a stall either neighbor of the stalled rank may hit its deadline
+/// first.  Detection latency, recovery overhead, and goodput are
+/// wall-clock and hide under `"wall"` (docs/OBSERVABILITY.md).
+#[cfg(feature = "pjrt")]
+pub fn fault_sweep(
+    steps: usize,
+    mut obs: Option<&mut MetricsRegistry>,
+) -> Result<String> {
+    use anyhow::{bail, ensure};
+
+    use crate::models::synthetic::{
+        with_temp_artifacts, write_artifacts, StubFaultSpec, SyntheticSpec,
+    };
+    use crate::pipeline::{checkpoint, Cluster, RunError};
+    use crate::util::stats::fmt_duration;
+
+    let spec = SyntheticSpec::tiny();
+    let total_steps = steps.max(3);
+    with_temp_artifacts("faults", &spec, |root, manifest| {
+        let n = manifest.n_stages;
+        let base = RunConfig {
+            preset: spec.preset.clone(),
+            artifacts: root.to_path_buf(),
+            steps: total_steps,
+            ..RunConfig::default()
+        };
+        let m = base.microbatches(n);
+        // Step 1's first forward is call `m` (0-based; calls 0..m are
+        // step 0's microbatches): late enough that every rank finishes
+        // step 0 — and checkpoints it — before anyone can observe the
+        // failure, so the salvaged step count is deterministic.
+        let fault_step = 1usize;
+        let fault_call = (m * fault_step) as u64;
+
+        // The uninterrupted reference: the bit pattern every recovered
+        // run must reproduce.  The clean cluster is reused for the
+        // recovery legs (the *faulty* cluster is poisoned and rebuilt
+        // per cell, which is the real recovery story).
+        let clean = Cluster::new(&base)?;
+        let reference = clean.run(&base)?.param_digests();
+
+        let kinds =
+            [("fail", "fail".to_string()),
+             ("stall", format!("stall-{}", 1_000_000_000u64))];
+        let mut t = Table::new(&[
+            "cell", "injected", "detected as", "observed at", "ckpt step",
+            "detect", "recover", "params",
+        ])
+        .with_title(&format!(
+            "Fault-recovery sweep ({}, N={n}, m={m}): inject at step \
+             {fault_step}, fail fast, resume from the salvaged \
+             checkpoint, verify bit-identical parameters vs a clean \
+             {total_steps}-step run",
+            spec.preset,
+        ));
+        let mut cell_idx = 0usize;
+        let mut goodputs = Vec::new();
+        for rank in [1, n / 2] {
+            for (kind_slug, directive_kind) in &kinds {
+                let fault = StubFaultSpec {
+                    rank,
+                    kind: directive_kind.clone(),
+                    at_call: fault_call,
+                };
+                let faulty_spec = SyntheticSpec::tiny_faulty(fault);
+                // overwrites the previous cell's faulty preset in full,
+                // so exactly one fwd stage carries a directive at a time
+                write_artifacts(root, &faulty_spec)?;
+                let ckpt_dir = root.join(format!("ckpt-c{cell_idx}"));
+                let faulty_cfg = RunConfig {
+                    preset: faulty_spec.preset.clone(),
+                    checkpoint_every: 1,
+                    checkpoint_dir: Some(ckpt_dir.clone()),
+                    comm_timeout_ms: 200,
+                    ..base.clone()
+                };
+                let faulty = Cluster::new(&faulty_cfg)?;
+                let t0 = Instant::now();
+                let err = match faulty.run(&faulty_cfg) {
+                    Ok(_) => bail!(
+                        "cell {cell_idx}: injected {kind_slug} on rank \
+                         {rank} but the run succeeded"
+                    ),
+                    Err(e) => e,
+                };
+                let detect_s = t0.elapsed().as_secs_f64();
+                let run_err = err
+                    .downcast_ref::<RunError>()
+                    .cloned()
+                    .ok_or_else(|| anyhow!(
+                        "cell {cell_idx}: failure was not a typed \
+                         RunError: {err:#}"
+                    ))?;
+                let detected_as = match (*kind_slug, &run_err) {
+                    ("fail", RunError::RankFailed { rank: r, step, .. }) => {
+                        ensure!(
+                            *r == rank && *step == fault_step,
+                            "cell {cell_idx}: injected fail on rank \
+                             {rank} step {fault_step}, detected {run_err}"
+                        );
+                        "rank_failed"
+                    }
+                    // which neighbor of the stalled rank hits its
+                    // deadline first is a race — assert the kind only
+                    ("stall", RunError::CommTimeout { .. }) => "comm_timeout",
+                    _ => bail!(
+                        "cell {cell_idx}: injected {kind_slug}, got the \
+                         wrong failure class: {run_err}"
+                    ),
+                };
+                let resume_dir = checkpoint::resolve_resume_dir(&ckpt_dir)
+                    .with_context(|| format!(
+                        "cell {cell_idx}: no checkpoint salvaged from \
+                         the failed run"
+                    ))?;
+                let steps_before = checkpoint::load(&resume_dir, n)?[0].step;
+                ensure!(
+                    steps_before == fault_step,
+                    "cell {cell_idx}: salvaged {steps_before} steps, \
+                     expected {fault_step}"
+                );
+                let t1 = Instant::now();
+                let recovery_cfg = RunConfig {
+                    steps: total_steps - steps_before,
+                    resume: Some(resume_dir),
+                    ..base.clone()
+                };
+                let recovered = clean.run(&recovery_cfg)?;
+                let recovery_s = t1.elapsed().as_secs_f64();
+                ensure!(
+                    recovered.param_digests() == reference,
+                    "cell {cell_idx}: recovered parameters diverge from \
+                     the uninterrupted reference run"
+                );
+                let goodput =
+                    total_steps as f64 / (detect_s + recovery_s).max(1e-12);
+                goodputs.push(goodput);
+                if let Some(reg) = obs.as_deref_mut() {
+                    reg.counter_add("fault.cells", 1);
+                    reg.counter_add(
+                        &format!("fault.injected.{kind_slug}"), 1);
+                    reg.counter_add(
+                        &format!("fault.detected.{detected_as}"), 1);
+                    reg.counter_add("fault.recovered", 1);
+                    reg.event_mixed(
+                        "fault.cell",
+                        vec![
+                            ("cell", cell_idx.into()),
+                            ("rank", rank.into()),
+                            ("step", fault_step.into()),
+                            // "kind" would collide with the line's own
+                            // kind=event discriminator — duplicate JSON
+                            // keys — so the injected kind gets its own
+                            // field name
+                            ("injected", (*kind_slug).into()),
+                            ("detected_as", detected_as.into()),
+                            ("steps_before", steps_before.into()),
+                            ("recovered", true.into()),
+                        ],
+                        vec![
+                            ("detect_s", detect_s),
+                            ("recovery_s", recovery_s),
+                            ("goodput_steps_per_s", goodput),
+                        ],
+                    );
+                }
+                t.row(vec![
+                    cell_idx.to_string(),
+                    format!("r{rank} {kind_slug}@step {fault_step}"),
+                    detected_as.to_string(),
+                    // human-facing only: for stalls this names the racy
+                    // *detecting* rank, which never enters the metrics
+                    format!("r{} step {}", run_err.rank(), run_err.step()),
+                    steps_before.to_string(),
+                    fmt_duration(detect_s),
+                    fmt_duration(recovery_s),
+                    "bit-identical".into(),
+                ]);
+                cell_idx += 1;
+            }
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "all {cell_idx} cells recovered to the reference digests; \
+             mean goodput {:.1} steps/s (detect + resume wall time)\n",
+            goodputs.iter().sum::<f64>() / goodputs.len().max(1) as f64,
+        ));
+        Ok(out)
+    })
+}
+
 /// Per-preset measured run for one (schedule, 2bp) cell against a
 /// persistent cluster: trains for `steps` real steps and returns
 /// (throughput samples/s via calibrated replay, max per-rank peak bytes).
@@ -1414,6 +1617,17 @@ pub fn fig6_fig7(steps: usize, preset: &str) -> Result<String> {
 
 /// `twobp bench <exp>` dispatcher.
 pub fn run_experiment(name: &str, steps: usize) -> Result<String> {
+    run_experiment_with(name, steps, None)
+}
+
+/// [`run_experiment`] with an optional metrics observer (`twobp bench
+/// faults --metrics-out`); experiments that record nothing ignore it.
+pub fn run_experiment_with(
+    name: &str,
+    steps: usize,
+    obs: Option<&mut crate::metrics::registry::MetricsRegistry>,
+) -> Result<String> {
+    let _ = &obs;
     match name {
         "table1" => Ok(table1()),
         "fig1" => Ok(fig1(4, 96)),
@@ -1432,6 +1646,8 @@ pub fn run_experiment(name: &str, steps: usize) -> Result<String> {
             tune_replan(steps, crate::pipeline::DriftConfig::default(), None)
         }
         #[cfg(feature = "pjrt")]
+        "faults" | "fault" => fault_sweep(steps, obs),
+        #[cfg(feature = "pjrt")]
         "fig3" | "fig4" => fig3(steps, &BENCH_PRESETS.to_vec()),
         #[cfg(feature = "pjrt")]
         "fig5" => fig5(steps, "bert-s"),
@@ -1441,8 +1657,8 @@ pub fn run_experiment(name: &str, steps: usize) -> Result<String> {
         "fig6" | "fig7" | "scaling" => fig6_fig7(steps, "bert-scale-fixed"),
         #[cfg(not(feature = "pjrt"))]
         "synthetic" | "stub" | "tune-calibrated" | "tune_calibrated"
-        | "replan" | "drift" | "fig3" | "fig4" | "fig5" | "table3"
-        | "fig6" | "fig7" | "scaling" => {
+        | "replan" | "drift" | "faults" | "fault" | "fig3" | "fig4"
+        | "fig5" | "table3" | "fig6" | "fig7" | "scaling" => {
             let _ = steps;
             Err(anyhow!(
                 "experiment '{name}' needs the real runtime; rebuild with \
@@ -1451,8 +1667,9 @@ pub fn run_experiment(name: &str, steps: usize) -> Result<String> {
             ))
         }
         other => Err(anyhow!("unknown experiment '{other}' \
-            (table1|fig1|synthetic|tune-calibrated|replan|robustness|fig3|\
-             fig4|fig5|table3|fig6|fig7|ckpt|sweep|planner)")),
+            (table1|fig1|synthetic|tune-calibrated|replan|faults|\
+             robustness|fig3|fig4|fig5|table3|fig6|fig7|ckpt|sweep|\
+             planner)")),
     }
 }
 

@@ -6,6 +6,16 @@
 //!                [--trace-out FILE.json]
 //!                [--synthetic]  (in-process stub-backend manifest, no
 //!                                artifacts needed; verified against sim)
+//!                [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]
+//!                 (bit-identical checkpoint/resume; docs/ROBUSTNESS.md §6)
+//!                [--fault R:fail@C | R:stall-NS@C]  (with --synthetic:
+//!                 inject a deterministic failure/stall into rank R's
+//!                 forward at 0-based call C via the stub's `fault`
+//!                 directive — the run fails fast with a typed error)
+//!                [--comm-timeout-ms T] [--comm-backoff-ms B]
+//!                [--comm-drop-prob P --comm-delay-ns NS
+//!                 --comm-fault-seed S]  (seeded p2p chaos: reproducible
+//!                 message drops/delays; drops trip the comm deadline)
 //! twobp gantt    [--ranks N] [--cols W] [--schedule K] [--plan FILE]
 //!                [--real --preset P]
 //! twobp trace    --plan FILE [--out FILE.json]
@@ -41,9 +51,11 @@
 //!                 stub costs drift mid-run — detect measured-vs-
 //!                 predicted drift, re-calibrate + re-tune once;
 //!                 beam/out flags use tuned defaults there)
-//! twobp bench    <table1|fig1|synthetic|tune-calibrated|replan
+//! twobp bench    <table1|fig1|synthetic|tune-calibrated|replan|faults
 //!                 |robustness|fig3|fig4|fig5|table3|fig6|fig7|ckpt
 //!                 |sweep|planner> [--steps N]
+//!                [--metrics-out FILE.jsonl]  (faults only: the
+//!                 fault-recovery sweep's deterministic `fault.*` log)
 //! twobp config   --list
 //! ```
 //!
@@ -141,7 +153,14 @@ fn cmd_train(args: &Args) -> Result<()> {
              on real artifacts)"
         ));
     }
-    let spec = twobp::models::synthetic::SyntheticSpec::tiny();
+    let spec = match &cfg.fault {
+        // `--fault R:<kind>@C`: the tiny preset with the stub `fault`
+        // directive baked into rank R's forward stage
+        Some(f) => twobp::models::synthetic::SyntheticSpec::tiny_faulty(
+            twobp::models::synthetic::StubFaultSpec::parse(f)?,
+        ),
+        None => twobp::models::synthetic::SyntheticSpec::tiny(),
+    };
     let report = twobp::models::synthetic::with_temp_artifacts(
         "synth",
         &spec,
@@ -697,6 +716,37 @@ fn cmd_tune_calibrated(args: &Args) -> Result<()> {
             );
         }
         println!("  loss (last rank): {:.3}ms", costs.loss * 1e3);
+        // Schedule-aware comm (docs/ROBUSTNESS.md §5): probe measured
+        // per-(schedule, m) send costs to replace the single naive-run
+        // mean — send cost depends on how the schedule interleaves
+        // compute with serialization.  The beam still prices
+        // planner-built candidates with one scalar, so it gets the
+        // probed-cell mean; unprobed shapes fall back to the floor.
+        let comm_cells: Vec<(ScheduleKind, usize)> = [
+            ScheduleKind::GPipe,
+            ScheduleKind::OneF1B1,
+            ScheduleKind::OneF1B2,
+        ]
+        .into_iter()
+        .map(|k| (k, manifest.n_stages))
+        .collect();
+        let comm_cal =
+            cluster.calibrate_comm(&base, costs.comm, &comm_cells)?;
+        let mut costs = costs;
+        for (kind, m, v) in comm_cal.cells() {
+            println!("  comm[{} m={m}]: {:8.3}ms", kind.name(), v * 1e3);
+        }
+        if !comm_cal.cells().is_empty() {
+            let mean = comm_cal.cells().iter().map(|(_, _, v)| *v)
+                .sum::<f64>() / comm_cal.cells().len() as f64;
+            println!(
+                "  comm floor {:.3}ms -> per-cell mean {:.3}ms \
+                 (planner scalar)",
+                costs.comm * 1e3,
+                mean * 1e3,
+            );
+            costs.comm = mean;
+        }
         if let Some(m) = obs.as_mut() {
             twobp::experiments::record_calibration(m, &costs, base.steps);
         }
@@ -806,7 +856,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .get(1)
         .ok_or_else(|| anyhow!("bench needs an experiment name"))?;
     let steps = args.get_usize("steps", 3);
-    let out = twobp::experiments::run_experiment(exp, steps)?;
+    if args.get("metrics-out").is_some()
+        && !matches!(exp.as_str(), "faults" | "fault")
+    {
+        return Err(anyhow!(
+            "--metrics-out on bench applies to the 'faults' experiment \
+             (search/drift run logs come from `twobp tune --metrics-out`)"
+        ));
+    }
+    let mut obs = args.get("metrics-out").map(|_| MetricsRegistry::new());
+    let out =
+        twobp::experiments::run_experiment_with(exp, steps, obs.as_mut())?;
     print!("{out}");
+    if let (Some(path), Some(m)) = (args.get("metrics-out"), obs.as_ref()) {
+        write_metrics(m, path)?;
+    }
     Ok(())
 }

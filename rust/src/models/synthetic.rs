@@ -68,6 +68,67 @@ pub struct SyntheticSpec {
     /// busy-delay switches to the drifted multiple of its base cost.
     /// `None` = no drift lines (every other preset).
     pub drift: Option<DriftSpec>,
+    /// Deterministic fault injection (the stub's `fault` directive):
+    /// lands on one rank's **fwd** executable, so the fault fires at a
+    /// predictable call index and the downstream rank observes its peer
+    /// going quiet.  `None` = no fault lines (every other preset).
+    pub fault: Option<StubFaultSpec>,
+}
+
+/// One injected stub fault: which rank, what kind, and when.
+///
+/// `kind` is the stub directive's kind token (`fail` or `stall-<ns>`),
+/// kept textual so one spec string flows from `--fault` through the
+/// manifest writer to the stub parser, which validates it on the
+/// manifest's load-back self check.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StubFaultSpec {
+    /// Pipeline rank (= stage) whose fwd executable carries the fault.
+    pub rank: usize,
+    /// Stub fault kind token: `fail` or `stall-<ns>`.
+    pub kind: String,
+    /// 0-based fwd-executable call index the fault fires from (with m
+    /// microbatches, call `m * s + k` is step s's microbatch k).
+    pub at_call: u64,
+}
+
+impl StubFaultSpec {
+    /// Parse the CLI form `<rank>:<kind>@<call>`, e.g. `1:fail@3` or
+    /// `2:stall-50000000@0` (`twobp train --synthetic --fault ...`).
+    pub fn parse(s: &str) -> Result<StubFaultSpec> {
+        let parsed = s.split_once(':').and_then(|(rank, rest)| {
+            let (kind, at) = rest.split_once('@')?;
+            Some(StubFaultSpec {
+                rank: rank.parse().ok()?,
+                kind: kind.to_string(),
+                at_call: at.parse().ok()?,
+            })
+        });
+        let spec = parsed.ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad fault spec '{s}': expected <rank>:<kind>@<call>, \
+                 e.g. 1:fail@3 or 2:stall-50000000@0"
+            )
+        })?;
+        if spec.kind != "fail"
+            && spec
+                .kind
+                .strip_prefix("stall-")
+                .and_then(|ns| ns.parse::<u64>().ok())
+                .is_none()
+        {
+            anyhow::bail!(
+                "bad fault kind '{}': want fail or stall-<ns>",
+                spec.kind
+            );
+        }
+        Ok(spec)
+    }
+
+    /// The stub directive value this spec writes (`<kind>@<call>`).
+    pub fn directive(&self) -> String {
+        format!("{}@{}", self.kind, self.at_call)
+    }
 }
 
 /// Cost drift applied to a synthetic manifest's compute executables —
@@ -111,6 +172,7 @@ impl Default for SyntheticSpec {
             stage_cost_scale: Vec::new(),
             cost_ns_per_flop: 0.0,
             drift: None,
+            fault: None,
         }
     }
 }
@@ -119,6 +181,17 @@ impl SyntheticSpec {
     /// The default tiny 4-stage pipeline used by CI and the tests.
     pub fn tiny() -> SyntheticSpec {
         SyntheticSpec::default()
+    }
+
+    /// The tiny pipeline with a fault injected on one rank's fwd
+    /// executable — the workload of the fault-supervision tests and
+    /// `twobp bench faults`.
+    pub fn tiny_faulty(fault: StubFaultSpec) -> SyntheticSpec {
+        SyntheticSpec {
+            preset: "synthetic-fault".to_string(),
+            fault: Some(fault),
+            ..SyntheticSpec::tiny()
+        }
     }
 
     /// A deliberately depth-imbalanced pipeline for measured-cost
@@ -260,6 +333,7 @@ fn write_stub(
     group: usize,
     cost_ns: u64,
     drift: Option<(u64, u64)>,
+    fault: Option<&StubFaultSpec>,
     outs: &[(DType, Vec<usize>)],
 ) -> Result<()> {
     let mut text = String::from("stub-hlo v1\n");
@@ -276,6 +350,9 @@ fn write_stub(
     }
     if let Some((calls, ns)) = drift {
         text.push_str(&format!("drift {calls}:{ns}\n"));
+    }
+    if let Some(f) = fault {
+        text.push_str(&format!("fault {}\n", f.directive()));
     }
     for (dt, shape) in outs {
         let dims = shape
@@ -305,6 +382,14 @@ pub fn write_artifacts(root: &Path, spec: &SyntheticSpec) -> Result<Manifest> {
             || spec.stage_cost_scale.len() == spec.n_stages,
         "stage_cost_scale must be empty or one multiplier per stage"
     );
+    if let Some(f) = &spec.fault {
+        anyhow::ensure!(
+            f.rank < spec.n_stages,
+            "fault rank {} out of range: the pipeline has {} stages",
+            f.rank,
+            spec.n_stages
+        );
+    }
     let dir = root.join(&spec.preset);
     std::fs::create_dir_all(&dir)
         .with_context(|| format!("creating {}", dir.display()))?;
@@ -372,36 +457,39 @@ pub fn write_artifacts(root: &Path, spec: &SyntheticSpec) -> Result<Manifest> {
         let p2c_fl = p2_fl * spec.concat_m as f64;
 
         // drift (if any) hits the compute roles via their per-role
-        // multipliers; init/opt stay steady
+        // multipliers; init/opt stay steady.  An injected fault lands
+        // on this stage's fwd executable only (see StubFaultSpec)
         let d = spec.drift.as_ref();
+        let fault = spec.fault.as_ref().filter(|f| f.rank == i);
         let m = |role: &str| format!("{}/s{i}_{role}", spec.preset);
         write_stub(&dir, &format!("s{i}_init.hlo.txt"), &m("init"),
-                   file_seed(spec.seed, i, 1), 0, 0, 0, None, &param_outs)?;
+                   file_seed(spec.seed, i, 1), 0, 0, 0, None, None,
+                   &param_outs)?;
         write_stub(&dir, &format!("s{i}_fwd.hlo.txt"), &m("fwd"),
                    file_seed(spec.seed, i, 2), 0, 0, spec.cost_ns(fwd_fl),
                    d.and_then(|d| spec.drift_ns(d.after_calls, fwd_fl,
                                                 d.fwd_mult)),
-                   &fwd_outs)?;
+                   fault, &fwd_outs)?;
         write_stub(&dir, &format!("s{i}_p1.hlo.txt"), &m("p1"),
                    file_seed(spec.seed, i, 3), 0, 0, spec.cost_ns(p1_fl),
                    d.and_then(|d| spec.drift_ns(d.after_calls, p1_fl,
                                                 d.p1_mult)),
-                   &p1_outs)?;
+                   None, &p1_outs)?;
         write_stub(&dir, &format!("s{i}_p2.hlo.txt"), &m("p2"),
                    file_seed(spec.seed, i, 4), grad_outs.len(), 0,
                    spec.cost_ns(p2_fl),
                    d.and_then(|d| spec.drift_ns(d.after_calls, p2_fl,
                                                 d.p2_mult)),
-                   &grad_outs)?;
+                   None, &grad_outs)?;
         write_stub(&dir, &format!("s{i}_p2c.hlo.txt"), &m("p2c"),
                    file_seed(spec.seed, i, 4), 0, group,
                    spec.cost_ns(p2c_fl),
                    d.and_then(|d| spec.drift_ns(d.after_calls_concat,
                                                 p2c_fl, d.p2_mult)),
-                   &grad_outs)?;
+                   None, &grad_outs)?;
         write_stub(&dir, &format!("s{i}_opt.hlo.txt"), &m("opt"),
                    file_seed(spec.seed, i, 5), 0, 0, spec.cost_ns(opt_fl),
-                   None, &opt_outs)?;
+                   None, None, &opt_outs)?;
 
         let art = |file: &str, flops: f64| -> String {
             format!("{{\"file\": \"{file}\", \"flops\": {flops:.1}}}")
@@ -451,6 +539,7 @@ pub fn write_artifacts(root: &Path, spec: &SyntheticSpec) -> Result<Manifest> {
         0,
         0,
         spec.cost_ns(7.0),
+        None,
         None,
         &[(DType::F32, Vec::new()), (DType::F32, logits.clone())],
     )?;
@@ -622,6 +711,50 @@ mod tests {
         assert!(!read(&plain.stages[1].bwd_p2.file).contains("drift "));
         let _ = std::fs::remove_dir_all(&root);
         let _ = std::fs::remove_dir_all(&root2);
+    }
+
+    #[test]
+    fn fault_spec_parses_and_rejects_garbage() {
+        let f = StubFaultSpec::parse("1:fail@3").unwrap();
+        assert_eq!(f, StubFaultSpec { rank: 1,
+                                      kind: "fail".to_string(),
+                                      at_call: 3 });
+        assert_eq!(f.directive(), "fail@3");
+        let s = StubFaultSpec::parse("2:stall-50000000@0").unwrap();
+        assert_eq!(s.kind, "stall-50000000");
+        assert_eq!(s.directive(), "stall-50000000@0");
+        for bad in ["", "fail@3", "1:fail", "x:fail@3", "1:fail@y",
+                    "1:explode@3", "1:stall-x@3"] {
+            assert!(StubFaultSpec::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    /// The faulty preset lands the directive on exactly the chosen
+    /// rank's fwd executable and still round-trips the manifest loader.
+    #[test]
+    fn faulty_manifest_carries_the_directive_on_one_fwd() {
+        let root = tmp("fault");
+        let spec = SyntheticSpec::tiny_faulty(
+            StubFaultSpec::parse("1:fail@3").unwrap(),
+        );
+        let m = write_artifacts(&root, &spec).expect("write");
+        let read = |p: &std::path::Path| std::fs::read_to_string(p).unwrap();
+        assert!(read(&m.stages[1].fwd.file).contains("fault fail@3"));
+        for (i, st) in m.stages.iter().enumerate() {
+            if i != 1 {
+                assert!(!read(&st.fwd.file).contains("fault "), "rank {i}");
+            }
+            for f in [&st.init.file, &st.bwd_p1.file, &st.bwd_p2.file,
+                      &st.bwd_p2_concat.file, &st.opt.file] {
+                assert!(!read(f).contains("fault "), "{}", f.display());
+            }
+        }
+        // a rank past the pipeline end is rejected, not silently ignored
+        let oob = SyntheticSpec::tiny_faulty(
+            StubFaultSpec::parse("9:fail@0").unwrap(),
+        );
+        assert!(write_artifacts(&root, &oob).is_err());
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     /// Every generated stub file parses, and its declared output arity

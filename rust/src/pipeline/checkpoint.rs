@@ -1,0 +1,441 @@
+//! Bit-exact per-rank checkpointing for the stub-backed executor.
+//!
+//! PipeDream's weight-stashing discipline (PAPERS.md) pins down exactly
+//! what per-rank state a correct pipeline checkpoint must capture: the
+//! parameters, both Adam slots, and the step counters that seed the
+//! optimizer schedule and the data stream.  Everything else in a
+//! [`StageWorker`](crate::pipeline::stage) is either empty at a step
+//! boundary (activation stash, pending-p2 queue, gradient accumulators)
+//! or a pure function of `(seed, step)` (the `DataGen` stream), so a
+//! checkpoint taken *between* steps plus the original `RunConfig`
+//! reconstructs the worker bit-for-bit.
+//!
+//! The on-disk format is deliberately dumb and deterministic: one
+//! little-endian binary file per rank (`rank{r}.ckpt`) under a
+//! `step-{NNNNNN}` directory, no compression, no timestamps, no
+//! platform-dependent encoding — two checkpoints of the same state are
+//! byte-identical, which is what lets the resume test assert
+//! `2N straight steps == N + restore + N` at the digest level.
+//!
+//! Layout of one rank file:
+//!
+//! ```text
+//! magic     8  b"2BPCKv1\n"
+//! rank      8  u64 le
+//! step      8  u64 le
+//! step_t    4  f32 le   (optimizer timestep; step+1 as f32)
+//! opt_fresh 1  u8       (1: Adam slots unallocated, sections empty)
+//! params / m_state / v_state sections, each:
+//!   count   8  u64 le
+//!   per tensor:
+//!     dtype 1  u8       (0 = f32, 1 = i32)
+//!     ndim  1  u8
+//!     dims  8*ndim u64 le
+//!     len   8  u64 le   (payload bytes; must equal prod(dims)*itemsize)
+//!     data  len         (raw little-endian element bytes)
+//! ```
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::models::DType;
+use crate::runtime::HostTensor;
+
+/// File magic; the trailing newline makes `head -c8` output readable.
+pub const MAGIC: &[u8; 8] = b"2BPCKv1\n";
+
+/// Everything a stage worker needs to resume at a step boundary.
+#[derive(Debug, Clone)]
+pub struct RankCheckpoint {
+    pub rank: usize,
+    /// Completed steps (the worker resumes *into* step `step`).
+    pub step: usize,
+    /// Adam timestep fed to the opt executable (`step + 1` as f32, but
+    /// stored rather than derived so the restore is a pure copy).
+    pub step_t: f32,
+    /// True while the Adam slots are still the shared zeros; `m_state`
+    /// and `v_state` are empty exactly when this is set.
+    pub opt_fresh: bool,
+    pub params: Vec<HostTensor>,
+    pub m_state: Vec<HostTensor>,
+    pub v_state: Vec<HostTensor>,
+}
+
+fn dtype_tag(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::I32 => 1,
+    }
+}
+
+fn tag_dtype(t: u8) -> Result<DType> {
+    match t {
+        0 => Ok(DType::F32),
+        1 => Ok(DType::I32),
+        other => bail!("bad dtype tag {other}"),
+    }
+}
+
+fn push_tensors(buf: &mut Vec<u8>, tensors: &[HostTensor]) {
+    buf.extend_from_slice(&(tensors.len() as u64).to_le_bytes());
+    for t in tensors {
+        buf.push(dtype_tag(t.dtype));
+        buf.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&t.data);
+    }
+}
+
+/// Cursor-style reader over the encoded byte stream.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|e| *e <= self.buf.len())
+            .ok_or_else(|| anyhow!("truncated checkpoint (need {n} more bytes at offset {})", self.at))?;
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn tensors(&mut self) -> Result<Vec<HostTensor>> {
+        let count = self.u64()? as usize;
+        // count is bounded by the remaining bytes (each tensor costs at
+        // least 10 bytes of header) — reject garbage before allocating
+        if count > self.buf.len() - self.at {
+            bail!("tensor count {count} exceeds remaining bytes");
+        }
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let dtype = tag_dtype(self.u8()?)?;
+            let ndim = self.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(self.u64()? as usize);
+            }
+            let len = self.u64()? as usize;
+            let expect =
+                shape.iter().product::<usize>() * dtype.itemsize();
+            if len != expect {
+                bail!(
+                    "tensor payload {len} bytes != shape {shape:?} \
+                     x {dtype:?} ({expect} bytes)"
+                );
+            }
+            let data = self.take(len)?.to_vec();
+            out.push(HostTensor { shape, dtype, data });
+        }
+        Ok(out)
+    }
+}
+
+impl RankCheckpoint {
+    /// Deterministic binary encoding (see the module docs for layout).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(self.rank as u64).to_le_bytes());
+        buf.extend_from_slice(&(self.step as u64).to_le_bytes());
+        buf.extend_from_slice(&self.step_t.to_le_bytes());
+        buf.push(self.opt_fresh as u8);
+        push_tensors(&mut buf, &self.params);
+        push_tensors(&mut buf, &self.m_state);
+        push_tensors(&mut buf, &self.v_state);
+        buf
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<RankCheckpoint> {
+        let mut c = Cursor { buf: bytes, at: 0 };
+        let magic = c.take(MAGIC.len())?;
+        if magic != MAGIC {
+            bail!(
+                "bad checkpoint magic {:?} (want {:?})",
+                String::from_utf8_lossy(magic),
+                String::from_utf8_lossy(MAGIC)
+            );
+        }
+        let rank = c.u64()? as usize;
+        let step = c.u64()? as usize;
+        let step_t = c.f32()?;
+        let opt_fresh = match c.u8()? {
+            0 => false,
+            1 => true,
+            other => bail!("bad opt_fresh byte {other}"),
+        };
+        let params = c.tensors()?;
+        let m_state = c.tensors()?;
+        let v_state = c.tensors()?;
+        if c.at != bytes.len() {
+            bail!("{} trailing bytes after checkpoint", bytes.len() - c.at);
+        }
+        if opt_fresh && (!m_state.is_empty() || !v_state.is_empty()) {
+            bail!("opt_fresh checkpoint carries Adam slots");
+        }
+        if !opt_fresh
+            && (m_state.len() != params.len()
+                || v_state.len() != params.len())
+        {
+            bail!(
+                "Adam slot arity (m={}, v={}) != params ({})",
+                m_state.len(),
+                v_state.len(),
+                params.len()
+            );
+        }
+        Ok(RankCheckpoint {
+            rank,
+            step,
+            step_t,
+            opt_fresh,
+            params,
+            m_state,
+            v_state,
+        })
+    }
+}
+
+/// `rank{r}.ckpt` inside a step directory.
+pub fn rank_file(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("rank{rank}.ckpt"))
+}
+
+/// `step-{NNNNNN}` under the checkpoint base directory.
+pub fn step_dir(base: &Path, step: usize) -> PathBuf {
+    base.join(format!("step-{step:06}"))
+}
+
+/// Write one file per rank into `dir` (created if missing).  Each file
+/// is written to a `.tmp` sibling and renamed into place, so a crash
+/// mid-save never leaves a truncated `rank{r}.ckpt` that a later
+/// resume would trip over.
+pub fn save(dir: &Path, ckpts: &[RankCheckpoint]) -> Result<()> {
+    fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    for c in ckpts {
+        let path = rank_file(dir, c.rank);
+        let tmp = path.with_extension("ckpt.tmp");
+        fs::write(&tmp, c.encode())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming to {}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// Load all `n_ranks` rank files from `dir` and cross-validate: every
+/// rank present, each file's recorded rank matching its name, and all
+/// ranks agreeing on the step (a torn save must not half-resume).
+pub fn load(dir: &Path, n_ranks: usize) -> Result<Vec<RankCheckpoint>> {
+    let mut out = Vec::with_capacity(n_ranks);
+    for rank in 0..n_ranks {
+        let path = rank_file(dir, rank);
+        let bytes = fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let c = RankCheckpoint::decode(&bytes)
+            .with_context(|| format!("decoding {}", path.display()))?;
+        if c.rank != rank {
+            bail!(
+                "{} says rank {} (file name says {rank})",
+                path.display(),
+                c.rank
+            );
+        }
+        out.push(c);
+    }
+    if let Some(first) = out.first() {
+        for c in &out[1..] {
+            if c.step != first.step {
+                bail!(
+                    "checkpoint step mismatch: rank 0 at step {}, \
+                     rank {} at step {} — torn save?",
+                    first.step,
+                    c.rank,
+                    c.step
+                );
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Resolve a `--resume` directory: if it directly holds `rank0.ckpt`
+/// it IS a step dir; otherwise pick the highest `step-*` child written
+/// by `--checkpoint-every`, so `--resume` can point at the same path
+/// that `--checkpoint-dir` wrote to.
+pub fn resolve_resume_dir(dir: &Path) -> Result<PathBuf> {
+    if rank_file(dir, 0).is_file() {
+        return Ok(dir.to_path_buf());
+    }
+    let mut best: Option<(usize, PathBuf)> = None;
+    let entries = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(step) = name
+            .strip_prefix("step-")
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            if best.as_ref().map(|(b, _)| step > *b).unwrap_or(true) {
+                best = Some((step, entry.path()));
+            }
+        }
+    }
+    best.map(|(_, p)| p).ok_or_else(|| {
+        anyhow!(
+            "{}: no rank0.ckpt and no step-* subdirectories",
+            dir.display()
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(vals: &[f32]) -> HostTensor {
+        HostTensor::from_f32(&[vals.len()], vals)
+    }
+
+    fn sample(rank: usize, step: usize) -> RankCheckpoint {
+        RankCheckpoint {
+            rank,
+            step,
+            step_t: (step + 1) as f32,
+            opt_fresh: false,
+            params: vec![tensor(&[1.0, -2.0, 3.5]), tensor(&[0.25])],
+            m_state: vec![tensor(&[0.1, 0.2, 0.3]), tensor(&[0.4])],
+            v_state: vec![tensor(&[0.0, 1.0, 2.0]), tensor(&[3.0])],
+        }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("twobp-ckpt-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn encode_decode_round_trips_bit_exactly() {
+        let c = sample(1, 7);
+        let bytes = c.encode();
+        let d = RankCheckpoint::decode(&bytes).unwrap();
+        // HostTensor has no PartialEq; the deterministic encoding IS
+        // the equality probe
+        assert_eq!(d.encode(), bytes);
+        assert_eq!(d.rank, 1);
+        assert_eq!(d.step, 7);
+        assert_eq!(d.step_t, 8.0);
+        assert!(!d.opt_fresh);
+        assert_eq!(d.params[0].to_f32(), vec![1.0, -2.0, 3.5]);
+    }
+
+    #[test]
+    fn opt_fresh_checkpoint_has_empty_slots() {
+        let c = RankCheckpoint {
+            opt_fresh: true,
+            m_state: Vec::new(),
+            v_state: Vec::new(),
+            ..sample(0, 0)
+        };
+        let d = RankCheckpoint::decode(&c.encode()).unwrap();
+        assert!(d.opt_fresh);
+        assert!(d.m_state.is_empty() && d.v_state.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_magic_truncation_and_trailing_garbage() {
+        let good = sample(0, 1).encode();
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(RankCheckpoint::decode(&bad)
+            .unwrap_err()
+            .to_string()
+            .contains("magic"));
+
+        assert!(RankCheckpoint::decode(&good[..good.len() - 1]).is_err());
+
+        let mut long = good.clone();
+        long.push(0);
+        assert!(RankCheckpoint::decode(&long)
+            .unwrap_err()
+            .to_string()
+            .contains("trailing"));
+    }
+
+    #[test]
+    fn rejects_payload_shape_mismatch() {
+        let mut c = sample(0, 1);
+        // lie about the shape: 3 elements claimed, 4 stored
+        c.params[0].shape = vec![4];
+        assert!(RankCheckpoint::decode(&c.encode()).is_err());
+    }
+
+    #[test]
+    fn save_load_round_trip_and_step_mismatch_detection() {
+        let dir = temp_dir("roundtrip");
+        let ckpts = vec![sample(0, 5), sample(1, 5)];
+        save(&dir, &ckpts).unwrap();
+        let loaded = load(&dir, 2).unwrap();
+        assert_eq!(loaded.len(), 2);
+        for (a, b) in ckpts.iter().zip(&loaded) {
+            assert_eq!(a.encode(), b.encode());
+        }
+        // missing rank file is an error, not a short vec
+        assert!(load(&dir, 3).is_err());
+        // torn save: rank 1 one step behind
+        save(&dir, &[sample(1, 4)]).unwrap();
+        let err = load(&dir, 2).unwrap_err().to_string();
+        assert!(err.contains("mismatch"), "{err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resolve_resume_prefers_latest_step_dir() {
+        let base = temp_dir("resolve");
+        save(&step_dir(&base, 3), &[sample(0, 3)]).unwrap();
+        save(&step_dir(&base, 12), &[sample(0, 12)]).unwrap();
+        let picked = resolve_resume_dir(&base).unwrap();
+        assert_eq!(picked, step_dir(&base, 12));
+        // pointing straight at a step dir also works
+        assert_eq!(resolve_resume_dir(&picked).unwrap(), picked);
+        // an empty dir is a clear error
+        let empty = base.join("empty");
+        fs::create_dir_all(&empty).unwrap();
+        assert!(resolve_resume_dir(&empty).is_err());
+        fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn deterministic_encoding_is_stable_across_calls() {
+        let c = sample(2, 9);
+        assert_eq!(c.encode(), c.encode());
+        assert_eq!(c.encode(), c.clone().encode());
+    }
+}

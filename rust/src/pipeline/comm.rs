@@ -6,13 +6,30 @@
 //! non-blockingly — the primitive the 2BP greedy-p2 fill rule is built
 //! on ("if the next activation/gradient hasn't arrived, do deferred
 //! weight-gradient work instead of idling").
+//!
+//! Fault-tolerance hooks (see `pipeline/fault.rs`):
+//!
+//! - [`TaggedRx::recv_timeout`] is the deadline-based receive the
+//!   supervised executor uses instead of the infinite [`TaggedRx::recv`]
+//!   — a stalled peer becomes a [`RecvOutcome::TimedOut`] the worker
+//!   can escalate to a `CommTimeout`, never a hang;
+//! - [`pipeline_links_with`] arms every link's sender with a seeded
+//!   [`CommFaultCfg`] injector: drops and delays are a pure function of
+//!   (seed, link id, send index), so a failing scenario replays
+//!   identically on every run.
 
+use std::cell::Cell;
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{
+    channel, Receiver, RecvTimeoutError, Sender, TryRecvError,
+};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::pipeline::fault::CommFaultCfg;
 use crate::runtime::HostTensor;
+use crate::util::prng::SplitMix64;
 
 /// A tagged tensor message (one activation or gradient for one mb).
 pub struct Msg {
@@ -20,16 +37,65 @@ pub struct Msg {
     pub tensor: HostTensor,
 }
 
+/// Seeded per-link fault state: which send indices drop is decided by
+/// a PRNG keyed on (config seed, link id, send index) — no global
+/// state, no wall clock, bit-identical across runs.
+struct LinkFault {
+    cfg: CommFaultCfg,
+    link_id: u64,
+    sends: Cell<u64>,
+}
+
+impl LinkFault {
+    /// Advance the send counter and decide this send's fate.
+    fn drops_this_send(&self) -> bool {
+        let ix = self.sends.get();
+        self.sends.set(ix + 1);
+        if self.cfg.drop_prob <= 0.0 {
+            return false;
+        }
+        let mut rng = SplitMix64::new(
+            self.cfg.seed
+                ^ self.link_id.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ ix.wrapping_mul(0xff51_afd7_ed55_8ccd),
+        );
+        rng.next_f64() < self.cfg.drop_prob
+    }
+}
+
 pub struct TaggedTx {
     tx: Sender<Msg>,
+    /// Present only on links armed by [`pipeline_links_with`] with an
+    /// active [`CommFaultCfg`]; healthy links pay nothing.
+    fault: Option<LinkFault>,
 }
 
 impl TaggedTx {
     pub fn send(&self, mb: u32, tensor: HostTensor) -> Result<()> {
+        if let Some(f) = &self.fault {
+            if f.drops_this_send() {
+                // a dropped message is *silent*: the receiver's
+                // deadline — not this sender — detects it
+                return Ok(());
+            }
+            if f.cfg.delay_ns > 0 {
+                std::thread::sleep(Duration::from_nanos(f.cfg.delay_ns));
+            }
+        }
         self.tx
             .send(Msg { mb, tensor })
             .map_err(|_| anyhow!("peer rank hung up"))
     }
+}
+
+/// What a deadline-based receive resolved to.
+#[derive(Debug)]
+pub enum RecvOutcome {
+    Got(HostTensor),
+    /// Nothing tagged `mb` arrived before the deadline.
+    TimedOut,
+    /// The sender is gone and the channel is drained of other tags.
+    Disconnected,
 }
 
 pub struct TaggedRx {
@@ -59,7 +125,9 @@ impl TaggedRx {
         }
     }
 
-    /// Blocking receive of the message tagged `mb`.
+    /// Blocking receive of the message tagged `mb`.  Unsupervised — can
+    /// wait forever on a stalled peer; the executor's workers use
+    /// [`Self::recv_timeout`] instead.
     pub fn recv(&mut self, mb: u32) -> Result<HostTensor> {
         if let Some(t) = self.parked.remove(&mb) {
             return Ok(t);
@@ -76,16 +144,54 @@ impl TaggedRx {
         }
     }
 
+    /// Deadline-based receive of the message tagged `mb`: park
+    /// mismatched tags as they arrive, give up at `timeout`.  Parked
+    /// messages are never lost on the timeout path — a later call (or
+    /// `poll`/`take_parked`) still sees them.
+    pub fn recv_timeout(&mut self, mb: u32, timeout: Duration) -> RecvOutcome {
+        if let Some(t) = self.parked.remove(&mb) {
+            return RecvOutcome::Got(t);
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return RecvOutcome::TimedOut;
+            }
+            match self.rx.recv_timeout(remaining) {
+                Ok(m) => {
+                    if m.mb == mb {
+                        return RecvOutcome::Got(m.tensor);
+                    }
+                    self.parked.insert(m.mb, m.tensor);
+                }
+                Err(RecvTimeoutError::Timeout) => return RecvOutcome::TimedOut,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return RecvOutcome::Disconnected;
+                }
+            }
+        }
+    }
+
     /// Take an already-parked message without touching the channel.
     pub fn take_parked(&mut self, mb: u32) -> Option<HostTensor> {
         self.parked.remove(&mb)
     }
 }
 
-/// Create a tagged p2p link.
-pub fn link() -> (TaggedTx, TaggedRx) {
+fn link_with(fault: Option<&CommFaultCfg>, link_id: u64) -> (TaggedTx, TaggedRx) {
     let (tx, rx) = channel();
-    (TaggedTx { tx }, TaggedRx { rx, parked: HashMap::new() })
+    let fault = fault.filter(|c| c.active()).map(|cfg| LinkFault {
+        cfg: *cfg,
+        link_id,
+        sends: Cell::new(0),
+    });
+    (TaggedTx { tx, fault }, TaggedRx { rx, parked: HashMap::new() })
+}
+
+/// Create a healthy tagged p2p link.
+pub fn link() -> (TaggedTx, TaggedRx) {
+    link_with(None, 0)
 }
 
 /// The channel endpoints owned by one rank.
@@ -101,14 +207,26 @@ pub struct RankLinks {
     pub grad_out: Option<TaggedTx>,
 }
 
-/// Wire up a linear pipeline of `n` ranks.
+/// Wire up a linear pipeline of `n` healthy ranks.
 pub fn pipeline_links(n: usize) -> Vec<RankLinks> {
-    let mut links: Vec<RankLinks> = (0..n).map(|_| RankLinks::default()).collect();
+    pipeline_links_with(n, None)
+}
+
+/// Wire up a linear pipeline of `n` ranks, arming every link with the
+/// given fault injector (activation link `r -> r+1` gets id `2r`, the
+/// paired gradient link id `2r + 1`, so each link draws an independent
+/// deterministic drop/delay stream from the shared seed).
+pub fn pipeline_links_with(
+    n: usize,
+    fault: Option<&CommFaultCfg>,
+) -> Vec<RankLinks> {
+    let mut links: Vec<RankLinks> =
+        (0..n).map(|_| RankLinks::default()).collect();
     for r in 0..n.saturating_sub(1) {
-        let (atx, arx) = link();
+        let (atx, arx) = link_with(fault, (r as u64) * 2);
         links[r].act_out = Some(atx);
         links[r + 1].act_in = Some(arx);
-        let (gtx, grx) = link();
+        let (gtx, grx) = link_with(fault, (r as u64) * 2 + 1);
         links[r + 1].grad_out = Some(gtx);
         links[r].grad_in = Some(grx);
     }
@@ -119,6 +237,7 @@ pub fn pipeline_links(n: usize) -> Vec<RankLinks> {
 mod tests {
     use super::*;
     use crate::models::DType;
+    use crate::util::proptest::{check, gen};
 
     fn t(v: f32) -> HostTensor {
         HostTensor::from_f32(&[1], &[v])
@@ -170,5 +289,164 @@ mod tests {
             assert_eq!(rx.recv(mb).unwrap().to_f32(), vec![mb as f32]);
         }
         h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_timeout_happy_timeout_and_disconnect() {
+        let (tx, mut rx) = link();
+        tx.send(1, t(1.0)).unwrap();
+        // parked-on-arrival path: ask for 1 directly
+        match rx.recv_timeout(1, Duration::from_millis(100)) {
+            RecvOutcome::Got(h) => assert_eq!(h.to_f32(), vec![1.0]),
+            other => panic!("expected Got, saw {other:?}"),
+        }
+        // nothing tagged 0 in flight: fires TimedOut within the deadline
+        let t0 = Instant::now();
+        assert!(matches!(
+            rx.recv_timeout(0, Duration::from_millis(20)),
+            RecvOutcome::TimedOut
+        ));
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        // sender gone + channel drained: Disconnected, not a hang
+        drop(tx);
+        assert!(matches!(
+            rx.recv_timeout(0, Duration::from_millis(20)),
+            RecvOutcome::Disconnected
+        ));
+    }
+
+    #[test]
+    fn recv_timeout_parks_mismatches_without_losing_them() {
+        let (tx, mut rx) = link();
+        tx.send(7, t(7.0)).unwrap();
+        assert!(matches!(
+            rx.recv_timeout(0, Duration::from_millis(10)),
+            RecvOutcome::TimedOut
+        ));
+        // the mismatched tag survived the timeout
+        assert_eq!(rx.take_parked(7).unwrap().to_f32(), vec![7.0]);
+        drop(tx);
+    }
+
+    #[test]
+    fn drops_are_deterministic_per_seed_and_silent() {
+        let cfg = CommFaultCfg { seed: 42, drop_prob: 0.5, delay_ns: 0 };
+        let pattern = |cfg: &CommFaultCfg| -> Vec<bool> {
+            let (tx, mut rx) = link_with(Some(cfg), 3);
+            let mut got = Vec::new();
+            for mb in 0..32u32 {
+                tx.send(mb, t(mb as f32)).unwrap();
+                got.push(rx.poll(mb));
+            }
+            got
+        };
+        let a = pattern(&cfg);
+        let b = pattern(&cfg);
+        assert_eq!(a, b, "same seed must reproduce the same drops");
+        assert!(a.iter().any(|x| *x), "p=0.5 should deliver some");
+        assert!(a.iter().any(|x| !*x), "p=0.5 should drop some");
+        // a different seed draws a different pattern (32 sends at
+        // p=0.5 colliding by chance is a 2^-32 event)
+        let c = pattern(&CommFaultCfg { seed: 43, ..cfg });
+        assert_ne!(a, c);
+        // drop_prob 1.0 starves the receiver into TimedOut
+        let (tx, mut rx) =
+            link_with(Some(&CommFaultCfg { seed: 1, drop_prob: 1.0, delay_ns: 0 }), 0);
+        tx.send(0, t(0.0)).unwrap();
+        assert!(matches!(
+            rx.recv_timeout(0, Duration::from_millis(10)),
+            RecvOutcome::TimedOut
+        ));
+    }
+
+    #[test]
+    fn inactive_fault_cfg_arms_nothing() {
+        let quiet = CommFaultCfg { seed: 9, drop_prob: 0.0, delay_ns: 0 };
+        let links = pipeline_links_with(2, Some(&quiet));
+        assert!(links[0].act_out.as_ref().unwrap().fault.is_none());
+        // and an active one does arm the sender
+        let noisy = CommFaultCfg { seed: 9, drop_prob: 0.1, delay_ns: 0 };
+        let links = pipeline_links_with(2, Some(&noisy));
+        assert!(links[0].act_out.as_ref().unwrap().fault.is_some());
+    }
+
+    /// Satellite: parked messages are never lost under arbitrary
+    /// arrival orders — send a random permutation, receive in order.
+    #[test]
+    fn prop_out_of_order_delivery_loses_nothing() {
+        check(
+            "comm-permutation",
+            64,
+            |r| {
+                let n = gen::usize_in(r, 1, 12);
+                let mut perm: Vec<u32> = (0..n as u32).collect();
+                // Fisher–Yates off the harness PRNG
+                for i in (1..n).rev() {
+                    let j = gen::usize_in(r, 0, i);
+                    perm.swap(i, j);
+                }
+                perm
+            },
+            |perm| {
+                let (tx, mut rx) = link();
+                for &mb in perm {
+                    tx.send(mb, t(mb as f32)).unwrap();
+                }
+                for mb in 0..perm.len() as u32 {
+                    let got = rx
+                        .recv_timeout(mb, Duration::from_secs(5));
+                    match got {
+                        RecvOutcome::Got(h) if h.to_f32() == vec![mb as f32] => {}
+                        other => {
+                            return Err(format!(
+                                "mb {mb} of {perm:?}: {other:?}"
+                            ))
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Satellite: after the peer disconnects, `poll` still drains the
+    /// already-parked tags and the missing tag resolves to
+    /// Disconnected — never a hang, never a lost message.
+    #[test]
+    fn prop_disconnect_still_drains_parked() {
+        check(
+            "comm-disconnect",
+            64,
+            |r| {
+                let sent = gen::usize_in(r, 1, 8) as u32;
+                let ask_missing = gen::bool(r);
+                (sent, ask_missing)
+            },
+            |&(sent, ask_missing)| {
+                let (tx, mut rx) = link();
+                for mb in 0..sent {
+                    tx.send(mb, t(mb as f32)).unwrap();
+                }
+                drop(tx);
+                if ask_missing {
+                    // tag `sent` never went out: the parked tags get
+                    // buffered on the way to Disconnected...
+                    match rx.recv_timeout(sent, Duration::from_secs(5)) {
+                        RecvOutcome::Disconnected => {}
+                        other => return Err(format!("{other:?}")),
+                    }
+                }
+                // ...and every sent tag is still retrievable
+                for mb in 0..sent {
+                    if !rx.poll(mb) {
+                        return Err(format!("mb {mb} lost after hangup"));
+                    }
+                    if rx.take_parked(mb).is_none() {
+                        return Err(format!("mb {mb} parked but gone"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

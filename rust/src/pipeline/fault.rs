@@ -1,0 +1,237 @@
+//! Fail-fast supervision primitives: the shared fault cell, the typed
+//! run error, and the seeded comm-layer fault injector.
+//!
+//! A production pipeline fails in two ways the happy path never sees: a
+//! rank *dies* (an executable errors, the process aborts) or a rank
+//! *stalls* (the neighbor is alive but the tensor never arrives).
+//! Before this module, the first was a `panic!` swallowed by
+//! `let _ = h.join()` and the second was an infinite `mpsc::recv` —
+//! either way the cluster hung or lied.  Now:
+//!
+//! - every worker shares one [`FaultCell`]; the **first** failure wins
+//!   and every other rank observes it within one receive-backoff tick
+//!   and unwinds cleanly;
+//! - `Cluster::run_plan` surfaces the cell's contents as a typed
+//!   [`RunError`] (`RankFailed` / `CommTimeout`, each naming the rank,
+//!   step, and cause) that callers can downcast out of `anyhow`;
+//! - [`CommFaultCfg`] injects seeded, reproducible message drops and
+//!   delays into the p2p links, so the timeout path is testable offline
+//!   without a flaky network (the stub's `fault` directive covers the
+//!   compute-failure path the same way).
+//!
+//! Everything here is plain bookkeeping over `std::sync` — no executor
+//! types — so the supervision logic stays unit-testable without a
+//! cluster, like `pipeline/drift.rs`.
+
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// How a rank failed (drives the [`RunError`] variant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// An op on the rank returned an error (dead executable, poisoned
+    /// state, injected `fault fail@N`).
+    RankFailed,
+    /// The rank gave up waiting for a peer's tensor (deadline-based
+    /// receive timeout; the peer is stalled, not gone).
+    CommTimeout,
+}
+
+/// The first failure observed anywhere in the cluster.
+#[derive(Debug, Clone)]
+pub struct Failure {
+    pub kind: FailureKind,
+    /// The rank that *reported* the failure (for `CommTimeout` this is
+    /// the waiting rank; the stalled peer is named in `cause`).
+    pub rank: usize,
+    /// The training step the rank was executing when it failed.
+    pub step: usize,
+    pub cause: String,
+}
+
+/// Shared first-failure-wins latch: one per cluster, cloned into every
+/// worker.  Tripping it is how a dying rank tells everyone else to stop
+/// waiting and unwind.
+#[derive(Debug, Clone, Default)]
+pub struct FaultCell {
+    slot: Arc<Mutex<Option<Failure>>>,
+}
+
+impl FaultCell {
+    pub fn new() -> FaultCell {
+        FaultCell::default()
+    }
+
+    /// Record a failure; the first call wins.  Returns whether this
+    /// call set the cell (false: an earlier failure was already in).
+    pub fn trip(&self, failure: Failure) -> bool {
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            *slot = Some(failure);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The recorded failure, if any rank has tripped the cell.
+    pub fn get(&self) -> Option<Failure> {
+        self.slot
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    pub fn is_tripped(&self) -> bool {
+        self.slot
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .is_some()
+    }
+}
+
+/// Typed outcome of a failed `Cluster::run_plan`, carried inside the
+/// returned `anyhow::Error` — downcast with
+/// `err.downcast_ref::<RunError>()` to branch on the variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RunError {
+    /// A stage worker's op errored at (rank, step).
+    RankFailed {
+        rank: usize,
+        step: usize,
+        cause: String,
+    },
+    /// A rank timed out waiting for a peer tensor at (rank, step).
+    CommTimeout {
+        rank: usize,
+        step: usize,
+        cause: String,
+    },
+}
+
+impl From<Failure> for RunError {
+    fn from(f: Failure) -> RunError {
+        match f.kind {
+            FailureKind::RankFailed => RunError::RankFailed {
+                rank: f.rank,
+                step: f.step,
+                cause: f.cause,
+            },
+            FailureKind::CommTimeout => RunError::CommTimeout {
+                rank: f.rank,
+                step: f.step,
+                cause: f.cause,
+            },
+        }
+    }
+}
+
+impl fmt::Display for RunError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RunError::RankFailed { rank, step, cause } => write!(
+                f,
+                "rank {rank} failed at step {step}: {cause}"
+            ),
+            RunError::CommTimeout { rank, step, cause } => write!(
+                f,
+                "rank {rank} timed out at step {step}: {cause}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RunError {}
+
+impl RunError {
+    /// The failing (or waiting) rank.
+    pub fn rank(&self) -> usize {
+        match self {
+            RunError::RankFailed { rank, .. }
+            | RunError::CommTimeout { rank, .. } => *rank,
+        }
+    }
+
+    /// The step the failure was observed at.
+    pub fn step(&self) -> usize {
+        match self {
+            RunError::RankFailed { step, .. }
+            | RunError::CommTimeout { step, .. } => *step,
+        }
+    }
+}
+
+/// Seeded comm-layer fault injection: every p2p send consults a PRNG
+/// that is a pure function of (seed, link id, send index), so a given
+/// config reproduces the exact same drops and delays on every run —
+/// deterministic chaos, per the stub backend's design rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommFaultCfg {
+    pub seed: u64,
+    /// Probability in [0, 1] that a send is silently dropped (the
+    /// receiver then hits its deadline and trips `CommTimeout`).
+    pub drop_prob: f64,
+    /// Fixed extra latency added to every (non-dropped) send.
+    pub delay_ns: u64,
+}
+
+impl CommFaultCfg {
+    /// None when the config injects nothing (the common case).
+    pub fn active(&self) -> bool {
+        self.drop_prob > 0.0 || self.delay_ns > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn failure(kind: FailureKind, rank: usize) -> Failure {
+        Failure {
+            kind,
+            rank,
+            step: 3,
+            cause: "boom".into(),
+        }
+    }
+
+    #[test]
+    fn first_failure_wins() {
+        let cell = FaultCell::new();
+        assert!(!cell.is_tripped());
+        assert!(cell.trip(failure(FailureKind::RankFailed, 1)));
+        assert!(!cell.trip(failure(FailureKind::CommTimeout, 2)));
+        let f = cell.get().unwrap();
+        assert_eq!(f.rank, 1);
+        assert_eq!(f.kind, FailureKind::RankFailed);
+    }
+
+    #[test]
+    fn clones_share_the_slot() {
+        let cell = FaultCell::new();
+        let peer = cell.clone();
+        cell.trip(failure(FailureKind::CommTimeout, 0));
+        assert!(peer.is_tripped());
+        assert_eq!(peer.get().unwrap().rank, 0);
+    }
+
+    #[test]
+    fn run_error_names_rank_and_step() {
+        let e = RunError::from(failure(FailureKind::RankFailed, 2));
+        assert_eq!(e.rank(), 2);
+        assert_eq!(e.step(), 3);
+        let msg = e.to_string();
+        assert!(msg.contains("rank 2"), "{msg}");
+        assert!(msg.contains("step 3"), "{msg}");
+        let t = RunError::from(failure(FailureKind::CommTimeout, 1));
+        assert!(t.to_string().contains("timed out"), "{t}");
+    }
+
+    #[test]
+    fn comm_fault_cfg_activity() {
+        let quiet = CommFaultCfg { seed: 1, drop_prob: 0.0, delay_ns: 0 };
+        assert!(!quiet.active());
+        assert!(CommFaultCfg { drop_prob: 0.5, ..quiet }.active());
+        assert!(CommFaultCfg { delay_ns: 10, ..quiet }.active());
+    }
+}

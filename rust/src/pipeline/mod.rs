@@ -7,13 +7,25 @@
 //! interprets [`Plan`](crate::schedule::Plan) ops, realizes the 2BP
 //! greedy-fill rule with non-blocking channel polls, accounts every
 //! stash byte (Fig 4/5), and times every op (calibrating the simulator).
+//!
+//! Failure is a first-class outcome, not a hang: workers share a
+//! [`FaultCell`], receives carry deadlines, `Cluster::run_plan` returns
+//! a typed [`RunError`] naming the failing rank and step, and
+//! [`checkpoint`] serializes per-rank state for bit-identical resume
+//! (`--checkpoint-every` / `--resume`; see docs/ROBUSTNESS.md §6).
 
+pub mod checkpoint;
 pub mod comm;
 pub mod data;
 pub mod drift;
+pub mod fault;
 pub mod memory;
 pub mod stage;
 pub mod training;
 
+pub use checkpoint::RankCheckpoint;
 pub use drift::{DriftConfig, DriftMonitor, Verdict};
-pub use training::{train, verify_report_against_sim, Cluster, RunReport};
+pub use fault::{CommFaultCfg, Failure, FailureKind, FaultCell, RunError};
+pub use training::{
+    train, verify_report_against_sim, Cluster, CommCalibration, RunReport,
+};

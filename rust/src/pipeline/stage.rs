@@ -5,14 +5,16 @@
 //! every byte + times every op.
 
 use std::collections::HashMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::P2Mode;
 use crate::models::{Manifest, StageInfo};
-use crate::pipeline::comm::RankLinks;
+use crate::pipeline::checkpoint::RankCheckpoint;
+use crate::pipeline::comm::{RankLinks, RecvOutcome};
 use crate::pipeline::data::DataGen;
+use crate::pipeline::fault::{Failure, FailureKind, FaultCell};
 use crate::pipeline::memory::{Class, MemAccountant};
 use crate::runtime::{
     literal_bytes, literal_to_f32_scalar, scalar_f32, scalar_i32, Device,
@@ -132,6 +134,17 @@ pub struct StageWorker {
     labels_spec: crate::models::TensorSpec,
     step: usize,
 
+    /// Shared first-failure latch (see `pipeline/fault.rs`): tripped by
+    /// this worker on a receive deadline, observed every backoff tick
+    /// so a peer's failure unwinds this rank too.
+    fault: FaultCell,
+    /// How long a receive may sit *idle* (no fill work, nothing
+    /// arriving) before this rank declares the peer stalled.
+    comm_timeout: Duration,
+    /// Poll granularity while waiting: each tick re-checks the fault
+    /// cell, so failure propagation latency is one backoff.
+    comm_backoff: Duration,
+
     pub mem: MemAccountant,
     pub timings: Vec<OpTiming>,
     pub losses: Vec<f32>,
@@ -224,6 +237,9 @@ impl StageWorker {
             data: DataGen::with_cycle(seed, data_cycle),
             labels_spec: manifest.labels.clone(),
             step: 0,
+            fault: FaultCell::new(),
+            comm_timeout: Duration::from_secs(5),
+            comm_backoff: Duration::from_millis(10),
             mem: MemAccountant::new(),
             timings: Vec::new(),
             losses: Vec::new(),
@@ -278,6 +294,87 @@ impl StageWorker {
         Ok(())
     }
 
+    /// Capture the rank's resumable state at a step boundary.  Only
+    /// valid between steps — `run_step` guarantees the stash and
+    /// pending-p2 queue are empty and the grad accumulators fresh
+    /// there, so params + Adam slots + counters are the whole state
+    /// (the data stream is a pure function of `(seed, step, mb)`).
+    pub fn snapshot(&self) -> Result<RankCheckpoint> {
+        if !self.stash.is_empty() || !self.pending_p2.is_empty() {
+            bail!(
+                "rank {}: snapshot mid-step (stash {}, pending p2 {})",
+                self.rank,
+                self.stash.len(),
+                self.pending_p2.len()
+            );
+        }
+        let to_host = |ls: &[xla::Literal]| -> Result<Vec<HostTensor>> {
+            ls.iter().map(HostTensor::from_literal).collect()
+        };
+        Ok(RankCheckpoint {
+            rank: self.rank,
+            step: self.step,
+            step_t: self.step_t,
+            opt_fresh: self.opt_fresh,
+            params: to_host(&self.params)?,
+            m_state: to_host(&self.m_state)?,
+            v_state: to_host(&self.v_state)?,
+        })
+    }
+
+    /// Restore a step-boundary snapshot taken by [`Self::snapshot`].
+    /// Call after `reset` with the original run's seed/data-cycle:
+    /// params, Adam slots, and both step counters come from the
+    /// checkpoint, and the seeded data stream picks up at `step`
+    /// exactly where the checkpointed run left it.
+    pub fn restore(&mut self, c: &RankCheckpoint) -> Result<()> {
+        if c.rank != self.rank {
+            bail!("rank {} fed rank {}'s checkpoint", self.rank, c.rank);
+        }
+        if c.params.len() != self.info.params.len() {
+            bail!(
+                "rank {}: checkpoint has {} params, stage wants {}",
+                self.rank,
+                c.params.len(),
+                self.info.params.len()
+            );
+        }
+        let to_dev = |ts: &[HostTensor]| -> Result<Vec<xla::Literal>> {
+            ts.iter().map(|t| t.to_literal()).collect()
+        };
+        self.params = to_dev(&c.params)?;
+        self.m_state = to_dev(&c.m_state)?;
+        self.v_state = to_dev(&c.v_state)?;
+        self.grads = Vec::new();
+        self.grads_fresh = true;
+        self.opt_fresh = c.opt_fresh;
+        self.step_t = c.step_t;
+        self.step = c.step;
+        Ok(())
+    }
+
+    /// Arm the worker with the cluster's shared fault cell and receive
+    /// deadlines (kept out of `new` — supervision is the cluster's
+    /// concern, and standalone workers in tests stay unsupervised with
+    /// a private cell and generous defaults).
+    pub fn set_supervision(
+        &mut self,
+        fault: FaultCell,
+        comm_timeout: Duration,
+        comm_backoff: Duration,
+    ) {
+        self.fault = fault;
+        self.comm_timeout = comm_timeout.max(Duration::from_millis(1));
+        self.comm_backoff = comm_backoff
+            .max(Duration::from_millis(1))
+            .min(self.comm_timeout);
+    }
+
+    /// Completed training steps (monotone across resumes within a run).
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
     fn now(&self) -> f64 {
         self.epoch.elapsed().as_secs_f64()
     }
@@ -313,10 +410,21 @@ impl StageWorker {
 
     // -- greedy-aware receive ------------------------------------------------
 
-    /// Blocking receive with the paper's 2BP fill rule: while the wanted
-    /// message hasn't arrived, run one pending backward-p2 instead of
-    /// idling; fall back to a plain blocking receive when no p2 is left.
+    /// Supervised receive with the paper's 2BP fill rule: while the
+    /// wanted message hasn't arrived, run one pending backward-p2
+    /// instead of idling; with no p2 left, wait in bounded
+    /// [`TaggedRx::recv_timeout`] ticks, observing the shared fault
+    /// cell each tick.  A peer that stays silent past `comm_timeout`
+    /// of *idle* waiting (fill work resets the deadline — a busy rank
+    /// is not a stalled peer) trips [`FailureKind::CommTimeout`] on the
+    /// cell; a cell already tripped elsewhere unwinds this rank within
+    /// one backoff tick.
+    ///
+    /// [`TaggedRx::recv_timeout`]: crate::pipeline::comm::TaggedRx::recv_timeout
     fn recv_or_fill(&mut self, grad_side: bool, mb: u32) -> Result<HostTensor> {
+        let side = if grad_side { "grad" } else { "act" };
+        let peer = if grad_side { self.rank + 1 } else { self.rank.wrapping_sub(1) };
+        let mut deadline = Instant::now() + self.comm_timeout;
         loop {
             let ready = {
                 let rx = if grad_side {
@@ -339,14 +447,59 @@ impl StageWorker {
             if self.greedy && !self.pending_p2.is_empty() {
                 let next = self.pending_p2[0];
                 self.run_p2_loop(&[next])?;
+                // time spent doing useful fill work was not idle waiting
+                deadline = Instant::now() + self.comm_timeout;
+                continue;
+            }
+            let backoff = self.comm_backoff;
+            let rx = if grad_side {
+                self.links.grad_in.as_mut()
             } else {
-                let rx = if grad_side {
-                    self.links.grad_in.as_mut()
-                } else {
-                    self.links.act_in.as_mut()
+                self.links.act_in.as_mut()
+            }
+            .unwrap();
+            match rx.recv_timeout(mb, backoff) {
+                RecvOutcome::Got(t) => return Ok(t),
+                RecvOutcome::TimedOut => {
+                    if let Some(f) = self.fault.get() {
+                        bail!(
+                            "rank {} unwinding: cluster fault at rank {} \
+                             ({})",
+                            self.rank,
+                            f.rank,
+                            f.cause
+                        );
+                    }
+                    if Instant::now() >= deadline {
+                        let cause = format!(
+                            "no {side} tensor for mb {mb} from rank \
+                             {peer} within {:?}",
+                            self.comm_timeout
+                        );
+                        self.fault.trip(Failure {
+                            kind: FailureKind::CommTimeout,
+                            rank: self.rank,
+                            step: self.step,
+                            cause: cause.clone(),
+                        });
+                        bail!("{cause}");
+                    }
                 }
-                .unwrap();
-                return rx.recv(mb);
+                RecvOutcome::Disconnected => {
+                    if let Some(f) = self.fault.get() {
+                        bail!(
+                            "rank {} unwinding: cluster fault at rank {} \
+                             ({})",
+                            self.rank,
+                            f.rank,
+                            f.cause
+                        );
+                    }
+                    bail!(
+                        "rank {peer} hung up before sending the {side} \
+                         tensor for mb {mb}"
+                    );
+                }
             }
         }
     }

@@ -9,18 +9,56 @@
 //! sees an identical model + data stream (what makes the cross-schedule
 //! equivalence checks meaningful).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Instant;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{P2Mode, RunConfig};
 use crate::models::{Manifest, StageInfo};
-use crate::pipeline::comm::pipeline_links;
+use crate::pipeline::checkpoint::{self, RankCheckpoint};
+use crate::pipeline::comm::pipeline_links_with;
+use crate::pipeline::fault::{
+    CommFaultCfg, Failure, FailureKind, FaultCell, RunError,
+};
 use crate::pipeline::stage::{StageWorker, WorkerReport};
 use crate::schedule::{generate, validate::validate, Op, Plan, ScheduleKind};
 use crate::sim::CostModel;
 use crate::util::gantt::{Span, SpanKind};
+
+/// How often the leader re-checks the shared fault cell while waiting
+/// on worker channels — the leader-side detection latency bound.
+const SUPERVISE_TICK: Duration = Duration::from_millis(50);
+
+/// Block on `rx` in bounded ticks, surfacing a tripped fault cell as
+/// the typed [`RunError`] instead of waiting on channels whose workers
+/// are unwinding.  This is what makes every leader-side wait in
+/// [`Cluster::run_plan`] hang-free: workers detect stalls via their
+/// own receive deadlines and trip the cell; the leader notices within
+/// one tick.
+fn recv_supervised<T>(
+    rx: &Receiver<T>,
+    fault: &FaultCell,
+    waiting_for: &str,
+) -> Result<T> {
+    loop {
+        match rx.recv_timeout(SUPERVISE_TICK) {
+            Ok(v) => return Ok(v),
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(f) = fault.get() {
+                    return Err(anyhow::Error::new(RunError::from(f)));
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                return Err(match fault.get() {
+                    Some(f) => anyhow::Error::new(RunError::from(f)),
+                    None => anyhow!("workers died {waiting_for}"),
+                });
+            }
+        }
+    }
+}
 
 /// Everything measured during a run.
 #[derive(Debug)]
@@ -244,6 +282,67 @@ impl RunReport {
     }
 }
 
+/// Per-(schedule, microbatch-count) measured comm means — the PR 6
+/// follow-on replacing the single-mean comm floor for schedule-aware
+/// tuning.  Send cost depends on how the schedule interleaves compute
+/// with serialization (a GPipe burst contends differently than 1F1B's
+/// steady state), so one global mean mis-prices candidates; cells are
+/// measured per (kind, m) and anything unprobed falls back to the
+/// floor (the old behavior, never worse).
+#[derive(Debug, Clone, Default)]
+pub struct CommCalibration {
+    cells: Vec<(ScheduleKind, usize, f64)>,
+    floor: f64,
+}
+
+impl CommCalibration {
+    /// Start from the single-mean floor (`measured_costs().comm`).
+    pub fn with_floor(floor: f64) -> CommCalibration {
+        CommCalibration { cells: Vec::new(), floor }
+    }
+
+    pub fn floor(&self) -> f64 {
+        self.floor
+    }
+
+    /// Record a cell's measured sender-mean (last write wins).
+    pub fn record(&mut self, kind: ScheduleKind, m: usize, comm: f64) {
+        match self
+            .cells
+            .iter_mut()
+            .find(|(k, mm, _)| *k == kind && *mm == m)
+        {
+            Some((_, _, v)) => *v = comm,
+            None => self.cells.push((kind, m, comm)),
+        }
+    }
+
+    /// The comm cost to price a `(kind, m)` candidate with: its own
+    /// measured cell if probed, the floor otherwise.
+    pub fn comm_for(&self, kind: ScheduleKind, m: usize) -> f64 {
+        self.cells
+            .iter()
+            .find(|(k, mm, _)| *k == kind && *mm == m)
+            .map(|(_, _, v)| *v)
+            .unwrap_or(self.floor)
+    }
+
+    /// Probed cells in record order.
+    pub fn cells(&self) -> &[(ScheduleKind, usize, f64)] {
+        &self.cells
+    }
+
+    /// `base` with its comm term replaced by this candidate's cell.
+    pub fn specialize(
+        &self,
+        kind: ScheduleKind,
+        m: usize,
+        base: &CostModel,
+    ) -> CostModel {
+        CostModel { comm: self.comm_for(kind, m), ..base.clone() }
+    }
+}
+
 enum Cmd {
     Run {
         ops: Vec<Op>,
@@ -253,6 +352,10 @@ enum Cmd {
         p2_mode: P2Mode,
         seed: u64,
         data_cycle: usize,
+        /// Snapshot after every N steps (0 = never).
+        ckpt_every: usize,
+        /// Restore this rank's state right after the reset.
+        resume: Option<Box<RankCheckpoint>>,
     },
     Shutdown,
 }
@@ -264,6 +367,8 @@ pub struct Cluster {
     cmd_txs: Vec<Sender<Cmd>>,
     rep_rx: Receiver<(usize, WorkerReport)>,
     done_rx: Receiver<(usize, usize)>,
+    ckpt_rx: Receiver<(usize, RankCheckpoint)>,
+    fault: FaultCell,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -273,10 +378,19 @@ impl Cluster {
         let manifest = Manifest::load(&cfg.artifacts, &cfg.preset)
             .with_context(|| format!("loading preset {}", cfg.preset))?;
         let n = manifest.n_stages;
-        let links = pipeline_links(n);
+        let comm_fault = CommFaultCfg {
+            seed: cfg.comm_fault_seed,
+            drop_prob: cfg.comm_drop_prob,
+            delay_ns: cfg.comm_delay_ns,
+        };
+        let links = pipeline_links_with(n, Some(&comm_fault));
         let epoch = Instant::now();
+        let fault = FaultCell::new();
+        let comm_timeout = Duration::from_millis(cfg.comm_timeout_ms.max(1));
+        let comm_backoff = Duration::from_millis(cfg.comm_backoff_ms.max(1));
         let (rep_tx, rep_rx) = channel::<(usize, WorkerReport)>();
         let (done_tx, done_rx) = channel::<(usize, usize)>();
+        let (ckpt_tx, ckpt_rx) = channel::<(usize, RankCheckpoint)>();
         let (ready_tx, ready_rx) =
             channel::<core::result::Result<(), String>>();
 
@@ -291,7 +405,9 @@ impl Cluster {
             cmd_txs.push(cmd_tx);
             let rep_tx = rep_tx.clone();
             let done_tx = done_tx.clone();
+            let ckpt_tx = ckpt_tx.clone();
             let ready_tx = ready_tx.clone();
+            let cell = fault.clone();
             let seed = cfg.seed;
             handles.push(
                 std::thread::Builder::new()
@@ -311,35 +427,78 @@ impl Cluster {
                                 return;
                             }
                         };
-                        while let Ok(cmd) = cmd_rx.recv() {
+                        w.set_supervision(
+                            cell.clone(),
+                            comm_timeout,
+                            comm_backoff,
+                        );
+                        // fail-fast: on any error, trip the shared cell
+                        // (first failure wins — a CommTimeout the worker
+                        // tripped deeper down is preserved) and exit the
+                        // thread.  Dropping our links unblocks peers via
+                        // channel hangup; peers still waiting observe
+                        // the cell within one backoff tick.
+                        let trip = |w: &StageWorker, stage: &str, e: anyhow::Error| {
+                            cell.trip(Failure {
+                                kind: FailureKind::RankFailed,
+                                rank,
+                                step: w.step(),
+                                cause: if stage.is_empty() {
+                                    format!("{e:#}")
+                                } else {
+                                    format!("{stage}: {e:#}")
+                                },
+                            });
+                        };
+                        'serve: while let Ok(cmd) = cmd_rx.recv() {
                             match cmd {
                                 Cmd::Shutdown => break,
                                 Cmd::Run {
                                     ops, steps, greedy, two_bp, p2_mode,
-                                    seed, data_cycle,
+                                    seed, data_cycle, ckpt_every, resume,
                                 } => {
-                                    // errors poison the pipeline loudly:
-                                    // the dying thread drops its links, so
-                                    // peers unblock via channel hangup
                                     if let Err(e) = w.reset(
                                         seed, greedy, two_bp, p2_mode,
                                         data_cycle,
                                     ) {
-                                        panic!("stage {rank} reset: {e:#}");
+                                        trip(&w, "reset", e);
+                                        break 'serve;
+                                    }
+                                    if let Some(c) = &resume {
+                                        if let Err(e) = w.restore(c) {
+                                            trip(&w, "restore", e);
+                                            break 'serve;
+                                        }
                                     }
                                     for s in 0..steps {
                                         if let Err(e) = w.run_step(&ops) {
-                                            panic!("stage {rank}: {e:#}");
+                                            trip(&w, "", e);
+                                            break 'serve;
                                         }
                                         let _ = done_tx.send((rank, s));
+                                        if ckpt_every > 0
+                                            && (s + 1) % ckpt_every == 0
+                                        {
+                                            match w.snapshot() {
+                                                Ok(c) => {
+                                                    let _ = ckpt_tx
+                                                        .send((rank, c));
+                                                }
+                                                Err(e) => {
+                                                    trip(&w, "snapshot", e);
+                                                    break 'serve;
+                                                }
+                                            }
+                                        }
                                     }
                                     match w.report() {
                                         Ok(r) => {
                                             let _ = rep_tx.send((rank, r));
                                         }
-                                        Err(e) => panic!(
-                                            "stage {rank} report: {e:#}"
-                                        ),
+                                        Err(e) => {
+                                            trip(&w, "report", e);
+                                            break 'serve;
+                                        }
                                     }
                                 }
                             }
@@ -354,7 +513,23 @@ impl Cluster {
                 .map_err(|_| anyhow!("worker died during startup"))?
                 .map_err(|e| anyhow!(e))?;
         }
-        Ok(Cluster { manifest, cmd_txs, rep_rx, done_rx, handles })
+        Ok(Cluster {
+            manifest,
+            cmd_txs,
+            rep_rx,
+            done_rx,
+            ckpt_rx,
+            fault,
+            handles,
+        })
+    }
+
+    /// The first failure any rank has reported this cluster's lifetime
+    /// (a tripped cluster stays poisoned: dead worker threads are not
+    /// respawned — recover by rebuilding the cluster and resuming from
+    /// the last checkpoint, as `experiments::fault_sweep` does).
+    pub fn first_failure(&self) -> Option<Failure> {
+        self.fault.get()
     }
 
     pub fn n_stages(&self) -> usize {
@@ -392,6 +567,35 @@ impl Cluster {
         let report = self.run(&calib_cfg)?;
         let costs = report.measured_costs()?;
         Ok((costs, report))
+    }
+
+    /// Probe measured comm per `(schedule, m)` cell: one short run
+    /// each, recording that run's sender-mean send cost.  `floor` is
+    /// the single-mean fallback from [`Cluster::calibrate`] — unprobed
+    /// cells price at the floor, so this strictly refines the PR 6
+    /// model (see docs/ROBUSTNESS.md §5).
+    pub fn calibrate_comm(
+        &self,
+        cfg: &RunConfig,
+        floor: f64,
+        cells: &[(ScheduleKind, usize)],
+    ) -> Result<CommCalibration> {
+        let mut out = CommCalibration::with_floor(floor);
+        for &(kind, m) in cells {
+            let cell_cfg = RunConfig {
+                schedule: kind,
+                n_microbatches: m,
+                p2_mode: P2Mode::Loop,
+                steps: cfg.steps.clamp(1, 2),
+                ..cfg.clone()
+            };
+            let report = self.run(&cell_cfg)?;
+            let comm = report.measured_costs()?.comm;
+            if comm > 0.0 {
+                out.record(kind, m, comm);
+            }
+        }
+        Ok(out)
     }
 
     /// Execute an **arbitrary validated plan** — generator-made, a DSL
@@ -440,6 +644,30 @@ impl Cluster {
         let m = plan.n_microbatches;
         validate(plan).map_err(|e| anyhow!("invalid plan: {e}"))?;
 
+        // a cluster that already failed stays failed: its worker
+        // threads exited, so a new run would hang on dead channels
+        if let Some(f) = self.fault.get() {
+            return Err(anyhow::Error::new(RunError::from(f)));
+        }
+        if cfg.checkpoint_every > 0 && cfg.checkpoint_dir.is_none() {
+            bail!("--checkpoint-every requires --checkpoint-dir");
+        }
+        let resume: Option<Vec<RankCheckpoint>> = match &cfg.resume {
+            Some(dir) => {
+                let dir = checkpoint::resolve_resume_dir(dir)?;
+                let cks = checkpoint::load(&dir, n).with_context(|| {
+                    format!("resuming from {}", dir.display())
+                })?;
+                Some(cks)
+            }
+            None => None,
+        };
+        let mut resume_by_rank: Vec<Option<Box<RankCheckpoint>>> =
+            match resume {
+                Some(cks) => cks.into_iter().map(|c| Some(Box::new(c))).collect(),
+                None => (0..n).map(|_| None).collect(),
+            };
+
         for (rank, tx) in self.cmd_txs.iter().enumerate() {
             tx.send(Cmd::Run {
                 ops: plan.ranks[rank].clone(),
@@ -449,20 +677,34 @@ impl Cluster {
                 p2_mode: cfg.p2_mode,
                 seed: cfg.seed,
                 data_cycle: cfg.data_cycle,
+                ckpt_every: cfg.checkpoint_every,
+                resume: resume_by_rank[rank].take(),
             })
             .map_err(|_| anyhow!("stage {rank} is gone"))?;
         }
 
-        // step s completes when all n ranks reported it
+        // step s completes when all n ranks reported it; every wait is
+        // supervised, so a rank failure surfaces as a typed RunError
+        // within one tick instead of hanging this loop forever
         let mut step_times = Vec::with_capacity(cfg.steps);
         let mut completed = vec![0usize; cfg.steps];
         let mut t0 = Instant::now();
         let mut next_step = 0usize;
         while next_step < cfg.steps {
-            let (_rank, s) = self
-                .done_rx
-                .recv()
-                .map_err(|_| anyhow!("workers died mid-run"))?;
+            let (_rank, s) = match recv_supervised(
+                &self.done_rx,
+                &self.fault,
+                "mid-run",
+            ) {
+                Ok(v) => v,
+                Err(e) => {
+                    // the run is lost, but snapshots of the steps every
+                    // rank *did* finish are already in flight — persist
+                    // them so recovery resumes from the last good step
+                    self.salvage_checkpoints(cfg);
+                    return Err(e);
+                }
+            };
             completed[s] += 1;
             while next_step < cfg.steps && completed[next_step] == n {
                 let dt = t0.elapsed().as_secs_f64();
@@ -475,12 +717,41 @@ impl Cluster {
             }
         }
 
+        // drain the expected snapshots (workers send each right after
+        // its step's done message, so these are already in flight) and
+        // persist them grouped by step under the checkpoint dir
+        if cfg.checkpoint_every > 0 {
+            let dir = cfg.checkpoint_dir.as_ref().unwrap();
+            let expected = (cfg.steps / cfg.checkpoint_every) * n;
+            let mut by_step: BTreeMap<usize, Vec<RankCheckpoint>> =
+                BTreeMap::new();
+            for _ in 0..expected {
+                let (_, c) = recv_supervised(
+                    &self.ckpt_rx,
+                    &self.fault,
+                    "before checkpointing",
+                )?;
+                by_step.entry(c.step).or_default().push(c);
+            }
+            for (step, mut cks) in by_step {
+                if cks.len() != n {
+                    bail!(
+                        "checkpoint at step {step}: {}/{n} rank snapshots",
+                        cks.len()
+                    );
+                }
+                cks.sort_by_key(|c| c.rank);
+                checkpoint::save(&checkpoint::step_dir(dir, step), &cks)?;
+            }
+        }
+
         let mut reports: Vec<WorkerReport> = Vec::with_capacity(n);
         for _ in 0..n {
-            let (_, r) = self
-                .rep_rx
-                .recv()
-                .map_err(|_| anyhow!("workers died before reporting"))?;
+            let (_, r) = recv_supervised(
+                &self.rep_rx,
+                &self.fault,
+                "before reporting",
+            )?;
             reports.push(r);
         }
         reports.sort_by_key(|w| w.rank);
@@ -506,21 +777,105 @@ impl Cluster {
     }
 }
 
-impl Drop for Cluster {
-    fn drop(&mut self) {
+impl Cluster {
+    /// After a failed run: drain whatever per-step snapshots the ranks
+    /// already sent and persist every **complete** step set (all n
+    /// ranks), so recovery can resume from the last good step instead
+    /// of step 0.  Incomplete sets are discarded — a torn checkpoint is
+    /// worse than none.  Best-effort by design: the run's own error is
+    /// the primary outcome, so save failures only go to stderr.
+    fn salvage_checkpoints(&self, cfg: &RunConfig) {
+        if cfg.checkpoint_every == 0 {
+            return;
+        }
+        let Some(dir) = cfg.checkpoint_dir.as_ref() else { return };
+        let n = self.manifest.n_stages;
+        // a healthy rank that finished a step is at most a few ticks
+        // behind the failure notice; quiet for this long means nothing
+        // more is coming
+        let grace = SUPERVISE_TICK * 4;
+        let mut by_step: BTreeMap<usize, Vec<RankCheckpoint>> =
+            BTreeMap::new();
+        while let Ok((_, c)) = self.ckpt_rx.recv_timeout(grace) {
+            by_step.entry(c.step).or_default().push(c);
+        }
+        for (step, mut cks) in by_step {
+            if cks.len() != n {
+                continue;
+            }
+            cks.sort_by_key(|c| c.rank);
+            if let Err(e) =
+                checkpoint::save(&checkpoint::step_dir(dir, step), &cks)
+            {
+                eprintln!("checkpoint salvage at step {step}: {e:#}");
+            }
+        }
+    }
+
+    /// Send Shutdown and join every worker, collecting the ranks whose
+    /// threads *panicked* (distinct from fail-fast exits, which return
+    /// normally after tripping the fault cell).
+    fn teardown(&mut self) -> Vec<usize> {
         for tx in &self.cmd_txs {
             let _ = tx.send(Cmd::Shutdown);
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        let mut panicked = Vec::new();
+        for (rank, h) in self.handles.drain(..).enumerate() {
+            if h.join().is_err() {
+                panicked.push(rank);
+            }
+        }
+        panicked
+    }
+
+    /// Graceful teardown that *propagates* worker join results — the
+    /// fix for the old `let _ = h.join()`, which silently swallowed
+    /// panicked workers.  Prefer this over relying on `Drop` wherever
+    /// an error can still be surfaced to the caller.
+    pub fn shutdown(mut self) -> Result<()> {
+        let panicked = self.teardown();
+        if panicked.is_empty() {
+            Ok(())
+        } else {
+            bail!(
+                "stage worker thread(s) panicked during the run: rank {}",
+                panicked
+                    .iter()
+                    .map(|r| r.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", rank ")
+            )
         }
     }
 }
 
-/// One-shot convenience: build a cluster, run once.
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        // Drop can't return an error, but it must not swallow one
+        // either: a panicked worker is at least named on stderr.
+        let panicked = self.teardown();
+        if !panicked.is_empty() {
+            eprintln!(
+                "cluster teardown: stage worker thread(s) panicked: {}",
+                panicked
+                    .iter()
+                    .map(|r| format!("rank {r}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
+    }
+}
+
+/// One-shot convenience: build a cluster, run once, tear down loudly
+/// (a panicked worker fails the call even if the run itself reported).
 pub fn train(cfg: &RunConfig) -> Result<RunReport> {
     let cluster = Cluster::new(cfg)?;
-    cluster.run(cfg)
+    let report = cluster.run(cfg);
+    let teardown = cluster.shutdown();
+    let report = report?;
+    teardown?;
+    Ok(report)
 }
 
 /// Cross-check a finished run against the simulator and the manifest
@@ -833,6 +1188,51 @@ mod tests {
         let r = report_with(vec![wr(0), wr(0)]);
         let err = r.measured_costs().unwrap_err().to_string();
         assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn comm_calibration_cells_override_the_floor() {
+        let mut c = CommCalibration::with_floor(0.001);
+        // unprobed cell: the floor (the old single-mean behavior)
+        assert_eq!(c.comm_for(ScheduleKind::GPipe, 4), 0.001);
+        c.record(ScheduleKind::GPipe, 4, 0.003);
+        c.record(ScheduleKind::OneF1B1, 4, 0.002);
+        c.record(ScheduleKind::GPipe, 4, 0.004); // last write wins
+        assert_eq!(c.comm_for(ScheduleKind::GPipe, 4), 0.004);
+        assert_eq!(c.comm_for(ScheduleKind::OneF1B1, 4), 0.002);
+        assert_eq!(c.comm_for(ScheduleKind::OneF1B1, 8), 0.001);
+        assert_eq!(c.cells().len(), 2);
+        let base =
+            report_with(vec![wr(0), wr(1)]).measured_costs().unwrap();
+        let s = c.specialize(ScheduleKind::GPipe, 4, &base);
+        assert_eq!(s.comm, 0.004);
+        assert_eq!(s.fwd, base.fwd);
+        assert_eq!(s.loss, base.loss);
+    }
+
+    #[test]
+    fn recv_supervised_surfaces_the_tripped_cell_as_run_error() {
+        let cell = FaultCell::new();
+        cell.trip(Failure {
+            kind: FailureKind::RankFailed,
+            rank: 2,
+            step: 5,
+            cause: "dead executable".into(),
+        });
+        // channel alive but silent: the timeout tick notices the cell
+        let (tx, rx) = channel::<usize>();
+        let err = recv_supervised(&rx, &cell, "in test").unwrap_err();
+        let run = err.downcast_ref::<RunError>().expect("typed RunError");
+        assert_eq!(run.rank(), 2);
+        assert_eq!(run.step(), 5);
+        drop(tx);
+        // disconnected with NO fault recorded: a plain untyped error
+        let (tx2, rx2) = channel::<usize>();
+        drop(tx2);
+        let quiet = FaultCell::new();
+        let err = recv_supervised(&rx2, &quiet, "in test").unwrap_err();
+        assert!(err.downcast_ref::<RunError>().is_none());
+        assert!(err.to_string().contains("in test"), "{err}");
     }
 }
 

@@ -268,8 +268,9 @@ fn calibration_round_trip_recovers_skew_and_closes_the_loop() {
         seed: 0x2B92_0245,
         ..BeamConfig::default()
     };
-    let ct = tune_and_execute(&cluster, &manifest, &profile, &cfg, &base)
-        .expect("tune + winner execution");
+    let ct =
+        tune_and_execute(&cluster, &manifest, &profile, &cfg, &base, None)
+            .expect("tune + winner execution");
     let mut named_best = 0.0f64;
     for (kind, two_bp) in combos() {
         for &m in &microbatch_grid(n, 4 * n) {
@@ -391,6 +392,7 @@ fn drift_replan_loop_retunes_exactly_once() {
     let out = twobp::experiments::tune_replan(
         8,
         twobp::pipeline::DriftConfig::default(),
+        None,
     )
     .expect("replan loop");
     assert!(
@@ -493,5 +495,142 @@ fn prop_accountant_never_negative_and_peak_matches_on_stub_runs() {
             Ok(())
         },
     );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// ISSUE 8 acceptance: an injected rank failure is detected within the
+/// comm deadline and surfaces as a **typed** error naming the failing
+/// rank and step — bounded time, no hang — and the cluster stays
+/// poisoned afterwards (recovery means rebuild + resume, never reuse).
+#[test]
+fn injected_rank_failure_surfaces_structured_error_in_bounded_time() {
+    use twobp::models::synthetic::StubFaultSpec;
+    use twobp::pipeline::RunError;
+
+    let dir = std::env::temp_dir()
+        .join(format!("twobp-stub-test-fault-fail-{}", std::process::id()));
+    let m = 4usize;
+    // 0-based stub call counters: call `m` is step 1's first forward
+    let spec = SyntheticSpec::tiny_faulty(StubFaultSpec {
+        rank: 1,
+        kind: "fail".into(),
+        at_call: m as u64,
+    });
+    write_artifacts(&dir, &spec).expect("write faulty artifacts");
+    let c = RunConfig {
+        preset: spec.preset.clone(),
+        artifacts: dir.clone(),
+        schedule: ScheduleKind::OneF1B1,
+        steps: 3,
+        n_microbatches: m,
+        comm_timeout_ms: 2_000,
+        ..RunConfig::default()
+    };
+    let cluster = Cluster::new(&c).expect("cluster");
+    let t0 = std::time::Instant::now();
+    let err = cluster.run(&c).expect_err("injected failure must surface");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < std::time::Duration::from_secs(10),
+        "detection took {elapsed:?} — not fail-fast"
+    );
+    match err.downcast_ref::<RunError>() {
+        Some(RunError::RankFailed { rank, step, cause }) => {
+            assert_eq!(*rank, 1, "{err:#}");
+            assert_eq!(*step, 1, "{err:#}");
+            assert!(cause.contains("injected failure"), "{cause}");
+        }
+        other => panic!("expected typed RankFailed, got {other:?}: {err:#}"),
+    }
+    // poisoned: later runs refuse fast with the same typed failure
+    let again = cluster.run(&c).expect_err("poisoned cluster must refuse");
+    assert!(again.downcast_ref::<RunError>().is_some(), "{again:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A stalled (not dead) rank trips the receive **deadline** on a
+/// neighbor: the typed error is `CommTimeout`, and it fires at roughly
+/// the configured deadline — far sooner than the stall itself lasts,
+/// proving detection comes from the timeout, not the stall ending.
+#[test]
+fn stalled_rank_times_out_as_comm_timeout() {
+    use twobp::models::synthetic::StubFaultSpec;
+    use twobp::pipeline::RunError;
+
+    let dir = std::env::temp_dir()
+        .join(format!("twobp-stub-test-fault-stall-{}", std::process::id()));
+    let m = 4usize;
+    let spec = SyntheticSpec::tiny_faulty(StubFaultSpec {
+        rank: 1,
+        kind: format!("stall-{}", 3_000_000_000u64), // 3 s
+        at_call: m as u64,
+    });
+    write_artifacts(&dir, &spec).expect("write faulty artifacts");
+    let c = RunConfig {
+        preset: spec.preset.clone(),
+        artifacts: dir.clone(),
+        schedule: ScheduleKind::OneF1B1,
+        steps: 3,
+        n_microbatches: m,
+        comm_timeout_ms: 150,
+        ..RunConfig::default()
+    };
+    let cluster = Cluster::new(&c).expect("cluster");
+    let t0 = std::time::Instant::now();
+    let err = cluster.run(&c).expect_err("stall must trip the deadline");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < std::time::Duration::from_millis(2_500),
+        "took {elapsed:?} — the 150ms deadline did not fire \
+         (the 3s stall would have ended first)"
+    );
+    match err.downcast_ref::<RunError>() {
+        // which neighbor of the stalled rank hits its deadline first is
+        // a race, so the waiting rank/step are not asserted
+        Some(RunError::CommTimeout { cause, .. }) => {
+            assert!(!cause.is_empty());
+        }
+        other => panic!("expected typed CommTimeout, got {other:?}: {err:#}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// ISSUE 8 acceptance: checkpoint/resume is bit-identical.  For two
+/// schedules ± 2BP: N straight steps == N/2 steps + on-disk checkpoint
+/// + a fresh cluster resuming for N/2 — byte for byte on every rank's
+/// parameters (`param_digests`), and the per-step losses line up
+/// exactly across the splice point.
+#[test]
+fn checkpoint_resume_is_bit_identical_across_schedules_and_2bp() {
+    let (dir, _) = setup("ckpt-resume");
+    let (total, half) = (4usize, 2usize);
+    let m = 4;
+    for kind in [ScheduleKind::GPipe, ScheduleKind::OneF1B1] {
+        for two_bp in [false, true] {
+            let tag = format!("{}-2bp={two_bp}", kind.name());
+            let ckpt = std::env::temp_dir().join(format!(
+                "twobp-stub-test-ckpt-{tag}-{}",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&ckpt);
+            let straight =
+                train(&cfg(&dir, kind, two_bp, total, m)).expect("straight");
+            let mut first = cfg(&dir, kind, two_bp, half, m);
+            first.checkpoint_every = half;
+            first.checkpoint_dir = Some(ckpt.clone());
+            let a = train(&first).expect("first half");
+            let mut second = cfg(&dir, kind, two_bp, total - half, m);
+            second.resume = Some(ckpt.clone());
+            let b = train(&second).expect("resumed half");
+            assert_eq!(
+                b.param_digests(),
+                straight.param_digests(),
+                "{tag}: resumed parameters diverge from the straight run"
+            );
+            assert_eq!(a.losses[..], straight.losses[..half], "{tag}");
+            assert_eq!(b.losses[..], straight.losses[half..], "{tag}");
+            let _ = std::fs::remove_dir_all(&ckpt);
+        }
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -55,6 +55,15 @@
 //!   smoke: `twobp tune --synthetic --replan`).  The call counter
 //!   lives on the executable, so each worker's compiled stage drifts
 //!   independently of its siblings.
+//! * `fault <kind>@<call>` — **deterministic fault injection**: from
+//!   execution number `<call>` (0-based, per compiled executable like
+//!   `drift`) onward the executable misbehaves.  Kind `fail` returns a
+//!   stub error on every execution from that point — a deterministic
+//!   stand-in for a crashed device — and kind `stall-<ns>` sleeps N
+//!   nanoseconds before computing (values stay bit-identical), the
+//!   stand-in for a wedged-but-alive peer that comm deadlines must
+//!   catch.  This is what `twobp train --synthetic --fault` and the
+//!   `twobp bench faults` recovery harness inject.
 //!
 //! Everything is deliberately `Rc`-based and single-threaded, matching
 //! the real crate's client threading model (one client per worker
@@ -370,6 +379,17 @@ impl Literal {
 // Stub-HLO signatures
 // ---------------------------------------------------------------------------
 
+/// What an injected fault does when it fires (`fault` directive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Every execution from the trigger call returns a stub error
+    /// (a crashed device: the failure persists, it never heals).
+    Fail,
+    /// Every execution from the trigger call sleeps this many
+    /// nanoseconds first (a wedged peer: values stay bit-identical).
+    Stall(u64),
+}
+
 /// A parsed stub-HLO signature (stands in for a real `HloModuleProto`).
 #[derive(Debug, Clone)]
 pub struct HloModuleProto {
@@ -383,6 +403,10 @@ pub struct HloModuleProto {
     /// delay to `drifted_ns` from execution number `after_calls`
     /// (0-based) onward.  Values are unaffected.
     drift: Option<(u64, u64)>,
+    /// Injected fault: `Some((kind, at_call))` fires from execution
+    /// number `at_call` (0-based, counted per compiled executable like
+    /// `drift`) onward.
+    fault: Option<(FaultKind, u64)>,
     outs: Vec<(ElementType, Vec<usize>)>,
 }
 
@@ -415,6 +439,7 @@ impl HloModuleProto {
         let mut group = 0usize;
         let mut cost_ns = 0u64;
         let mut drift = None;
+        let mut fault = None;
         let mut outs = Vec::new();
         for line in lines {
             let mut it = line.split_whitespace();
@@ -459,6 +484,29 @@ impl HloModuleProto {
                     })?;
                     drift = Some((calls, ns));
                 }
+                "fault" => {
+                    let (kind, at) = val.split_once('@').ok_or_else(|| {
+                        err(format!(
+                            "bad fault '{val}': expected <kind>@<call>"
+                        ))
+                    })?;
+                    let kind = if kind == "fail" {
+                        FaultKind::Fail
+                    } else if let Some(ns) = kind.strip_prefix("stall-") {
+                        FaultKind::Stall(ns.parse().map_err(|e| {
+                            err(format!("bad fault stall ns '{ns}': {e}"))
+                        })?)
+                    } else {
+                        return Err(err(format!(
+                            "bad fault kind '{kind}': want fail or \
+                             stall-<ns>"
+                        )));
+                    };
+                    let at = at.parse().map_err(|e| {
+                        err(format!("bad fault call '{at}': {e}"))
+                    })?;
+                    fault = Some((kind, at));
+                }
                 "out" => outs.push(parse_out(val)?),
                 other => {
                     return Err(err(format!("unknown directive '{other}'")))
@@ -485,6 +533,7 @@ impl HloModuleProto {
             group,
             cost_ns,
             drift,
+            fault,
             outs,
         })
     }
@@ -736,6 +785,18 @@ fn execute_stub_at(
     call: u64,
     inputs: &[&Literal],
 ) -> Result<Vec<Literal>> {
+    match sig.fault {
+        Some((FaultKind::Fail, at)) if call >= at => {
+            return Err(err(format!(
+                "{}: injected failure at call {call} (fault fail@{at})",
+                sig.name
+            )));
+        }
+        Some((FaultKind::Stall(ns), at)) if call >= at => {
+            std::thread::sleep(std::time::Duration::from_nanos(ns));
+        }
+        _ => {}
+    }
     let cost_ns = sig.cost_at(call);
     if cost_ns > 0 {
         // busy delay: sleeping (not spinning) lets concurrently-running
@@ -1030,6 +1091,84 @@ mod tests {
         // a freshly compiled executable starts un-drifted
         let fresh = client.compile(&comp).unwrap();
         assert!(run(&fresh) < std::time::Duration::from_millis(30));
+    }
+
+    #[test]
+    fn fail_fault_fires_at_its_call_and_persists() {
+        let s = sig("stub-hlo v1\nmodule f\nseed 2\nfault fail@2\nout f32[2]\n");
+        assert_eq!(s.fault, Some((FaultKind::Fail, 2)));
+        let x = f32_lit(&[2], &[1.0, 2.0]);
+        let healthy = sig("stub-hlo v1\nmodule f\nseed 2\nout f32[2]\n");
+        let want = execute_stub(&healthy, &[&x]).unwrap();
+        // calls before the trigger behave exactly like the clean sig
+        for call in 0..2 {
+            let got = execute_stub_at(&s, call, &[&x]).unwrap();
+            assert_eq!(
+                got[0].to_vec::<f32>().unwrap(),
+                want[0].to_vec::<f32>().unwrap()
+            );
+        }
+        // at and after the trigger: a persistent error naming the call
+        for call in [2, 3, 99] {
+            let e = execute_stub_at(&s, call, &[&x]).unwrap_err();
+            assert!(
+                e.0.contains("injected failure")
+                    && e.0.contains(&format!("call {call}")),
+                "{e}"
+            );
+        }
+    }
+
+    #[test]
+    fn stall_fault_delays_but_never_changes_values() {
+        let s = sig(
+            "stub-hlo v1\nmodule w\nseed 2\nfault stall-20000000@1\nout f32[2]\n",
+        );
+        assert_eq!(s.fault, Some((FaultKind::Stall(20_000_000), 1)));
+        let x = f32_lit(&[2], &[1.0, 2.0]);
+        let before = execute_stub_at(&s, 0, &[&x]).unwrap();
+        let t0 = std::time::Instant::now();
+        let after = execute_stub_at(&s, 1, &[&x]).unwrap();
+        let dt = t0.elapsed();
+        assert_eq!(
+            before[0].to_vec::<f32>().unwrap(),
+            after[0].to_vec::<f32>().unwrap()
+        );
+        assert!(
+            dt >= std::time::Duration::from_millis(20),
+            "stall 20ms not observed: {dt:?}"
+        );
+    }
+
+    #[test]
+    fn fault_counter_lives_on_the_compiled_executable() {
+        let proto = sig(
+            "stub-hlo v1\nmodule f\nseed 9\nfault fail@1\nout f32[2]\n",
+        );
+        let comp = XlaComputation::from_proto(&proto);
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let buf = client
+            .buffer_from_host_literal(None, &Literal::scalar(1.0f32))
+            .unwrap();
+        assert!(exe.execute_b(&[&buf]).is_ok(), "call 0 is clean");
+        assert!(exe.execute_b(&[&buf]).is_err(), "call 1 trips");
+        // a freshly compiled executable starts with a clean counter
+        let fresh = client.compile(&comp).unwrap();
+        assert!(fresh.execute_b(&[&buf]).is_ok());
+    }
+
+    #[test]
+    fn rejects_malformed_fault() {
+        for bad in [
+            "stub-hlo v1\nfault fail\nout f32[1]\n",
+            "stub-hlo v1\nfault explode@3\nout f32[1]\n",
+            "stub-hlo v1\nfault stall-x@3\nout f32[1]\n",
+            "stub-hlo v1\nfault fail@x\nout f32[1]\n",
+            "stub-hlo v1\nfault fail @3\nout f32[1]\n",
+        ] {
+            assert!(HloModuleProto::parse(bad).is_err(), "{bad:?}");
+        }
     }
 
     #[test]
