@@ -1,0 +1,208 @@
+//! Bench: `twobp serve` batch throughput — jobs/sec through the full
+//! service path (line parse → deadline/priority scheduling → engine op
+//! → sorted-key JSON response), plus the residency win: repeated tune
+//! queries served from the fingerprint cache.
+//!
+//! ```text
+//! cargo bench --bench serve_throughput [-- --quick]
+//!     [-- --baseline BENCH_baseline.json]
+//!     [-- --write-baseline BENCH_baseline.json]
+//! ```
+//!
+//! The batch is deterministic: one calibrate, then one score job per
+//! distinct plan in the generator corpus (every (kind, 2bp) combo ×
+//! the planner's microbatch grid at N=4), each with a distinct
+//! deadline so the heap is exercised, then a shutdown.  Every response
+//! is asserted `ok` before timing.  A second timed phase submits the
+//! same small tune job repeatedly against a resident engine: after the
+//! first miss every response is a recorded cache hit, measuring what
+//! residency buys over re-searching.
+//!
+//! Results append to `BENCH_serve.json` at the repo root.
+//! **Regression gate**: with `--baseline <file>`, measured jobs/sec is
+//! compared against `serve_{quick,full}_jobs_per_sec` and the process
+//! exits non-zero on a >20% regression — the same rule as the sweep
+//! and planner benches.  `--write-baseline <file>` refreshes the entry.
+
+use std::path::Path;
+use std::time::Instant;
+
+use twobp::experiments::sweep::combos;
+use twobp::planner::beam::microbatch_grid;
+use twobp::schedule::{generate, plan_io};
+use twobp::serve::{run_batch, Engine};
+use twobp::util::args::Args;
+use twobp::util::json::{obj, Json};
+use twobp::util::stats::{summarize, BenchRecorder};
+
+/// The serve batch: calibrate → one score per distinct corpus plan
+/// (distinct ids and deadlines) → shutdown.
+fn batch(n_ranks: usize) -> String {
+    let mut lines = vec![format!(
+        r#"{{"op":"calibrate","id":"c","name":"prof","ranks":{n_ranks},"deadline":0}}"#
+    )];
+    let mut i = 0usize;
+    for (kind, two_bp) in combos() {
+        for &m in &microbatch_grid(n_ranks, 4 * n_ranks) {
+            let p = generate(kind, two_bp, n_ranks, m, false);
+            // Json::Str handles the JSON escaping of the plan text.
+            let text = Json::Str(plan_io::to_text(&p)).to_string();
+            lines.push(format!(
+                r#"{{"op":"score","id":"s{i}","plan":{text},"profile":"prof","deadline":{d}}}"#,
+                d = i + 1
+            ));
+            i += 1;
+        }
+    }
+    lines.push(format!(
+        r#"{{"op":"shutdown","id":"z","deadline":{}}}"#,
+        i + 1
+    ));
+    lines.join("\n")
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["quick"]);
+    let quick = args.has("quick");
+
+    let input = batch(4);
+    let jobs = input.lines().count();
+    println!(
+        "serve_throughput: {jobs} jobs/batch (1 calibrate + {} scores + \
+         1 shutdown, distinct deadlines)\n",
+        jobs - 2
+    );
+
+    // -- agreement: the whole batch drains ok before timing ----------------
+    {
+        let mut e = Engine::new(0);
+        let (resp, shutdown) =
+            run_batch(&mut e, &input, &mut None).expect("batch");
+        assert!(shutdown, "shutdown job must drain the batch");
+        assert_eq!(resp.len(), jobs);
+        for r in &resp {
+            assert!(r.contains("\"ok\":true"), "job failed: {r}");
+        }
+    }
+
+    // -- timing: full batches against fresh engines ------------------------
+    let reps = if quick { 3 } else { 5 };
+    let run_once = || {
+        let mut e = Engine::new(0);
+        let (resp, _) = run_batch(&mut e, &input, &mut None).expect("batch");
+        resp.len()
+    };
+    run_once(); // warmup
+    let mut jps = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let n = run_once();
+        let dt = t0.elapsed().as_secs_f64();
+        jps.push(n as f64 / dt);
+    }
+    let jps_s = summarize(&jps);
+    println!(
+        "  batch drain        : {:>10.0} jobs/s (± {:.0}, n={reps})",
+        jps_s.mean, jps_s.std
+    );
+
+    // -- residency: repeated tunes served from the result cache ------------
+    let hits = if quick { 50 } else { 200 };
+    let mut e = Engine::new(0);
+    let tune_line = r#"{"op":"tune","ranks":4,"beam":2,"gens":1,"mutations":2}"#;
+    let (first, _) =
+        run_batch(&mut e, tune_line, &mut None).expect("tune miss");
+    assert!(first[0].contains("\"cache\":\"miss\""), "{first:?}");
+    let hit_input = vec![tune_line; hits].join("\n");
+    let t0 = Instant::now();
+    let (resp, _) = run_batch(&mut e, &hit_input, &mut None).expect("hits");
+    let hit_dt = t0.elapsed().as_secs_f64();
+    assert_eq!(resp.len(), hits);
+    for r in &resp {
+        assert!(r.contains("\"cache\":\"hit\""), "expected a hit: {r}");
+    }
+    let hits_per_sec = hits as f64 / hit_dt;
+    println!(
+        "  cached tune serves : {:>10.0} hits/s ({hits} repeats of one \
+         tune; cache hits recorded: {})\n",
+        hits_per_sec,
+        e.metrics.counter("serve.cache_hits")
+    );
+
+    // -- record the trajectory at the repo root ---------------------------
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under <repo>/rust");
+    let mut rec = BenchRecorder::open(&repo_root.join("BENCH_serve.json"));
+    rec.record(
+        "serve_batch",
+        obj(vec![
+            ("jobs_per_batch", Json::Num(jobs as f64)),
+            ("jobs_per_sec", Json::Num(jps_s.mean)),
+            ("cached_tune_hits_per_sec", Json::Num(hits_per_sec)),
+            ("quick", Json::Bool(quick)),
+        ]),
+    );
+    let mode_key = if quick {
+        "serve_quick_jobs_per_sec"
+    } else {
+        "serve_full_jobs_per_sec"
+    };
+    rec.record_summary(mode_key, &jps_s);
+    match rec.write() {
+        Ok(()) => {
+            println!("  wrote {}", repo_root.join("BENCH_serve.json").display())
+        }
+        Err(e) => {
+            eprintln!("  warning: could not write BENCH_serve.json: {e}")
+        }
+    }
+
+    // -- regression gate vs a committed baseline ---------------------------
+    if let Some(path) = args.get("write-baseline") {
+        let mut base = BenchRecorder::open(Path::new(path));
+        base.record(mode_key, Json::Num(jps_s.mean));
+        match base.write() {
+            Ok(()) => {
+                println!("  wrote {mode_key} = {:.0} to {path}", jps_s.mean)
+            }
+            Err(e) => {
+                eprintln!("FAIL: could not write baseline {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    if let Some(path) = args.get("baseline") {
+        let committed = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|v| v.get(mode_key).and_then(|x| x.as_f64()));
+        match committed {
+            None => {
+                eprintln!(
+                    "FAIL: baseline {path} is missing a numeric \
+                     '{mode_key}' entry"
+                );
+                std::process::exit(1);
+            }
+            Some(committed) => {
+                let ratio = jps_s.mean / committed;
+                println!(
+                    "  regression gate [{mode_key}]: {:.0} jobs/s vs \
+                     baseline {committed:.0} ({ratio:.2}x, fail below \
+                     0.80x)",
+                    jps_s.mean
+                );
+                if ratio < 0.8 {
+                    eprintln!(
+                        "FAIL: {mode_key} regressed >20% vs {path} \
+                         ({:.0} < 0.8 x {committed:.0} jobs/s)",
+                        jps_s.mean
+                    );
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+}

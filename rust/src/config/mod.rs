@@ -8,8 +8,36 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::planner::RobustObjective;
 use crate::schedule::ScheduleKind;
+use crate::sim::Perturbation;
 use crate::util::args::Args;
+
+/// Reject every orphaned flag of a gated cluster in one place: if the
+/// gate flag is absent (as a boolean or a valued flag) but some member
+/// of `group` was passed, the error names the offending flag *and*
+/// lists the whole group, so a typo'd invocation explains the cluster
+/// at once.  All three knob clusters below (robust, drift/replan,
+/// comm-fault) parse through this helper.
+fn require_gate(args: &Args, gate: &str, group: &[&str]) -> Result<()> {
+    if args.has(gate) || args.get(gate).is_some() {
+        return Ok(());
+    }
+    for k in group {
+        if args.get(k).is_some() {
+            let listed = group
+                .iter()
+                .map(|g| format!("--{g}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            bail!(
+                "--{k} only applies with --{gate} \
+                 ({gate} flag group: {listed})"
+            );
+        }
+    }
+    Ok(())
+}
 
 /// How backward-p2 work is issued (paper Fig 2 / Table 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -117,11 +145,12 @@ impl RunConfig {
             comm_timeout_ms: args.get_usize("comm-timeout-ms", 5000) as u64,
             comm_backoff_ms: args.get_usize("comm-backoff-ms", 10) as u64,
             fault: args.get("fault").map(String::from),
-            comm_drop_prob: args.get_f64("comm-drop-prob", 0.0),
-            comm_delay_ns: args.get_usize("comm-delay-ns", 0) as u64,
-            comm_fault_seed: args.get_usize("comm-fault-seed", 0) as u64,
             ..RunConfig::default()
         };
+        let comm_fault = CommFaultConfig::from_args(args)?;
+        cfg.comm_drop_prob = comm_fault.drop_prob;
+        cfg.comm_delay_ns = comm_fault.delay_ns;
+        cfg.comm_fault_seed = comm_fault.seed;
         if let Some(kind) = args
             .get_parsed::<ScheduleKind>("schedule")
             .map_err(|e| anyhow::anyhow!(e))?
@@ -143,18 +172,6 @@ impl RunConfig {
                  it needs --synthetic"
             );
         }
-        if !(0.0..=1.0).contains(&cfg.comm_drop_prob) {
-            bail!("--comm-drop-prob must be in [0, 1]");
-        }
-        if args.get("comm-fault-seed").is_some()
-            && cfg.comm_drop_prob == 0.0
-            && cfg.comm_delay_ns == 0
-        {
-            bail!(
-                "--comm-fault-seed only applies with --comm-drop-prob \
-                 or --comm-delay-ns"
-            );
-        }
         Ok(cfg)
     }
 
@@ -164,6 +181,164 @@ impl RunConfig {
         } else {
             self.n_microbatches
         }
+    }
+}
+
+/// The seeded comm-chaos knob cluster
+/// (`--comm-drop-prob/--comm-delay-ns/--comm-fault-seed`), parsed as a
+/// unit.  A seed with nothing to seed is a typo'd run, so an orphaned
+/// `--comm-fault-seed` is rejected with the whole group named.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommFaultConfig {
+    /// Probability each p2p send is silently dropped (0 disables).
+    pub drop_prob: f64,
+    /// Fixed delay per delivered send, nanoseconds.
+    pub delay_ns: u64,
+    /// Seed for the injector (drops/delays are a pure function of this
+    /// seed, the link, and the send index).
+    pub seed: u64,
+}
+
+impl CommFaultConfig {
+    pub fn from_args(args: &Args) -> Result<CommFaultConfig> {
+        let cfg = CommFaultConfig {
+            drop_prob: args.get_f64("comm-drop-prob", 0.0),
+            delay_ns: args.get_usize("comm-delay-ns", 0) as u64,
+            seed: args.get_usize("comm-fault-seed", 0) as u64,
+        };
+        if !(0.0..=1.0).contains(&cfg.drop_prob) {
+            bail!("--comm-drop-prob must be in [0, 1]");
+        }
+        if args.get("comm-fault-seed").is_some()
+            && cfg.drop_prob == 0.0
+            && cfg.delay_ns == 0
+        {
+            bail!(
+                "--comm-fault-seed only applies with --comm-drop-prob \
+                 or --comm-delay-ns (comm-fault flag group: \
+                 --comm-drop-prob, --comm-delay-ns, --comm-fault-seed)"
+            );
+        }
+        Ok(cfg)
+    }
+}
+
+/// Parse `--straggler <rank>:<mult>[,<rank>:<mult>...]` into the
+/// per-rank slowdown pairs of [`Perturbation::stragglers`].
+pub fn parse_stragglers(s: &str) -> Result<Vec<(usize, f64)>> {
+    s.split(',')
+        .map(|part| {
+            let (r, m) = part.split_once(':').ok_or_else(|| {
+                anyhow!("bad --straggler '{part}': expected <rank>:<mult>")
+            })?;
+            let rank = r
+                .trim()
+                .parse::<usize>()
+                .map_err(|e| anyhow!("bad --straggler rank '{r}': {e}"))?;
+            let mult = m
+                .trim()
+                .parse::<f64>()
+                .map_err(|e| anyhow!("bad --straggler mult '{m}': {e}"))?;
+            if mult <= 0.0 {
+                return Err(anyhow!(
+                    "bad --straggler mult '{m}': must be > 0"
+                ));
+            }
+            Ok((rank, mult))
+        })
+        .collect()
+}
+
+/// Which flags the `--robust` gate unlocks (shared by the parser, its
+/// rejection messages, and the serve daemon's docs).
+pub const ROBUST_FLAG_GROUP: [&str; 6] = [
+    "jitter", "straggler", "spike-prob", "spike-mult", "pert-seed",
+    "trials",
+];
+
+/// The `--robust` tail-objective flag cluster, parsed as a unit:
+/// `objective` is `None` without the gate flag (orphaned perturbation
+/// knobs rejected through [`require_gate`] with the whole group
+/// listed), `Some` with it — jitter defaulting to 0.05 and the rest to
+/// the [`Perturbation`]/[`RobustObjective`] defaults.
+#[derive(Debug, Clone, Default)]
+pub struct RobustConfig {
+    pub objective: Option<RobustObjective>,
+}
+
+impl RobustConfig {
+    pub fn from_args(args: &Args) -> Result<RobustConfig> {
+        require_gate(args, "robust", &ROBUST_FLAG_GROUP)?;
+        if !args.has("robust") {
+            return Ok(RobustConfig::default());
+        }
+        let base = Perturbation::default();
+        let pert = Perturbation {
+            jitter: args.get_f64("jitter", 0.05),
+            stragglers: match args.get("straggler") {
+                Some(s) => parse_stragglers(s)?,
+                None => Vec::new(),
+            },
+            comm_spike_prob: args.get_f64("spike-prob", base.comm_spike_prob),
+            comm_spike_mult: args.get_f64("spike-mult", base.comm_spike_mult),
+            seed: args.get_usize("pert-seed", base.seed as usize) as u64,
+        };
+        if !(0.0..=1.0).contains(&pert.comm_spike_prob) {
+            return Err(anyhow!("--spike-prob must be in [0, 1]"));
+        }
+        let defaults = RobustObjective::default();
+        Ok(RobustConfig {
+            objective: Some(RobustObjective {
+                pert,
+                trials: args.get_usize("trials", defaults.trials).max(1),
+            }),
+        })
+    }
+}
+
+/// The `--replan` drift-monitor knob cluster
+/// (`--drift-threshold/--drift-window/--max-replans/--drift-cooldown`),
+/// parsed as a unit and kept as raw values so `twobp tune` parses
+/// without the pjrt feature; `pipeline::DriftConfig` mirrors the
+/// fields.  Orphaned knobs are rejected through [`require_gate`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftFlags {
+    /// Relative slowdown that counts as a slow step.
+    pub threshold: f64,
+    /// Consecutive slow steps before replanning (>= 1).
+    pub window: usize,
+    /// Replans allowed per run.
+    pub max_replans: usize,
+    /// Post-replan steps ignored by the monitor.
+    pub cooldown: usize,
+}
+
+impl Default for DriftFlags {
+    fn default() -> Self {
+        // mirrors pipeline::DriftConfig::default()
+        DriftFlags { threshold: 0.3, window: 2, max_replans: 1, cooldown: 1 }
+    }
+}
+
+impl DriftFlags {
+    pub fn from_args(args: &Args) -> Result<DriftFlags> {
+        require_gate(
+            args,
+            "replan",
+            &["drift-threshold", "drift-window", "max-replans",
+              "drift-cooldown"],
+        )?;
+        let d = DriftFlags::default();
+        let cfg = DriftFlags {
+            threshold: args.get_f64("drift-threshold", d.threshold),
+            window: args.get_usize("drift-window", d.window).max(1),
+            max_replans: args.get_usize("max-replans", d.max_replans),
+            cooldown: args.get_usize("drift-cooldown", d.cooldown),
+        };
+        if cfg.threshold <= 0.0 {
+            bail!("--drift-threshold must be > 0");
+        }
+        Ok(cfg)
     }
 }
 
@@ -187,18 +362,11 @@ pub struct CalibConfig {
     pub seed: u64,
     /// Run the self-healing loop (`--replan`): execute in one-step
     /// chunks under a drift monitor, re-calibrating + re-tuning when
-    /// measured makespans pull away from the prediction.  The knobs
-    /// below mirror `pipeline::DriftConfig` (kept as raw values here
-    /// so `twobp tune --help` parses without the pjrt feature).
+    /// measured makespans pull away from the prediction.
     pub replan: bool,
-    /// Relative slowdown that counts as a slow step (`--drift-threshold`).
-    pub drift_threshold: f64,
-    /// Consecutive slow steps before replanning (`--drift-window`).
-    pub drift_window: usize,
-    /// Replans allowed per run (`--max-replans`).
-    pub max_replans: usize,
-    /// Post-replan steps ignored by the monitor (`--drift-cooldown`).
-    pub drift_cooldown: usize,
+    /// The drift-monitor knob cluster (parsed via
+    /// [`DriftFlags::from_args`], gated on `--replan`).
+    pub drift: DriftFlags,
 }
 
 impl CalibConfig {
@@ -227,34 +395,15 @@ impl CalibConfig {
                  manifests don't change cost mid-run offline)"
             );
         }
-        let cfg = CalibConfig {
+        Ok(CalibConfig {
             synthetic,
             manifest_dir,
             calib_steps: args.get_usize("calib-steps", 2).max(2),
             exec_steps: args.get_usize("steps", 2).max(1),
             seed: args.get_usize("seed", 0) as u64,
             replan,
-            drift_threshold: args.get_f64("drift-threshold", 0.3),
-            drift_window: args.get_usize("drift-window", 2).max(1),
-            max_replans: args.get_usize("max-replans", 1),
-            drift_cooldown: args.get_usize("drift-cooldown", 1),
-        };
-        if !replan {
-            for (flag, set) in [
-                ("drift-threshold", args.get("drift-threshold").is_some()),
-                ("drift-window", args.get("drift-window").is_some()),
-                ("max-replans", args.get("max-replans").is_some()),
-                ("drift-cooldown", args.get("drift-cooldown").is_some()),
-            ] {
-                if set {
-                    bail!("--{flag} only applies with --replan");
-                }
-            }
-        }
-        if cfg.drift_threshold <= 0.0 {
-            bail!("--drift-threshold must be > 0");
-        }
-        Ok(cfg)
+            drift: DriftFlags::from_args(args)?,
+        })
     }
 
     /// Split a `--manifest <artifacts-root>/<preset>` path into the
@@ -419,20 +568,17 @@ mod tests {
         ))
         .unwrap();
         assert!(c.replan);
-        assert_eq!(c.drift_threshold, 0.5);
-        assert_eq!(c.drift_window, 3);
-        assert_eq!(c.max_replans, 2);
-        assert_eq!(c.drift_cooldown, 0);
+        assert_eq!(c.drift.threshold, 0.5);
+        assert_eq!(c.drift.window, 3);
+        assert_eq!(c.drift.max_replans, 2);
+        assert_eq!(c.drift.cooldown, 0);
         // defaults mirror pipeline::DriftConfig::default()
         let d = CalibConfig::from_args(&Args::parse(
             &sv(&["--synthetic", "--replan"]),
             &flags,
         ))
         .unwrap();
-        assert_eq!(d.drift_threshold, 0.3);
-        assert_eq!(d.drift_window, 2);
-        assert_eq!(d.max_replans, 1);
-        assert_eq!(d.drift_cooldown, 1);
+        assert_eq!(d.drift, DriftFlags::default());
         // --replan needs --synthetic; drift knobs need --replan
         for argv in [
             vec!["--manifest", "artifacts/bert-s", "--replan"],
@@ -445,6 +591,126 @@ mod tests {
                 "{argv:?}"
             );
         }
+    }
+
+    #[test]
+    fn drift_knobs_rejected_with_group_message() {
+        // one rejection per knob in the cluster, each naming the group
+        for k in ["drift-threshold", "drift-window", "max-replans",
+                  "drift-cooldown"] {
+            let argv = vec![format!("--{k}"), "2".to_string()];
+            let args = Args::parse(&argv, &["replan"]);
+            let err = DriftFlags::from_args(&args).unwrap_err().to_string();
+            assert!(
+                err.contains(&format!("--{k} only applies with --replan")),
+                "{k}: {err}"
+            );
+            assert!(err.contains("replan flag group:"), "{k}: {err}");
+            assert!(err.contains("--drift-cooldown"), "{k}: {err}");
+        }
+    }
+
+    #[test]
+    fn robust_config_parses_the_cluster() {
+        let flags = ["robust"];
+        // without the gate: no objective
+        let none =
+            RobustConfig::from_args(&Args::parse(&sv(&[]), &flags)).unwrap();
+        assert!(none.objective.is_none());
+        // gate alone: library defaults with the CLI's 5% jitter
+        let bare =
+            RobustConfig::from_args(&Args::parse(&sv(&["--robust"]), &flags))
+                .unwrap()
+                .objective
+                .unwrap();
+        assert_eq!(bare.pert.jitter, 0.05);
+        assert!(bare.pert.stragglers.is_empty());
+        assert!(bare.trials >= 1);
+        // full cluster
+        let full = RobustConfig::from_args(&Args::parse(
+            &sv(&["--robust", "--jitter", "0.1", "--straggler",
+                  "1:1.5,3:2.0", "--spike-prob", "0.2", "--spike-mult",
+                  "8", "--pert-seed", "7", "--trials", "5"]),
+            &flags,
+        ))
+        .unwrap()
+        .objective
+        .unwrap();
+        assert_eq!(full.pert.jitter, 0.1);
+        assert_eq!(full.pert.stragglers, vec![(1, 1.5), (3, 2.0)]);
+        assert_eq!(full.pert.comm_spike_prob, 0.2);
+        assert_eq!(full.pert.comm_spike_mult, 8.0);
+        assert_eq!(full.pert.seed, 7);
+        assert_eq!(full.trials, 5);
+        // --trials 0 is clamped, not an error
+        let clamped = RobustConfig::from_args(&Args::parse(
+            &sv(&["--robust", "--trials", "0"]),
+            &flags,
+        ))
+        .unwrap()
+        .objective
+        .unwrap();
+        assert_eq!(clamped.trials, 1);
+    }
+
+    #[test]
+    fn robust_knobs_rejected_with_group_message() {
+        for k in ROBUST_FLAG_GROUP {
+            let argv = vec![format!("--{k}"), "1".to_string()];
+            let args = Args::parse(&argv, &["robust"]);
+            let err = RobustConfig::from_args(&args).unwrap_err().to_string();
+            assert!(
+                err.contains(&format!("--{k} only applies with --robust")),
+                "{k}: {err}"
+            );
+            assert!(err.contains("robust flag group:"), "{k}: {err}");
+            assert!(err.contains("--pert-seed"), "{k}: {err}");
+        }
+        // malformed members of the cluster still fail under the gate
+        for argv in [
+            vec!["--robust", "--straggler", "nonsense"],
+            vec!["--robust", "--straggler", "1:0"],
+            vec!["--robust", "--spike-prob", "1.5"],
+        ] {
+            assert!(
+                RobustConfig::from_args(&Args::parse(&sv(&argv),
+                                                     &["robust"]))
+                    .is_err(),
+                "{argv:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn comm_fault_config_parses_and_gates_the_seed() {
+        let cfg = CommFaultConfig::from_args(&Args::parse(
+            &sv(&["--comm-drop-prob", "0.25", "--comm-delay-ns", "1000",
+                  "--comm-fault-seed", "7"]),
+            &[],
+        ))
+        .unwrap();
+        assert_eq!(cfg, CommFaultConfig {
+            drop_prob: 0.25, delay_ns: 1000, seed: 7,
+        });
+        assert_eq!(
+            CommFaultConfig::from_args(&Args::parse(&sv(&[]), &[])).unwrap(),
+            CommFaultConfig::default(),
+        );
+        // orphaned seed: rejected, message lists the group
+        let err = CommFaultConfig::from_args(&Args::parse(
+            &sv(&["--comm-fault-seed", "7"]),
+            &[],
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--comm-fault-seed only applies"), "{err}");
+        assert!(err.contains("comm-fault flag group:"), "{err}");
+        // out-of-range probability
+        assert!(CommFaultConfig::from_args(&Args::parse(
+            &sv(&["--comm-drop-prob", "1.5"]),
+            &[],
+        ))
+        .is_err());
     }
 
     #[test]

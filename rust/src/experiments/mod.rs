@@ -23,8 +23,7 @@ use anyhow::{anyhow, Result};
 use anyhow::Context;
 #[cfg(feature = "pjrt")]
 use crate::config::{P2Mode, RunConfig, BENCH_PRESETS};
-#[cfg(feature = "pjrt")]
-use crate::metrics::registry::MetricsRegistry;
+use crate::metrics::observer::{NullObserver, Observer};
 #[cfg(feature = "pjrt")]
 use crate::metrics::{memory_table, throughput_table, MemoryRow, ThroughputRow};
 use crate::models::Manifest;
@@ -684,7 +683,7 @@ pub struct CalibratedTune {
 /// order, and counters are pure functions of the run shape.
 #[cfg(feature = "pjrt")]
 pub fn record_calibration(
-    m: &mut MetricsRegistry,
+    m: &mut dyn Observer,
     costs: &CostModel,
     steps: usize,
 ) {
@@ -723,7 +722,7 @@ fn verdict_slug(v: crate::pipeline::Verdict) -> &'static str {
 /// ([`tune_replan`]) and the passive path ([`record_passive_drift`]).
 #[cfg(feature = "pjrt")]
 fn record_drift_step(
-    m: &mut MetricsRegistry,
+    m: &mut dyn Observer,
     step: usize,
     measured: f64,
     predicted: f64,
@@ -754,7 +753,7 @@ fn record_drift_step(
 /// every run log that watched for drift.
 #[cfg(feature = "pjrt")]
 pub fn record_passive_drift(
-    m: &mut MetricsRegistry,
+    m: &mut dyn Observer,
     report: &crate::pipeline::RunReport,
     predicted: f64,
     cfg: crate::pipeline::DriftConfig,
@@ -777,7 +776,10 @@ pub fn record_passive_drift(
 /// overridden so the execution half sees the same data stream the
 /// calibration measured); its schedule fields are ignored — the tuned
 /// plan is the schedule.  Candidate evaluation inside the tune fans
-/// out over the parallel sweep runner ([`sweep::run_grid_with`]).
+/// out over the parallel sweep runner
+/// ([`sweep::run_grid_with_pool`]).  Telemetry flows through the
+/// [`Observer`] sink — pass a `MetricsRegistry` to record, a
+/// [`NullObserver`] to run silent.
 #[cfg(feature = "pjrt")]
 pub fn tune_and_execute(
     cluster: &crate::pipeline::Cluster,
@@ -785,12 +787,14 @@ pub fn tune_and_execute(
     profile: &crate::planner::TuneProfile,
     cfg: &crate::planner::BeamConfig,
     exec_cfg: &RunConfig,
-    obs: Option<&mut MetricsRegistry>,
+    obs: &mut dyn Observer,
 ) -> Result<CalibratedTune> {
     use crate::pipeline::verify_report_against_sim;
 
     let report =
-        crate::planner::tune_with(profile, manifest.n_stages, cfg, obs)
+        crate::planner::TuneRequest::new(profile, manifest.n_stages,
+                                         cfg.clone())
+            .run(obs)
             .map_err(|e| anyhow!("planner: {e}"))?;
     let exec_steps = exec_cfg.steps.max(1);
     let exec_cfg = RunConfig { steps: exec_steps, ..exec_cfg.clone() };
@@ -865,12 +869,14 @@ pub fn tune_calibrated(steps: usize) -> Result<String> {
 
         let mut rows: Vec<(Option<u64>, CalibratedTune)> = Vec::new();
         let un = tune_and_execute(&cluster, manifest, &profile,
-                                  &beam(None), &base, None)?;
+                                  &beam(None), &base, &mut NullObserver)?;
         let full_peak = un.report.best.max_peak;
         rows.push((None, un));
         let budget = full_peak * 85 / 100;
-        let bounded = tune_and_execute(&cluster, manifest, &profile,
-                                       &beam(Some(budget)), &base, None)?;
+        let bounded =
+            tune_and_execute(&cluster, manifest, &profile,
+                             &beam(Some(budget)), &base,
+                             &mut NullObserver)?;
         rows.push((Some(budget), bounded));
 
         let mut t = Table::new(&[
@@ -943,7 +949,7 @@ pub fn tune_calibrated(steps: usize) -> Result<String> {
 pub fn tune_replan(
     steps: usize,
     drift_cfg: crate::pipeline::DriftConfig,
-    mut obs: Option<&mut MetricsRegistry>,
+    obs: &mut dyn Observer,
 ) -> Result<String> {
     use crate::models::synthetic::{with_temp_artifacts, SyntheticSpec};
     use crate::pipeline::{verify_report_against_sim, DriftMonitor, Verdict};
@@ -971,12 +977,10 @@ pub fn tune_replan(
             ..BeamConfig::default()
         };
         let retune = |label: &str,
-                      mut obs: Option<&mut MetricsRegistry>|
+                      obs: &mut dyn Observer|
          -> Result<crate::planner::TuneReport> {
             let (costs, _) = cluster.calibrate(&base)?;
-            if let Some(m) = obs.as_deref_mut() {
-                record_calibration(m, &costs, base.steps);
-            }
+            record_calibration(obs, &costs, base.steps);
             let profile = TuneProfile::from_measured(
                 format!("measured:{}:{label}", manifest.preset),
                 costs,
@@ -984,11 +988,13 @@ pub fn tune_replan(
                 manifest.samples_per_microbatch,
             )
             .map_err(|e| anyhow!(e))?;
-            crate::planner::tune_with(&profile, manifest.n_stages, &beam, obs)
+            crate::planner::TuneRequest::new(&profile, manifest.n_stages,
+                                             beam.clone())
+                .run(obs)
                 .map_err(|e| anyhow!("planner: {e}"))
         };
 
-        let initial = retune("t0", obs.as_deref_mut())?;
+        let initial = retune("t0", &mut *obs)?;
         let stale_plan = initial.best.plan.clone();
         let mut plan = initial.best.plan.clone();
         let mut monitor = DriftMonitor::new(drift_cfg.clone(),
@@ -1023,14 +1029,12 @@ pub fn tune_replan(
             }
             let measured = step_makespan(&rep, 1);
             let verdict = monitor.observe(measured);
-            if let Some(m) = obs.as_deref_mut() {
-                m.counter_add("drift.replan_events", 0);
-                record_drift_step(
-                    m, step, measured, monitor.predicted(), verdict,
-                );
-                if verdict == Verdict::Replan {
-                    m.counter_add("drift.replan_events", 1);
-                }
+            obs.counter_add("drift.replan_events", 0);
+            record_drift_step(
+                &mut *obs, step, measured, monitor.predicted(), verdict,
+            );
+            if verdict == Verdict::Replan {
+                obs.counter_add("drift.replan_events", 1);
             }
             t.row(vec![
                 step.to_string(),
@@ -1046,7 +1050,7 @@ pub fn tune_replan(
             }
             if verdict == Verdict::Replan {
                 let report =
-                    retune(&format!("t{}", step + 1), obs.as_deref_mut())?;
+                    retune(&format!("t{}", step + 1), &mut *obs)?;
                 plan = report.best.plan.clone();
                 monitor.rearm(report.best.makespan);
                 retuned = Some(report);
@@ -1121,7 +1125,7 @@ pub fn tune_replan(
 #[cfg(feature = "pjrt")]
 pub fn fault_sweep(
     steps: usize,
-    mut obs: Option<&mut MetricsRegistry>,
+    obs: &mut dyn Observer,
 ) -> Result<String> {
     use anyhow::{bail, ensure};
 
@@ -1252,14 +1256,14 @@ pub fn fault_sweep(
                 let goodput =
                     total_steps as f64 / (detect_s + recovery_s).max(1e-12);
                 goodputs.push(goodput);
-                if let Some(reg) = obs.as_deref_mut() {
-                    reg.counter_add("fault.cells", 1);
-                    reg.counter_add(
-                        &format!("fault.injected.{kind_slug}"), 1);
-                    reg.counter_add(
-                        &format!("fault.detected.{detected_as}"), 1);
-                    reg.counter_add("fault.recovered", 1);
-                    reg.event_mixed(
+                obs.counter_add("fault.cells", 1);
+                obs.counter_add(
+                    &format!("fault.injected.{kind_slug}"), 1);
+                obs.counter_add(
+                    &format!("fault.detected.{detected_as}"), 1);
+                obs.counter_add("fault.recovered", 1);
+                if obs.enabled() {
+                    obs.event_mixed(
                         "fault.cell",
                         vec![
                             ("cell", cell_idx.into()),
@@ -1615,17 +1619,19 @@ pub fn fig6_fig7(steps: usize, preset: &str) -> Result<String> {
     Ok(t.render())
 }
 
-/// `twobp bench <exp>` dispatcher.
+/// `twobp bench <exp>` dispatcher (telemetry-free: runs every
+/// experiment against a [`NullObserver`]).
 pub fn run_experiment(name: &str, steps: usize) -> Result<String> {
-    run_experiment_with(name, steps, None)
+    run_experiment_with(name, steps, &mut NullObserver)
 }
 
-/// [`run_experiment`] with an optional metrics observer (`twobp bench
-/// faults --metrics-out`); experiments that record nothing ignore it.
+/// [`run_experiment`] with a metrics [`Observer`] (`twobp bench faults
+/// --metrics-out` passes the registry); experiments that record
+/// nothing ignore it.
 pub fn run_experiment_with(
     name: &str,
     steps: usize,
-    obs: Option<&mut crate::metrics::registry::MetricsRegistry>,
+    obs: &mut dyn Observer,
 ) -> Result<String> {
     let _ = &obs;
     match name {
@@ -1642,9 +1648,11 @@ pub fn run_experiment_with(
         #[cfg(feature = "pjrt")]
         "tune-calibrated" | "tune_calibrated" => tune_calibrated(steps),
         #[cfg(feature = "pjrt")]
-        "replan" | "drift" => {
-            tune_replan(steps, crate::pipeline::DriftConfig::default(), None)
-        }
+        "replan" | "drift" => tune_replan(
+            steps,
+            crate::pipeline::DriftConfig::default(),
+            &mut NullObserver,
+        ),
         #[cfg(feature = "pjrt")]
         "faults" | "fault" => fault_sweep(steps, obs),
         #[cfg(feature = "pjrt")]

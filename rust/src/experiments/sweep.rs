@@ -65,7 +65,34 @@ pub fn run_grid_with<C, R, S, I, F>(
 where
     C: Sync,
     R: Send,
+    S: Send,
     I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &C) -> R + Sync,
+{
+    run_grid_with_pool(cells, threads, &mut Vec::new(), init, f)
+}
+
+/// [`run_grid_with`] against a **caller-owned state pool**: worker
+/// states are borrowed from `pool` (topped up with `init` to the
+/// worker count) instead of being rebuilt per call, so a long-lived
+/// caller — the `serve` engine scoring job after job — pays the
+/// scratch warm-up once and every later grid reuses the grown
+/// buffers.  States the pool holds beyond the worker count are left
+/// untouched.  The per-worker state contract is unchanged: results
+/// must not depend on which state evaluated a cell, and they return
+/// in cell order regardless of thread count.
+pub fn run_grid_with_pool<C, R, S, I, F>(
+    cells: &[C],
+    threads: usize,
+    pool: &mut Vec<S>,
+    init: I,
+    f: F,
+) -> Vec<R>
+where
+    C: Sync,
+    R: Send,
+    S: Send,
+    I: Fn() -> S,
     F: Fn(&mut S, usize, &C) -> R + Sync,
 {
     let n = cells.len();
@@ -73,33 +100,40 @@ where
         return Vec::new();
     }
     let workers = threads.max(1).min(n);
+    while pool.len() < workers {
+        pool.push(init());
+    }
     if workers == 1 {
-        let mut state = init();
+        let state = &mut pool[0];
         return cells
             .iter()
             .enumerate()
-            .map(|(i, c)| f(&mut state, i, c))
+            .map(|(i, c)| f(state, i, c))
             .collect();
     }
 
     let cursor = AtomicUsize::new(0);
     let collected: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| {
-                let mut state = init();
-                let mut local: Vec<(usize, R)> = Vec::new();
-                loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+    {
+        let cursor = &cursor;
+        let collected = &collected;
+        let f = &f;
+        std::thread::scope(|scope| {
+            for state in pool.iter_mut().take(workers) {
+                scope.spawn(move || {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(state, i, &cells[i])));
                     }
-                    local.push((i, f(&mut state, i, &cells[i])));
-                }
-                collected.lock().unwrap().extend(local);
-            });
-        }
-    });
+                    collected.lock().unwrap().extend(local);
+                });
+            }
+        });
+    }
     let mut got = collected.into_inner().unwrap();
     debug_assert_eq!(got.len(), n, "sweep lost cells");
     got.sort_by_key(|(i, _)| *i);
@@ -313,6 +347,40 @@ mod tests {
             );
             assert_eq!(out, (0..53).map(|c| c * 2).collect::<Vec<_>>());
         }
+    }
+
+    #[test]
+    fn run_grid_with_pool_reuses_and_tops_up_states() {
+        let cells: Vec<usize> = (0..23).collect();
+        let mut pool: Vec<usize> = Vec::new();
+        // first call builds exactly `workers` states...
+        let out = run_grid_with_pool(&cells, 4, &mut pool, || 0usize,
+                                     |seen, _, &c| {
+                                         *seen += 1;
+                                         c * 2
+                                     });
+        assert_eq!(out, (0..23).map(|c| c * 2).collect::<Vec<_>>());
+        assert_eq!(pool.len(), 4);
+        let warm: usize = pool.iter().sum();
+        assert_eq!(warm, 23, "every cell touched exactly one state");
+        // ...later calls reuse them (no re-init: counts keep growing)
+        let out = run_grid_with_pool(&cells, 4, &mut pool, || 0usize,
+                                     |seen, _, &c| {
+                                         *seen += 1;
+                                         c * 2
+                                     });
+        assert_eq!(out, (0..23).map(|c| c * 2).collect::<Vec<_>>());
+        assert_eq!(pool.len(), 4);
+        assert_eq!(pool.iter().sum::<usize>(), 46);
+        // single-worker calls use pool[0] and leave the rest alone
+        let before = pool.clone();
+        run_grid_with_pool(&cells, 1, &mut pool, || 0usize,
+                           |seen, _, &c| {
+                               *seen += 1;
+                               c
+                           });
+        assert_eq!(pool[0], before[0] + 23);
+        assert_eq!(&pool[1..], &before[1..]);
     }
 
     #[test]

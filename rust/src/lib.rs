@@ -45,9 +45,15 @@
 //! * [`models`]   — artifact manifest parsing (shapes, byte classes, flops)
 //! * [`pipeline`] — the real distributed executor + memory accountant
 //! * [`config`]   — run configuration and Table-2 presets
-//! * [`metrics`]  — throughput/bubble/memory reporting + the
+//! * [`metrics`]  — throughput/bubble/memory reporting, the
 //!   deterministic metrics registry behind `--metrics-out`
-//!   ([`metrics::registry`]; `docs/OBSERVABILITY.md`)
+//!   ([`metrics::registry`]; `docs/OBSERVABILITY.md`), and the
+//!   [`metrics::observer`] sink the tune API records through
+//! * [`serve`]    — the persistent tuning service behind `twobp serve`:
+//!   line-delimited JSON jobs over stdin/a Unix socket, a deadline- and
+//!   dependency-aware priority queue, a fingerprint-keyed result cache
+//!   over resident profiles/scratch, and a replayable job log
+//!   (`docs/SERVE.md`)
 //! * [`util`]     — substrates: mini-JSON, PRNG, stats, tables, CLI
 //!   args, Chrome-trace export ([`util::trace`], behind `--trace-out`
 //!   and `twobp trace`)
@@ -62,6 +68,7 @@ pub mod pipeline;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

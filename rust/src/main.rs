@@ -56,6 +56,18 @@
 //!                 |sweep|planner> [--steps N]
 //!                [--metrics-out FILE.jsonl]  (faults only: the
 //!                 fault-recovery sweep's deterministic `fault.*` log)
+//! twobp serve    [--socket PATH] [--log FILE] [--threads K]
+//!                [--metrics-out FILE.jsonl]
+//!                 (persistent tuning service: line-delimited JSON jobs
+//!                 — calibrate/tune/score/gantt/shutdown — read from
+//!                 stdin or a Unix socket, scheduled by deadline +
+//!                 priority with calibration-gated dependencies,
+//!                 answered one sorted-key JSON line per job; results
+//!                 cached on request × profile fingerprints and
+//!                 profiles/scratch kept resident across jobs; see
+//!                 docs/SERVE.md)
+//! twobp serve    --replay LOG  (re-execute an accepted-job log;
+//!                 responses are byte-identical modulo "wall")
 //! twobp config   --list
 //! ```
 //!
@@ -64,12 +76,12 @@
 
 use anyhow::{anyhow, Result};
 
-use twobp::config::table2;
+use twobp::config::{table2, RobustConfig};
+use twobp::metrics::observer::{observer_or, NullObserver};
 use twobp::metrics::registry::MetricsRegistry;
-use twobp::planner::{tune_with, BeamConfig, RobustObjective, TuneProfile,
-                     TuneReport};
+use twobp::planner::{BeamConfig, TuneProfile, TuneReport, TuneRequest};
 use twobp::schedule::{generate, plan_io, validate::validate, ScheduleKind};
-use twobp::sim::{simulate, CostModel, Perturbation};
+use twobp::sim::{simulate, CostModel};
 use twobp::util::args::Args;
 use twobp::util::gantt;
 use twobp::util::stats::{fmt_bytes, parse_bytes};
@@ -90,6 +102,7 @@ fn main() {
         "tune" => cmd_tune(&args),
         "trace" => cmd_trace(&args),
         "bench" => cmd_bench(&args),
+        "serve" => twobp::serve::run_cli(&args),
         "config" => {
             println!("{}", table2().render());
             Ok(())
@@ -97,7 +110,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: twobp <train|gantt|simulate|sweep|tune|trace|bench\
-                 |config> [options]\n\
+                 |serve|config> [options]\n\
                  see `cargo doc` or README.md for details"
             );
             std::process::exit(2);
@@ -400,67 +413,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Parse `--straggler <rank>:<mult>[,<rank>:<mult>...]` into the
-/// per-rank slowdown pairs of [`Perturbation::stragglers`].
-fn parse_stragglers(s: &str) -> Result<Vec<(usize, f64)>> {
-    s.split(',')
-        .map(|part| {
-            let (r, m) = part.split_once(':').ok_or_else(|| {
-                anyhow!("bad --straggler '{part}': expected <rank>:<mult>")
-            })?;
-            let rank = r
-                .trim()
-                .parse::<usize>()
-                .map_err(|e| anyhow!("bad --straggler rank '{r}': {e}"))?;
-            let mult = m
-                .trim()
-                .parse::<f64>()
-                .map_err(|e| anyhow!("bad --straggler mult '{m}': {e}"))?;
-            if mult <= 0.0 {
-                return Err(anyhow!(
-                    "bad --straggler mult '{m}': must be > 0"
-                ));
-            }
-            Ok((rank, mult))
-        })
-        .collect()
-}
-
-/// The `--robust` tail objective from CLI flags; `None` without the
-/// flag (and rejects orphaned perturbation flags, repo convention).
-fn robust_objective_from_args(args: &Args) -> Result<Option<RobustObjective>> {
-    if !args.has("robust") {
-        for k in ["jitter", "straggler", "spike-prob", "spike-mult",
-                  "pert-seed", "trials"] {
-            if args.get(k).is_some() {
-                return Err(anyhow!("--{k} only applies with --robust"));
-            }
-        }
-        return Ok(None);
-    }
-    let base = Perturbation::default();
-    let pert = Perturbation {
-        jitter: args.get_f64("jitter", 0.05),
-        stragglers: match args.get("straggler") {
-            Some(s) => parse_stragglers(s)?,
-            None => Vec::new(),
-        },
-        comm_spike_prob: args.get_f64("spike-prob", base.comm_spike_prob),
-        comm_spike_mult: args.get_f64("spike-mult", base.comm_spike_mult),
-        seed: args.get_usize("pert-seed", base.seed as usize) as u64,
-    };
-    if !(0.0..=1.0).contains(&pert.comm_spike_prob) {
-        return Err(anyhow!("--spike-prob must be in [0, 1]"));
-    }
-    let defaults = RobustObjective::default();
-    Ok(Some(RobustObjective {
-        pert,
-        trials: args.get_usize("trials", defaults.trials).max(1),
-    }))
-}
-
 /// Beam-search hyper-parameters from the shared `twobp tune` flags
-/// (used by both the ratio-profile and calibrated paths).
+/// (used by both the ratio-profile and calibrated paths; the robust
+/// knob cluster parses through [`RobustConfig`] in `config`).
 fn beam_config_from_args(args: &Args) -> Result<BeamConfig> {
     let budget = match args.get("budget") {
         Some(s) => Some(parse_bytes(s).map_err(|e| anyhow!(e))?),
@@ -477,7 +432,7 @@ fn beam_config_from_args(args: &Args) -> Result<BeamConfig> {
         threads: args.get_usize("threads", 0),
         budget_bytes: budget,
         patience: args.get_usize("patience", defaults.patience),
-        robust: robust_objective_from_args(args)?,
+        robust: RobustConfig::from_args(args)?.objective,
     })
 }
 
@@ -604,7 +559,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
     };
     let cfg = beam_config_from_args(args)?;
     let mut obs = args.get("metrics-out").map(|_| MetricsRegistry::new());
-    let report = tune_with(&profile, n, &cfg, obs.as_mut())
+    let mut null = NullObserver;
+    let report = TuneRequest::new(&profile, n, cfg.clone())
+        .run(observer_or(obs.as_mut(), &mut null))
         .map_err(|e| anyhow!(e))?;
 
     println!(
@@ -666,17 +623,18 @@ fn cmd_tune_calibrated(args: &Args) -> Result<()> {
         // drift knobs, the step count, and the metrics observer pass
         // through
         let drift = twobp::pipeline::DriftConfig {
-            threshold: calib.drift_threshold,
-            window: calib.drift_window,
-            max_replans: calib.max_replans,
-            cooldown: calib.drift_cooldown,
+            threshold: calib.drift.threshold,
+            window: calib.drift.window,
+            max_replans: calib.drift.max_replans,
+            cooldown: calib.drift.cooldown,
         };
+        let mut null = NullObserver;
         print!(
             "{}",
             twobp::experiments::tune_replan(
                 calib.exec_steps,
                 drift,
-                obs.as_mut(),
+                observer_or(obs.as_mut(), &mut null),
             )?
         );
         if let (Some(path), Some(m)) = (args.get("metrics-out"), obs.as_ref())
@@ -769,8 +727,10 @@ fn cmd_tune_calibrated(args: &Args) -> Result<()> {
         // the winner executes under the same seed/data stream the
         // calibration measured; only the step count differs
         let exec_cfg = RunConfig { steps: calib.exec_steps, ..base.clone() };
+        let mut null = NullObserver;
         let ct = tune_and_execute(&cluster, manifest, &profile, &beam_cfg,
-                                  &exec_cfg, obs.as_mut())?;
+                                  &exec_cfg,
+                                  observer_or(obs.as_mut(), &mut null))?;
         print_search_summary(&ct.report, &beam_cfg);
         println!(
             "winner executed back on the runtime for {} steps, verified \
@@ -865,8 +825,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ));
     }
     let mut obs = args.get("metrics-out").map(|_| MetricsRegistry::new());
-    let out =
-        twobp::experiments::run_experiment_with(exp, steps, obs.as_mut())?;
+    let mut null = NullObserver;
+    let out = twobp::experiments::run_experiment_with(
+        exp,
+        steps,
+        observer_or(obs.as_mut(), &mut null),
+    )?;
     print!("{out}");
     if let (Some(path), Some(m)) = (args.get("metrics-out"), obs.as_ref()) {
         write_metrics(m, path)?;

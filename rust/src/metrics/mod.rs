@@ -1,6 +1,8 @@
 //! Reporting: turn run reports / sim results into the paper's tables,
-//! plus the deterministic metrics [`registry`] behind `--metrics-out`.
+//! plus the deterministic metrics [`registry`] behind `--metrics-out`
+//! and the [`observer`] sink trait the tune API records through.
 
+pub mod observer;
 pub mod registry;
 
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,192 @@
+//! The telemetry sink abstraction behind the redesigned tune API.
+//!
+//! PR 9 collapses the `Option<&mut MetricsRegistry>` parameter sprawl
+//! that had crept through `planner::tune_with` and the `experiments`
+//! tune paths into one trait: an [`Observer`] is anything that can
+//! absorb the registry's recording surface (counters, gauges,
+//! histograms, events).  Producers take `&mut dyn Observer`
+//! unconditionally; callers that want telemetry pass a
+//! [`MetricsRegistry`], callers that don't pass a [`NullObserver`] —
+//! no `Option`, no `as_deref_mut()` chains, no divergent signatures.
+//!
+//! Contract (inherited from the registry, see `metrics::registry`):
+//!
+//! * Observer calls must never perturb the observed computation — in
+//!   particular the beam search consumes its PRNG only in the mutation
+//!   loop, never inside an observer hook (pinned by
+//!   `telemetry_observes_without_perturbing`).
+//! * Wall-clock-derived values go through the `*_wall` methods and
+//!   nowhere else, preserving the `"wall"` quarantine.
+//! * [`Observer::enabled`] lets producers skip *building* expensive
+//!   field vectors when nobody is listening; a recording observer
+//!   must return `true` or those events are silently dropped at the
+//!   call site.  Cheap static-name counter bumps may be issued
+//!   unconditionally (the null sink discards them for free).
+
+use super::registry::{MetricsRegistry, Value};
+
+/// A sink for deterministic run telemetry.  Every method defaults to a
+/// no-op, so `impl Observer for MySink {}` is a valid null sink and
+/// partial observers override only what they store.
+pub trait Observer {
+    /// `true` if this sink actually records — producers gate the
+    /// construction of non-trivial event payloads on it.
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    /// Add `delta` to a named counter.
+    fn counter_add(&mut self, name: &str, delta: u64) {
+        let _ = (name, delta);
+    }
+
+    /// Set a deterministic gauge (last write wins).
+    fn gauge_set(&mut self, name: &str, value: f64) {
+        let _ = (name, value);
+    }
+
+    /// Set a wall-clock-derived gauge (quarantined under `"wall"`).
+    fn gauge_set_wall(&mut self, name: &str, value: f64) {
+        let _ = (name, value);
+    }
+
+    /// Record one sample into a deterministic histogram.
+    fn hist_record(&mut self, name: &str, value: f64) {
+        let _ = (name, value);
+    }
+
+    /// Record one wall-clock-derived histogram sample.
+    fn hist_record_wall(&mut self, name: &str, value: f64) {
+        let _ = (name, value);
+    }
+
+    /// Record a free-form event with deterministic fields only.
+    fn event(&mut self, name: &str, fields: Vec<(&str, Value)>) {
+        let _ = (name, fields);
+    }
+
+    /// Record an event with both deterministic fields and wall-clock
+    /// fields (the latter nested under `"wall"`).
+    fn event_mixed(
+        &mut self,
+        name: &str,
+        fields: Vec<(&str, Value)>,
+        wall_fields: Vec<(&str, f64)>,
+    ) {
+        let _ = (name, fields, wall_fields);
+    }
+}
+
+/// The "nobody is listening" sink: every hook is the default no-op and
+/// [`Observer::enabled`] stays `false`, so producers skip building
+/// event payloads entirely.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullObserver;
+
+impl Observer for NullObserver {}
+
+impl Observer for MetricsRegistry {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn counter_add(&mut self, name: &str, delta: u64) {
+        MetricsRegistry::counter_add(self, name, delta);
+    }
+
+    fn gauge_set(&mut self, name: &str, value: f64) {
+        MetricsRegistry::gauge_set(self, name, value);
+    }
+
+    fn gauge_set_wall(&mut self, name: &str, value: f64) {
+        MetricsRegistry::gauge_set_wall(self, name, value);
+    }
+
+    fn hist_record(&mut self, name: &str, value: f64) {
+        MetricsRegistry::hist_record(self, name, value);
+    }
+
+    fn hist_record_wall(&mut self, name: &str, value: f64) {
+        MetricsRegistry::hist_record_wall(self, name, value);
+    }
+
+    fn event(&mut self, name: &str, fields: Vec<(&str, Value)>) {
+        MetricsRegistry::event(self, name, fields);
+    }
+
+    fn event_mixed(
+        &mut self,
+        name: &str,
+        fields: Vec<(&str, Value)>,
+        wall_fields: Vec<(&str, f64)>,
+    ) {
+        MetricsRegistry::event_mixed(self, name, fields, wall_fields);
+    }
+}
+
+/// Borrow an optional registry as an observer: the transition shim for
+/// call sites that still hold `Option<&mut MetricsRegistry>` (e.g. CLI
+/// code that only allocates a registry when `--metrics-out` was given).
+/// Returns the registry when present, `fallback` otherwise.
+pub fn observer_or<'a>(
+    obs: Option<&'a mut MetricsRegistry>,
+    fallback: &'a mut NullObserver,
+) -> &'a mut dyn Observer {
+    match obs {
+        Some(m) => m,
+        None => fallback,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_observer_is_disabled_and_inert() {
+        let mut null = NullObserver;
+        assert!(!null.enabled());
+        null.counter_add("x", 3);
+        null.gauge_set("g", 1.0);
+        null.event("e", vec![("k", 1usize.into())]);
+        // nothing to assert beyond "it compiled and didn't panic":
+        // the sink has no state by construction
+    }
+
+    #[test]
+    fn registry_observer_delegates_to_inherent_methods() {
+        let mut reg = MetricsRegistry::new();
+        {
+            let obs: &mut dyn Observer = &mut reg;
+            assert!(obs.enabled());
+            obs.counter_add("c", 2);
+            obs.counter_add("c", 3);
+            obs.gauge_set("g", 4.0);
+            obs.gauge_set_wall("gw", 0.5);
+            obs.hist_record("h", 1.0);
+            obs.hist_record_wall("hw", 2.0);
+            obs.event("e", vec![("k", Value::from(7usize))]);
+            obs.event_mixed("m", vec![("d", 1i64.into())],
+                            vec![("w", 0.25)]);
+        }
+        assert_eq!(reg.counter("c"), 5);
+        assert_eq!(reg.n_events(), 2);
+        let log = reg.to_jsonl();
+        assert!(log.contains("\"name\":\"g\",\"value\":4"), "{log}");
+        assert!(log.contains("\"name\":\"gw\",\"wall\":{\"value\":0.5}"),
+                "{log}");
+        assert!(log.contains("\"name\":\"m\""), "{log}");
+        assert!(log.contains("\"wall\":{\"w\":0.25}"), "{log}");
+    }
+
+    #[test]
+    fn observer_or_picks_registry_or_fallback() {
+        let mut null = NullObserver;
+        let mut reg = MetricsRegistry::new();
+        observer_or(Some(&mut reg), &mut null).counter_add("c", 1);
+        assert_eq!(reg.counter("c"), 1);
+        let mut null2 = NullObserver;
+        let obs = observer_or(None, &mut null2);
+        assert!(!obs.enabled());
+    }
+}

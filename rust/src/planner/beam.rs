@@ -25,18 +25,27 @@
 //! Everything is deterministic for a fixed [`BeamConfig::seed`]: the
 //! PRNG is consumed only in the sequential mutation loop, candidate
 //! evaluation fans out through the order-preserving
-//! `experiments::sweep::run_grid_with`, the candidate pool and dedup
-//! sets are keyed by [`Plan::fingerprint`] (a stable structural hash —
-//! no per-candidate DSL serialization or `String` clone), and ranking
-//! ties break on canonical DSL text, computed lazily only when two
-//! candidates actually tie on (throughput, peak).  Thread count never
-//! changes the result, and for a fixed seed the winner is the same plan
-//! the text-keyed implementation found.
+//! `experiments::sweep::run_grid_with_pool`, the candidate pool and
+//! dedup sets are keyed by [`Plan::fingerprint`] (a stable structural
+//! hash — no per-candidate DSL serialization or `String` clone), and
+//! ranking ties break on canonical DSL text, computed lazily only when
+//! two candidates actually tie on (throughput, peak).  Thread count
+//! never changes the result, and for a fixed seed the winner is the
+//! same plan the text-keyed implementation found.
+//!
+//! **Entry point** (PR 9 API redesign): one [`TuneRequest`] — profile
+//! + rank count + [`BeamConfig`] — run against any
+//! [`Observer`](crate::metrics::observer::Observer) sink.  The
+//! free-function [`tune`] remains as the telemetry-free convenience
+//! wrapper; the old `tune_with(..., Option<&mut MetricsRegistry>)`
+//! form is gone — pass a `&mut MetricsRegistry` (it implements
+//! `Observer`) or a [`NullObserver`] instead.
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use crate::experiments::sweep::{combos, default_threads, run_grid_with};
-use crate::metrics::registry::MetricsRegistry;
+use crate::experiments::sweep::{combos, default_threads,
+                                run_grid_with_pool};
+use crate::metrics::observer::{NullObserver, Observer};
 use crate::schedule::{generate, plan_io, validate::validate, Plan};
 use crate::sim::{score_plan, score_plan_robust, Perturbation, RobustScratch};
 use crate::util::prng::SplitMix64;
@@ -98,6 +107,97 @@ impl Default for BeamConfig {
             patience: 4,
             robust: None,
         }
+    }
+}
+
+/// The single entry point of the tune API: everything one search needs,
+/// in one value.  `run` it against any
+/// [`Observer`](crate::metrics::observer::Observer) — a
+/// `&mut MetricsRegistry` to record telemetry, a
+/// [`NullObserver`] when nobody is listening — and it returns a
+/// [`TuneOutcome`].  Both the CLI (`twobp tune`) and the `twobp serve`
+/// daemon are thin callers of this type.
+#[derive(Debug, Clone)]
+pub struct TuneRequest<'a> {
+    pub profile: &'a TuneProfile,
+    pub n_ranks: usize,
+    pub beam: BeamConfig,
+}
+
+impl<'a> TuneRequest<'a> {
+    pub fn new(
+        profile: &'a TuneProfile,
+        n_ranks: usize,
+        beam: BeamConfig,
+    ) -> TuneRequest<'a> {
+        TuneRequest { profile, n_ranks, beam }
+    }
+
+    /// Run the search.  `Err` when the profile shape mismatches
+    /// `n_ranks` or when *no* candidate fits the budget.
+    pub fn run(&self, obs: &mut dyn Observer) -> Result<TuneOutcome, String> {
+        self.run_with_pool(obs, &mut Vec::new())
+    }
+
+    /// [`TuneRequest::run`] borrowing worker scratches from a
+    /// caller-owned pool, so a long-lived caller (the serve engine)
+    /// pays the simulation-buffer warm-up once across many searches.
+    pub fn run_with_pool(
+        &self,
+        obs: &mut dyn Observer,
+        scratches: &mut Vec<RobustScratch>,
+    ) -> Result<TuneOutcome, String> {
+        search(self, obs, scratches)
+    }
+
+    /// Stable structural fingerprint of everything that determines the
+    /// search *result*: rank count and every [`BeamConfig`] knob
+    /// except `threads` (thread count never changes the winner, so it
+    /// must not split a result cache).  Same FNV-1a construction as
+    /// [`Plan::fingerprint`]; pair it with
+    /// [`TuneProfile::fingerprint`](super::TuneProfile::fingerprint)
+    /// for a complete cache key — the request does not hash the
+    /// profile it borrows.
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |x: u64| {
+            for b in x.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(PRIME);
+            }
+        };
+        let b = &self.beam;
+        mix(self.n_ranks as u64);
+        mix(b.beam_width as u64);
+        mix(b.generations as u64);
+        mix(b.mutations_per_parent as u64);
+        mix(b.max_microbatches as u64);
+        mix(b.seed);
+        match b.budget_bytes {
+            None => mix(0),
+            Some(v) => {
+                mix(1);
+                mix(v);
+            }
+        }
+        mix(b.patience as u64);
+        match &b.robust {
+            None => mix(0),
+            Some(ro) => {
+                mix(1);
+                mix(ro.pert.jitter.to_bits());
+                mix(ro.pert.stragglers.len() as u64);
+                for (rank, mult) in &ro.pert.stragglers {
+                    mix(*rank as u64);
+                    mix(mult.to_bits());
+                }
+                mix(ro.pert.comm_spike_prob.to_bits());
+                mix(ro.pert.comm_spike_mult.to_bits());
+                mix(ro.pert.seed);
+                mix(ro.trials as u64);
+            }
+        }
+        h
     }
 }
 
@@ -204,6 +304,11 @@ impl TuneReport {
     }
 }
 
+/// What a [`TuneRequest`] resolves to.  An alias rather than a new
+/// struct: the report's shape did not change in the API redesign, only
+/// how a search is invoked.
+pub type TuneOutcome = TuneReport;
+
 /// One unevaluated candidate: (plan, fingerprint, seed, origin).
 type Pending = (Plan, u64, String, String);
 
@@ -253,20 +358,23 @@ fn absorb(
 }
 
 /// Score one batch of already-validated candidates on the Tier A fast
-/// path: each worker owns a [`RobustScratch`] (whose inner `Scratch`
-/// serves the plain objective) and reuses it across every candidate it
-/// pulls, so the per-candidate cost is one span-free simulation (or K
-/// of them under [`BeamConfig::robust`]) — no validate pass, no span
-/// vectors, no allocations.
+/// path: each worker borrows a [`RobustScratch`] (whose inner `Scratch`
+/// serves the plain objective) from the caller's pool and reuses it
+/// across every candidate it pulls, so the per-candidate cost is one
+/// span-free simulation (or K of them under [`BeamConfig::robust`]) —
+/// no validate pass, no span vectors, no allocations once the pool is
+/// warm.
 fn evaluate(
     pending: &[Pending],
     profile: &TuneProfile,
     cfg: &BeamConfig,
     threads: usize,
+    scratches: &mut Vec<RobustScratch>,
 ) -> Vec<EvalOut> {
-    run_grid_with(
+    run_grid_with_pool(
         pending,
         threads,
+        scratches,
         RobustScratch::new,
         |scratch, _, (plan, fp, seed, origin)| {
             let cand = |makespan: f64, throughput: f64, max_peak: u64| {
@@ -345,9 +453,10 @@ pub fn microbatch_grid(n: usize, max_m: usize) -> Vec<usize> {
 
 /// Per-move-kind accept/reject bookkeeping for one evaluation batch.
 /// Runs *outside* the parallel Tier-A evaluation (over its results),
-/// so telemetry costs nothing on the scoring fast path and nothing at
-/// all when no registry is attached.
-fn record_batch(obs: &mut MetricsRegistry, outs: &[EvalOut], batch: &[Pending]) {
+/// so telemetry costs nothing on the scoring fast path — and call
+/// sites gate it on [`Observer::enabled`], so a null sink never pays
+/// the per-candidate name formatting either.
+fn record_batch(obs: &mut dyn Observer, outs: &[EvalOut], batch: &[Pending]) {
     for (out, (_, _, _, origin)) in outs.iter().zip(batch) {
         // origin is "seed" or "g<generation>:<move kind>"
         let mv = origin
@@ -370,7 +479,7 @@ fn record_batch(obs: &mut MetricsRegistry, outs: &[EvalOut], batch: &[Pending]) 
 /// costs, so for a measured profile they are wall-clock-tainted and go
 /// under `"wall"`.
 fn record_generation(
-    obs: &mut MetricsRegistry,
+    obs: &mut dyn Observer,
     gen: usize,
     batch: usize,
     pool_size: usize,
@@ -400,28 +509,33 @@ fn record_generation(
     }
 }
 
-/// Run the search.  `Err` when the profile shape mismatches `n_ranks`
-/// or when *no* candidate fits the budget.
+/// Telemetry-free convenience wrapper: build a [`TuneRequest`] and run
+/// it against a [`NullObserver`].  `Err` when the profile shape
+/// mismatches `n_ranks` or when *no* candidate fits the budget.
 pub fn tune(
     profile: &TuneProfile,
     n_ranks: usize,
     cfg: &BeamConfig,
 ) -> Result<TuneReport, String> {
-    tune_with(profile, n_ranks, cfg, None)
+    TuneRequest::new(profile, n_ranks, cfg.clone()).run(&mut NullObserver)
 }
 
-/// [`tune`] with an optional metrics registry attached: records
+/// The search core behind [`TuneRequest::run`].  The observer records
 /// seeding/candidate/dedup counters, per-move-kind accept/reject
 /// tallies, and one `beam.generation` event per round (best score under
 /// `"wall"` when the profile is measured — see `metrics::registry`).
 /// The Tier A scoring path itself stays telemetry-free by contract:
-/// every hook sits in the sequential search loop.
-pub fn tune_with(
-    profile: &TuneProfile,
-    n_ranks: usize,
-    cfg: &BeamConfig,
-    mut obs: Option<&mut MetricsRegistry>,
+/// every hook sits in the sequential search loop, and none of them
+/// touches the PRNG, so attaching an observer can never change the
+/// winner.
+fn search(
+    req: &TuneRequest<'_>,
+    obs: &mut dyn Observer,
+    scratches: &mut Vec<RobustScratch>,
 ) -> Result<TuneReport, String> {
+    let profile = req.profile;
+    let n_ranks = req.n_ranks;
+    let cfg = &req.beam;
     if profile.costs.fwd.len() != n_ranks
         || profile.mem.static_bytes.len() != n_ranks
     {
@@ -501,13 +615,11 @@ pub fn tune_with(
     let mut pool: BTreeMap<u64, SearchCand> = BTreeMap::new();
     let mut named_best: Option<SearchCand> = None;
 
-    if let Some(m) = obs.as_deref_mut() {
-        m.counter_add("beam.seeds", pending.len() as u64);
-        m.counter_add("beam.candidates_proposed", pending.len() as u64);
-    }
-    let outs = evaluate(&pending, profile, cfg, threads);
-    if let Some(m) = obs.as_deref_mut() {
-        record_batch(m, &outs, &pending);
+    obs.counter_add("beam.seeds", pending.len() as u64);
+    obs.counter_add("beam.candidates_proposed", pending.len() as u64);
+    let outs = evaluate(&pending, profile, cfg, threads, scratches);
+    if obs.enabled() {
+        record_batch(obs, &outs, &pending);
     }
     absorb(outs, &named_fps, &mut pool, &mut named_best, &mut tally);
 
@@ -529,8 +641,9 @@ pub fn tune_with(
     // -- beam loop ---------------------------------------------------------
     let mut beam = select(&pool);
     let mut history = vec![beam[0].throughput];
-    if let Some(m) = obs.as_deref_mut() {
-        record_generation(m, 0, pending.len(), pool.len(), &beam[0], profile);
+    if obs.enabled() {
+        record_generation(obs, 0, pending.len(), pool.len(), &beam[0],
+                          profile);
     }
     let mut best_tput = beam[0].throughput;
     let mut rng = SplitMix64::new(cfg.seed ^ 0x2B97_C4E5);
@@ -550,9 +663,7 @@ pub fn tune_with(
                             // duplicate of an already-tried plan: retry
                             // with fresh randomness rather than forfeit
                             // this mutation slot
-                            if let Some(m) = obs.as_deref_mut() {
-                                m.counter_add("beam.dedup_hits", 1);
-                            }
+                            obs.counter_add("beam.dedup_hits", 1);
                             continue;
                         }
                         seen.insert(fp);
@@ -567,19 +678,18 @@ pub fn tune_with(
                 }
             }
         }
-        if let Some(m) = obs.as_deref_mut() {
-            m.counter_add("beam.candidates_proposed", children.len() as u64);
-        }
-        let outs = evaluate(&children, profile, cfg, threads);
-        if let Some(m) = obs.as_deref_mut() {
-            record_batch(m, &outs, &children);
+        obs.counter_add("beam.candidates_proposed", children.len() as u64);
+        let outs = evaluate(&children, profile, cfg, threads, scratches);
+        if obs.enabled() {
+            record_batch(obs, &outs, &children);
         }
         absorb(outs, &named_fps, &mut pool, &mut named_best, &mut tally);
 
         beam = select(&pool);
         history.push(beam[0].throughput);
-        if let Some(m) = obs.as_deref_mut() {
-            record_generation(m, g, children.len(), pool.len(), &beam[0], profile);
+        if obs.enabled() {
+            record_generation(obs, g, children.len(), pool.len(), &beam[0],
+                              profile);
         }
         generations_run = g;
         if beam[0].throughput > best_tput * (1.0 + 1e-12) {
@@ -593,12 +703,10 @@ pub fn tune_with(
         }
     }
 
-    if let Some(m) = obs.as_deref_mut() {
-        m.counter_add("beam.evaluated", tally.evaluated as u64);
-        m.counter_add("beam.rejected_budget", tally.rejected_budget as u64);
-        m.counter_add("beam.rejected_sim", tally.rejected_sim as u64);
-        m.counter_add("beam.generations_run", generations_run as u64);
-    }
+    obs.counter_add("beam.evaluated", tally.evaluated as u64);
+    obs.counter_add("beam.rejected_budget", tally.rejected_budget as u64);
+    obs.counter_add("beam.rejected_sim", tally.rejected_sim as u64);
+    obs.counter_add("beam.generations_run", generations_run as u64);
     Ok(TuneReport {
         profile_name: profile.name.clone(),
         n_ranks,
@@ -802,8 +910,9 @@ mod tests {
         let profile = TuneProfile::llama_like(4);
         let plain = tune(&profile, 4, &quick_cfg()).unwrap();
         let mut obs = crate::metrics::registry::MetricsRegistry::new();
-        let observed =
-            tune_with(&profile, 4, &quick_cfg(), Some(&mut obs)).unwrap();
+        let observed = TuneRequest::new(&profile, 4, quick_cfg())
+            .run(&mut obs)
+            .unwrap();
         assert_eq!(plain.best.text, observed.best.text);
         assert_eq!(
             plain.best.makespan.to_bits(),
@@ -833,9 +942,86 @@ mod tests {
         // ratio profiles are deterministic, so the whole log must be
         // reproducible byte-for-byte
         let mut obs2 = crate::metrics::registry::MetricsRegistry::new();
-        tune_with(&profile, 4, &quick_cfg(), Some(&mut obs2)).unwrap();
+        TuneRequest::new(&profile, 4, quick_cfg())
+            .run(&mut obs2)
+            .unwrap();
         assert_eq!(obs.to_jsonl(), obs2.to_jsonl());
         assert!(!obs.to_jsonl().contains("\"wall\""));
+    }
+
+    /// API-redesign regression pin: every route into the search — the
+    /// `tune` free function, `TuneRequest::run` with a null sink,
+    /// `run` with a recording registry, and `run_with_pool` over a
+    /// pre-warmed scratch pool — must produce byte/bit-identical
+    /// winners for a fixed seed.
+    #[test]
+    fn all_tune_routes_are_byte_identical() {
+        let profile = TuneProfile::llama_like(4);
+        let cfg = BeamConfig {
+            budget_bytes: Some(6 << 30),
+            ..quick_cfg()
+        };
+        let via_fn = tune(&profile, 4, &cfg).unwrap();
+        let req = TuneRequest::new(&profile, 4, cfg.clone());
+        let via_null = req.run(&mut crate::metrics::observer::NullObserver)
+            .unwrap();
+        let mut reg = crate::metrics::registry::MetricsRegistry::new();
+        let via_reg = req.run(&mut reg).unwrap();
+        let mut pool: Vec<RobustScratch> = Vec::new();
+        let via_pool_cold = req
+            .run_with_pool(&mut crate::metrics::observer::NullObserver,
+                           &mut pool)
+            .unwrap();
+        assert!(!pool.is_empty(), "pool never warmed");
+        let via_pool_warm = req
+            .run_with_pool(&mut crate::metrics::observer::NullObserver,
+                           &mut pool)
+            .unwrap();
+        for other in [&via_null, &via_reg, &via_pool_cold, &via_pool_warm] {
+            assert_eq!(via_fn.best.text, other.best.text);
+            assert_eq!(via_fn.best.makespan.to_bits(),
+                       other.best.makespan.to_bits());
+            assert_eq!(via_fn.best.throughput.to_bits(),
+                       other.best.throughput.to_bits());
+            assert_eq!(via_fn.best.max_peak, other.best.max_peak);
+            assert_eq!(via_fn.history, other.history);
+            assert_eq!(via_fn.evaluated, other.evaluated);
+            assert_eq!(via_fn.rejected_budget, other.rejected_budget);
+        }
+    }
+
+    /// The request fingerprint is the cache key: stable across threads
+    /// (which never change the result), moved by every knob that does.
+    #[test]
+    fn request_fingerprint_tracks_result_knobs_only() {
+        let profile = TuneProfile::llama_like(4);
+        let base = TuneRequest::new(&profile, 4, quick_cfg());
+        let fp = base.fingerprint();
+        assert_eq!(fp, base.fingerprint());
+
+        let mut threads = base.clone();
+        threads.beam.threads = 7;
+        assert_eq!(threads.fingerprint(), fp,
+                   "threads must not split the cache");
+
+        let mut ranks = base.clone();
+        ranks.n_ranks = 8;
+        assert_ne!(ranks.fingerprint(), fp);
+        let mut seed = base.clone();
+        seed.beam.seed ^= 1;
+        assert_ne!(seed.fingerprint(), fp);
+        let mut budget = base.clone();
+        budget.beam.budget_bytes = Some(0);
+        assert_ne!(budget.fingerprint(), fp, "None vs Some(0) must differ");
+        let mut gens = base.clone();
+        gens.beam.generations += 1;
+        assert_ne!(gens.fingerprint(), fp);
+        let mut robust = base.clone();
+        robust.beam.robust = Some(RobustObjective::default());
+        assert_ne!(robust.fingerprint(), fp);
+        let mut trials = robust.clone();
+        trials.beam.robust.as_mut().unwrap().trials += 1;
+        assert_ne!(trials.fingerprint(), robust.fingerprint());
     }
 
     #[test]

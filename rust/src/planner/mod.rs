@@ -54,7 +54,8 @@ pub mod beam;
 pub mod moves;
 
 pub use beam::{
-    tune, tune_with, BeamConfig, Candidate, RobustObjective, TuneReport,
+    tune, BeamConfig, Candidate, RobustObjective, TuneOutcome, TuneReport,
+    TuneRequest,
 };
 
 use crate::sim::{CostModel, MemModel};
@@ -170,6 +171,50 @@ impl TuneProfile {
         p.costs.comm = comm;
         p
     }
+
+    /// Stable structural fingerprint of everything a search result can
+    /// depend on through the profile: name, every cost-model entry,
+    /// every byte class, samples per microbatch, and the measured flag.
+    /// Same FNV-1a construction as [`crate::schedule::Plan::fingerprint`]
+    /// (floats hashed by their IEEE bits).  Combined with
+    /// [`beam::TuneRequest::fingerprint`] this keys the serve daemon's
+    /// result cache.
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |x: u64| {
+            for b in x.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(PRIME);
+            }
+        };
+        // length-prefixed name bytes keep the encoding injective
+        mix(self.name.len() as u64);
+        for b in self.name.bytes() {
+            mix(b as u64);
+        }
+        let c = &self.costs;
+        for series in [&c.fwd, &c.p1, &c.p2, &c.opt] {
+            mix(series.len() as u64);
+            for v in series.iter() {
+                mix(v.to_bits());
+            }
+        }
+        mix(c.loss.to_bits());
+        mix(c.comm.to_bits());
+        mix(c.comm_inter_node.to_bits());
+        mix(c.ranks_per_node as u64);
+        mix(c.concat_factor.to_bits());
+        let m = &self.mem;
+        for series in [&m.static_bytes, &m.res1, &m.res2, &m.inter] {
+            mix(series.len() as u64);
+            for v in series.iter() {
+                mix(*v);
+            }
+        }
+        mix(self.samples_per_microbatch as u64);
+        mix(self.measured as u64);
+        h
+    }
 }
 
 #[cfg(test)]
@@ -213,6 +258,30 @@ mod tests {
         let err =
             TuneProfile::from_measured("x", costs, bad_mem, 1).unwrap_err();
         assert!(err.contains("shape mismatch"), "{err}");
+    }
+
+    #[test]
+    fn profile_fingerprint_tracks_every_field() {
+        let base = TuneProfile::llama_like(4);
+        let fp = base.fingerprint();
+        assert_eq!(fp, base.clone().fingerprint());
+        let mut name = base.clone();
+        name.name.push('!');
+        assert_ne!(name.fingerprint(), fp);
+        let mut cost = base.clone();
+        cost.costs.p2[1] += 0.001;
+        assert_ne!(cost.fingerprint(), fp);
+        let mut mem = base.clone();
+        mem.mem.res1[0] += 1;
+        assert_ne!(mem.fingerprint(), fp);
+        let mut measured = base.clone();
+        measured.measured = true;
+        assert_ne!(measured.fingerprint(), fp);
+        let mut samples = base.clone();
+        samples.samples_per_microbatch += 1;
+        assert_ne!(samples.fingerprint(), fp);
+        // distinct rank counts are distinct profiles
+        assert_ne!(TuneProfile::llama_like(2).fingerprint(), fp);
     }
 
     #[test]

@@ -1,0 +1,541 @@
+//! The serve execution engine: resident state + op implementations.
+//!
+//! One [`Engine`] lives for the whole service session.  Across jobs it
+//! keeps
+//!
+//! * calibrated [`TuneProfile`]s, registered by `calibrate` jobs and
+//!   referenced by name from later `tune`/`score`/`gantt` jobs,
+//! * a worker [`RobustScratch`] pool handed to
+//!   [`TuneRequest::run_with_pool`], so repeated searches reuse warm
+//!   simulation buffers instead of reallocating per job,
+//! * a result cache keyed on [`TuneRequest::fingerprint`] ×
+//!   [`TuneProfile::fingerprint`] — a repeated tune query returns the
+//!   stored payload without re-running the search (`"cache": "hit"`),
+//! * the deterministic [`MetricsRegistry`] behind `--metrics-out`
+//!   (`serve.*` counters; beam search records its own `beam.*` series
+//!   through the same [`crate::metrics::observer::Observer`] sink).
+//!
+//! Every op is deterministic given the job stream: profiles come from
+//! ratios, the planner is seeded, and responses carry wall-clock only
+//! under the `"wall"` quarantine key.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::metrics::registry::MetricsRegistry;
+use crate::planner::{
+    BeamConfig, RobustObjective, TuneProfile, TuneRequest,
+};
+use crate::schedule::{plan_io, validate, Plan};
+use crate::sim::{
+    eval_plan, score_plan, CostModel, MemModel, Perturbation, RobustScratch,
+};
+use crate::util::gantt;
+use crate::util::json::{obj, Json};
+use crate::util::stats::parse_bytes;
+
+use super::protocol::{
+    error_line, num_field, str_field, uint_field, Op, Request,
+};
+
+/// Op payload plus cache disposition (`Some("hit"|"miss")` for
+/// cacheable ops, `None` otherwise), or a client-facing error.
+type OpResult = Result<(BTreeMap<String, Json>, Option<&'static str>), String>;
+
+fn pairs(kv: Vec<(&str, Json)>) -> BTreeMap<String, Json> {
+    kv.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+/// Resident service state; see the module docs.
+#[derive(Debug)]
+pub struct Engine {
+    threads: usize,
+    next_seq: u64,
+    profiles: BTreeMap<String, TuneProfile>,
+    scratches: Vec<RobustScratch>,
+    cache: BTreeMap<(u64, u64), BTreeMap<String, Json>>,
+    done: BTreeMap<String, bool>,
+    pub metrics: MetricsRegistry,
+}
+
+impl Engine {
+    pub fn new(threads: usize) -> Engine {
+        Engine {
+            threads,
+            next_seq: 0,
+            profiles: BTreeMap::new(),
+            scratches: Vec::new(),
+            cache: BTreeMap::new(),
+            done: BTreeMap::new(),
+            metrics: MetricsRegistry::new(),
+        }
+    }
+
+    /// Next default-id counter (one per submitted line, so generated
+    /// ids are unique across batches of a session).
+    pub fn bump_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    /// Completion status of a previously executed job id.
+    pub fn done_status(&self, id: &str) -> Option<bool> {
+        self.done.get(id).copied()
+    }
+
+    pub fn mark_done(&mut self, id: &str, ok: bool) {
+        self.done.insert(id.to_string(), ok);
+    }
+
+    /// Execute one job: response line + success flag.  Wall-clock goes
+    /// only under the response's `"wall"` key and the registry's wall
+    /// series, keeping everything else byte-reproducible on replay.
+    pub fn execute(&mut self, req: &Request) -> (String, bool) {
+        self.metrics.counter_add("serve.jobs", 1);
+        let t0 = Instant::now();
+        match self.run_op(req) {
+            Ok((mut payload, cache)) => {
+                if let Some(c) = cache {
+                    payload.insert("cache".to_string(), Json::Str(c.to_string()));
+                }
+                payload.insert("id".to_string(), Json::Str(req.id.clone()));
+                payload.insert("ok".to_string(), Json::Bool(true));
+                let wall = t0.elapsed().as_secs_f64();
+                self.metrics.hist_record_wall("serve.job_s", wall);
+                payload.insert(
+                    "wall".to_string(),
+                    obj(vec![("elapsed_s", Json::Num(wall))]),
+                );
+                (Json::Obj(payload).to_string(), true)
+            }
+            Err(e) => {
+                self.metrics.counter_add("serve.errors", 1);
+                (error_line(Some(&req.id), &e), false)
+            }
+        }
+    }
+
+    fn run_op(&mut self, req: &Request) -> OpResult {
+        match req.op {
+            Op::Calibrate => self.op_calibrate(&req.raw),
+            Op::Tune => self.op_tune(&req.raw),
+            Op::Score => self.op_score(&req.raw),
+            Op::Gantt => self.op_gantt(&req.raw),
+            Op::Shutdown => {
+                self.metrics.counter_add("serve.shutdowns", 1);
+                Ok((pairs(vec![("op", Json::Str("shutdown".to_string()))]), None))
+            }
+        }
+    }
+
+    // --- ops ---------------------------------------------------------
+
+    /// `calibrate`: register a resident ratio profile under `"name"`.
+    /// Ratio defaults match `twobp tune` (`fwd 1.0 : p1 1.05 : p2 0.95,
+    /// comm 0.05`), so an all-defaults calibrate + tune pair reproduces
+    /// the CLI one-shot.
+    fn op_calibrate(&mut self, raw: &Json) -> OpResult {
+        let name = str_field(raw, "name")?
+            .ok_or("calibrate needs a \"name\" for the profile")?
+            .to_string();
+        let ranks = uint_field(raw, "ranks", 4)? as usize;
+        if ranks < 2 {
+            return Err("\"ranks\" must be >= 2".to_string());
+        }
+        let fwd = num_field(raw, "fwd", 1.0)?;
+        let p1 = num_field(raw, "p1", 1.05)?;
+        let p2 = num_field(raw, "p2", 0.95)?;
+        let comm = num_field(raw, "comm", 0.05)?;
+        let mut profile = TuneProfile::from_ratios(ranks, fwd, p1, p2, comm);
+        profile.name = name.clone();
+        let fp = profile.fingerprint();
+        self.profiles.insert(name.clone(), profile);
+        self.metrics.counter_add("serve.calibrations", 1);
+        Ok((
+            pairs(vec![
+                ("name", Json::Str(name)),
+                ("op", Json::Str("calibrate".to_string())),
+                ("profile_fp", Json::Str(format!("{fp:016x}"))),
+                ("ranks", Json::Num(ranks as f64)),
+            ]),
+            None,
+        ))
+    }
+
+    /// `tune`: run (or cache-hit) one beam search.  Knob names and
+    /// defaults mirror the `twobp tune` CLI so the service and the CLI
+    /// produce identical winners for identical inputs.
+    fn op_tune(&mut self, raw: &Json) -> OpResult {
+        let profile = self.resolve_profile(raw)?;
+        let n_ranks = profile.costs.fwd.len();
+        let beam = Self::beam_field(raw, self.threads)?;
+        let profile_fp = profile.fingerprint();
+        let request = TuneRequest::new(&profile, n_ranks, beam);
+        let key = (request.fingerprint(), profile_fp);
+        if let Some(hit) = self.cache.get(&key) {
+            self.metrics.counter_add("serve.cache_hits", 1);
+            return Ok((hit.clone(), Some("hit")));
+        }
+        self.metrics.counter_add("serve.cache_misses", 1);
+        self.metrics.counter_add("serve.tunes", 1);
+        let report = {
+            let Engine { scratches, metrics, .. } = self;
+            request.run_with_pool(metrics, scratches)
+        }
+        .map_err(|e| format!("planner: {e}"))?;
+        let payload = pairs(vec![
+            ("evaluated", Json::Num(report.evaluated as f64)),
+            (
+                "gain_vs_named",
+                report.gain_vs_named().map_or(Json::Null, Json::Num),
+            ),
+            ("generations", Json::Num(report.generations_run as f64)),
+            ("makespan", Json::Num(report.best.makespan)),
+            ("max_peak", Json::Num(report.best.max_peak as f64)),
+            ("op", Json::Str("tune".to_string())),
+            ("origin", Json::Str(report.best.origin.clone())),
+            ("plan", Json::Str(report.best.text.clone())),
+            ("profile", Json::Str(profile.name.clone())),
+            ("profile_fp", Json::Str(format!("{profile_fp:016x}"))),
+            ("ranks", Json::Num(n_ranks as f64)),
+            ("request_fp", Json::Str(format!("{:016x}", key.0))),
+            ("throughput", Json::Num(report.best.throughput)),
+            ("winner", Json::Str(report.best.plan.describe())),
+        ]);
+        self.cache.insert(key, payload.clone());
+        Ok((payload, Some("miss")))
+    }
+
+    /// `score`: Tier-A evaluation of one submitted plan.
+    fn op_score(&mut self, raw: &Json) -> OpResult {
+        let plan = Self::plan_field(raw)?;
+        let budget = Self::budget_field(raw)?;
+        let (costs, mem, samples) = self.cost_stack(raw, &plan)?;
+        if self.scratches.is_empty() {
+            self.scratches.push(RobustScratch::new());
+        }
+        let score = score_plan(
+            &plan,
+            &costs,
+            mem.as_ref(),
+            budget,
+            self.scratches[0].sim_mut(),
+        )
+        .map_err(|e| format!("sim: {e}"))?;
+        self.metrics.counter_add("serve.scores", 1);
+        Ok((
+            pairs(vec![
+                ("bubble_ratio", Json::Num(score.bubble_ratio)),
+                ("fits", Json::Bool(score.fits)),
+                ("makespan", Json::Num(score.makespan)),
+                ("max_peak", Json::Num(score.max_peak as f64)),
+                ("op", Json::Str("score".to_string())),
+                ("plan", Json::Str(plan.describe())),
+                (
+                    "throughput",
+                    Json::Num(score.throughput(samples, plan.n_microbatches)),
+                ),
+            ]),
+            None,
+        ))
+    }
+
+    /// `gantt`: render one plan's simulated timeline as ASCII art.
+    fn op_gantt(&mut self, raw: &Json) -> OpResult {
+        let plan = Self::plan_field(raw)?;
+        let cols = uint_field(raw, "cols", 96)? as usize;
+        if cols == 0 {
+            return Err("\"cols\" must be positive".to_string());
+        }
+        let (costs, _, _) = self.cost_stack(raw, &plan)?;
+        let eval = eval_plan(&plan, &costs, None, None)
+            .map_err(|e| format!("sim: {e}"))?;
+        self.metrics.counter_add("serve.gantts", 1);
+        Ok((
+            pairs(vec![
+                ("cols", Json::Num(cols as f64)),
+                ("gantt", Json::Str(gantt::render(&eval.result.spans, cols))),
+                ("makespan", Json::Num(eval.result.makespan)),
+                ("op", Json::Str("gantt".to_string())),
+                ("plan", Json::Str(plan.describe())),
+            ]),
+            None,
+        ))
+    }
+
+    // --- field readers ----------------------------------------------
+
+    /// Profile for `tune`: absent or `"llama"` builds the default
+    /// LLaMa-like profile at `"ranks"` (default 4); any other name must
+    /// be resident (registered by an earlier `calibrate` job).
+    fn resolve_profile(&self, raw: &Json) -> Result<TuneProfile, String> {
+        match str_field(raw, "profile")? {
+            None | Some("llama") => {
+                let ranks = uint_field(raw, "ranks", 4)? as usize;
+                if ranks < 2 {
+                    return Err("\"ranks\" must be >= 2".to_string());
+                }
+                Ok(TuneProfile::llama_like(ranks))
+            }
+            Some(name) => {
+                let p = self.profiles.get(name).ok_or_else(|| {
+                    format!(
+                        "unknown profile '{name}' — submit a calibrate job \
+                         for it first (resident: [{}])",
+                        self.profiles
+                            .keys()
+                            .cloned()
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    )
+                })?;
+                if let Some(r) = raw.get("ranks").and_then(|v| v.as_u64()) {
+                    let have = p.costs.fwd.len() as u64;
+                    if r != have {
+                        return Err(format!(
+                            "\"ranks\" {r} conflicts with profile '{name}' \
+                             ({have} ranks); drop \"ranks\""
+                        ));
+                    }
+                }
+                Ok(p.clone())
+            }
+        }
+    }
+
+    /// Cost/memory stack for `score`/`gantt`: a resident or `"llama"`
+    /// profile by name, else bare ratios (`fwd`/`p1`/`p2`/`comm`,
+    /// defaulting to the unit model `1 : 1 : 1, comm 0`).
+    fn cost_stack(
+        &self,
+        raw: &Json,
+        plan: &Plan,
+    ) -> Result<(CostModel, Option<MemModel>, usize), String> {
+        match str_field(raw, "profile")? {
+            None => {
+                let fwd = num_field(raw, "fwd", 1.0)?;
+                let p1 = num_field(raw, "p1", 1.0)?;
+                let p2 = num_field(raw, "p2", 1.0)?;
+                let mut c = CostModel::ratios(plan.n_ranks, fwd, p1, p2);
+                c.comm = num_field(raw, "comm", 0.0)?;
+                Ok((c, None, 1))
+            }
+            Some("llama") => {
+                let p = TuneProfile::llama_like(plan.n_ranks);
+                Ok((p.costs, Some(p.mem), p.samples_per_microbatch))
+            }
+            Some(name) => {
+                let p = self.profiles.get(name).ok_or_else(|| {
+                    format!(
+                        "unknown profile '{name}' — submit a calibrate job \
+                         for it first"
+                    )
+                })?;
+                if p.costs.fwd.len() != plan.n_ranks {
+                    return Err(format!(
+                        "plan has {} ranks but profile '{name}' has {}",
+                        plan.n_ranks,
+                        p.costs.fwd.len()
+                    ));
+                }
+                Ok((
+                    p.costs.clone(),
+                    Some(p.mem.clone()),
+                    p.samples_per_microbatch,
+                ))
+            }
+        }
+    }
+
+    fn plan_field(raw: &Json) -> Result<Plan, String> {
+        let text = str_field(raw, "plan")?.ok_or(
+            "needs a \"plan\" field (plan DSL text; docs/PLAN_FORMAT.md)",
+        )?;
+        let plan = plan_io::parse(text).map_err(|e| format!("plan: {e}"))?;
+        validate::validate(&plan).map_err(|e| format!("plan: {e}"))?;
+        Ok(plan)
+    }
+
+    fn budget_field(raw: &Json) -> Result<Option<u64>, String> {
+        match raw.get("budget") {
+            None => Ok(None),
+            Some(Json::Str(s)) => parse_bytes(s)
+                .map(Some)
+                .map_err(|e| format!("\"budget\": {e}")),
+            Some(v) => v.as_u64().map(Some).ok_or_else(|| {
+                "\"budget\" must be bytes (number) or a string like \"12GiB\""
+                    .to_string()
+            }),
+        }
+    }
+
+    /// Beam knobs, defaulting exactly like `twobp tune`'s CLI flags.
+    fn beam_field(raw: &Json, threads: usize) -> Result<BeamConfig, String> {
+        let d = BeamConfig::default();
+        Ok(BeamConfig {
+            beam_width: uint_field(raw, "beam", d.beam_width as u64)? as usize,
+            generations: uint_field(raw, "gens", d.generations as u64)?
+                as usize,
+            mutations_per_parent: uint_field(
+                raw,
+                "mutations",
+                d.mutations_per_parent as u64,
+            )? as usize,
+            max_microbatches: uint_field(
+                raw,
+                "microbatches_max",
+                d.max_microbatches as u64,
+            )? as usize,
+            seed: uint_field(raw, "seed", d.seed)?,
+            threads,
+            budget_bytes: Self::budget_field(raw)?,
+            patience: uint_field(raw, "patience", d.patience as u64)? as usize,
+            robust: Self::robust_field(raw)?,
+        })
+    }
+
+    /// `"robust"` sub-object, mirroring the CLI's `--robust` knob
+    /// cluster ([`crate::config::RobustConfig`]) and its defaults.
+    fn robust_field(raw: &Json) -> Result<Option<RobustObjective>, String> {
+        let Some(r) = raw.get("robust") else { return Ok(None) };
+        if !matches!(r, Json::Obj(_)) {
+            return Err(
+                "\"robust\" must be an object of perturbation knobs"
+                    .to_string(),
+            );
+        }
+        let base = Perturbation::default();
+        let stragglers = match r.get("stragglers") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_arr()
+                .ok_or("\"stragglers\" must be an array of [rank, mult] pairs")?
+                .iter()
+                .map(|pair| {
+                    let rank = pair.idx(0).and_then(|x| x.as_u64());
+                    let mult = pair.idx(1).and_then(|x| x.as_f64());
+                    match (rank, mult) {
+                        (Some(rk), Some(m)) if m > 0.0 => Ok((rk as usize, m)),
+                        _ => Err("\"stragglers\" entries must be \
+                                  [rank, mult>0] pairs"
+                            .to_string()),
+                    }
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+        let pert = Perturbation {
+            jitter: num_field(r, "jitter", 0.05)?,
+            stragglers,
+            comm_spike_prob: num_field(r, "spike_prob", base.comm_spike_prob)?,
+            comm_spike_mult: num_field(r, "spike_mult", base.comm_spike_mult)?,
+            seed: uint_field(r, "pert_seed", base.seed)?,
+        };
+        if !(0.0..=1.0).contains(&pert.comm_spike_prob) {
+            return Err("\"spike_prob\" must be in [0, 1]".to_string());
+        }
+        let trials =
+            uint_field(r, "trials", RobustObjective::default().trials as u64)?
+                as usize;
+        Ok(Some(RobustObjective { pert, trials: trials.max(1) }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(line: &str) -> Request {
+        Request::parse(line, "t").unwrap()
+    }
+
+    fn tiny_tune(id: &str) -> String {
+        format!(
+            r#"{{"op":"tune","id":"{id}","ranks":2,"beam":2,"gens":1,
+                "mutations":1}}"#
+        )
+    }
+
+    #[test]
+    fn repeated_tune_is_a_cache_hit_without_re_search() {
+        let mut e = Engine::new(1);
+        let (first, ok) = e.execute(&req(&tiny_tune("a")));
+        assert!(ok, "{first}");
+        assert!(first.contains("\"cache\":\"miss\""), "{first}");
+        let seeds = e.metrics.counter("beam.seeds");
+        let evaluated = e.metrics.counter("beam.evaluated");
+        assert!(seeds > 0 && evaluated > 0);
+
+        let (second, ok) = e.execute(&req(&tiny_tune("b")));
+        assert!(ok, "{second}");
+        assert!(second.contains("\"cache\":\"hit\""), "{second}");
+        // No re-search: the beam counters did not move.
+        assert_eq!(e.metrics.counter("beam.seeds"), seeds);
+        assert_eq!(e.metrics.counter("beam.evaluated"), evaluated);
+        assert_eq!(e.metrics.counter("serve.cache_hits"), 1);
+        assert_eq!(e.metrics.counter("serve.cache_misses"), 1);
+
+        // Identical payloads modulo id + cache disposition + wall.
+        let norm = |line: &str, id: &str| {
+            super::super::protocol::strip_wall(line)
+                .replace(&format!("\"id\":\"{id}\""), "\"id\":\"_\"")
+                .replace("\"cache\":\"hit\"", "\"cache\":\"_\"")
+                .replace("\"cache\":\"miss\"", "\"cache\":\"_\"")
+        };
+        assert_eq!(norm(&first, "a"), norm(&second, "b"));
+    }
+
+    #[test]
+    fn calibrated_profile_changes_the_cache_key() {
+        let mut e = Engine::new(1);
+        let (line, ok) = e.execute(&req(
+            r#"{"op":"calibrate","id":"c","name":"p","ranks":2,"p1":1.3}"#,
+        ));
+        assert!(ok, "{line}");
+        // Same beam knobs, different profile: a miss, not a hit.
+        let (a, ok) = e.execute(&req(&tiny_tune("a")));
+        assert!(ok, "{a}");
+        let (b, ok) = e.execute(&req(
+            r#"{"op":"tune","id":"b","profile":"p","beam":2,"gens":1,
+                "mutations":1}"#,
+        ));
+        assert!(ok, "{b}");
+        assert!(b.contains("\"cache\":\"miss\""), "{b}");
+        assert_eq!(e.metrics.counter("serve.cache_misses"), 2);
+
+        // Unknown profile is a client error listing residents.
+        let (err, ok) =
+            e.execute(&req(r#"{"op":"tune","id":"x","profile":"nope"}"#));
+        assert!(!ok);
+        assert!(err.contains("unknown profile 'nope'"), "{err}");
+        assert!(err.contains("resident: [p]"), "{err}");
+    }
+
+    #[test]
+    fn score_and_gantt_evaluate_submitted_plans() {
+        let mut e = Engine::new(1);
+        let plan = crate::schedule::generate(
+            crate::schedule::ScheduleKind::GPipe,
+            true,
+            2,
+            4,
+            false,
+        );
+        let text = plan_io::to_text(&plan).replace('\n', "\\n");
+        let (line, ok) = e.execute(&req(&format!(
+            r#"{{"op":"score","id":"s","plan":"{text}"}}"#
+        )));
+        assert!(ok, "{line}");
+        assert!(line.contains("\"makespan\":"), "{line}");
+        let (line, ok) = e.execute(&req(&format!(
+            r#"{{"op":"gantt","id":"g","plan":"{text}","cols":40}}"#
+        )));
+        assert!(ok, "{line}");
+        assert!(line.contains("\"gantt\":"), "{line}");
+
+        let (err, ok) =
+            e.execute(&req(r#"{"op":"score","id":"bad","plan":"garbage"}"#));
+        assert!(!ok);
+        assert!(err.contains("\"ok\":false"), "{err}");
+    }
+}

@@ -1,0 +1,73 @@
+//! Deterministic job log: every *accepted* job is appended as its
+//! normalized sorted-key JSON line, in submission order, flushed per
+//! line so the log survives an abrupt exit.
+//!
+//! Rejected lines (parse errors, duplicate ids) never reach the log,
+//! so `twobp serve --replay <log>` re-parses exactly the accepted
+//! stream: same ids (defaults were materialized at accept time), same
+//! relative submission order, hence the same heap order and the same
+//! responses byte-for-byte — modulo the `"wall"` quarantine key
+//! ([`super::protocol::strip_wall`]).
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Append-only job log writer.
+#[derive(Debug)]
+pub struct JobLog {
+    out: BufWriter<File>,
+}
+
+impl JobLog {
+    /// Open (create-or-append) the log at `path`.
+    pub fn open(path: &Path) -> std::io::Result<JobLog> {
+        let f = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JobLog { out: BufWriter::new(f) })
+    }
+
+    /// Append one accepted job's normalized form and flush.
+    pub fn append(&mut self, job: &Json) -> std::io::Result<()> {
+        writeln!(self.out, "{}", job.to_string())?;
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appends_normalized_lines_in_order() {
+        let dir = std::env::temp_dir().join("twobp-joblog-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("jobs.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        let mut log = JobLog::open(&path).unwrap();
+        let a = Json::parse(r#"{"op":"shutdown","id":"z"}"#).unwrap();
+        let b = Json::parse(r#"{"id":"a","op":"calibrate","name":"p"}"#)
+            .unwrap();
+        log.append(&a).unwrap();
+        log.append(&b).unwrap();
+        drop(log);
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Sorted-key normalization, submission order preserved.
+        assert_eq!(
+            text,
+            "{\"id\":\"z\",\"op\":\"shutdown\"}\n\
+             {\"id\":\"a\",\"name\":\"p\",\"op\":\"calibrate\"}\n"
+        );
+
+        // Re-opening appends rather than truncating.
+        let mut log = JobLog::open(&path).unwrap();
+        log.append(&a).unwrap();
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,556 @@
+//! `twobp serve` — the persistent tuning service (`docs/SERVE.md`).
+//!
+//! The daemon and the one-shot CLI are two thin callers of the same
+//! core: every job here bottoms out in the exact entry points the CLI
+//! uses ([`crate::planner::TuneRequest`], [`crate::sim::score_plan`],
+//! [`crate::util::gantt::render`]), so a served answer and a CLI
+//! answer are the same bytes.  What the service adds is *residency* —
+//! calibrated profiles, warm scratch pools, and a fingerprint-keyed
+//! result cache that outlive any single job — plus scheduling:
+//!
+//! * jobs arrive as line-delimited JSON on stdin or a Unix socket
+//!   ([`protocol`]),
+//! * a deadline- and priority-aware heap orders ready work and
+//!   dependency gating parks jobs until the jobs they name complete
+//!   ([`queue`], [`run_batch`]) — calibration jobs therefore always
+//!   run before the tunes that depend on them,
+//! * every accepted job is appended to a deterministic job log that
+//!   `twobp serve --replay <log>` re-executes to byte-identical
+//!   responses modulo the `"wall"` quarantine key ([`joblog`]),
+//! * a `shutdown` job drains the queue gracefully: everything already
+//!   accepted still runs, then the service stops accepting.
+//!
+//! Batch model: each drain reads its input to EOF (stdin: the whole
+//! stream; socket: one connection whose client half-closes after
+//! writing), schedules everything, and answers in completion order.
+//! Responses are deterministic because ordering is (deadline,
+//! priority, submission seq) and every op is seeded.
+
+pub mod engine;
+pub mod joblog;
+pub mod protocol;
+pub mod queue;
+
+pub use engine::Engine;
+pub use joblog::JobLog;
+pub use protocol::{strip_wall, Op, Request};
+pub use queue::JobQueue;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::args::Args;
+
+/// Entry point behind `twobp serve` (see the usage text in `main.rs`).
+///
+/// Modes: `--replay <log>` re-executes a job log to stdout; `--socket
+/// <path>` serves batches per connection until a `shutdown` job;
+/// otherwise one batch is read from stdin.  `--log <file>` appends
+/// accepted jobs for later replay; `--metrics-out <file>` writes the
+/// deterministic registry (with `serve.*` counters) on exit;
+/// `--threads <k>` sizes the planner's worker pool.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let threads = args.get_usize("threads", 0);
+    let mut engine = Engine::new(threads);
+
+    if let Some(replay) = args.get("replay") {
+        if args.get("socket").is_some() || args.get("log").is_some() {
+            bail!(
+                "--replay re-executes an existing job log; \
+                 drop --socket/--log"
+            );
+        }
+        let text = std::fs::read_to_string(replay)
+            .with_context(|| format!("reading job log {replay}"))?;
+        let (responses, _) = run_batch(&mut engine, &text, &mut None)?;
+        let mut out = std::io::stdout().lock();
+        for r in &responses {
+            writeln!(out, "{r}")?;
+        }
+    } else if let Some(sock) = args.get("socket") {
+        serve_socket(&mut engine, Path::new(sock), args.get("log"))?;
+    } else {
+        let mut input = String::new();
+        std::io::stdin().read_to_string(&mut input)?;
+        let mut log = open_log(args.get("log"))?;
+        let (responses, _) = run_batch(&mut engine, &input, &mut log)?;
+        let mut out = std::io::stdout().lock();
+        for r in &responses {
+            writeln!(out, "{r}")?;
+        }
+    }
+
+    if let Some(path) = args.get("metrics-out") {
+        engine.metrics.write(Path::new(path))?;
+        eprintln!("metrics: wrote {path}");
+    }
+    Ok(())
+}
+
+fn open_log(path: Option<&str>) -> Result<Option<JobLog>> {
+    match path {
+        None => Ok(None),
+        Some(p) => Ok(Some(
+            JobLog::open(Path::new(p))
+                .with_context(|| format!("opening job log {p}"))?,
+        )),
+    }
+}
+
+/// Serve batches over a Unix socket: each connection is one batch (the
+/// client writes jobs, half-closes, and reads responses back).  A
+/// successful `shutdown` job finishes its batch — graceful drain —
+/// then stops accepting connections.
+#[cfg(unix)]
+fn serve_socket(
+    engine: &mut Engine,
+    path: &Path,
+    log_path: Option<&str>,
+) -> Result<()> {
+    use std::os::unix::net::UnixListener;
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)
+        .with_context(|| format!("binding {}", path.display()))?;
+    eprintln!("serve: listening on {}", path.display());
+    let mut log = open_log(log_path)?;
+    for stream in listener.incoming() {
+        let mut stream = stream?;
+        let mut input = String::new();
+        stream.read_to_string(&mut input)?;
+        let (responses, shutdown) = run_batch(engine, &input, &mut log)?;
+        for r in &responses {
+            writeln!(stream, "{r}")?;
+        }
+        if shutdown {
+            break;
+        }
+    }
+    let _ = std::fs::remove_file(path);
+    eprintln!("serve: drained, shutting down");
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn serve_socket(
+    _engine: &mut Engine,
+    _path: &Path,
+    _log_path: Option<&str>,
+) -> Result<()> {
+    bail!("--socket requires a Unix platform; use the stdin leg instead")
+}
+
+/// Drain one batch of job lines through `engine`.
+///
+/// Submission pass: parse every line; malformed lines and duplicate ids
+/// are answered immediately (and never logged), accepted jobs are
+/// appended to the job log in submission order.  Scheduling pass: jobs
+/// whose dependencies are all satisfied enter the deadline/priority
+/// heap; completing a job releases its dependents, a failing job fails
+/// them (`dependency '<id>' failed`), and jobs left parked when the
+/// heap drains — dependency cycles — are answered last, in submission
+/// order.  Returns the response lines in completion order plus whether
+/// a `shutdown` job was executed.
+pub fn run_batch(
+    engine: &mut Engine,
+    input: &str,
+    log: &mut Option<JobLog>,
+) -> Result<(Vec<String>, bool)> {
+    let mut responses = Vec::new();
+    let mut shutdown = false;
+    let mut accepted: Vec<Request> = Vec::new();
+    let mut batch_ids: BTreeSet<String> = BTreeSet::new();
+
+    for line in input.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let default_id = format!("job-{}", engine.bump_seq());
+        match Request::parse(line, &default_id) {
+            Err(e) => {
+                engine.metrics.counter_add("serve.rejected", 1);
+                responses.push(protocol::error_line(None, &e));
+            }
+            Ok(r) => {
+                if batch_ids.contains(&r.id)
+                    || engine.done_status(&r.id).is_some()
+                {
+                    engine.metrics.counter_add("serve.rejected", 1);
+                    responses.push(protocol::error_line(
+                        Some(&r.id),
+                        &format!("duplicate job id '{}'", r.id),
+                    ));
+                } else {
+                    if let Some(l) = log.as_mut() {
+                        l.append(&r.raw).context("appending to job log")?;
+                    }
+                    engine.metrics.counter_add("serve.accepted", 1);
+                    batch_ids.insert(r.id.clone());
+                    accepted.push(r);
+                }
+            }
+        }
+    }
+
+    let n = accepted.len();
+    let id_to_idx: BTreeMap<&str, usize> = accepted
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (r.id.as_str(), i))
+        .collect();
+    let mut unmet = vec![0usize; n];
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut failed: Vec<Option<String>> = vec![None; n];
+
+    for (i, r) in accepted.iter().enumerate() {
+        for dep in &r.deps {
+            if let Some(&j) = id_to_idx.get(dep.as_str()) {
+                if j == i {
+                    failed[i] =
+                        Some(format!("job '{}' depends on itself", r.id));
+                } else {
+                    unmet[i] += 1;
+                    dependents[j].push(i);
+                }
+            } else {
+                match engine.done_status(dep) {
+                    Some(true) => {}
+                    Some(false) => {
+                        failed[i] =
+                            Some(format!("dependency '{dep}' failed"));
+                    }
+                    None => {
+                        failed[i] =
+                            Some(format!("unknown dependency '{dep}'"));
+                    }
+                }
+            }
+        }
+    }
+
+    let mut queue = JobQueue::new();
+    for (i, r) in accepted.iter().enumerate() {
+        if unmet[i] == 0 {
+            queue.push(r.deadline, r.priority, i);
+        }
+    }
+
+    while let Some(i) = queue.pop() {
+        let (line, ok) = match &failed[i] {
+            Some(e) => {
+                engine.metrics.counter_add("serve.dep_failures", 1);
+                (protocol::error_line(Some(&accepted[i].id), e), false)
+            }
+            None => engine.execute(&accepted[i]),
+        };
+        if accepted[i].op == Op::Shutdown && ok {
+            shutdown = true;
+        }
+        engine.mark_done(&accepted[i].id, ok);
+        responses.push(line);
+        for &d in &dependents[i] {
+            if !ok && failed[d].is_none() {
+                failed[d] =
+                    Some(format!("dependency '{}' failed", accepted[i].id));
+            }
+            unmet[d] -= 1;
+            if unmet[d] == 0 {
+                queue.push(accepted[d].deadline, accepted[d].priority, d);
+            }
+        }
+    }
+
+    for (i, r) in accepted.iter().enumerate() {
+        if unmet[i] > 0 && engine.done_status(&r.id).is_none() {
+            engine.metrics.counter_add("serve.dep_failures", 1);
+            responses.push(protocol::error_line(
+                Some(&r.id),
+                "unresolved dependency cycle",
+            ));
+            engine.mark_done(&r.id, false);
+        }
+    }
+
+    Ok((responses, shutdown))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::observer::NullObserver;
+    use crate::planner::{BeamConfig, TuneProfile, TuneRequest};
+    use crate::schedule::{generate, plan_io, ScheduleKind};
+
+    fn plan_json_text() -> String {
+        plan_io::to_text(&generate(ScheduleKind::GPipe, true, 2, 4, false))
+            .replace('\\', "\\\\")
+            .replace('"', "\\\"")
+            .replace('\n', "\\n")
+    }
+
+    #[test]
+    fn calibration_gates_the_tune_that_depends_on_it() {
+        let mut e = Engine::new(0);
+        // The tune is submitted FIRST and has the EARLIEST deadline; it
+        // must still run after the calibrate it depends on.
+        let input = concat!(
+            r#"{"op":"tune","id":"t","profile":"p","deps":["c"],"#,
+            r#""deadline":1,"beam":2,"gens":1,"mutations":1}"#,
+            "\n",
+            r#"{"op":"calibrate","id":"c","name":"p","ranks":2,"#,
+            r#""deadline":99}"#,
+            "\n",
+        );
+        let (resp, shutdown) = run_batch(&mut e, input, &mut None).unwrap();
+        assert!(!shutdown);
+        assert_eq!(resp.len(), 2, "{resp:?}");
+        assert!(resp[0].contains("\"id\":\"c\""), "{resp:?}");
+        assert!(resp[1].contains("\"id\":\"t\""), "{resp:?}");
+        assert!(resp[1].contains("\"ok\":true"), "{resp:?}");
+    }
+
+    #[test]
+    fn dependency_failures_cascade_and_stragglers_are_reported() {
+        let mut e = Engine::new(0);
+        let input = concat!(
+            r#"{"op":"tune","id":"bad","profile":"missing"}"#,
+            "\n",
+            r#"{"op":"gantt","id":"child","deps":["bad"],"plan":"x"}"#,
+            "\n",
+            r#"{"op":"shutdown","id":"orphan","deps":["ghost"]}"#,
+            "\n",
+            r#"{"op":"shutdown","id":"a","deps":["b"]}"#,
+            "\n",
+            r#"{"op":"shutdown","id":"b","deps":["a"]}"#,
+            "\n",
+            r#"{"op":"shutdown","id":"a"}"#,
+            "\n",
+        );
+        let (resp, shutdown) = run_batch(&mut e, input, &mut None).unwrap();
+        // None of the shutdown jobs executed ok.
+        assert!(!shutdown);
+        assert_eq!(resp.len(), 6, "{resp:?}");
+        let find = |id: &str| {
+            resp.iter()
+                .find(|r| r.contains(&format!("\"id\":\"{id}\"")))
+                .unwrap_or_else(|| panic!("no response for {id}: {resp:?}"))
+        };
+        assert!(find("bad").contains("unknown profile"), "{resp:?}");
+        assert!(
+            find("child").contains("dependency 'bad' failed"),
+            "{resp:?}"
+        );
+        assert!(
+            find("orphan").contains("unknown dependency 'ghost'"),
+            "{resp:?}"
+        );
+        assert!(find("a").contains("cycle"), "{resp:?}");
+        assert!(find("b").contains("cycle"), "{resp:?}");
+        // The duplicate "a" was rejected at submission.
+        assert!(
+            resp.iter().any(|r| r.contains("duplicate job id 'a'")),
+            "{resp:?}"
+        );
+        assert_eq!(e.metrics.counter("serve.rejected"), 1);
+    }
+
+    #[test]
+    fn scripted_batch_matches_one_shot_tunes_and_hits_the_cache() {
+        let mut e = Engine::new(0);
+        // The acceptance batch: calibrate -> three dependent tunes ->
+        // one repeated tune (same knobs as t1, so a cache hit).
+        let input = concat!(
+            r#"{"op":"calibrate","id":"c","name":"m","ranks":2,"p1":1.2}"#,
+            "\n",
+            r#"{"op":"tune","id":"t1","profile":"m","deps":["c"],"#,
+            r#""beam":2,"gens":1,"mutations":1}"#,
+            "\n",
+            r#"{"op":"tune","id":"t2","profile":"m","deps":["c"],"#,
+            r#""beam":2,"gens":1,"mutations":1,"seed":7}"#,
+            "\n",
+            r#"{"op":"tune","id":"t3","profile":"m","deps":["c"],"#,
+            r#""beam":2,"gens":2,"mutations":1}"#,
+            "\n",
+            r#"{"op":"tune","id":"t4","profile":"m","#,
+            r#""beam":2,"gens":1,"mutations":1}"#,
+            "\n",
+        );
+        let (resp, _) = run_batch(&mut e, input, &mut None).unwrap();
+        assert_eq!(resp.len(), 5, "{resp:?}");
+        assert!(resp.iter().all(|r| r.contains("\"ok\":true")), "{resp:?}");
+        assert_eq!(e.metrics.counter("serve.cache_hits"), 1);
+        assert_eq!(e.metrics.counter("serve.cache_misses"), 3);
+        let t4 = resp.iter().find(|r| r.contains("\"id\":\"t4\"")).unwrap();
+        assert!(t4.contains("\"cache\":\"hit\""), "{t4}");
+
+        // The service's winner is the one-shot API's winner.
+        let mut profile = TuneProfile::from_ratios(2, 1.0, 1.2, 0.95, 0.05);
+        profile.name = "m".to_string();
+        let cfg = BeamConfig {
+            beam_width: 2,
+            generations: 1,
+            mutations_per_parent: 1,
+            ..BeamConfig::default()
+        };
+        let report = TuneRequest::new(&profile, 2, cfg)
+            .run(&mut NullObserver)
+            .unwrap();
+        let t1 = resp.iter().find(|r| r.contains("\"id\":\"t1\"")).unwrap();
+        let winner = format!("\"winner\":\"{}\"", report.best.plan.describe());
+        assert!(t1.contains(&winner), "{t1} vs {winner}");
+    }
+
+    #[test]
+    fn replay_reproduces_responses_byte_identically_modulo_wall() {
+        let dir = std::env::temp_dir().join("twobp-serve-replay-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("jobs.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        let mut e = Engine::new(0);
+        let mut log = Some(JobLog::open(&path).unwrap());
+        // Line 1 is rejected (consumes seq 0, never logged); the rest
+        // rely on defaulted ids, which the log must materialize.
+        let input = concat!(
+            "not json\n",
+            r#"{"op":"calibrate","name":"p","ranks":2}"#,
+            "\n",
+            r#"{"op":"tune","profile":"p","deps":["job-1"],"beam":2,"#,
+            r#""gens":1,"mutations":1}"#,
+            "\n",
+            r#"{"op":"tune","profile":"p","beam":2,"gens":1,"mutations":1}"#,
+            "\n",
+            r#"{"op":"shutdown"}"#,
+            "\n",
+        );
+        let (orig, shutdown) = run_batch(&mut e, input, &mut log).unwrap();
+        assert!(shutdown);
+        drop(log);
+
+        let logged = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(logged.lines().count(), 4, "{logged}");
+        assert!(logged.contains("\"id\":\"job-1\""), "{logged}");
+
+        let mut e2 = Engine::new(0);
+        let (replayed, shutdown) =
+            run_batch(&mut e2, &logged, &mut None).unwrap();
+        assert!(shutdown);
+        let orig_accepted: Vec<&String> = orig
+            .iter()
+            .filter(|r| !r.contains("bad job json"))
+            .collect();
+        assert_eq!(orig_accepted.len(), replayed.len());
+        for (a, b) in orig_accepted.iter().zip(&replayed) {
+            assert_eq!(strip_wall(a), strip_wall(b));
+        }
+        // The repeated tune stayed a cache hit on replay.
+        assert_eq!(e2.metrics.counter("serve.cache_hits"), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shuffled_submission_orders_drain_identically() {
+        let t = plan_json_text();
+        let jobs: Vec<String> = vec![
+            r#"{"op":"calibrate","id":"c","name":"p","ranks":2,"deadline":1}"#
+                .to_string(),
+            format!(
+                r#"{{"op":"score","id":"s1","plan":"{t}","profile":"p","deadline":2,"deps":["c"]}}"#
+            ),
+            format!(
+                r#"{{"op":"gantt","id":"g1","plan":"{t}","cols":32,"deadline":3}}"#
+            ),
+            format!(r#"{{"op":"score","id":"s2","plan":"{t}","deadline":4}}"#),
+            r#"{"op":"shutdown","id":"z","deadline":5}"#.to_string(),
+        ];
+        let run = |order: &[usize]| -> Vec<String> {
+            let input = order
+                .iter()
+                .map(|&i| jobs[i].as_str())
+                .collect::<Vec<_>>()
+                .join("\n");
+            let mut e = Engine::new(0);
+            let (resp, shutdown) =
+                run_batch(&mut e, &input, &mut None).unwrap();
+            assert!(shutdown);
+            resp.iter().map(|r| strip_wall(r)).collect()
+        };
+        let reference = run(&[0, 1, 2, 3, 4]);
+        assert_eq!(reference.len(), jobs.len());
+
+        crate::util::proptest::check(
+            "serve-shuffled-submissions",
+            16,
+            |rng| {
+                // Fisher-Yates permutation of the job indices.
+                let mut order: Vec<usize> = (0..jobs.len()).collect();
+                for i in (1..order.len()).rev() {
+                    let j = rng.below((i + 1) as u64) as usize;
+                    order.swap(i, j);
+                }
+                order
+            },
+            |order| {
+                let got = run(order);
+                if got == reference {
+                    Ok(())
+                } else {
+                    Err(format!("responses diverged: {got:?}"))
+                }
+            },
+        );
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn socket_leg_serves_a_batch_per_connection() {
+        use std::io::{Read, Write};
+        use std::net::Shutdown;
+        use std::os::unix::net::UnixStream;
+
+        let dir = std::env::temp_dir().join("twobp-serve-sock-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let sock = dir.join("serve.sock");
+        let _ = std::fs::remove_file(&sock);
+
+        let server = {
+            let sock = sock.clone();
+            std::thread::spawn(move || {
+                let mut e = Engine::new(0);
+                serve_socket(&mut e, &sock, None).unwrap();
+                e.metrics.counter("serve.jobs")
+            })
+        };
+        // Wait for the listener to appear.
+        for _ in 0..200 {
+            if sock.exists() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+
+        let mut c = UnixStream::connect(&sock).unwrap();
+        c.write_all(
+            concat!(
+                r#"{"op":"calibrate","id":"c","name":"p","ranks":2}"#,
+                "\n",
+                r#"{"op":"shutdown","id":"z"}"#,
+                "\n",
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        c.shutdown(Shutdown::Write).unwrap();
+        let mut out = String::new();
+        c.read_to_string(&mut out).unwrap();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2, "{out}");
+        assert!(lines[0].contains("\"id\":\"c\""), "{out}");
+        assert!(lines[1].contains("\"id\":\"z\""), "{out}");
+
+        assert_eq!(server.join().unwrap(), 2);
+        assert!(!sock.exists());
+    }
+}

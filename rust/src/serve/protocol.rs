@@ -1,0 +1,238 @@
+//! The serve wire protocol: line-delimited JSON jobs in, line-delimited
+//! JSON responses out (`docs/SERVE.md` has the full grammar).
+//!
+//! A job is one JSON object per line.  Required: `"op"` (one of
+//! `calibrate | tune | score | gantt | shutdown`).  Optional scheduling
+//! envelope: `"id"` (string, defaulted to `job-<seq>` and materialized
+//! into the logged form so replay sees the same ids), `"deadline"`
+//! (u64, smaller runs sooner; default "none" = `u64::MAX`),
+//! `"priority"` (i64, larger runs sooner within a deadline; default 0),
+//! and `"deps"` (array of job-id strings that must complete `ok:true`
+//! first).  Op-specific fields are read by the engine
+//! ([`super::engine`]); unknown fields are ignored, so clients can
+//! annotate jobs freely.
+//!
+//! Responses are one sorted-key JSON object per line: `{"id", "ok",
+//! ...}` plus op payload fields on success (and `"cache": "hit"|"miss"`
+//! for cacheable ops), or `{"error", "id", "ok": false}` on failure.
+//! The only nondeterministic value a response may carry lives under the
+//! `"wall"` key — the same quarantine contract as
+//! [`crate::metrics::registry`] — so byte-comparing replayed output
+//! only requires stripping `"wall"` ([`strip_wall`]).
+
+use crate::util::json::{obj, Json};
+
+/// The job kinds the service executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Register a resident [`crate::planner::TuneProfile`] from cost
+    /// ratios under a name later `tune`/`score` jobs can reference.
+    Calibrate,
+    /// Run the beam-search auto-tuner ([`crate::planner::TuneRequest`]).
+    Tune,
+    /// Score one plan (Tier-A simulate) against a profile or ratios.
+    Score,
+    /// Render an ASCII gantt chart for one plan.
+    Gantt,
+    /// Acknowledge, finish draining the queue, then stop accepting.
+    Shutdown,
+}
+
+impl Op {
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Calibrate => "calibrate",
+            Op::Tune => "tune",
+            Op::Score => "score",
+            Op::Gantt => "gantt",
+            Op::Shutdown => "shutdown",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Op, String> {
+        match s {
+            "calibrate" => Ok(Op::Calibrate),
+            "tune" => Ok(Op::Tune),
+            "score" => Ok(Op::Score),
+            "gantt" => Ok(Op::Gantt),
+            "shutdown" => Ok(Op::Shutdown),
+            other => Err(format!(
+                "unknown op '{other}' (calibrate|tune|score|gantt|shutdown)"
+            )),
+        }
+    }
+}
+
+/// One parsed, normalized job.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: String,
+    pub op: Op,
+    /// Smaller deadlines are scheduled first; absent = `u64::MAX`.
+    pub deadline: u64,
+    /// Larger priorities break deadline ties; absent = 0.
+    pub priority: i64,
+    /// Ids of jobs that must complete `ok` before this one runs.
+    pub deps: Vec<String>,
+    /// The job object as submitted, with a defaulted `"id"`
+    /// materialized — this exact form goes to the job log, so replay
+    /// re-parses to an identical `Request`.
+    pub raw: Json,
+}
+
+impl Request {
+    /// Parse one job line.  `default_id` is used (and written back into
+    /// the normalized form) when the client did not name the job.
+    pub fn parse(line: &str, default_id: &str) -> Result<Request, String> {
+        let v = Json::parse(line).map_err(|e| format!("bad job json: {e}"))?;
+        let Json::Obj(mut m) = v else {
+            return Err("job must be a JSON object".to_string());
+        };
+        let op = match m.get("op") {
+            Some(Json::Str(s)) => Op::parse(s)?,
+            Some(_) => return Err("\"op\" must be a string".to_string()),
+            None => return Err("job needs an \"op\" field".to_string()),
+        };
+        let id = match m.get("id") {
+            Some(Json::Str(s)) if !s.is_empty() => s.clone(),
+            Some(_) => return Err("\"id\" must be a non-empty string".to_string()),
+            None => {
+                m.insert("id".to_string(), Json::Str(default_id.to_string()));
+                default_id.to_string()
+            }
+        };
+        let deadline = match m.get("deadline") {
+            None => u64::MAX,
+            Some(v) => v
+                .as_u64()
+                .ok_or("\"deadline\" must be a non-negative integer")?,
+        };
+        let priority = match m.get("priority") {
+            None => 0,
+            Some(v) => v.as_i64().ok_or("\"priority\" must be an integer")?,
+        };
+        let deps = match m.get("deps") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_arr()
+                .ok_or("\"deps\" must be an array of job-id strings")?
+                .iter()
+                .map(|d| {
+                    d.as_str().map(str::to_string).ok_or_else(|| {
+                        "\"deps\" entries must be job-id strings".to_string()
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+        Ok(Request { id, op, deadline, priority, deps, raw: Json::Obj(m) })
+    }
+}
+
+/// Build an error response line.  `id` is `None` only for lines that
+/// failed to parse far enough to have one.
+pub fn error_line(id: Option<&str>, msg: &str) -> String {
+    obj(vec![
+        ("error", Json::Str(msg.to_string())),
+        ("id", id.map_or(Json::Null, |s| Json::Str(s.to_string()))),
+        ("ok", Json::Bool(false)),
+    ])
+    .to_string()
+}
+
+/// Drop the `"wall"` quarantine key from a response line so replayed
+/// output can be byte-compared deterministically.  Non-JSON lines pass
+/// through unchanged.
+pub fn strip_wall(line: &str) -> String {
+    match Json::parse(line) {
+        Ok(Json::Obj(mut m)) => {
+            m.remove("wall");
+            Json::Obj(m).to_string()
+        }
+        _ => line.to_string(),
+    }
+}
+
+// --- typed field accessors shared by the engine's op readers ---------
+
+pub fn num_field(raw: &Json, key: &str, default: f64) -> Result<f64, String> {
+    match raw.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| format!("\"{key}\" must be a number")),
+    }
+}
+
+pub fn uint_field(raw: &Json, key: &str, default: u64) -> Result<u64, String> {
+    match raw.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| format!("\"{key}\" must be a non-negative integer")),
+    }
+}
+
+pub fn str_field<'a>(
+    raw: &'a Json,
+    key: &str,
+) -> Result<Option<&'a str>, String> {
+    match raw.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| format!("\"{key}\" must be a string")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_job_and_defaults() {
+        let r = Request::parse(
+            r#"{"op":"tune","id":"t1","deadline":5,"priority":2,
+                "deps":["c0"],"profile":"p"}"#,
+            "job-9",
+        )
+        .unwrap();
+        assert_eq!(r.id, "t1");
+        assert_eq!(r.op, Op::Tune);
+        assert_eq!(r.deadline, 5);
+        assert_eq!(r.priority, 2);
+        assert_eq!(r.deps, vec!["c0".to_string()]);
+
+        let d = Request::parse(r#"{"op":"shutdown"}"#, "job-3").unwrap();
+        assert_eq!(d.id, "job-3");
+        assert_eq!(d.deadline, u64::MAX);
+        assert_eq!(d.priority, 0);
+        assert!(d.deps.is_empty());
+        // The defaulted id is materialized into the logged form.
+        assert!(d.raw.to_string().contains("\"id\":\"job-3\""));
+    }
+
+    #[test]
+    fn rejects_malformed_jobs() {
+        for (line, needle) in [
+            ("nonsense", "bad job json"),
+            ("[1,2]", "must be a JSON object"),
+            (r#"{"id":"x"}"#, "needs an \"op\""),
+            (r#"{"op":"dance"}"#, "unknown op 'dance'"),
+            (r#"{"op":"tune","id":""}"#, "non-empty"),
+            (r#"{"op":"tune","deadline":-1}"#, "\"deadline\""),
+            (r#"{"op":"tune","deps":"c0"}"#, "\"deps\" must be an array"),
+            (r#"{"op":"tune","deps":[1]}"#, "job-id strings"),
+        ] {
+            let err = Request::parse(line, "j").unwrap_err();
+            assert!(err.contains(needle), "{line} -> {err}");
+        }
+    }
+
+    #[test]
+    fn strip_wall_removes_only_the_quarantine_key() {
+        let line = r#"{"id":"a","ok":true,"wall":{"elapsed_s":0.12}}"#;
+        assert_eq!(strip_wall(line), r#"{"id":"a","ok":true}"#);
+        assert_eq!(strip_wall("not json"), "not json");
+    }
+}

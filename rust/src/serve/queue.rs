@@ -1,0 +1,107 @@
+//! Deadline- and priority-aware job queue.
+//!
+//! A thin [`BinaryHeap`] ordered so that [`JobQueue::pop`] yields the
+//! most urgent *ready* job: earliest deadline first, then highest
+//! priority within a deadline, then submission order (`seq`) as the
+//! final FIFO tie-break.  Dependency gating happens in the scheduler
+//! ([`super::run_batch`]): a job enters the queue only once every job
+//! it depends on has completed, so calibration jobs always drain before
+//! the tune jobs they gate.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Entry {
+    deadline: u64,
+    priority: i64,
+    seq: usize,
+}
+
+impl Ord for Entry {
+    // BinaryHeap is a max-heap, so "greater" means "scheduled sooner".
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .deadline
+            .cmp(&self.deadline)
+            .then_with(|| self.priority.cmp(&other.priority))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Priority queue over ready jobs, identified by their submission
+/// index (`seq`) into the batch's accepted-job vector.
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    heap: BinaryHeap<Entry>,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    pub fn push(&mut self, deadline: u64, priority: i64, seq: usize) {
+        self.heap.push(Entry { deadline, priority, seq });
+    }
+
+    /// Most urgent ready job's `seq`, or `None` when drained.
+    pub fn pop(&mut self) -> Option<usize> {
+        self.heap.pop().map(|e| e.seq)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn earliest_deadline_pops_first() {
+        let mut q = JobQueue::new();
+        q.push(u64::MAX, 0, 0);
+        q.push(5, 0, 1);
+        q.push(50, 0, 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn priority_breaks_deadline_ties() {
+        let mut q = JobQueue::new();
+        q.push(10, 0, 0);
+        q.push(10, 7, 1);
+        q.push(10, -3, 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn submission_order_is_the_final_tiebreak() {
+        let mut q = JobQueue::new();
+        q.push(10, 1, 2);
+        q.push(10, 1, 0);
+        q.push(10, 1, 1);
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+    }
+}

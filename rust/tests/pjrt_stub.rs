@@ -268,9 +268,11 @@ fn calibration_round_trip_recovers_skew_and_closes_the_loop() {
         seed: 0x2B92_0245,
         ..BeamConfig::default()
     };
-    let ct =
-        tune_and_execute(&cluster, &manifest, &profile, &cfg, &base, None)
-            .expect("tune + winner execution");
+    let ct = tune_and_execute(
+        &cluster, &manifest, &profile, &cfg, &base,
+        &mut twobp::metrics::observer::NullObserver,
+    )
+    .expect("tune + winner execution");
     let mut named_best = 0.0f64;
     for (kind, two_bp) in combos() {
         for &m in &microbatch_grid(n, 4 * n) {
@@ -392,7 +394,7 @@ fn drift_replan_loop_retunes_exactly_once() {
     let out = twobp::experiments::tune_replan(
         8,
         twobp::pipeline::DriftConfig::default(),
-        None,
+        &mut twobp::metrics::observer::NullObserver,
     )
     .expect("replan loop");
     assert!(
