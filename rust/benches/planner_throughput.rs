@@ -38,15 +38,30 @@
 //! perturbation + `score_plan`, so its throughput should track the
 //! clean scoring path — the gate keys are
 //! `planner_robust_{quick,full}_trials_per_sec`.
+//!
+//! The partition co-search (ISSUE 10) adds its own hot path: the
+//! boundary hill-climb re-scores the incumbent plan under every
+//! neighbor partition — one `ModelProfile::roll_up` + Tier A
+//! `score_plan` per neighbor.  That primitive is timed over a
+//! deterministic partition fan (metric = rolls/sec, gate keys
+//! `planner_cosearch_{quick,full}_rolls_per_sec`), and one end-to-end
+//! `co_search` run is reported (not gated — it is dominated by the
+//! inner beams already gated above).
 
 use std::collections::BTreeSet;
 use std::path::Path;
 use std::time::Instant;
 
 use twobp::experiments::sweep::combos;
+use twobp::metrics::observer::NullObserver;
 use twobp::planner::beam::microbatch_grid;
-use twobp::planner::{moves, tune, BeamConfig, TuneProfile};
-use twobp::schedule::{generate, validate::validate, Plan};
+use twobp::planner::{
+    co_search, moves, tune, BeamConfig, CoSearchConfig, ModelProfile,
+    TuneProfile,
+};
+use twobp::schedule::{
+    generate, validate::validate, Partition, Plan, ScheduleKind,
+};
 use twobp::sim::{eval_plan, score_plan, score_plan_robust, Perturbation,
                  RobustScratch, Scratch};
 use twobp::util::args::Args;
@@ -234,6 +249,83 @@ fn main() {
         fast_s.mean / robust_s.mean.max(1e-9)
     );
 
+    // -- co-search hot path: roll-up + Tier A re-score per neighbor --------
+    // the hill-climb's inner loop: one ModelProfile::roll_up + one
+    // score_plan per neighbor partition, schedule held fixed
+    let layers = 8;
+    let mut layer_model =
+        ModelProfile::from_profile(&TuneProfile::llama_like(layers));
+    layer_model.allreduce_per_byte = 2e-11;
+    layer_model.layers[0].fwd *= 3.0;
+    // every contiguous 2-stage split, plus the balanced 4-stage split
+    // and its full neighbor fan — exactly what the climb re-scores
+    let mut parts: Vec<Partition> = (1..layers)
+        .map(|c| Partition { cuts: vec![0, c, layers], dp: 1 })
+        .collect();
+    let b4 = Partition::balanced(layers, 4, 1);
+    parts.extend(moves::partition_neighbors(&b4));
+    parts.push(b4);
+    let plan2 = generate(ScheduleKind::OneF1B1, true, 2, 8, false);
+    let plan4 = generate(ScheduleKind::OneF1B1, true, 4, 8, false);
+    let roll_iters = if quick { 200 } else { 600 };
+    let run_rolls = |scratch: &mut Scratch| {
+        for _ in 0..roll_iters {
+            for part in &parts {
+                let rolled =
+                    layer_model.roll_up(part).expect("valid partition");
+                let plan =
+                    if part.n_stages() == 2 { &plan2 } else { &plan4 };
+                let _ = score_plan(plan, &rolled.costs, Some(&rolled.mem),
+                                   budget, scratch);
+            }
+        }
+    };
+    run_rolls(&mut scratch); // warmup
+    let mut roll_rps = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        run_rolls(&mut scratch);
+        let dt = t0.elapsed().as_secs_f64();
+        roll_rps.push((parts.len() * roll_iters) as f64 / dt);
+    }
+    let roll_s = summarize(&roll_rps);
+    println!(
+        "  co-search roll+score: {:>7.0} rolls/s ({} partitions × \
+         {roll_iters} iters over the hill-climb's re-score path)",
+        roll_s.mean,
+        parts.len()
+    );
+
+    // one end-to-end joint search (reported, not gated: dominated by
+    // the inner beams, whose throughput the gates above already cover)
+    let t0 = Instant::now();
+    let cs = co_search(
+        &layer_model,
+        &CoSearchConfig::new(
+            4,
+            BeamConfig {
+                budget_bytes: budget,
+                beam_width: 4,
+                generations: 3,
+                mutations_per_parent: 3,
+                seed: 0x2B9,
+                ..BeamConfig::default()
+            },
+        ),
+        &mut NullObserver,
+    )
+    .expect("co_search");
+    let cs_dt = t0.elapsed().as_secs_f64();
+    println!(
+        "  co-search end-to-end: {} cells in {} (winner dp={} pp={}, \
+         {} migrations)\n",
+        cs.cells.len() + cs.infeasible.len(),
+        fmt_duration(cs_dt),
+        cs.best().dp,
+        cs.best().pp,
+        cs.best().migrations
+    );
+
     // -- end-to-end: a small tune() ride on the fast path -----------------
     let t0 = Instant::now();
     let report = tune(
@@ -283,6 +375,15 @@ fn main() {
          Json::Num(fast_s.mean / robust_s.mean.max(1e-9))),
         ("quick", Json::Bool(quick)),
     ]));
+    rec.record("planner_cosearch", obj(vec![
+        ("partitions", Json::Num(parts.len() as f64)),
+        ("roll_iters", Json::Num(roll_iters as f64)),
+        ("rolls_per_sec", Json::Num(roll_s.mean)),
+        ("cosearch_cells", Json::Num(
+            (cs.cells.len() + cs.infeasible.len()) as f64)),
+        ("cosearch_seconds", Json::Num(cs_dt)),
+        ("quick", Json::Bool(quick)),
+    ]));
     let mode_key = if quick {
         "planner_quick_cands_per_sec"
     } else {
@@ -293,8 +394,14 @@ fn main() {
     } else {
         "planner_robust_full_trials_per_sec"
     };
+    let cosearch_key = if quick {
+        "planner_cosearch_quick_rolls_per_sec"
+    } else {
+        "planner_cosearch_full_rolls_per_sec"
+    };
     rec.record_summary(mode_key, &fast_s);
     rec.record_summary(robust_key, &robust_s);
+    rec.record_summary(cosearch_key, &roll_s);
     match rec.write() {
         Ok(()) => println!("  wrote {}", repo_root
             .join("BENCH_planner.json").display()),
@@ -304,7 +411,8 @@ fn main() {
 
     // -- regression gate vs a committed baseline ---------------------------
     let gates = [(mode_key, fast_s.mean, "cands/s"),
-                 (robust_key, robust_s.mean, "draws/s")];
+                 (robust_key, robust_s.mean, "draws/s"),
+                 (cosearch_key, roll_s.mean, "rolls/s")];
     if let Some(path) = args.get("write-baseline") {
         let mut base = BenchRecorder::open(Path::new(path));
         for (key, mean, _) in gates {

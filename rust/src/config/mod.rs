@@ -342,6 +342,77 @@ impl DriftFlags {
     }
 }
 
+/// Which flags the `--co-search` gate unlocks (shared by the parser,
+/// its rejection messages, and the serve daemon's docs).
+pub const CO_SEARCH_FLAG_GROUP: [&str; 4] =
+    ["devices", "layers", "allreduce-per-byte", "migrations"];
+
+/// The `--co-search` partition-search flag cluster, parsed as a unit
+/// (orphaned members rejected through [`require_gate`]).  Raw values
+/// only — `planner::CoSearchConfig` is built at the call site, where
+/// the per-layer [`crate::planner::ModelProfile`] and the inner
+/// [`crate::planner::BeamConfig`] are known.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoSearchFlags {
+    /// `--co-search` was passed; the other fields only matter then.
+    pub enabled: bool,
+    /// Total devices to split dp × pp (`--devices`, default 4).
+    pub devices: usize,
+    /// Model layer count (`--layers`; 0 = 2 × devices, a grid with
+    /// room for every pipeline depth up to `devices`).
+    pub layers: usize,
+    /// Ring-allreduce seconds per gradient byte
+    /// (`--allreduce-per-byte`, default 2e-11 ≈ 50 GB/s links).
+    pub allreduce_per_byte: f64,
+    /// Boundary-migration budget per cell (`--migrations`, default 8).
+    pub migrations: usize,
+}
+
+impl Default for CoSearchFlags {
+    fn default() -> Self {
+        CoSearchFlags {
+            enabled: false,
+            devices: 4,
+            layers: 0,
+            allreduce_per_byte: 2e-11,
+            migrations: 8,
+        }
+    }
+}
+
+impl CoSearchFlags {
+    pub fn from_args(args: &Args) -> Result<CoSearchFlags> {
+        require_gate(args, "co-search", &CO_SEARCH_FLAG_GROUP)?;
+        let d = CoSearchFlags::default();
+        let cfg = CoSearchFlags {
+            enabled: args.has("co-search"),
+            devices: args.get_usize("devices", d.devices),
+            layers: args.get_usize("layers", d.layers),
+            allreduce_per_byte: args
+                .get_f64("allreduce-per-byte", d.allreduce_per_byte),
+            migrations: args.get_usize("migrations", d.migrations),
+        };
+        if cfg.enabled {
+            if cfg.devices == 0 {
+                bail!("--devices must be >= 1");
+            }
+            if cfg.allreduce_per_byte < 0.0 {
+                bail!("--allreduce-per-byte must be >= 0");
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// The resolved layer count (`--layers`, defaulting to 2 × devices).
+    pub fn layer_count(&self) -> usize {
+        if self.layers == 0 {
+            2 * self.devices
+        } else {
+            self.layers
+        }
+    }
+}
+
 /// Configuration of the measured-cost calibration loop (`twobp tune
 /// --synthetic` / `--manifest <preset-dir>`): how many executor steps
 /// to calibrate on, and how many to execute the tuned winner for.
@@ -555,6 +626,52 @@ mod tests {
         let bare = CalibConfig::split_manifest(Path::new("solo")).unwrap();
         assert_eq!(bare.0, PathBuf::from("."));
         assert_eq!(bare.1, "solo");
+    }
+
+    #[test]
+    fn co_search_knobs_parse_and_are_gated() {
+        let flags = ["co-search"];
+        let c = CoSearchFlags::from_args(&Args::parse(
+            &sv(&["--co-search", "--devices", "8", "--layers", "24",
+                  "--allreduce-per-byte", "1e-10", "--migrations", "3"]),
+            &flags,
+        ))
+        .unwrap();
+        assert!(c.enabled);
+        assert_eq!(c.devices, 8);
+        assert_eq!(c.layer_count(), 24);
+        assert_eq!(c.allreduce_per_byte, 1e-10);
+        assert_eq!(c.migrations, 3);
+        // defaults: 4 devices, 2 × devices layers
+        let d = CoSearchFlags::from_args(&Args::parse(
+            &sv(&["--co-search"]), &flags,
+        ))
+        .unwrap();
+        assert_eq!(d.devices, 4);
+        assert_eq!(d.layer_count(), 8);
+        assert!(!CoSearchFlags::from_args(&Args::parse(&sv(&[]), &flags))
+            .unwrap()
+            .enabled);
+        // orphaned members are rejected, naming the whole group
+        for k in CO_SEARCH_FLAG_GROUP {
+            let argv = vec![format!("--{k}"), "2".to_string()];
+            let err = CoSearchFlags::from_args(&Args::parse(
+                &argv, &flags,
+            ))
+            .unwrap_err()
+            .to_string();
+            assert!(
+                err.contains(&format!("--{k} only applies with --co-search")),
+                "{k}: {err}"
+            );
+            assert!(err.contains("--allreduce-per-byte"), "{k}: {err}");
+        }
+        // degenerate values
+        assert!(CoSearchFlags::from_args(&Args::parse(
+            &sv(&["--co-search", "--devices", "0"]),
+            &flags,
+        ))
+        .is_err());
     }
 
     #[test]

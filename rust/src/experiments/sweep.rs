@@ -255,6 +255,24 @@ pub fn combos() -> Vec<(ScheduleKind, bool)> {
     combos
 }
 
+/// The DP×PP device grid the partition co-search sweeps
+/// (DAPPLE-style): every `(dp, pp)` with `dp · pp == devices` and
+/// `pp <= max_pp` (a pipeline can't be deeper than the model has
+/// layers), ascending in dp.  Deterministic divisor order, so the
+/// co-search report is stable.
+pub fn dp_pp_cells(devices: usize, max_pp: usize) -> Vec<(u32, usize)> {
+    let mut cells = Vec::new();
+    for dp in 1..=devices {
+        if devices % dp == 0 {
+            let pp = devices / dp;
+            if pp <= max_pp {
+                cells.push((dp as u32, pp));
+            }
+        }
+    }
+    cells
+}
+
 /// Build the cross product
 /// (every schedule variant ± 2BP) × ranks × microbatch multiplier ×
 /// (fwd, p1, p2) ratio × comm.  The eager-p2 variant only exists with
@@ -297,6 +315,18 @@ pub fn grid(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dp_pp_cells_enumerate_divisors_capped_by_layers() {
+        assert_eq!(
+            dp_pp_cells(12, 12),
+            vec![(1, 12), (2, 6), (3, 4), (4, 3), (6, 2), (12, 1)]
+        );
+        // max_pp caps pipeline depth at the layer count
+        assert_eq!(dp_pp_cells(12, 4), vec![(3, 4), (4, 3), (6, 2), (12, 1)]);
+        assert_eq!(dp_pp_cells(7, 2), vec![(7, 1)]); // prime, shallow model
+        assert!(dp_pp_cells(0, 8).is_empty());
+    }
 
     #[test]
     fn run_grid_preserves_cell_order() {

@@ -51,9 +51,19 @@
 //!                 stub costs drift mid-run — detect measured-vs-
 //!                 predicted drift, re-calibrate + re-tune once;
 //!                 beam/out flags use tuned defaults there)
+//!                [--co-search [--devices D] [--layers L]
+//!                 [--allreduce-per-byte S] [--migrations K]]  (joint
+//!                 partition × schedule search: split D devices over
+//!                 every dp×pp divisor cell, beam-search a schedule
+//!                 per cell on the rolled-up per-layer profile,
+//!                 hill-climb the layer boundaries, and rank cells by
+//!                 effective throughput — makespan plus the DP
+//!                 gradient-allreduce term; docs/PLAN_FORMAT.md §part.
+//!                 With --synthetic/--manifest the *measured* stage
+//!                 costs are repartitioned as layers instead)
 //! twobp bench    <table1|fig1|synthetic|tune-calibrated|replan|faults
 //!                 |robustness|fig3|fig4|fig5|table3|fig6|fig7|ckpt
-//!                 |sweep|planner> [--steps N]
+//!                 |sweep|planner|partition> [--steps N]
 //!                [--metrics-out FILE.jsonl]  (faults only: the
 //!                 fault-recovery sweep's deterministic `fault.*` log)
 //! twobp serve    [--socket PATH] [--log FILE] [--threads K]
@@ -76,10 +86,13 @@
 
 use anyhow::{anyhow, Result};
 
-use twobp::config::{table2, RobustConfig};
+use twobp::config::{table2, CoSearchFlags, RobustConfig};
 use twobp::metrics::observer::{observer_or, NullObserver};
 use twobp::metrics::registry::MetricsRegistry;
-use twobp::planner::{BeamConfig, TuneProfile, TuneReport, TuneRequest};
+use twobp::planner::{
+    co_search, BeamConfig, CoSearchConfig, CoSearchReport, ModelProfile,
+    TuneProfile, TuneReport, TuneRequest,
+};
 use twobp::schedule::{generate, plan_io, validate::validate, ScheduleKind};
 use twobp::sim::{simulate, CostModel};
 use twobp::util::args::Args;
@@ -88,7 +101,8 @@ use twobp::util::stats::{fmt_bytes, parse_bytes};
 use twobp::util::trace;
 
 const FLAGS: &[&str] = &["no-2bp", "concat-p2", "verbose", "list", "real",
-                         "csv", "gantt", "synthetic", "robust", "replan"];
+                         "csv", "gantt", "synthetic", "robust", "replan",
+                         "co-search"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -262,7 +276,10 @@ fn cmd_gantt(args: &Args) -> Result<()> {
         } else {
             println!("--- {} ({path}) ---  bubble ratio {:.3}",
                      plan.describe(), res.bubble_ratio);
-            print!("{}", gantt::render(&res.spans, cols));
+            // v2 plans carry a layer partition: prefix the per-rank
+            // `layers a-b  dp=k` headers (byte-identical for v1 plans)
+            print!("{}", gantt::render_with_partition(
+                &res.spans, cols, plan.partition.as_ref()));
         }
         return Ok(());
     }
@@ -451,7 +468,9 @@ fn winner_outputs(
     }
     if args.has("gantt") {
         let res = simulate(plan, costs, None).map_err(|e| anyhow!("{e}"))?;
-        print!("{}", gantt::render(&res.spans, args.get_usize("cols", 96)));
+        print!("{}", gantt::render_with_partition(
+            &res.spans, args.get_usize("cols", 96),
+            plan.partition.as_ref()));
     }
     Ok(())
 }
@@ -519,6 +538,106 @@ fn print_search_summary(report: &TuneReport, cfg: &BeamConfig) {
     }
 }
 
+/// Print the ranked dp×pp cell table + winner block of a co-search
+/// run (shared by the ratio-profile and calibrated paths).
+fn print_cosearch_summary(report: &CoSearchReport, cfg: &CoSearchConfig) {
+    println!(
+        "co-search: model {}, {} devices, budget {}/device",
+        report.model_name,
+        report.devices,
+        cfg.beam
+            .budget_bytes
+            .map(fmt_bytes)
+            .unwrap_or_else(|| "unconstrained".into()),
+    );
+    println!(
+        "  {:>2} × {:<2}  {:<26} {:>10} {:>11} {:>10} {:>5}",
+        "dp", "pp", "partition", "step time", "samples/s", "peak", "migr",
+    );
+    for c in &report.cells {
+        println!(
+            "  {:>2} × {:<2}  {:<26} {:>10.4} {:>11.3} {:>10} {:>5}",
+            c.dp,
+            c.pp,
+            c.partition.describe(),
+            c.step_time,
+            c.throughput,
+            fmt_bytes(c.max_peak),
+            c.migrations,
+        );
+    }
+    for (dp, pp, e) in &report.infeasible {
+        println!("  {dp:>2} × {pp:<2}  infeasible: {e}");
+    }
+    let b = report.best();
+    println!(
+        "winner: dp={} pp={}  {}  [{}]\n  throughput {:.4} samples/s   \
+         step time {:.4} (makespan {:.4} + allreduce {:.4})   peak {}",
+        b.dp,
+        b.pp,
+        b.partition.describe(),
+        b.candidate.plan.describe(),
+        b.throughput,
+        b.step_time,
+        b.makespan,
+        b.allreduce_s,
+        fmt_bytes(b.max_peak),
+    );
+}
+
+/// `twobp tune --co-search` on the ratio profile: build a per-layer
+/// [`ModelProfile`] (LLaMa-like, or `--fwd/--p1/--p2/--comm` ratios)
+/// and run the joint partition × schedule search over the dp×pp grid.
+fn cmd_tune_cosearch(args: &Args, flags: &CoSearchFlags) -> Result<()> {
+    if args.get("ranks").is_some() {
+        return Err(anyhow!(
+            "--ranks fixes the stage count, but --co-search searches \
+             the whole dp×pp grid (pipeline depth included); use \
+             --devices and --layers instead"
+        ));
+    }
+    let layers = flags.layer_count();
+    let custom_costs = ["fwd", "p1", "p2", "comm"]
+        .iter()
+        .any(|k| args.get(k).is_some());
+    let profile = if custom_costs {
+        TuneProfile::from_ratios(
+            layers,
+            args.get_f64("fwd", 1.0),
+            args.get_f64("p1", 1.05),
+            args.get_f64("p2", 0.95),
+            args.get_f64("comm", 0.05),
+        )
+    } else {
+        TuneProfile::llama_like(layers)
+    };
+    let mut model = ModelProfile::from_profile(&profile);
+    model.allreduce_per_byte = flags.allreduce_per_byte;
+    let mut cfg = CoSearchConfig::new(flags.devices, beam_config_from_args(args)?);
+    cfg.max_migrations = flags.migrations;
+    let mut obs = args.get("metrics-out").map(|_| MetricsRegistry::new());
+    let mut null = NullObserver;
+    let report = co_search(&model, &cfg, observer_or(obs.as_mut(), &mut null))
+        .map_err(|e| anyhow!(e))?;
+    print_cosearch_summary(&report, &cfg);
+    let best = report.best();
+    // the winner's outputs price under its own rolled-up stage profile
+    let rolled = model.roll_up(&best.partition).map_err(|e| anyhow!(e))?;
+    winner_outputs(args, &best.candidate.text, &best.candidate.plan,
+                   &rolled.costs)?;
+    if let Some(path) = args.get("trace-out") {
+        let res = simulate(&best.candidate.plan, &rolled.costs, None)
+            .map_err(|e| anyhow!("{e}"))?;
+        let mut tb = trace::TraceBuilder::new();
+        tb.add_timeline("predicted", trace::PREDICTED_PID_BASE, &res.spans);
+        write_trace(&tb, path)?;
+    }
+    if let (Some(path), Some(m)) = (args.get("metrics-out"), obs.as_ref()) {
+        write_metrics(m, path)?;
+    }
+    Ok(())
+}
+
 /// Memory-constrained schedule auto-tuning (the `planner/` subsystem):
 /// beam-search the legal-plan space for the best-throughput schedule
 /// whose per-rank peak fits `--budget`.  Profile defaults to the
@@ -526,6 +645,7 @@ fn print_search_summary(report: &TuneReport, cfg: &BeamConfig) {
 /// `--synthetic` / `--manifest <preset-dir>` switch to the
 /// measured-cost calibration loop instead (pjrt feature).
 fn cmd_tune(args: &Args) -> Result<()> {
+    let cosearch = CoSearchFlags::from_args(args)?;
     if args.has("synthetic") || args.get("manifest").is_some() {
         // measured-cost mode: rank count and cost shape come from the
         // manifest + calibration, so the ratio-profile flags would be
@@ -541,6 +661,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
             }
         }
         return cmd_tune_calibrated(args);
+    }
+    if cosearch.enabled {
+        return cmd_tune_cosearch(args, &cosearch);
     }
     let n = args.get_usize("ranks", 4);
     let custom_costs = ["fwd", "p1", "p2", "comm"]
@@ -608,6 +731,20 @@ fn cmd_tune_calibrated(args: &Args) -> Result<()> {
 
     let calib = CalibConfig::from_args(args)?;
     let beam_cfg = beam_config_from_args(args)?;
+    let cosearch = CoSearchFlags::from_args(args)?;
+    if cosearch.enabled && calib.replan {
+        return Err(anyhow!(
+            "--replan re-tunes the fixed-stage schedule mid-run; \
+             --co-search is a static planning mode — drop one"
+        ));
+    }
+    if cosearch.enabled && cosearch.layers != 0 {
+        return Err(anyhow!(
+            "--layers sets the ratio-profile layer count, but with \
+             --synthetic/--manifest the measured stages *are* the \
+             layers (one per manifest stage); drop --layers"
+        ));
+    }
     let mut obs = args.get("metrics-out").map(|_| MetricsRegistry::new());
 
     if calib.replan {
@@ -715,6 +852,55 @@ fn cmd_tune_calibrated(args: &Args) -> Result<()> {
             manifest.samples_per_microbatch,
         )
         .map_err(|e| anyhow!(e))?;
+        if cosearch.enabled {
+            // measured-cost co-search: the calibrated per-stage costs
+            // become the per-layer model (stage s → layer s) and the
+            // dp×pp grid is searched over them.  The winner is *not*
+            // executed back — execute-back assumes the manifest's own
+            // layer→stage mapping, which a repartition changes.
+            let mut model = ModelProfile::from_profile(&profile);
+            model.allreduce_per_byte = cosearch.allreduce_per_byte;
+            let mut cs_cfg =
+                CoSearchConfig::new(cosearch.devices, beam_cfg.clone());
+            cs_cfg.max_migrations = cosearch.migrations;
+            let mut null = NullObserver;
+            let report = co_search(
+                &model,
+                &cs_cfg,
+                observer_or(obs.as_mut(), &mut null),
+            )
+            .map_err(|e| anyhow!(e))?;
+            print_cosearch_summary(&report, &cs_cfg);
+            println!(
+                "note: co-search repartitions the {} measured stages as \
+                 layers; the winner is planned, not executed back \
+                 (execute-back assumes the manifest's stage mapping)",
+                manifest.n_stages,
+            );
+            let best = report.best();
+            let rolled =
+                model.roll_up(&best.partition).map_err(|e| anyhow!(e))?;
+            winner_outputs(args, &best.candidate.text,
+                           &best.candidate.plan, &rolled.costs)?;
+            if let Some(path) = args.get("trace-out") {
+                let res =
+                    simulate(&best.candidate.plan, &rolled.costs, None)
+                        .map_err(|e| anyhow!("{e}"))?;
+                let mut tb = trace::TraceBuilder::new();
+                tb.add_timeline(
+                    "predicted",
+                    trace::PREDICTED_PID_BASE,
+                    &res.spans,
+                );
+                write_trace(&tb, path)?;
+            }
+            if let (Some(path), Some(m)) =
+                (args.get("metrics-out"), obs.as_ref())
+            {
+                write_metrics(m, path)?;
+            }
+            return Ok(());
+        }
         println!(
             "planner: profile {}, {} ranks, budget {}/rank",
             profile.name,

@@ -46,7 +46,8 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::experiments::sweep::{combos, default_threads,
                                 run_grid_with_pool};
 use crate::metrics::observer::{NullObserver, Observer};
-use crate::schedule::{generate, plan_io, validate::validate, Plan};
+use crate::schedule::{generate, plan_io, validate::validate, Partition,
+                      Plan};
 use crate::sim::{score_plan, score_plan_robust, Perturbation, RobustScratch};
 use crate::util::prng::SplitMix64;
 
@@ -122,6 +123,12 @@ pub struct TuneRequest<'a> {
     pub profile: &'a TuneProfile,
     pub n_ranks: usize,
     pub beam: BeamConfig,
+    /// Layer→stage partition to stamp on every candidate (the
+    /// co-search sets this so winners carry their own provenance —
+    /// DSL v2, gantt headers, fingerprints).  `None` = the classic
+    /// per-stage world; the search itself is identical either way,
+    /// since the profile is already rolled up per stage.
+    pub partition: Option<Partition>,
 }
 
 impl<'a> TuneRequest<'a> {
@@ -130,7 +137,13 @@ impl<'a> TuneRequest<'a> {
         n_ranks: usize,
         beam: BeamConfig,
     ) -> TuneRequest<'a> {
-        TuneRequest { profile, n_ranks, beam }
+        TuneRequest { profile, n_ranks, beam, partition: None }
+    }
+
+    /// Builder: stamp `part` on every seeded/mutated candidate.
+    pub fn with_partition(mut self, part: Partition) -> TuneRequest<'a> {
+        self.partition = Some(part);
+        self
     }
 
     /// Run the search.  `Err` when the profile shape mismatches
@@ -181,6 +194,16 @@ impl<'a> TuneRequest<'a> {
             }
         }
         mix(b.patience as u64);
+        // mix nothing when partition is None, so every fingerprint
+        // persisted before partitions existed is unchanged
+        if let Some(p) = &self.partition {
+            mix(6);
+            mix(p.dp as u64);
+            mix(p.cuts.len() as u64);
+            for &c in &p.cuts {
+                mix(c as u64);
+            }
+        }
         match &b.robust {
             None => mix(0),
             Some(ro) => {
@@ -545,6 +568,15 @@ fn search(
             profile.costs.fwd.len()
         ));
     }
+    if let Some(p) = &req.partition {
+        p.check()?;
+        if p.n_stages() != n_ranks {
+            return Err(format!(
+                "partition has {} stages, tune asked for {n_ranks} ranks",
+                p.n_stages()
+            ));
+        }
+    }
     let threads = if cfg.threads == 0 {
         default_threads()
     } else {
@@ -569,7 +601,11 @@ fn search(
     let mut named_fps: BTreeSet<u64> = BTreeSet::new();
     for (kind, two_bp) in combos() {
         for &m in &microbatch_grid(n_ranks, max_m) {
-            let plan = generate(kind, two_bp, n_ranks, m, false);
+            let mut plan = generate(kind, two_bp, n_ranks, m, false);
+            // stamped before fingerprinting, so dedup, the DSL text,
+            // and the winner all carry the partition; mutations clone
+            // the plan, so descendants inherit it for free
+            plan.partition = req.partition.clone();
             let fp = plan.fingerprint();
             let desc = plan.describe();
             if seen.insert(fp) {
@@ -1022,6 +1058,36 @@ mod tests {
         let mut trials = robust.clone();
         trials.beam.robust.as_mut().unwrap().trials += 1;
         assert_ne!(trials.fingerprint(), robust.fingerprint());
+    }
+
+    /// A partitioned request stamps every candidate (the winner's plan
+    /// and DSL text carry it), splits the cache fingerprint, and
+    /// rejects stage-count mismatches up front.
+    #[test]
+    fn partitioned_request_stamps_the_winner() {
+        let profile = TuneProfile::llama_like(4);
+        let part = Partition::balanced(8, 4, 2);
+        let req = TuneRequest::new(&profile, 4, quick_cfg())
+            .with_partition(part.clone());
+        assert_ne!(
+            req.fingerprint(),
+            TuneRequest::new(&profile, 4, quick_cfg()).fingerprint(),
+            "partition must split the cache key"
+        );
+        let report = req.run(&mut NullObserver).unwrap();
+        assert_eq!(report.best.plan.partition.as_ref(), Some(&part));
+        assert!(report.best.text.contains("plan v2"), "{}",
+                report.best.text);
+        assert!(report.best.text.contains("part dp 2 layers"));
+        // and the partitioned search finds the same schedule as the
+        // plain one — the partition is provenance, not a constraint
+        let plain = tune(&profile, 4, &quick_cfg()).unwrap();
+        assert_eq!(report.best.plan.ranks, plain.best.plan.ranks);
+
+        let bad = TuneRequest::new(&profile, 4, quick_cfg())
+            .with_partition(Partition::balanced(8, 2, 1));
+        let err = bad.run(&mut NullObserver).unwrap_err();
+        assert!(err.contains("2 stages"), "{err}");
     }
 
     #[test]

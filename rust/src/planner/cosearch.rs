@@ -1,0 +1,463 @@
+//! Joint partition × schedule co-search over a DP×PP device grid.
+//!
+//! Given `devices` accelerators and a per-layer [`ModelProfile`], this
+//! answers the question the fixed-stage planner cannot: **how should
+//! the devices be split** between data-parallel replication and
+//! pipeline depth, **where should the layer cuts go**, and what
+//! schedule runs best on the result (DAPPLE's joint search + BaPipe's
+//! repartitioning, see PAPERS.md).
+//!
+//! Per divisor cell `dp × pp == devices` (with `pp <= n_layers`):
+//!
+//! 1. start from the balanced contiguous partition
+//!    ([`Partition::balanced`]) and beam-search a schedule for its
+//!    rolled-up per-stage profile ([`ModelProfile::roll_up`] →
+//!    [`TuneRequest`] — the existing search, untouched);
+//! 2. **hill-climb the layer boundaries**: re-score the incumbent
+//!    winner plan under every neighbor partition
+//!    ([`moves::partition_neighbors`], one cheap Tier A
+//!    [`score_plan`] each — no beam), take the best strict
+//!    improvement in step time, repeat up to
+//!    [`CoSearchConfig::max_migrations`] times;
+//! 3. if any boundary moved, re-beam once on the final partition and
+//!    keep the better of the two winners.
+//!
+//! A cell's **step time** is the plan makespan plus the DP gradient
+//! allreduce ([`crate::sim::allreduce_time`] on the fattest stage's
+//! param bytes) — added *outside* the sim kernel, so the two-tier
+//! contract is untouched.  Cells rank on **effective throughput**
+//! `dp · samples / step_time` (a dp-way replica processes dp
+//! microbatch streams per step), ties on peak asc, then dp asc.
+//!
+//! Hill-climb comparisons always use the clean-world Tier A score,
+//! even when the inner beam runs a robust objective — the boundary
+//! move is a cost/memory trade, not a tail-risk one.
+//!
+//! Everything is deterministic: cells are enumerated in divisor order,
+//! neighbors in cut order, and the inner beam is the deterministic
+//! seeded search.
+
+use crate::experiments::sweep::dp_pp_cells;
+use crate::metrics::observer::{NullObserver, Observer};
+use crate::schedule::Partition;
+use crate::sim::{allreduce_time, score_plan, Scratch};
+
+use super::moves::partition_neighbors;
+use super::{BeamConfig, Candidate, ModelProfile, TuneRequest};
+
+/// Co-search knobs on top of the inner beam's [`BeamConfig`].
+#[derive(Debug, Clone)]
+pub struct CoSearchConfig {
+    /// Total devices to split as dp × pp.
+    pub devices: usize,
+    /// Boundary-migration budget per cell (0 disables the climb).
+    pub max_migrations: usize,
+    /// The inner schedule search, reused per cell (its `budget_bytes`
+    /// is the per-device byte budget — the memory force that pushes
+    /// against deep stages).
+    pub beam: BeamConfig,
+}
+
+impl CoSearchConfig {
+    pub fn new(devices: usize, beam: BeamConfig) -> CoSearchConfig {
+        CoSearchConfig { devices, max_migrations: 8, beam }
+    }
+}
+
+/// One evaluated DP×PP cell: its final partition, schedule winner, and
+/// the step-time decomposition the ranking runs on.
+#[derive(Debug, Clone)]
+pub struct CellReport {
+    pub dp: u32,
+    pub pp: usize,
+    pub partition: Partition,
+    /// The inner beam's winner under the final partition.
+    pub candidate: Candidate,
+    /// Plan makespan (no allreduce), from the beam's objective.
+    pub makespan: f64,
+    /// Ring-allreduce seconds for the fattest stage (0 when dp == 1).
+    pub allreduce_s: f64,
+    /// `makespan + allreduce_s` — what cells are compared on.
+    pub step_time: f64,
+    /// Effective samples/sec: `dp · samples_per_step / step_time`.
+    pub throughput: f64,
+    pub max_peak: u64,
+    /// Boundary migrations the hill-climb accepted.
+    pub migrations: usize,
+}
+
+/// What [`co_search`] found: every feasible cell (ranked, best first)
+/// plus the per-cell diagnostics.
+#[derive(Debug, Clone)]
+pub struct CoSearchReport {
+    pub model_name: String,
+    pub devices: usize,
+    /// Feasible cells, best first.  `best()` is `cells[0]`.
+    pub cells: Vec<CellReport>,
+    /// Cells where no schedule fit the budget (dp, pp, error).
+    pub infeasible: Vec<(u32, usize, String)>,
+}
+
+impl CoSearchReport {
+    pub fn best(&self) -> &CellReport {
+        &self.cells[0]
+    }
+}
+
+/// Cell ranking: effective throughput desc, peak asc, then smaller dp
+/// (prefer the less replicated grid when truly tied), then the
+/// partition's text form — a total order, so the report is stable.
+fn better(a: &CellReport, b: &CellReport) -> std::cmp::Ordering {
+    b.throughput
+        .total_cmp(&a.throughput)
+        .then_with(|| a.max_peak.cmp(&b.max_peak))
+        .then_with(|| a.dp.cmp(&b.dp))
+        .then_with(|| {
+            a.partition.describe().cmp(&b.partition.describe())
+        })
+}
+
+/// Step time of `cand`'s plan under `part` (clean Tier A score +
+/// allreduce), or `None` when the rolled profile rejects the plan
+/// (over budget / deadlock).  The hill-climb's evaluation primitive.
+fn step_time_under(
+    model: &ModelProfile,
+    part: &Partition,
+    cand: &Candidate,
+    budget: Option<u64>,
+    scratch: &mut Scratch,
+) -> Option<(f64, f64, u64)> {
+    let rolled = model.roll_up(part).ok()?;
+    let score = score_plan(
+        &cand.plan,
+        &rolled.costs,
+        Some(&rolled.mem),
+        budget,
+        scratch,
+    )
+    .ok()?;
+    if !score.fits {
+        return None;
+    }
+    let ar = allreduce_time(
+        part.dp,
+        model.max_stage_param_bytes(part),
+        model.allreduce_per_byte,
+    );
+    Some((score.makespan + ar, score.makespan, score.max_peak))
+}
+
+/// Run the joint search (module docs).  `Err` only when *no* cell
+/// yields a fitting schedule.
+pub fn co_search(
+    model: &ModelProfile,
+    cfg: &CoSearchConfig,
+    obs: &mut dyn Observer,
+) -> Result<CoSearchReport, String> {
+    if cfg.devices == 0 {
+        return Err("co-search needs at least one device".into());
+    }
+    if model.n_layers() == 0 {
+        return Err("co-search needs at least one layer".into());
+    }
+    let cells = dp_pp_cells(cfg.devices, model.n_layers());
+    if cells.is_empty() {
+        return Err(format!(
+            "no dp×pp split of {} devices fits {} layers",
+            cfg.devices,
+            model.n_layers()
+        ));
+    }
+    obs.counter_add("partition.cells", cells.len() as u64);
+
+    let mut scratch = Scratch::new();
+    let mut reports: Vec<CellReport> = Vec::new();
+    let mut infeasible: Vec<(u32, usize, String)> = Vec::new();
+
+    for (dp, pp) in cells {
+        match run_cell(model, cfg, dp, pp, obs, &mut scratch) {
+            Ok(cell) => reports.push(cell),
+            Err(e) => infeasible.push((dp, pp, e)),
+        }
+    }
+
+    if reports.is_empty() {
+        let detail = infeasible
+            .iter()
+            .map(|(dp, pp, e)| format!("dp={dp}×pp={pp}: {e}"))
+            .collect::<Vec<_>>()
+            .join("; ");
+        return Err(format!("every dp×pp cell infeasible: {detail}"));
+    }
+    reports.sort_by(better);
+
+    if obs.enabled() {
+        use crate::metrics::registry::Value;
+        let best = &reports[0];
+        let fields = vec![
+            ("dp", Value::from(best.dp as u64)),
+            ("pp", Value::from(best.pp)),
+            ("partition", Value::from(best.partition.describe())),
+            ("migrations", Value::from(best.migrations)),
+            ("max_peak", Value::from(best.max_peak)),
+        ];
+        let scores = [
+            ("step_time", best.step_time),
+            ("throughput", best.throughput),
+            ("allreduce_s", best.allreduce_s),
+        ];
+        if model.measured {
+            obs.event_mixed("partition.winner", fields, scores.to_vec());
+        } else {
+            let mut fields = fields;
+            for (k, v) in scores {
+                fields.push((k, Value::from(v)));
+            }
+            obs.event("partition.winner", fields);
+        }
+    }
+
+    Ok(CoSearchReport {
+        model_name: model.name.clone(),
+        devices: cfg.devices,
+        cells: reports,
+        infeasible,
+    })
+}
+
+/// Beam + boundary hill-climb + (conditional) re-beam for one cell.
+fn run_cell(
+    model: &ModelProfile,
+    cfg: &CoSearchConfig,
+    dp: u32,
+    pp: usize,
+    obs: &mut dyn Observer,
+    scratch: &mut Scratch,
+) -> Result<CellReport, String> {
+    let beam_once = |part: &Partition,
+                     obs: &mut dyn Observer|
+     -> Result<Candidate, String> {
+        let rolled = model.roll_up(part)?;
+        obs.counter_add("partition.beams", 1);
+        let report = TuneRequest::new(&rolled, pp, cfg.beam.clone())
+            .with_partition(part.clone())
+            .run(&mut NullObserver)?;
+        Ok(report.best)
+    };
+
+    let mut part = Partition::balanced(model.n_layers(), pp, dp);
+    let mut cand = beam_once(&part, obs)?;
+    let budget = cfg.beam.budget_bytes;
+    let (mut step, _, _) =
+        step_time_under(model, &part, &cand, budget, scratch)
+            .ok_or_else(|| {
+                "beam winner does not re-score under its own partition"
+                    .to_string()
+            })?;
+
+    // -- boundary hill-climb (schedule held fixed) -------------------------
+    let mut migrations = 0usize;
+    while migrations < cfg.max_migrations {
+        let mut best_move: Option<(Partition, f64)> = None;
+        for nb in partition_neighbors(&part) {
+            if let Some((s, _, _)) =
+                step_time_under(model, &nb, &cand, budget, scratch)
+            {
+                let beats_incumbent = s < step;
+                let beats_best = best_move
+                    .as_ref()
+                    .map(|(_, bs)| s < *bs)
+                    .unwrap_or(true);
+                if beats_incumbent && beats_best {
+                    best_move = Some((nb, s));
+                }
+            }
+        }
+        match best_move {
+            Some((nb, s)) => {
+                part = nb;
+                step = s;
+                migrations += 1;
+                obs.counter_add("partition.migrations", 1);
+            }
+            None => break,
+        }
+    }
+
+    // -- re-beam on the migrated partition, keep the better winner ---------
+    if migrations > 0 {
+        if let Ok(rebeamed) = beam_once(&part, obs) {
+            if let Some((s, _, _)) =
+                step_time_under(model, &part, &rebeamed, budget, scratch)
+            {
+                if s < step {
+                    cand = rebeamed;
+                    step = s;
+                }
+            }
+        }
+    }
+
+    let (step_time, makespan, max_peak) =
+        step_time_under(model, &part, &cand, budget, scratch)
+            .ok_or_else(|| "final winner stopped fitting".to_string())?;
+    debug_assert_eq!(step_time.to_bits(), step.to_bits());
+    // re-stamp: the winner must carry the *final* partition (text too)
+    let mut cand = cand;
+    cand.plan.partition = Some(part.clone());
+    cand.text = crate::schedule::plan_io::to_text(&cand.plan);
+    let allreduce_s = step_time - makespan;
+    let samples = model.samples_per_microbatch as f64
+        * cand.plan.n_microbatches as f64;
+    Ok(CellReport {
+        dp,
+        pp,
+        partition: part,
+        candidate: cand,
+        makespan,
+        allreduce_s,
+        step_time,
+        throughput: dp as f64 * samples / step_time,
+        max_peak,
+        migrations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::TuneProfile;
+    use crate::schedule::validate::validate;
+
+    fn quick_beam() -> BeamConfig {
+        BeamConfig {
+            beam_width: 4,
+            generations: 3,
+            mutations_per_parent: 3,
+            seed: 11,
+            ..BeamConfig::default()
+        }
+    }
+
+    /// A model whose layers are uniform — layer count divisible every
+    /// which way, so all divisor cells are live.
+    fn uniform_model(layers: usize) -> ModelProfile {
+        let mut m =
+            ModelProfile::from_profile(&TuneProfile::llama_like(layers));
+        m.allreduce_per_byte = 2e-11;
+        m
+    }
+
+    #[test]
+    fn co_search_covers_every_divisor_cell() {
+        let model = uniform_model(8);
+        let cfg = CoSearchConfig::new(4, quick_beam());
+        let rep =
+            co_search(&model, &cfg, &mut NullObserver).unwrap();
+        let seen: Vec<(u32, usize)> =
+            rep.cells.iter().map(|c| (c.dp, c.pp)).collect();
+        for cell in [(1u32, 4usize), (2, 2), (4, 1)] {
+            assert!(seen.contains(&cell), "missing cell {cell:?}");
+        }
+        assert!(rep.infeasible.is_empty());
+        let best = rep.best();
+        validate(&best.candidate.plan).unwrap();
+        assert_eq!(
+            best.candidate.plan.partition.as_ref(),
+            Some(&best.partition)
+        );
+        // ranked best-first on effective throughput
+        for w in rep.cells.windows(2) {
+            assert!(w[0].throughput >= w[1].throughput);
+        }
+    }
+
+    #[test]
+    fn dp_cells_pay_the_allreduce_term() {
+        let model = uniform_model(8);
+        let cfg = CoSearchConfig::new(4, quick_beam());
+        let rep = co_search(&model, &cfg, &mut NullObserver).unwrap();
+        for c in &rep.cells {
+            if c.dp == 1 {
+                assert_eq!(c.allreduce_s, 0.0);
+            } else {
+                assert!(c.allreduce_s > 0.0, "dp={} pays nothing", c.dp);
+            }
+            assert!((c.step_time - (c.makespan + c.allreduce_s)).abs()
+                        < 1e-12);
+        }
+    }
+
+    /// A model with one very expensive layer: the balanced 2-stage
+    /// split leaves stage 0 with the hot layer *plus* peers, so the
+    /// hill-climb must migrate boundaries toward it.
+    #[test]
+    fn hill_climb_migrates_toward_the_hot_layer() {
+        let mut model = uniform_model(8);
+        model.layers[0].fwd *= 6.0;
+        model.layers[0].p1 *= 6.0;
+        model.layers[0].p2 *= 6.0;
+        let cfg = CoSearchConfig::new(2, quick_beam());
+        let rep = co_search(&model, &cfg, &mut NullObserver).unwrap();
+        let pp2 = rep
+            .cells
+            .iter()
+            .find(|c| c.pp == 2)
+            .expect("pp=2 cell present");
+        assert!(pp2.migrations > 0, "no boundary ever moved");
+        // stage 0 sheds layers until the hot layer dominates alone-ish
+        assert!(
+            pp2.partition.cuts[1] < 4,
+            "boundary stayed at the balanced split: {:?}",
+            pp2.partition.cuts
+        );
+    }
+
+    #[test]
+    fn co_search_is_deterministic() {
+        let mut model = uniform_model(6);
+        model.layers[3].p2 *= 2.5;
+        let cfg = CoSearchConfig::new(6, quick_beam());
+        let a = co_search(&model, &cfg, &mut NullObserver).unwrap();
+        let b = co_search(&model, &cfg, &mut NullObserver).unwrap();
+        assert_eq!(a.best().candidate.text, b.best().candidate.text);
+        assert_eq!(a.best().step_time.to_bits(), b.best().step_time.to_bits());
+        assert_eq!(a.cells.len(), b.cells.len());
+    }
+
+    #[test]
+    fn telemetry_counts_cells_beams_and_migrations() {
+        let mut model = uniform_model(8);
+        model.layers[0].fwd *= 6.0;
+        let cfg = CoSearchConfig::new(2, quick_beam());
+        let mut reg = crate::metrics::registry::MetricsRegistry::new();
+        let rep = co_search(&model, &cfg, &mut reg).unwrap();
+        assert_eq!(reg.counter("partition.cells"), 2); // 1×2, 2×1
+        assert!(reg.counter("partition.beams") >= 2);
+        let migrations: usize =
+            rep.cells.iter().map(|c| c.migrations).sum();
+        assert_eq!(reg.counter("partition.migrations"), migrations as u64);
+        assert!(reg.to_jsonl().contains("partition.winner"));
+    }
+
+    #[test]
+    fn degenerate_inputs_error_out() {
+        let model = uniform_model(4);
+        assert!(co_search(
+            &model,
+            &CoSearchConfig::new(0, quick_beam()),
+            &mut NullObserver
+        )
+        .is_err());
+        // 5 devices over 4 layers: only dp=5×pp=1 fits (pp=5 > layers,
+        // and 5 is prime) — still feasible, not an error
+        let rep = co_search(
+            &model,
+            &CoSearchConfig::new(5, quick_beam()),
+            &mut NullObserver,
+        )
+        .unwrap();
+        assert_eq!(rep.cells.len(), 1);
+        assert_eq!((rep.best().dp, rep.best().pp), (5, 1));
+    }
+}

@@ -51,12 +51,16 @@
 //! this is that loop, testable offline against the stub backend.
 
 pub mod beam;
+pub mod cosearch;
 pub mod moves;
+pub mod partition;
 
 pub use beam::{
     tune, BeamConfig, Candidate, RobustObjective, TuneOutcome, TuneReport,
     TuneRequest,
 };
+pub use cosearch::{co_search, CoSearchConfig, CoSearchReport};
+pub use partition::{LayerProfile, ModelProfile};
 
 use crate::sim::{CostModel, MemModel};
 

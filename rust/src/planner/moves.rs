@@ -50,7 +50,7 @@
 //!   concatenated call (Table 3's trade, live when `concat_factor ≠ 1`).
 
 use crate::schedule::validate::{validate, validate_rank};
-use crate::schedule::{Op, Plan};
+use crate::schedule::{Op, Partition, Plan};
 use crate::util::prng::SplitMix64;
 
 /// The validator work a move's candidate still owes — declared by the
@@ -243,11 +243,62 @@ pub fn with_partial_flush(plan: &Plan, k: u32, concat: bool) -> Option<Plan> {
     Some(out)
 }
 
+/// Boundary-migration neighborhood of a partition: every interior cut
+/// shifted ±1 where both adjacent stages stay non-empty, in
+/// deterministic (cut index, −1 then +1) order — the co-search's
+/// hill-climb moves (BaPipe's repartitioning step).  `dp` is never
+/// changed here; the DP axis is enumerated by the divisor grid
+/// (`experiments::sweep::dp_pp_cells`), not hill-climbed.
+pub fn partition_neighbors(part: &Partition) -> Vec<Partition> {
+    let mut out = Vec::new();
+    // cuts[0] == 0 and cuts[last] == n_layers are fixed endpoints
+    for c in 1..part.cuts.len().saturating_sub(1) {
+        for delta in [-1i64, 1] {
+            let nc = part.cuts[c] as i64 + delta;
+            if nc > part.cuts[c - 1] as i64 && nc < part.cuts[c + 1] as i64 {
+                let mut p = part.clone();
+                p.cuts[c] = nc as usize;
+                debug_assert!(p.check().is_ok());
+                out.push(p);
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::schedule::{generate, ScheduleKind};
     use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn partition_neighbors_shift_interior_cuts_only() {
+        let p = Partition { cuts: vec![0, 2, 4, 6], dp: 2 };
+        let ns = partition_neighbors(&p);
+        assert_eq!(ns.len(), 4);
+        let cuts: Vec<Vec<usize>> =
+            ns.iter().map(|n| n.cuts.clone()).collect();
+        assert_eq!(cuts, vec![
+            vec![0, 1, 4, 6],
+            vec![0, 3, 4, 6],
+            vec![0, 2, 3, 6],
+            vec![0, 2, 5, 6],
+        ]);
+        for n in &ns {
+            n.check().unwrap();
+            assert_eq!(n.dp, 2, "migration never touches dp");
+            assert_eq!(n.n_layers(), p.n_layers());
+        }
+        // a move that would empty a stage is not proposed
+        let tight = Partition::trivial(3);
+        assert!(partition_neighbors(&tight).is_empty());
+        // single-stage partitions have no interior cuts at all
+        assert!(partition_neighbors(
+            &Partition { cuts: vec![0, 5], dp: 1 }
+        )
+        .is_empty());
+    }
 
     #[test]
     fn with_partial_flush_reproduces_the_eager_generator() {

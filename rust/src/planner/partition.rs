@@ -1,0 +1,372 @@
+//! Per-layer cost/memory model and its roll-up through a
+//! [`Partition`] — the refactor that turns "stage s costs X" into
+//! "stage s owns layers a..b and costs what they sum to".
+//!
+//! A [`ModelProfile`] describes the *model*: one [`LayerProfile`] per
+//! layer (fwd/p1/p2/opt seconds plus the §4.2 byte classes), with the
+//! whole-pipeline scalars (loss, hop latency, concat factor) carried
+//! alongside.  [`ModelProfile::roll_up`] folds it through a
+//! [`Partition`] into exactly the per-stage [`TuneProfile`] every
+//! existing consumer (`sim::score_plan`, `MemModel`, the beam) already
+//! expects — so the sim kernel never learns about layers, and the
+//! trivial one-layer-per-stage partition is **bit-identical** to the
+//! old per-stage path (enforced by a differential proptest below).
+//!
+//! Stage aggregation rules:
+//!
+//! * costs (`fwd`/`p1`/`p2`/`opt`) and residency bytes
+//!   (`param_bytes` → `static_bytes`, `res1`, `res2`) **sum** over the
+//!   stage's layers — all of them run / live on that stage;
+//! * `inter` (the p1→p2 intermediate derivative) takes the **last**
+//!   layer's value: within a stage the per-layer intermediates are
+//!   consumed back-to-back and only the stage-boundary one is stashed
+//!   across the p1/p2 split.
+//!
+//! The DP side: `allreduce_per_byte` prices the per-step ring
+//! allreduce a replicated pipeline pays (see
+//! [`crate::sim::allreduce_time`]); the co-search adds that term
+//! *outside* the sim kernel, keeping Tier A untouched.
+
+use crate::schedule::Partition;
+use crate::sim::{CostModel, MemModel};
+
+use super::TuneProfile;
+
+/// One model layer's op costs (seconds) and byte classes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerProfile {
+    pub fwd: f64,
+    pub p1: f64,
+    pub p2: f64,
+    pub opt: f64,
+    /// Params + grads + optimizer state for this layer (rolls up into
+    /// `MemModel::static_bytes`, and prices the DP allreduce).
+    pub param_bytes: u64,
+    /// Per-microbatch stash released at p1.
+    pub res1: u64,
+    /// Per-microbatch stash held to p2.
+    pub res2: u64,
+    /// Per-microbatch p1→p2 intermediate derivative.
+    pub inter: u64,
+}
+
+/// A model described layer-by-layer, plus the whole-pipeline scalars.
+/// Fold it through a [`Partition`] with [`ModelProfile::roll_up`] to
+/// get the per-stage [`TuneProfile`] the planner tunes against.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    pub layers: Vec<LayerProfile>,
+    /// Loss + initial-gradient cost on the last stage.
+    pub loss: f64,
+    /// Activation/gradient hop latency between adjacent stages.
+    pub comm: f64,
+    pub comm_inter_node: f64,
+    pub ranks_per_node: usize,
+    pub concat_factor: f64,
+    /// Ring-allreduce seconds per gradient byte (the DP > 1 cost; 0
+    /// disables the term — pure-PP searches are unaffected).
+    pub allreduce_per_byte: f64,
+    pub samples_per_microbatch: usize,
+    pub measured: bool,
+}
+
+impl ModelProfile {
+    /// Reinterpret a per-stage [`TuneProfile`] as a per-layer model:
+    /// stage s of the old world becomes layer s ("stage s *is* layer
+    /// s").  `roll_up(Partition::trivial(n))` is then the exact
+    /// inverse — the differential anchor for the whole refactor.
+    pub fn from_profile(p: &TuneProfile) -> ModelProfile {
+        let n = p.costs.fwd.len();
+        let layers = (0..n)
+            .map(|i| LayerProfile {
+                fwd: p.costs.fwd[i],
+                p1: p.costs.p1[i],
+                p2: p.costs.p2[i],
+                opt: p.costs.opt[i],
+                param_bytes: p.mem.static_bytes[i],
+                res1: p.mem.res1[i],
+                res2: p.mem.res2[i],
+                inter: p.mem.inter[i],
+            })
+            .collect();
+        ModelProfile {
+            name: p.name.clone(),
+            layers,
+            loss: p.costs.loss,
+            comm: p.costs.comm,
+            comm_inter_node: p.costs.comm_inter_node,
+            ranks_per_node: p.costs.ranks_per_node,
+            concat_factor: p.costs.concat_factor,
+            allreduce_per_byte: 0.0,
+            samples_per_microbatch: p.samples_per_microbatch,
+            measured: p.measured,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Fold the per-layer model through `part` into the per-stage
+    /// [`TuneProfile`] every existing consumer expects (aggregation
+    /// rules in the module docs).  Errors when the partition is
+    /// malformed or covers a different layer count.
+    pub fn roll_up(&self, part: &Partition) -> Result<TuneProfile, String> {
+        part.check()?;
+        if part.n_layers() != self.layers.len() {
+            return Err(format!(
+                "partition covers {} layers but the model has {}",
+                part.n_layers(),
+                self.layers.len()
+            ));
+        }
+        let n = part.n_stages();
+        let mut costs = CostModel {
+            fwd: Vec::with_capacity(n),
+            p1: Vec::with_capacity(n),
+            p2: Vec::with_capacity(n),
+            opt: Vec::with_capacity(n),
+            loss: self.loss,
+            comm: self.comm,
+            comm_inter_node: self.comm_inter_node,
+            ranks_per_node: self.ranks_per_node,
+            concat_factor: self.concat_factor,
+        };
+        let mut mem = MemModel {
+            static_bytes: Vec::with_capacity(n),
+            res1: Vec::with_capacity(n),
+            res2: Vec::with_capacity(n),
+            inter: Vec::with_capacity(n),
+        };
+        for s in 0..n {
+            let ls = &self.layers[part.layers(s)];
+            // fold from the first layer (not 0.0) so a single-layer
+            // stage reproduces the layer's bits exactly — the trivial
+            // partition must round-trip bit-for-bit
+            costs.fwd.push(sum_from_first(ls, |l| l.fwd));
+            costs.p1.push(sum_from_first(ls, |l| l.p1));
+            costs.p2.push(sum_from_first(ls, |l| l.p2));
+            costs.opt.push(sum_from_first(ls, |l| l.opt));
+            mem.static_bytes
+                .push(ls.iter().map(|l| l.param_bytes).sum());
+            mem.res1.push(ls.iter().map(|l| l.res1).sum());
+            mem.res2.push(ls.iter().map(|l| l.res2).sum());
+            mem.inter.push(ls[ls.len() - 1].inter);
+        }
+        Ok(TuneProfile {
+            name: self.name.clone(),
+            costs,
+            mem,
+            samples_per_microbatch: self.samples_per_microbatch,
+            measured: self.measured,
+        })
+    }
+
+    /// Total parameter bytes of the heaviest stage under `part` — the
+    /// ring-allreduce bottleneck when the pipeline is replicated
+    /// (stages allreduce concurrently; the fattest one finishes last).
+    pub fn max_stage_param_bytes(&self, part: &Partition) -> u64 {
+        (0..part.n_stages())
+            .map(|s| {
+                self.layers[part.layers(s)]
+                    .iter()
+                    .map(|l| l.param_bytes)
+                    .sum()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Stable structural fingerprint (same FNV-1a construction as
+    /// [`crate::schedule::Plan::fingerprint`], floats by IEEE bits).
+    /// The serve daemon keys co-search cache entries on this, so a
+    /// re-calibrated layer profile can never alias a stale result.
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |x: u64| {
+            for b in x.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(PRIME);
+            }
+        };
+        mix(self.name.len() as u64);
+        for b in self.name.bytes() {
+            mix(b as u64);
+        }
+        mix(self.layers.len() as u64);
+        for l in &self.layers {
+            mix(l.fwd.to_bits());
+            mix(l.p1.to_bits());
+            mix(l.p2.to_bits());
+            mix(l.opt.to_bits());
+            mix(l.param_bytes);
+            mix(l.res1);
+            mix(l.res2);
+            mix(l.inter);
+        }
+        mix(self.loss.to_bits());
+        mix(self.comm.to_bits());
+        mix(self.comm_inter_node.to_bits());
+        mix(self.ranks_per_node as u64);
+        mix(self.concat_factor.to_bits());
+        mix(self.allreduce_per_byte.to_bits());
+        mix(self.samples_per_microbatch as u64);
+        mix(self.measured as u64);
+        h
+    }
+}
+
+/// Sum a projected field starting from the slice's first element, so a
+/// one-element slice returns that element's bits unchanged (`0.0 + x`
+/// would lose a negative zero; starting at `x` never rewrites bits).
+fn sum_from_first(ls: &[LayerProfile], f: impl Fn(&LayerProfile) -> f64) -> f64 {
+    ls[1..].iter().fold(f(&ls[0]), |acc, l| acc + f(l))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{generate, ScheduleKind};
+    use crate::sim::{eval_plan, score_plan, Scratch};
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn from_profile_then_trivial_roll_up_is_identity() {
+        let p = TuneProfile::llama_like(4);
+        let mp = ModelProfile::from_profile(&p);
+        assert_eq!(mp.n_layers(), 4);
+        let back = mp.roll_up(&Partition::trivial(4)).unwrap();
+        assert_eq!(back.name, p.name);
+        assert_eq!(back.costs.fwd, p.costs.fwd);
+        assert_eq!(back.costs.p1, p.costs.p1);
+        assert_eq!(back.costs.p2, p.costs.p2);
+        assert_eq!(back.costs.opt, p.costs.opt);
+        assert_eq!(back.costs.loss, p.costs.loss);
+        assert_eq!(back.mem.static_bytes, p.mem.static_bytes);
+        assert_eq!(back.mem.res1, p.mem.res1);
+        assert_eq!(back.mem.res2, p.mem.res2);
+        assert_eq!(back.mem.inter, p.mem.inter);
+        // the fingerprints every cache keys on agree too
+        assert_eq!(back.fingerprint(), p.fingerprint());
+    }
+
+    #[test]
+    fn roll_up_sums_costs_and_takes_the_boundary_inter() {
+        let mut mp = ModelProfile::from_profile(&TuneProfile::llama_like(4));
+        for (i, l) in mp.layers.iter_mut().enumerate() {
+            l.fwd = (i + 1) as f64;
+            l.param_bytes = 100 * (i as u64 + 1);
+            l.inter = 10 + i as u64;
+        }
+        let part = Partition { cuts: vec![0, 3, 4], dp: 1 };
+        let rolled = mp.roll_up(&part).unwrap();
+        assert_eq!(rolled.costs.fwd, vec![1.0 + 2.0 + 3.0, 4.0]);
+        assert_eq!(rolled.mem.static_bytes, vec![600, 400]);
+        // inter is the stage's *last* layer's (the boundary derivative)
+        assert_eq!(rolled.mem.inter, vec![12, 13]);
+        assert_eq!(mp.max_stage_param_bytes(&part), 600);
+    }
+
+    #[test]
+    fn roll_up_rejects_mismatched_and_malformed_partitions() {
+        let mp = ModelProfile::from_profile(&TuneProfile::llama_like(4));
+        let err = mp.roll_up(&Partition::trivial(5)).unwrap_err();
+        assert!(err.contains("5 layers"), "{err}");
+        let bad = Partition { cuts: vec![0, 4, 4], dp: 1 };
+        assert!(mp.roll_up(&bad).is_err());
+    }
+
+    #[test]
+    fn model_fingerprint_tracks_layer_and_dp_fields() {
+        let base = ModelProfile::from_profile(&TuneProfile::llama_like(3));
+        let fp = base.fingerprint();
+        let mut l = base.clone();
+        l.layers[1].p2 += 0.25;
+        assert_ne!(l.fingerprint(), fp);
+        let mut b = base.clone();
+        b.layers[0].param_bytes += 1;
+        assert_ne!(b.fingerprint(), fp);
+        let mut a = base.clone();
+        a.allreduce_per_byte = 1e-9;
+        assert_ne!(a.fingerprint(), fp);
+    }
+
+    /// Tentpole acceptance: rolling a fuzzed per-layer model up through
+    /// the **trivial** partition reproduces the old per-stage path
+    /// bit-for-bit through both evaluation tiers (`score_plan` and
+    /// `eval_plan`) — makespan, busy, bubble, peak, fit.
+    #[test]
+    fn prop_trivial_partition_is_bit_identical_to_per_stage() {
+        let mut scratch_a = Scratch::new();
+        let mut scratch_b = Scratch::new();
+        check(
+            "trivial-partition roll-up == per-stage profile, bit-for-bit",
+            120,
+            |rng| {
+                let n = gen::usize_in(rng, 1, 8);
+                let m = gen::usize_in(rng, 1, 12);
+                let kind = *gen::pick(rng, &ScheduleKind::all_variants());
+                let two_bp = if kind == ScheduleKind::OneF1B2EagerP2 {
+                    true
+                } else {
+                    gen::bool(rng)
+                };
+                // skewed costs/bytes so stage identity matters
+                let f = gen::usize_in(rng, 1, 40) as f64 / 10.0;
+                let p1 = gen::usize_in(rng, 1, 40) as f64 / 10.0;
+                let p2 = gen::usize_in(rng, 1, 40) as f64 / 10.0;
+                let comm = gen::usize_in(rng, 0, 10) as f64 / 20.0;
+                let skew = gen::usize_in(rng, 1, 5) as u64;
+                (n, m, kind, two_bp, f, p1, p2, comm, skew)
+            },
+            |&(n, m, kind, two_bp, f, p1, p2, comm, skew)| {
+                let mut prof = TuneProfile::from_ratios(n, f, p1, p2, comm);
+                for r in 0..n {
+                    // per-stage skew: uniform profiles would hide
+                    // roll-up indexing bugs
+                    prof.costs.fwd[r] *= 1.0 + r as f64 / 7.0;
+                    prof.mem.res1[r] = prof.mem.res1[r] / 2 + skew * r as u64;
+                    prof.mem.inter[r] += skew * (n - r) as u64;
+                }
+                let rolled = ModelProfile::from_profile(&prof)
+                    .roll_up(&Partition::trivial(n))?;
+                let plan = generate(kind, two_bp, n, m, false);
+                let budget = Some(prof.mem.static_bytes[0] * 2);
+                let a = score_plan(
+                    &plan, &prof.costs, Some(&prof.mem), budget,
+                    &mut scratch_a,
+                )
+                .map_err(|e| format!("old path: {e}"))?;
+                let b = score_plan(
+                    &plan, &rolled.costs, Some(&rolled.mem), budget,
+                    &mut scratch_b,
+                )
+                .map_err(|e| format!("rolled path: {e}"))?;
+                if a.makespan.to_bits() != b.makespan.to_bits()
+                    || a.total_busy.to_bits() != b.total_busy.to_bits()
+                    || a.bubble_ratio.to_bits() != b.bubble_ratio.to_bits()
+                    || a.max_peak != b.max_peak
+                    || a.fits != b.fits
+                {
+                    return Err(format!("scores drifted: {a:?} vs {b:?}"));
+                }
+                // Tier B agrees too (validate + spans + budget check)
+                let ea = eval_plan(&plan, &prof.costs, Some(&prof.mem), budget)
+                    .map_err(|e| format!("old eval: {e}"))?;
+                let eb = eval_plan(
+                    &plan, &rolled.costs, Some(&rolled.mem), budget,
+                )
+                .map_err(|e| format!("rolled eval: {e}"))?;
+                if ea.result.makespan.to_bits()
+                    != eb.result.makespan.to_bits()
+                    || ea.max_peak != eb.max_peak
+                    || ea.fits != eb.fits
+                {
+                    return Err("eval_plan drifted".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -39,6 +39,7 @@ pub fn generate(
         n_microbatches: m,
         ranks,
         greedy_p2: two_bp,
+        partition: None,
     }
 }
 

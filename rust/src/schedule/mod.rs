@@ -16,11 +16,13 @@
 //! to cap stash growth.
 
 mod generators;
+pub mod partition;
 pub mod plan_io;
 pub mod validate;
 
 pub use generators::{eager_p2_flush_points, generate};
 pub(crate) use generators::insert_partial_flush;
+pub use partition::Partition;
 
 /// One operation in a rank's schedule.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -156,6 +158,10 @@ pub struct Plan {
     /// next op's inputs are not yet available (the paper's "fill idle
     /// time between backward-p1 calls with backward-p2 calls").
     pub greedy_p2: bool,
+    /// Which model layers each stage owns, plus the DP replication
+    /// factor (`None` = the classic "stage s is layer s" world; every
+    /// DSL v1 plan and pre-partition fingerprint is unchanged).
+    pub partition: Option<Partition>,
 }
 
 impl Plan {
@@ -221,6 +227,18 @@ impl Plan {
                     }
                     Op::OptStep => mix(5),
                 }
+            }
+        }
+        // a partition-less plan mixes NOTHING here, so every fingerprint
+        // persisted before partitions existed is unchanged; a tagged,
+        // length-prefixed suffix keeps Some-vs-None and every (dp, cuts)
+        // shape injective (domain separation tested below)
+        if let Some(p) = &self.partition {
+            mix(6);
+            mix(p.dp as u64);
+            mix(p.cuts.len() as u64);
+            for &c in &p.cuts {
+                mix(c as u64);
             }
         }
         h
@@ -310,6 +328,41 @@ mod tests {
         let mut swapped = base.clone();
         swapped.ranks[0].swap(0, 1);
         assert_ne!(swapped.fingerprint(), fp, "op order ignored");
+    }
+
+    /// Domain separation for the partition suffix: plans differing
+    /// only in partition presence, cut placement, or DP factor never
+    /// collide — and attaching no partition reproduces the
+    /// pre-partition fingerprint bit-for-bit.
+    #[test]
+    fn fingerprint_separates_partitions() {
+        use std::collections::BTreeSet;
+        let base = generate(ScheduleKind::OneF1B1, true, 4, 4, false);
+        assert_eq!(base.partition, None);
+        let fp_none = base.fingerprint();
+        let mut seen: BTreeSet<u64> = BTreeSet::new();
+        seen.insert(fp_none);
+        let parts = [
+            Partition::trivial(4),
+            Partition::balanced(8, 4, 1),
+            Partition::balanced(8, 4, 2),
+            Partition::balanced(8, 4, 4),
+            Partition { cuts: vec![0, 1, 2, 3, 8], dp: 1 },
+            Partition { cuts: vec![0, 5, 6, 7, 8], dp: 1 },
+            Partition { cuts: vec![0, 1, 2, 3, 8], dp: 2 },
+        ];
+        for part in parts {
+            let mut p = base.clone();
+            p.partition = Some(part.clone());
+            let fp = p.fingerprint();
+            assert!(
+                seen.insert(fp),
+                "fingerprint collision at partition {}",
+                part.describe()
+            );
+            // equal plans still hash equal
+            assert_eq!(p.clone().fingerprint(), fp);
+        }
     }
 
     #[test]

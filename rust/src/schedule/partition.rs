@@ -1,0 +1,170 @@
+//! Layer→stage partitions with a data-parallel replication factor.
+//!
+//! The paper fixes the layer→stage split and schedules around it; a
+//! [`Partition`] makes the split itself a first-class, searchable part
+//! of a [`Plan`](crate::schedule::Plan) (BaPipe / DAPPLE, PAPERS.md).
+//! A partition is a **contiguous** assignment of `n_layers` model
+//! layers to `n_stages` pipeline stages — encoded as a strictly
+//! increasing cut vector — plus a replication factor `dp`: the whole
+//! pipeline is cloned `dp` times over the device grid (DAPPLE-style
+//! hybrid DP×PP), paying a gradient allreduce per step in exchange.
+//!
+//! Plans without a partition behave exactly as before — the field is
+//! optional everywhere (DSL v1 files, the fingerprint, the validator)
+//! so every persisted artifact and fingerprint stays stable.
+
+/// A contiguous layer→stage assignment plus a DP replication factor.
+///
+/// `cuts` has `n_stages + 1` entries: `cuts[0] == 0`,
+/// `cuts[n_stages] == n_layers`, strictly increasing — stage `s` owns
+/// layers `cuts[s] .. cuts[s+1]` (every stage at least one layer).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    pub cuts: Vec<usize>,
+    /// Data-parallel replication factor (>= 1; 1 = pure pipeline).
+    pub dp: u32,
+}
+
+impl Partition {
+    /// The balanced-by-count contiguous split: `n_layers` layers over
+    /// `n_stages` stages, remainder spread over the *earliest* stages
+    /// (deterministic; the co-search's starting point).
+    ///
+    /// Panics if `n_stages == 0` or `n_layers < n_stages` (a stage
+    /// would own no layer).
+    pub fn balanced(n_layers: usize, n_stages: usize, dp: u32) -> Partition {
+        assert!(n_stages > 0, "partition needs at least one stage");
+        assert!(
+            n_layers >= n_stages,
+            "{n_layers} layers cannot cover {n_stages} stages"
+        );
+        let base = n_layers / n_stages;
+        let extra = n_layers % n_stages;
+        let mut cuts = Vec::with_capacity(n_stages + 1);
+        let mut at = 0usize;
+        cuts.push(at);
+        for s in 0..n_stages {
+            at += base + usize::from(s < extra);
+            cuts.push(at);
+        }
+        Partition { cuts, dp: dp.max(1) }
+    }
+
+    /// The identity split: one layer per stage (the pre-partition
+    /// world, where stage s *is* layer s).  Rolling a per-layer model
+    /// up through this partition is bit-identical to the old per-stage
+    /// path — the differential property the refactor is held to.
+    pub fn trivial(n_layers: usize) -> Partition {
+        Partition::balanced(n_layers, n_layers, 1)
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.cuts.len().saturating_sub(1)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.cuts.last().copied().unwrap_or(0)
+    }
+
+    /// Layers owned by stage `s`, as a half-open range.
+    pub fn layers(&self, s: usize) -> std::ops::Range<usize> {
+        self.cuts[s]..self.cuts[s + 1]
+    }
+
+    /// Structural validity: >= 2 cut points, `cuts[0] == 0`, strictly
+    /// increasing (every stage non-empty), `dp >= 1`.
+    pub fn check(&self) -> Result<(), String> {
+        if self.cuts.len() < 2 {
+            return Err(format!(
+                "partition needs at least 2 cut points, got {}",
+                self.cuts.len()
+            ));
+        }
+        if self.cuts[0] != 0 {
+            return Err(format!(
+                "partition cuts must start at 0, got {}",
+                self.cuts[0]
+            ));
+        }
+        for w in self.cuts.windows(2) {
+            if w[1] <= w[0] {
+                return Err(format!(
+                    "partition cuts must be strictly increasing \
+                     (every stage owns >= 1 layer), got {} then {}",
+                    w[0], w[1]
+                ));
+            }
+        }
+        if self.dp == 0 {
+            return Err("partition dp factor must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Human-readable form, e.g. `dp=2 layers 0-2|3-3` (inclusive
+    /// per-stage layer ranges — the same ranges the DSL `part` header
+    /// and the gantt per-rank headers print).
+    pub fn describe(&self) -> String {
+        let stages: Vec<String> = (0..self.n_stages())
+            .map(|s| {
+                let r = self.layers(s);
+                format!("{}-{}", r.start, r.end - 1)
+            })
+            .collect();
+        format!("dp={} layers {}", self.dp, stages.join("|"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_spreads_the_remainder_over_early_stages() {
+        let p = Partition::balanced(10, 4, 1);
+        assert_eq!(p.cuts, vec![0, 3, 6, 8, 10]);
+        assert_eq!(p.n_stages(), 4);
+        assert_eq!(p.n_layers(), 10);
+        assert_eq!(p.layers(0), 0..3);
+        assert_eq!(p.layers(3), 8..10);
+        p.check().unwrap();
+        // exact division: uniform stages
+        let q = Partition::balanced(8, 4, 2);
+        assert_eq!(q.cuts, vec![0, 2, 4, 6, 8]);
+        assert_eq!(q.dp, 2);
+    }
+
+    #[test]
+    fn trivial_is_one_layer_per_stage() {
+        let p = Partition::trivial(5);
+        assert_eq!(p.cuts, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(p.dp, 1);
+        for s in 0..5 {
+            assert_eq!(p.layers(s), s..s + 1);
+        }
+    }
+
+    #[test]
+    fn check_rejects_malformed_partitions() {
+        let ok = Partition { cuts: vec![0, 2, 4], dp: 1 };
+        ok.check().unwrap();
+        for (bad, needle) in [
+            (Partition { cuts: vec![0], dp: 1 }, "at least 2"),
+            (Partition { cuts: vec![1, 4], dp: 1 }, "start at 0"),
+            (Partition { cuts: vec![0, 2, 2], dp: 1 },
+             "strictly increasing"),
+            (Partition { cuts: vec![0, 3, 2], dp: 1 },
+             "strictly increasing"),
+            (Partition { cuts: vec![0, 2, 4], dp: 0 }, ">= 1"),
+        ] {
+            let err = bad.check().unwrap_err();
+            assert!(err.contains(needle), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn describe_prints_inclusive_ranges() {
+        let p = Partition { cuts: vec![0, 3, 4, 7], dp: 2 };
+        assert_eq!(p.describe(), "dp=2 layers 0-2|3-3|4-6");
+    }
+}

@@ -27,13 +27,29 @@
 //! afterwards.  The canonical form [`to_text`] emits lists all headers
 //! first.
 //!
+//! **v2** adds one optional header carrying the layer→stage
+//! [`Partition`](super::Partition) (docs/PLAN_FORMAT.md §v2):
+//!
+//! ```text
+//! plan v2
+//! ...
+//! part dp 2 layers 0-2 3-3 4-6
+//! ```
+//!
+//! `dp` is the data-parallel replication factor; each `a-b` is one
+//! stage's **inclusive** layer range, one per rank, contiguous from
+//! layer 0.  The parser accepts both magics; `part` is only legal
+//! under `plan v2`.  A partition-less plan serializes as `plan v1`
+//! byte-identically to before — v2 is emitted only when there is a
+//! partition to carry — so every existing `.plan` artifact is stable.
+//!
 //! The parser is purely syntactic: it reconstructs a [`Plan`] and
 //! leaves semantic checks (fwd-before-p1, p2 coverage, cross-rank
 //! order consistency, ...) to [`super::validate::validate`], exactly as
 //! for generator-built plans.  [`parse`] ∘ [`to_text`] is the identity
 //! on every `Plan` (enforced by a proptest below).
 
-use super::{Op, Plan, ScheduleKind};
+use super::{Op, Partition, Plan, ScheduleKind};
 
 /// A parse failure, pointing at the 1-based source line.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -85,16 +101,30 @@ fn op_token(op: &Op, out: &mut String) {
     }
 }
 
-/// Serialize a plan to its canonical text form.
+/// Serialize a plan to its canonical text form: `plan v1`
+/// byte-identical to the pre-partition serializer when the plan has no
+/// partition, `plan v2` with one `part` header when it does.
 pub fn to_text(plan: &Plan) -> String {
     let mut out = String::with_capacity(64 + plan.total_ops() * 4);
     out.push_str("# twobp plan file — docs/PLAN_FORMAT.md\n");
-    out.push_str("plan v1\n");
+    out.push_str(if plan.partition.is_some() {
+        "plan v2\n"
+    } else {
+        "plan v1\n"
+    });
     out.push_str(&format!("kind {}\n", plan.kind.name()));
     out.push_str(&format!("two_bp {}\n", plan.two_bp));
     out.push_str(&format!("ranks {}\n", plan.n_ranks));
     out.push_str(&format!("microbatches {}\n", plan.n_microbatches));
     out.push_str(&format!("greedy_p2 {}\n", plan.greedy_p2));
+    if let Some(part) = &plan.partition {
+        out.push_str(&format!("part dp {} layers", part.dp));
+        for s in 0..part.n_stages() {
+            let r = part.layers(s);
+            out.push_str(&format!(" {}-{}", r.start, r.end - 1));
+        }
+        out.push('\n');
+    }
     for (r, ops) in plan.ranks.iter().enumerate() {
         out.push_str(&format!("rank {r} |"));
         for op in ops {
@@ -182,6 +212,61 @@ fn parse_op(tok: &str, line: usize) -> Result<Op, PlanIoError> {
     )))
 }
 
+/// Parse the v2 `part` header payload:
+/// `dp <k> layers <a-b> <a-b> ...` with inclusive per-stage layer
+/// ranges, contiguous from layer 0 (one range per rank — that count is
+/// checked against `ranks` at end of file, not here).
+fn parse_part(rest: &str, line: usize) -> Result<Partition, PlanIoError> {
+    let err = |msg: String| PlanIoError { line, msg };
+    let mut toks = rest.split_whitespace();
+    if toks.next() != Some("dp") {
+        return Err(err(
+            "part header needs the form \
+             'part dp <k> layers <a-b> ...'"
+                .into(),
+        ));
+    }
+    let dp = toks
+        .next()
+        .ok_or_else(|| err("part: missing dp value".into()))
+        .and_then(|s| parse_u32(s, line, "part dp"))?;
+    if dp == 0 {
+        return Err(err("part: dp must be >= 1".into()));
+    }
+    if toks.next() != Some("layers") {
+        return Err(err(
+            "part: expected 'layers' after the dp value".into(),
+        ));
+    }
+    let mut cuts = vec![0usize];
+    for tok in toks {
+        let (a, b) = tok.split_once('-').ok_or_else(|| {
+            err(format!("part: bad layer range '{tok}' (expected a-b)"))
+        })?;
+        let a = parse_u32(a, line, "part layer range")? as usize;
+        let b = parse_u32(b, line, "part layer range")? as usize;
+        if b < a {
+            return Err(err(format!(
+                "part: layer range '{tok}' is backwards"
+            )));
+        }
+        let prev = *cuts.last().expect("cuts starts non-empty");
+        if a != prev {
+            return Err(err(format!(
+                "part: layer ranges must be contiguous from 0 \
+                 (expected the next range to start at {prev}, got {a})"
+            )));
+        }
+        cuts.push(b + 1);
+    }
+    if cuts.len() < 2 {
+        return Err(err(
+            "part: needs at least one layer range".into(),
+        ));
+    }
+    Ok(Partition { cuts, dp })
+}
+
 /// Parse the text form back into a [`Plan`].  Inverse of [`to_text`];
 /// also accepts extra whitespace, `#` comments, and header keys in any
 /// order.  Semantic validity is *not* checked here — run the result
@@ -192,8 +277,10 @@ pub fn parse(text: &str) -> Result<Plan, PlanIoError> {
     let mut n_ranks: Option<usize> = None;
     let mut n_microbatches: Option<usize> = None;
     let mut greedy_p2: Option<bool> = None;
+    let mut partition: Option<Partition> = None;
     let mut ranks: Vec<Option<Vec<Op>>> = Vec::new();
     let mut saw_magic = false;
+    let mut v2 = false;
 
     for (i, raw) in text.lines().enumerate() {
         let lineno = i + 1;
@@ -207,10 +294,15 @@ pub fn parse(text: &str) -> Result<Plan, PlanIoError> {
             continue;
         }
         if !saw_magic {
-            if line != "plan v1" {
-                return Err(err(format!(
-                    "expected header 'plan v1', got '{line}'"
-                )));
+            match line {
+                "plan v1" => {}
+                "plan v2" => v2 = true,
+                _ => {
+                    return Err(err(format!(
+                        "expected header 'plan v1' or 'plan v2', \
+                         got '{line}'"
+                    )))
+                }
             }
             saw_magic = true;
             continue;
@@ -250,6 +342,14 @@ pub fn parse(text: &str) -> Result<Plan, PlanIoError> {
                     return Err(err("microbatches must be >= 1".into()));
                 }
                 n_microbatches = Some(m);
+            }
+            "part" => {
+                if !v2 {
+                    return Err(err(
+                        "'part' is a v2 header; declare 'plan v2'".into(),
+                    ));
+                }
+                partition = Some(parse_part(rest, lineno)?);
             }
             "rank" => {
                 let n = n_ranks.ok_or_else(|| {
@@ -306,8 +406,27 @@ pub fn parse(text: &str) -> Result<Plan, PlanIoError> {
             ops.ok_or_else(|| at_end(&format!("missing 'rank {r}' line")))
         })
         .collect::<Result<Vec<Vec<Op>>, _>>()?;
+    if let Some(part) = &partition {
+        if part.n_stages() != n_ranks {
+            return Err(at_end(&format!(
+                "part header lists {} layer ranges but the plan has \
+                 {} ranks (one range per rank)",
+                part.n_stages(),
+                n_ranks
+            )));
+        }
+        part.check().map_err(|e| at_end(&format!("part: {e}")))?;
+    }
 
-    Ok(Plan { kind, two_bp, n_ranks, n_microbatches, ranks, greedy_p2 })
+    Ok(Plan {
+        kind,
+        two_bp,
+        n_ranks,
+        n_microbatches,
+        ranks,
+        greedy_p2,
+        partition,
+    })
 }
 
 #[cfg(test)]
@@ -395,7 +514,7 @@ rank 0 | f0 b0 w(0) opt
     fn rejects_malformed_inputs() {
         let cases: &[(&str, &str)] = &[
             ("", "plan v1"),
-            ("plan v2\n", "plan v1"),
+            ("plan v9\n", "plan v1' or 'plan v2"),
             ("plan v1\nkind zigzag\n", "unknown schedule"),
             ("plan v1\nbogus 3\n", "unknown header key"),
             ("plan v1\nrank 0 | opt\n", "'ranks' must be declared"),
@@ -441,6 +560,49 @@ rank 0 | f0 b0 w(0) opt
                  microbatches 1\n",
                 "missing 'greedy_p2'",
             ),
+            // -- v2 / part header -----------------------------------------
+            (
+                "plan v1\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\n\
+                 part dp 1 layers 0-0\nrank 0 | f0 b0 w(0) opt\n",
+                "'part' is a v2 header",
+            ),
+            (
+                "plan v2\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\n\
+                 part dp 1 layers 0-1 3-4\nrank 0 | f0 b0 w(0) opt\n",
+                "contiguous from 0",
+            ),
+            (
+                "plan v2\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\n\
+                 part dp 1 layers 2-1\nrank 0 | f0 b0 w(0) opt\n",
+                "is backwards",
+            ),
+            (
+                "plan v2\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\n\
+                 part dp 0 layers 0-0\nrank 0 | f0 b0 w(0) opt\n",
+                "dp must be >= 1",
+            ),
+            (
+                "plan v2\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\n\
+                 part dp 1 layers\nrank 0 | f0 b0 w(0) opt\n",
+                "at least one layer range",
+            ),
+            (
+                "plan v2\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\n\
+                 part layers 0-0\nrank 0 | f0 b0 w(0) opt\n",
+                "part dp <k> layers",
+            ),
+            (
+                "plan v2\nkind naive\ntwo_bp false\nranks 1\n\
+                 microbatches 1\ngreedy_p2 false\n\
+                 part dp 1 layers 0-0 1-1\nrank 0 | f0 b0 w(0) opt\n",
+                "one range per rank",
+            ),
         ];
         for (text, want) in cases {
             match parse(text) {
@@ -451,6 +613,53 @@ rank 0 | f0 b0 w(0) opt
                 ),
             }
         }
+    }
+
+    #[test]
+    fn parses_the_documented_v2_example() {
+        let text = "\
+plan v2
+kind 1f1b-1
+two_bp true
+ranks 2
+microbatches 2
+greedy_p2 true
+part dp 2 layers 0-2 3-6
+rank 0 | f0 f1 b0 b1 flush opt
+rank 1 | f0 b0 f1 b1 flush opt
+";
+        let plan = parse(text).unwrap();
+        let part = plan.partition.as_ref().expect("v2 part header kept");
+        assert_eq!(part.dp, 2);
+        assert_eq!(part.cuts, vec![0, 3, 7]);
+        assert_eq!(part.layers(0), 0..3);
+        assert_eq!(part.layers(1), 3..7);
+        validate(&plan).unwrap();
+        // canonical re-emission keeps the v2 magic and the part header
+        let text2 = to_text(&plan);
+        assert!(text2.contains("plan v2\n"), "{text2}");
+        assert!(text2.contains("part dp 2 layers 0-2 3-6\n"), "{text2}");
+        assert_eq!(parse(&text2).unwrap(), plan);
+    }
+
+    #[test]
+    fn v2_without_part_canonicalizes_to_v1() {
+        // v2 magic is legal without a part header; the plan it builds
+        // has no partition, so it re-serializes as (byte-stable) v1.
+        let mut text = to_text(&sample());
+        text = text.replace("plan v1", "plan v2");
+        let plan = parse(&text).unwrap();
+        assert!(plan.partition.is_none());
+        assert_eq!(plan, sample());
+        assert!(to_text(&plan).contains("plan v1\n"));
+    }
+
+    #[test]
+    fn partitioned_plan_round_trips() {
+        let mut plan = sample();
+        plan.partition = Some(Partition { cuts: vec![0, 3, 7], dp: 4 });
+        let text = to_text(&plan);
+        assert_eq!(parse(&text).unwrap(), plan);
     }
 
     #[test]
@@ -478,10 +687,21 @@ rank 0 | f0 b0 w(0) opt
                 let n = gen::usize_in(rng, 1, 10);
                 let m = gen::usize_in(rng, 1, 20);
                 let concat = gen::bool(rng);
-                (kind, two_bp, n, m, concat)
+                // half the plans carry a v2 partition: n stages over a
+                // random layer count >= n, random dp
+                let part = if gen::bool(rng) {
+                    let layers = gen::usize_in(rng, n, 3 * n);
+                    let dp = gen::usize_in(rng, 1, 4) as u32;
+                    Some((layers, dp))
+                } else {
+                    None
+                };
+                (kind, two_bp, n, m, concat, part)
             },
-            |&(kind, two_bp, n, m, concat)| {
-                let plan = generate(kind, two_bp, n, m, concat);
+            |&(kind, two_bp, n, m, concat, part)| {
+                let mut plan = generate(kind, two_bp, n, m, concat);
+                plan.partition =
+                    part.map(|(l, dp)| Partition::balanced(l, n, dp));
                 let text = to_text(&plan);
                 let back = parse(&text)
                     .map_err(|e| format!("parse failed: {e}\n{text}"))?;

@@ -157,6 +157,25 @@ pub fn validate(plan: &Plan) -> Result<(), ValidationError> {
         });
     }
 
+    if let Some(part) = &plan.partition {
+        if let Err(e) = part.check() {
+            return Err(ValidationError {
+                rank: 0,
+                msg: format!("partition: {e}"),
+            });
+        }
+        if part.n_stages() != plan.n_ranks {
+            return Err(ValidationError {
+                rank: 0,
+                msg: format!(
+                    "partition has {} stages for {} ranks",
+                    part.n_stages(),
+                    plan.n_ranks
+                ),
+            });
+        }
+    }
+
     let mut fwd_orders: Vec<Vec<u32>> = Vec::new();
     let mut bwd_orders: Vec<Vec<u32>> = Vec::new();
 
@@ -247,6 +266,20 @@ mod tests {
         plan.ranks[0].insert(pos, Op::BwdP2 { mbs: vec![0], concat: false });
         let err = validate(&plan).unwrap_err();
         assert!(err.msg.contains("greedy-p2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_partition_stage_count_mismatch() {
+        use super::super::Partition;
+        let mut plan = generate(ScheduleKind::GPipe, true, 2, 2, false);
+        plan.partition = Some(Partition::balanced(8, 2, 1));
+        validate(&plan).unwrap();
+        plan.partition = Some(Partition::balanced(8, 4, 1));
+        let err = validate(&plan).unwrap_err();
+        assert!(err.msg.contains("4 stages for 2 ranks"), "{err}");
+        plan.partition = Some(Partition { cuts: vec![0, 2, 2], dp: 1 });
+        let err = validate(&plan).unwrap_err();
+        assert!(err.msg.contains("partition:"), "{err}");
     }
 
     #[test]

@@ -24,7 +24,8 @@ use std::time::Instant;
 
 use crate::metrics::registry::MetricsRegistry;
 use crate::planner::{
-    BeamConfig, RobustObjective, TuneProfile, TuneRequest,
+    co_search, BeamConfig, CoSearchConfig, ModelProfile, RobustObjective,
+    TuneProfile, TuneRequest,
 };
 use crate::schedule::{plan_io, validate, Plan};
 use crate::sim::{
@@ -167,6 +168,9 @@ impl Engine {
     /// defaults mirror the `twobp tune` CLI so the service and the CLI
     /// produce identical winners for identical inputs.
     fn op_tune(&mut self, raw: &Json) -> OpResult {
+        if raw.get("co_search").is_some() {
+            return self.op_tune_cosearch(raw);
+        }
         let profile = self.resolve_profile(raw)?;
         let n_ranks = profile.costs.fwd.len();
         let beam = Self::beam_field(raw, self.threads)?;
@@ -202,6 +206,128 @@ impl Engine {
             ("request_fp", Json::Str(format!("{:016x}", key.0))),
             ("throughput", Json::Num(report.best.throughput)),
             ("winner", Json::Str(report.best.plan.describe())),
+        ]);
+        self.cache.insert(key, payload.clone());
+        Ok((payload, Some("miss")))
+    }
+
+    /// `tune` with a `"co_search"` sub-object: the joint partition ×
+    /// schedule search ([`co_search`]) instead of one fixed-stage beam.
+    /// The resolved profile's stages become the per-layer model
+    /// (`devices` then splits over every dp×pp divisor cell), so knob
+    /// names mirror the CLI's `--co-search` cluster.  Cached like plain
+    /// tune, with the co-search knobs mixed into the request
+    /// fingerprint and the *per-layer* [`ModelProfile::fingerprint`]
+    /// as the profile half of the key.
+    fn op_tune_cosearch(&mut self, raw: &Json) -> OpResult {
+        let cs = raw.get("co_search").expect("caller checked");
+        if !matches!(cs, Json::Obj(_)) {
+            return Err(
+                "\"co_search\" must be an object of partition-search \
+                 knobs (devices/layers/allreduce_per_byte/migrations)"
+                    .to_string(),
+            );
+        }
+        if raw.get("ranks").is_some() {
+            return Err(
+                "\"ranks\" fixes the stage count, but co_search searches \
+                 the whole dp×pp grid (pipeline depth included); use \
+                 co_search.devices and co_search.layers"
+                    .to_string(),
+            );
+        }
+        let devices = uint_field(cs, "devices", 4)? as usize;
+        if devices == 0 {
+            return Err("\"devices\" must be >= 1".to_string());
+        }
+        let profile = match str_field(raw, "profile")? {
+            // default model: LLaMa-like at co_search.layers layers
+            // (defaulting to 2 × devices — room for every depth)
+            None | Some("llama") => {
+                let layers =
+                    uint_field(cs, "layers", (2 * devices) as u64)? as usize;
+                if layers < 2 {
+                    return Err("\"layers\" must be >= 2".to_string());
+                }
+                TuneProfile::llama_like(layers)
+            }
+            // a resident profile's stage count *is* the layer count
+            Some(name) => {
+                let p = self.profiles.get(name).ok_or_else(|| {
+                    format!(
+                        "unknown profile '{name}' — submit a calibrate job \
+                         for it first"
+                    )
+                })?;
+                if let Some(l) = cs.get("layers").and_then(|v| v.as_u64()) {
+                    let have = p.costs.fwd.len() as u64;
+                    if l != have {
+                        return Err(format!(
+                            "\"layers\" {l} conflicts with profile \
+                             '{name}' ({have} stages = layers); drop \
+                             \"layers\""
+                        ));
+                    }
+                }
+                p.clone()
+            }
+        };
+        let allreduce = num_field(cs, "allreduce_per_byte", 2e-11)?;
+        if allreduce < 0.0 {
+            return Err("\"allreduce_per_byte\" must be >= 0".to_string());
+        }
+        let migrations = uint_field(cs, "migrations", 8)? as usize;
+        let beam = Self::beam_field(raw, self.threads)?;
+        let mut model = ModelProfile::from_profile(&profile);
+        model.allreduce_per_byte = allreduce;
+        let model_fp = model.fingerprint();
+        // cache key: the fixed-stage request fingerprint (beam knobs +
+        // layer count) with the co-search knobs FNV-mixed in under a
+        // domain tag, × the per-layer model fingerprint
+        let key_fp = {
+            let mut h =
+                TuneRequest::new(&profile, profile.costs.fwd.len(), beam.clone())
+                    .fingerprint();
+            let mut mix = |v: u64| {
+                h ^= v;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            };
+            mix(7); // co-search domain tag
+            mix(devices as u64);
+            mix(migrations as u64);
+            mix(allreduce.to_bits());
+            h
+        };
+        let key = (key_fp, model_fp);
+        if let Some(hit) = self.cache.get(&key) {
+            self.metrics.counter_add("serve.cache_hits", 1);
+            return Ok((hit.clone(), Some("hit")));
+        }
+        self.metrics.counter_add("serve.cache_misses", 1);
+        self.metrics.counter_add("serve.tunes", 1);
+        let mut cfg = CoSearchConfig::new(devices, beam);
+        cfg.max_migrations = migrations;
+        let report = co_search(&model, &cfg, &mut self.metrics)
+            .map_err(|e| format!("co-search: {e}"))?;
+        let best = report.best();
+        let payload = pairs(vec![
+            ("allreduce_s", Json::Num(best.allreduce_s)),
+            ("cells", Json::Num(report.cells.len() as f64)),
+            ("devices", Json::Num(devices as f64)),
+            ("dp", Json::Num(best.dp as f64)),
+            ("makespan", Json::Num(best.makespan)),
+            ("max_peak", Json::Num(best.max_peak as f64)),
+            ("migrations", Json::Num(best.migrations as f64)),
+            ("model_fp", Json::Str(format!("{model_fp:016x}"))),
+            ("op", Json::Str("tune".to_string())),
+            ("partition", Json::Str(best.partition.describe())),
+            ("plan", Json::Str(best.candidate.text.clone())),
+            ("pp", Json::Num(best.pp as f64)),
+            ("profile", Json::Str(profile.name.clone())),
+            ("request_fp", Json::Str(format!("{key_fp:016x}"))),
+            ("step_time", Json::Num(best.step_time)),
+            ("throughput", Json::Num(best.throughput)),
+            ("winner", Json::Str(best.candidate.plan.describe())),
         ]);
         self.cache.insert(key, payload.clone());
         Ok((payload, Some("miss")))
@@ -509,6 +635,90 @@ mod tests {
         assert!(!ok);
         assert!(err.contains("unknown profile 'nope'"), "{err}");
         assert!(err.contains("resident: [p]"), "{err}");
+    }
+
+    #[test]
+    fn co_search_tune_jobs_cache_on_partition_knobs() {
+        let mut e = Engine::new(1);
+        let job = |id: &str, devices: u64| {
+            format!(
+                r#"{{"op":"tune","id":"{id}","beam":2,"gens":1,
+                    "mutations":1,
+                    "co_search":{{"devices":{devices},"layers":4}}}}"#
+            )
+        };
+        let (a, ok) = e.execute(&req(&job("a", 2)));
+        assert!(ok, "{a}");
+        assert!(a.contains("\"cache\":\"miss\""), "{a}");
+        // the winner carries its partition (payload field + v2 plan)
+        assert!(a.contains("\"partition\":\"dp="), "{a}");
+        assert!(a.contains("part dp"), "{a}");
+        assert!(e.metrics.counter("partition.cells") > 0);
+
+        // identical knobs: served from cache, no new search
+        let beams = e.metrics.counter("partition.beams");
+        let (b, ok) = e.execute(&req(&job("b", 2)));
+        assert!(ok, "{b}");
+        assert!(b.contains("\"cache\":\"hit\""), "{b}");
+        assert_eq!(e.metrics.counter("partition.beams"), beams);
+
+        // a different device count is a different cache key
+        let (c, ok) = e.execute(&req(&job("c", 4)));
+        assert!(ok, "{c}");
+        assert!(c.contains("\"cache\":\"miss\""), "{c}");
+
+        // plain tune with the same beam knobs does not collide either
+        let (d, ok) = e.execute(&req(
+            r#"{"op":"tune","id":"d","ranks":4,"beam":2,"gens":1,
+                "mutations":1}"#,
+        ));
+        assert!(ok, "{d}");
+        assert!(d.contains("\"cache\":\"miss\""), "{d}");
+    }
+
+    #[test]
+    fn co_search_jobs_reject_malformed_knobs() {
+        let mut e = Engine::new(1);
+        for (line, needle) in [
+            (
+                r#"{"op":"tune","id":"x","co_search":"yes"}"#,
+                "must be an object",
+            ),
+            (
+                r#"{"op":"tune","id":"x","ranks":4,"co_search":{}}"#,
+                "\"ranks\" fixes the stage count",
+            ),
+            (
+                r#"{"op":"tune","id":"x","co_search":{"devices":0}}"#,
+                "\"devices\" must be >= 1",
+            ),
+            (
+                r#"{"op":"tune","id":"x",
+                    "co_search":{"allreduce_per_byte":-1}}"#,
+                "must be >= 0",
+            ),
+        ] {
+            let (err, ok) = e.execute(&req(line));
+            assert!(!ok, "{line} -> {err}");
+            assert!(err.contains(needle), "{line} -> {err}");
+        }
+        // a resident profile's stage count is the layer count
+        let (line, ok) = e.execute(&req(
+            r#"{"op":"calibrate","id":"c","name":"p","ranks":4}"#,
+        ));
+        assert!(ok, "{line}");
+        let (err, ok) = e.execute(&req(
+            r#"{"op":"tune","id":"x","profile":"p",
+                "co_search":{"devices":2,"layers":8}}"#,
+        ));
+        assert!(!ok);
+        assert!(err.contains("conflicts with profile 'p'"), "{err}");
+        let (fine, ok) = e.execute(&req(
+            r#"{"op":"tune","id":"y","profile":"p","beam":2,"gens":1,
+                "mutations":1,"co_search":{"devices":2}}"#,
+        ));
+        assert!(ok, "{fine}");
+        assert!(fine.contains("\"profile\":\"p\""), "{fine}");
     }
 
     #[test]

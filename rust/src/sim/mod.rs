@@ -165,6 +165,23 @@ impl CostModel {
     }
 }
 
+/// Ring-allreduce wall time for one step of a `dp`-way replicated
+/// stage holding `bytes` of gradients, at `per_byte` seconds/byte of
+/// link bandwidth: each replica sends and receives `2·(dp-1)/dp` of
+/// the buffer (reduce-scatter + all-gather).  `dp <= 1` costs nothing.
+///
+/// This is the DP term the partition co-search adds to a plan's
+/// makespan — deliberately **outside** the event kernel, so the
+/// two-tier contract above is untouched by the partition refactor
+/// (the kernel still never sees anything but per-stage costs).
+pub fn allreduce_time(dp: u32, bytes: u64, per_byte: f64) -> f64 {
+    if dp <= 1 {
+        0.0
+    } else {
+        2.0 * (dp as f64 - 1.0) / dp as f64 * bytes as f64 * per_byte
+    }
+}
+
 /// Per-rank, per-microbatch byte classes (from the manifest) driving the
 /// memory timeline (Fig 4/5 cross-check, Fig 7 OOM prediction).
 #[derive(Debug, Clone)]
@@ -266,4 +283,19 @@ pub fn eval_plan(
     let max_peak = result.max_peak();
     let fits = budget.map(|b| max_peak <= b).unwrap_or(true);
     Ok(PlanEval { result, max_peak, fits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_time_follows_the_ring_formula() {
+        assert_eq!(allreduce_time(1, 1 << 30, 1e-9), 0.0);
+        assert!((allreduce_time(2, 1000, 1e-3) - 1.0).abs() < 1e-12);
+        assert!((allreduce_time(4, 1000, 1e-3) - 1.5).abs() < 1e-12);
+        // traffic grows toward 2·bytes as dp → ∞
+        assert!(allreduce_time(8, 1000, 1e-3)
+            > allreduce_time(4, 1000, 1e-3));
+    }
 }

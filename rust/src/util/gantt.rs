@@ -75,6 +75,37 @@ pub fn render(ranks: &[Vec<Span>], cols: usize) -> String {
     out
 }
 
+/// [`render`], prefixed (when a partition is present) with one header
+/// line per rank — `rank R: layers a-b  dp=k` — so a chart of a
+/// partitioned plan says which model layers each stage owns and how
+/// many replicas of the whole pipeline run.  With `part == None` the
+/// output is byte-identical to [`render`], so partition-less callers
+/// (`twobp gantt` on v1 plans, the generator path) are untouched.
+pub fn render_with_partition(
+    ranks: &[Vec<Span>],
+    cols: usize,
+    part: Option<&crate::schedule::Partition>,
+) -> String {
+    let chart = render(ranks, cols);
+    let part = match part {
+        Some(p) => p,
+        None => return chart,
+    };
+    let mut out = String::new();
+    for s in 0..part.n_stages().min(ranks.len()) {
+        let r = part.layers(s);
+        out.push_str(&format!(
+            "rank {:>2}: layers {}-{}  dp={}\n",
+            s,
+            r.start,
+            r.end - 1,
+            part.dp
+        ));
+    }
+    out.push_str(&chart);
+    out
+}
+
 /// CSV export: rank,kind,mb,start,end (for external plotting).
 pub fn to_csv(ranks: &[Vec<Span>]) -> String {
     let mut out = String::from("rank,kind,microbatch,start,end\n");
@@ -127,6 +158,25 @@ mod tests {
         ]];
         let s = render(&ranks, 4);
         assert!(s.contains('O'), "right-edge span vanished:\n{s}");
+    }
+
+    #[test]
+    fn partition_header_prefixes_the_chart() {
+        use crate::schedule::Partition;
+        let ranks = vec![
+            vec![Span { start: 0.0, end: 1.0, label: SpanKind::Fwd, mb: 0 }],
+            vec![Span { start: 1.0, end: 2.0, label: SpanKind::Fwd, mb: 0 }],
+        ];
+        // None is byte-identical to the plain renderer
+        assert_eq!(
+            render_with_partition(&ranks, 20, None),
+            render(&ranks, 20)
+        );
+        let part = Partition { cuts: vec![0, 3, 7], dp: 2 };
+        let s = render_with_partition(&ranks, 20, Some(&part));
+        assert!(s.starts_with("rank  0: layers 0-2  dp=2\n"), "{s}");
+        assert!(s.contains("rank  1: layers 3-6  dp=2\n"), "{s}");
+        assert!(s.ends_with(&render(&ranks, 20)), "chart body changed");
     }
 
     #[test]

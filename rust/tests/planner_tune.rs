@@ -109,6 +109,71 @@ fn tune_beats_named_schedules_under_binding_budget() {
     validate(&back).unwrap();
 }
 
+/// ISSUE 10 acceptance: on a skewed per-layer model under a *binding*
+/// memory budget, the joint partition × schedule co-search must beat
+/// the best fixed-partition winner — searching the layer cuts buys
+/// real simulated step time, not just provenance.  The fixed baseline
+/// is the balanced contiguous split at dp=1 (exactly what the
+/// pre-partition planner would tune), under the same beam config and
+/// budget.
+#[test]
+fn co_search_beats_fixed_partition_under_binding_budget() {
+    use twobp::metrics::observer::NullObserver;
+    use twobp::planner::{co_search, CoSearchConfig, ModelProfile};
+    use twobp::schedule::Partition;
+
+    let devices = 2;
+    let layers = 8;
+    let mut model =
+        ModelProfile::from_profile(&TuneProfile::llama_like(layers));
+    model.allreduce_per_byte = 2e-11;
+    // layer 0 is ×6 hot: the balanced split leaves stage 0 with the hot
+    // layer plus three peers, so the cuts themselves are load-bearing
+    model.layers[0].fwd *= 6.0;
+    model.layers[0].p1 *= 6.0;
+    model.layers[0].p2 *= 6.0;
+
+    let balanced = Partition::balanced(layers, devices, 1);
+    let rolled = model.roll_up(&balanced).unwrap();
+    let budget = binding_budget(&rolled, devices);
+    let baseline = tune(&rolled, devices, &cfg_with(Some(budget))).unwrap();
+    assert!(baseline.rejected_budget > 0, "budget was not binding");
+    // dp=1: no allreduce term, step time is the plan makespan
+    let baseline_step = baseline.best.makespan;
+
+    let cfg = CoSearchConfig::new(devices, cfg_with(Some(budget)));
+    let rep = co_search(&model, &cfg, &mut NullObserver).unwrap();
+
+    // the pp=devices cell starts from the balanced baseline and must
+    // migrate its boundary off the hot layer, strictly beating the
+    // fixed split's winner
+    let pp2 = rep
+        .cells
+        .iter()
+        .find(|c| c.pp == devices)
+        .expect("full-depth pipeline cell missing");
+    assert!(pp2.migrations > 0, "no boundary ever migrated");
+    assert_ne!(pp2.partition.cuts, balanced.cuts, "cuts did not move");
+    assert!(
+        pp2.step_time < baseline_step - 1e-12,
+        "co-search step time {:.6} not better than the fixed-partition \
+         winner's {baseline_step:.6}",
+        pp2.step_time,
+    );
+
+    // winner integrity: valid, fits, and carries its partition through
+    // the v2 plan DSL
+    let best = rep.best();
+    validate(&best.candidate.plan).unwrap();
+    assert!(best.max_peak <= budget, "winner over budget");
+    let back = plan_io::parse(&best.candidate.text).unwrap();
+    assert_eq!(back.partition.as_ref(), Some(&best.partition));
+    // and the report really ranked it best
+    for c in &rep.cells {
+        assert!(best.throughput >= c.throughput - 1e-12);
+    }
+}
+
 #[test]
 fn tune_is_reproducible_for_a_fixed_seed() {
     let n = 4;
